@@ -1,0 +1,82 @@
+//! Clickstream mining on a BMS-WebView-like dataset — the sparse,
+//! skewed regime where the paper disables the triangular matrix and
+//! transaction filtering barely pays (§5.2).
+//!
+//! Demonstrates per-dataset option tuning, the filtering-shrinkage
+//! metric, and the XLA (AOT PJRT) co-occurrence backend when artifacts
+//! are available.
+//!
+//! ```text
+//! cargo run --release --example clickstream
+//! ```
+
+use std::sync::Arc;
+
+use rdd_eclat::algorithms::{Algorithm, CoocStrategy, EclatOptions, EclatV2, EclatV5};
+use rdd_eclat::data::clickstream::{generate, ClickParams};
+use rdd_eclat::engine::ClusterContext;
+use rdd_eclat::fim::MinSup;
+use rdd_eclat::util::time::fmt_duration;
+
+fn main() -> rdd_eclat::error::Result<()> {
+    // A BMS1-like session log (scaled to keep the example snappy).
+    let db = generate(
+        &ClickParams { sessions: 20_000, ..ClickParams::bms1_like() },
+        42,
+    );
+    let stats = db.stats();
+    println!(
+        "clickstream: {} sessions, {} products, avg {:.1} clicks/session",
+        stats.transactions, stats.distinct_items, stats.avg_width
+    );
+
+    let ctx = ClusterContext::builder().build();
+    let min_sup = MinSup::fraction(0.003);
+
+    // The paper's setting for BMS: triMatrixMode = false (item universe
+    // too large for the triangular matrix to pay off).
+    let bms_opts = EclatOptions { tri_matrix: false, ..Default::default() };
+
+    let v2 = EclatV2::with_options(bms_opts.clone());
+    let r = v2.run_on(&ctx, &db, min_sup)?;
+    println!(
+        "\neclatV2 (tri off): {} itemsets in {}; filtering shrank volume by {:.1}%",
+        r.len(),
+        fmt_duration(r.wall),
+        r.filtered_reduction.unwrap_or(0.0) * 100.0
+    );
+
+    let v5 = EclatV5::with_options(bms_opts);
+    let r5 = v5.run_on(&ctx, &db, min_sup)?;
+    println!(
+        "eclatV5 (reverse-hash, p=10): {} itemsets in {}; partition loads {:?}",
+        r5.len(),
+        fmt_duration(r5.wall),
+        r5.partition_loads
+    );
+    assert_eq!(r.len(), r5.len(), "variants must agree");
+
+    // Optional: the same mining with Phase-2 offloaded to the AOT XLA
+    // artifact through PJRT (A4 ablation path). Needs `make artifacts`.
+    if rdd_eclat::runtime::artifacts_available() {
+        let svc = Arc::new(rdd_eclat::runtime::XlaService::start(
+            rdd_eclat::runtime::default_artifact_dir(),
+        )?);
+        let opts = EclatOptions {
+            tri_matrix: true, // force the matrix on so the backend runs
+            cooc: CoocStrategy::Provider(Arc::new(rdd_eclat::runtime::XlaCooc::new(svc))),
+            ..Default::default()
+        };
+        let vx = EclatV5::with_options(opts);
+        let rx = vx.run_on(&ctx, &db, min_sup)?;
+        println!(
+            "eclatV5 (XLA cooc backend): {} itemsets in {}",
+            rx.len(),
+            fmt_duration(rx.wall)
+        );
+        assert_eq!(rx.len(), r5.len(), "XLA backend must agree");
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` to exercise the XLA backend)");
+    }
+    Ok(())
+}

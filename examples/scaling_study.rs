@@ -1,0 +1,95 @@
+//! End-to-end driver (DESIGN.md; EXPERIMENTS.md §End-to-end): run the
+//! full system on a real small workload, proving all layers compose —
+//! dataset generation → RDD engine → all six algorithms → result
+//! cross-check → headline metric (Eclat-vs-Apriori speedup) → simulated
+//! core scaling from measured task metrics.
+//!
+//! ```text
+//! cargo run --release --example scaling_study
+//! ```
+
+use rdd_eclat::algorithms::{
+    Algorithm, EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, RddApriori, SeqEclat,
+};
+use rdd_eclat::data::DatasetSpec;
+use rdd_eclat::engine::{simcluster, ClusterContext};
+use rdd_eclat::fim::{sort_frequents, MinSup};
+use rdd_eclat::util::{Stopwatch, time::fmt_duration};
+
+fn main() -> rdd_eclat::error::Result<()> {
+    // Real small workload: the T10I4D100K twin (full 100k transactions).
+    let db = DatasetSpec::T10i4d100k.materialize("datasets")?;
+    let stats = db.stats();
+    let min_sup = MinSup::fraction(0.01);
+    println!(
+        "workload: {} ({} txns, {} items, avg width {:.1}), min_sup=0.01",
+        DatasetSpec::T10i4d100k.name(),
+        stats.transactions,
+        stats.distinct_items,
+        stats.avg_width
+    );
+
+    // Ground truth from the sequential oracle.
+    let mut want = SeqEclat::mine(&db, min_sup);
+    sort_frequents(&mut want);
+    println!("oracle: {} frequent itemsets (seq-eclat)", want.len());
+
+    let algos: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(EclatV1::default()),
+        Box::new(EclatV2::default()),
+        Box::new(EclatV3::default()),
+        Box::new(EclatV4::default()),
+        Box::new(EclatV5::default()),
+        Box::new(RddApriori),
+    ];
+
+    let ctx = ClusterContext::builder().build();
+    let mut apriori_secs = 0.0;
+    let mut best = ("-", f64::MAX);
+    println!("\n{:<10} {:>12} {:>10} {:>8}", "algorithm", "time", "itemsets", "ok");
+    for algo in &algos {
+        ctx.metrics().reset();
+        let sw = Stopwatch::start();
+        let r = algo.run_on(&ctx, &db, min_sup)?;
+        let wall = sw.elapsed();
+        let mut got = r.frequents.clone();
+        sort_frequents(&mut got);
+        let ok = got == want;
+        println!(
+            "{:<10} {:>12} {:>10} {:>8}",
+            algo.name(),
+            fmt_duration(wall),
+            r.len(),
+            if ok { "agree" } else { "MISMATCH" }
+        );
+        assert!(ok, "{} diverged from the oracle", algo.name());
+        let secs = wall.as_secs_f64();
+        if algo.name() == "apriori" {
+            apriori_secs = secs;
+        } else if secs < best.1 {
+            best = (algo.name(), secs);
+        }
+
+        // Core-scaling simulation from this run's measured tasks
+        // (Fig 15's method; see DESIGN.md §2.3).
+        if algo.name() == "eclatV4" {
+            let tasks = ctx.metrics().tasks();
+            let serial = simcluster::derive_serial(&tasks, wall, ctx.cores());
+            println!("  simulated cores sweep (eclatV4):");
+            for r in simcluster::sweep(&tasks, &[2, 4, 6, 8, 10], serial) {
+                println!(
+                    "    {:>2} cores -> {}",
+                    r.cores,
+                    fmt_duration(r.makespan)
+                );
+            }
+        }
+    }
+
+    println!(
+        "\nheadline: best Eclat variant ({}) vs RDD-Apriori speedup = {:.1}x (paper band: 2-9x)",
+        best.0,
+        apriori_secs / best.1
+    );
+    Ok(())
+}

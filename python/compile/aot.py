@@ -1,0 +1,95 @@
+"""AOT: lower the L2 graphs to HLO text artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Writes one ``.hlo.txt`` per (graph, shape) plus ``manifest.txt`` with
+``name file kind shapes`` rows the rust loader validates against.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.cooc import DEFAULT_I, DEFAULT_T
+from .kernels.popcount import DEFAULT_N, DEFAULT_W
+from .model import cooc_graph, intersect_graph, phase2_graph
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifacts_spec():
+    """(name, fn, example args, manifest shape string) for every artifact."""
+    f32 = jnp.float32
+    u32 = jnp.uint32
+    t, i = DEFAULT_T, DEFAULT_I
+    n, w = DEFAULT_N, DEFAULT_W
+    return [
+        (
+            f"cooc_{t}x{i}",
+            cooc_graph,
+            (
+                jax.ShapeDtypeStruct((t, i), f32),
+                jax.ShapeDtypeStruct((t, i), f32),
+            ),
+            f"in=f32[{t},{i}]x2 out=f32[{i},{i}]",
+        ),
+        (
+            f"phase2_{t}x{i}",
+            phase2_graph,
+            (jax.ShapeDtypeStruct((t, i), f32),),
+            f"in=f32[{t},{i}] out=f32[{i}],f32[{i},{i}]",
+        ),
+        (
+            f"popcount_{n}x{w}",
+            intersect_graph,
+            (
+                jax.ShapeDtypeStruct((n, w), u32),
+                jax.ShapeDtypeStruct((n, w), u32),
+            ),
+            f"in=u32[{n},{w}]x2 out=s32[{n}]",
+        ),
+    ]
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, example_args, shapes in artifacts_spec():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} {fname} {shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(manifest_lines)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

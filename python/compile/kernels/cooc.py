@@ -1,0 +1,76 @@
+"""L1 Pallas kernel: blocked item co-occurrence counting.
+
+The paper's Phase-2 builds a triangular matrix of candidate-2-itemset
+counts by looping over every 2-combination of every transaction. On TPU
+that computation is a matmul: encode a block of transactions as a 0/1
+matrix ``A`` of shape ``(T, I)`` (transaction x item); then
+
+    C = A^T @ B     with  B = A  (or another item-column block)
+
+gives ``C[i, j] = |{t : A[t,i]=1 and B[t,j]=1}|`` — exactly the
+co-occurrence counts, computed by the MXU systolic array instead of a
+scalar loop (DESIGN.md §3 Hardware-Adaptation).
+
+The kernel tiles the transaction (reduction) dimension through VMEM with
+``BlockSpec``s: each grid step loads a ``(BLOCK_T, I)`` tile pair and
+accumulates into the resident ``(I, I)`` output tile. VMEM at the default
+shape (256x128 f32 tiles): 2*128KiB in + 64KiB out, far under the ~16MiB
+budget, leaving room for double buffering (DESIGN.md §8).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; the lowered HLO is plain dots + adds, which the rust side
+compiles and runs. On a real TPU the same kernel lowers to MXU ops.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default AOT block shape (transactions x items per tile).
+BLOCK_T = 64
+DEFAULT_T = 256
+DEFAULT_I = 128
+
+
+def _cooc_kernel(a_ref, b_ref, o_ref):
+    """One grid step: o += a_tile^T @ b_tile."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].T, b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@partial(jax.jit, static_argnames=("block_t",))
+def cooc(a, b, *, block_t: int = BLOCK_T):
+    """Co-occurrence counts ``a^T @ b`` for 0/1 f32 blocks.
+
+    Args:
+      a: ``(T, I_a)`` f32 0/1 transaction block (item columns ``I_a``).
+      b: ``(T, I_b)`` f32 0/1 transaction block.
+      block_t: reduction tile height; must divide ``T``.
+
+    Returns:
+      ``(I_a, I_b)`` f32 co-occurrence counts.
+    """
+    t, i_a = a.shape
+    t_b, i_b = b.shape
+    assert t == t_b, f"transaction dims differ: {t} vs {t_b}"
+    assert t % block_t == 0, f"T={t} not divisible by block_t={block_t}"
+    grid = (t // block_t,)
+    return pl.pallas_call(
+        _cooc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, i_a), lambda k: (k, 0)),
+            pl.BlockSpec((block_t, i_b), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((i_a, i_b), lambda k: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((i_a, i_b), jnp.float32),
+        interpret=True,
+    )(a, b)

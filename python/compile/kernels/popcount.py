@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: batched tidset-intersection support counting.
+
+Eclat's inner loop (Algorithm 1 line 8-10) intersects two tidsets and
+needs only the intersection *size*. With tidsets packed as bitmaps, that
+is ``sum(popcount(a & b))`` — lane-parallel VPU work on TPU. This kernel
+processes a batch of ``N`` candidate pairs at once: inputs are
+``(N, W)`` uint32 lane matrices (row = one tidset bitmap, W lanes of 32
+tids each), output is ``(N,)`` int32 supports.
+
+Memory-bound by design (DESIGN.md §8): AND + popcount + row reduction is
+fused in one pass so each input word is read exactly once.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Default AOT batch shape: 256 pairs x 64 lanes (= 2048 tids per bitmap).
+DEFAULT_N = 256
+DEFAULT_W = 64
+
+
+def _popcount_kernel(a_ref, b_ref, o_ref):
+    """Support counts of one batch block: o = sum(popcount(a & b), axis=1)."""
+    a = a_ref[...]
+    b = b_ref[...]
+    bits = lax.population_count(a & b)
+    o_ref[...] = jnp.sum(bits.astype(jnp.int32), axis=1)
+
+
+@partial(jax.jit, static_argnames=("block_n",))
+def intersect_support(a, b, *, block_n: int | None = None):
+    """Batched bitmap intersection supports.
+
+    Args:
+      a: ``(N, W)`` uint32 bitmap lanes.
+      b: ``(N, W)`` uint32 bitmap lanes.
+      block_n: rows per grid step (defaults to all rows in one step).
+
+    Returns:
+      ``(N,)`` int32 — ``|a_row ∩ b_row|`` per row.
+    """
+    n, w = a.shape
+    assert a.shape == b.shape, f"shape mismatch: {a.shape} vs {b.shape}"
+    block_n = block_n or n
+    assert n % block_n == 0, f"N={n} not divisible by block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _popcount_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, w), lambda k: (k, 0)),
+            pl.BlockSpec((block_n, w), lambda k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda k: (k,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,27 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Deliberately written with *different* primitives than the kernels
+(einsum instead of blocked dots; shift-and-mask popcount instead of
+``lax.population_count``) so a bug in a shared primitive cannot hide.
+"""
+
+import jax.numpy as jnp
+
+
+def cooc_ref(a, b):
+    """Reference co-occurrence: plain einsum contraction over rows."""
+    return jnp.einsum("ti,tj->ij", a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def _popcount32_ref(x):
+    """Bit-parallel (SWAR) popcount of uint32 lanes, no population_count."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def intersect_support_ref(a, b):
+    """Reference batched intersection support."""
+    return jnp.sum(_popcount32_ref(a & b), axis=1, dtype=jnp.int32)

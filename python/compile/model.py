@@ -1,0 +1,47 @@
+"""L2: the support-counting compute graph, calling the L1 kernels.
+
+The "model" of this paper is not a neural network — it is Eclat's
+support-counting arithmetic, the part of the system with dense,
+accelerator-shaped compute:
+
+* ``phase2_graph``: for a 0/1 transaction block, item supports (column
+  sums) and the co-occurrence matrix (the paper's triangular-matrix
+  Phase-2) in one fused graph built on the ``cooc`` Pallas kernel.
+* ``cooc_graph``: cross-block co-occurrence ``A^T B`` for tiling the item
+  dimension when the vocabulary exceeds one tile.
+* ``intersect_graph``: batched tidset-intersection supports on the
+  ``popcount`` Pallas kernel (Algorithm 1's inner loop).
+
+``aot.py`` lowers each of these once to HLO text; the rust runtime
+(`rust/src/runtime/`) compiles and executes them via PJRT. Python never
+runs at mining time.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.cooc import cooc
+from .kernels.popcount import intersect_support
+
+
+def phase2_graph(a):
+    """Item supports + co-occurrence counts of one transaction block.
+
+    Args:
+      a: ``(T, I)`` f32 0/1 block.
+
+    Returns:
+      ``(supports (I,), cooc (I, I))`` — both f32 counts.
+    """
+    supports = jnp.sum(a, axis=0)
+    counts = cooc(a, a)
+    return supports, counts
+
+
+def cooc_graph(a, b):
+    """Cross-tile co-occurrence ``A^T B`` (item-dimension tiling)."""
+    return (cooc(a, b),)
+
+
+def intersect_graph(a, b):
+    """Batched bitmap intersection supports (int32 per row)."""
+    return (intersect_support(a, b),)

@@ -1,0 +1,83 @@
+"""Pallas cooc kernel vs pure-jnp oracle — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cooc import BLOCK_T, cooc
+from compile.kernels.ref import cooc_ref
+
+
+def random_block(rng, t, i, density=0.3):
+    return (rng.random((t, i)) < density).astype(np.float32)
+
+
+class TestCoocFixedShapes:
+    def test_identity_block(self):
+        a = np.eye(8, dtype=np.float32)
+        out = np.asarray(cooc(a, a, block_t=4))
+        np.testing.assert_allclose(out, np.eye(8, dtype=np.float32))
+
+    def test_known_small_case(self):
+        # Transactions {0,1}, {1}, {0,1,2}.
+        a = np.array(
+            [[1, 1, 0], [0, 1, 0], [1, 1, 1], [0, 0, 0]], dtype=np.float32
+        )
+        out = np.asarray(cooc(a, a, block_t=2))
+        expect = np.array(
+            [[2, 2, 1], [2, 3, 1], [1, 1, 1]], dtype=np.float32
+        )
+        np.testing.assert_allclose(out, expect)
+
+    def test_default_aot_shape(self):
+        rng = np.random.default_rng(0)
+        a = random_block(rng, 256, 128)
+        out = np.asarray(cooc(a, a, block_t=BLOCK_T))
+        np.testing.assert_allclose(out, np.asarray(cooc_ref(a, a)))
+
+    def test_cross_block_asymmetric(self):
+        rng = np.random.default_rng(1)
+        a = random_block(rng, 128, 32)
+        b = random_block(rng, 128, 16)
+        out = np.asarray(cooc(a, b, block_t=32))
+        assert out.shape == (32, 16)
+        np.testing.assert_allclose(out, np.asarray(cooc_ref(a, b)))
+
+    def test_bad_reduction_tile_rejected(self):
+        a = np.zeros((100, 8), dtype=np.float32)
+        with pytest.raises(AssertionError):
+            cooc(a, a, block_t=64)
+
+    def test_mismatched_rows_rejected(self):
+        a = np.zeros((64, 8), dtype=np.float32)
+        b = np.zeros((32, 8), dtype=np.float32)
+        with pytest.raises(AssertionError):
+            cooc(a, b, block_t=32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    t_blocks=st.integers(1, 4),
+    block_t=st.sampled_from([8, 16, 32]),
+    i_a=st.integers(1, 40),
+    i_b=st.integers(1, 40),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_cooc_matches_ref_sweep(t_blocks, block_t, i_a, i_b, density, seed):
+    """Hypothesis sweep over shapes and densities (deliverable c)."""
+    rng = np.random.default_rng(seed)
+    t = t_blocks * block_t
+    a = random_block(rng, t, i_a, density)
+    b = random_block(rng, t, i_b, density)
+    out = np.asarray(cooc(a, b, block_t=block_t))
+    np.testing.assert_allclose(out, np.asarray(cooc_ref(a, b)))
+
+
+def test_counts_are_exact_integers():
+    """f32 accumulation stays exact for realistic block sizes (< 2^24)."""
+    rng = np.random.default_rng(7)
+    a = random_block(rng, 512, 16, density=0.9)
+    out = np.asarray(cooc(a, a, block_t=64))
+    assert np.all(out == np.round(out))
+    assert out.max() <= 512

@@ -1,0 +1,77 @@
+"""Pallas popcount kernel vs SWAR oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.popcount import intersect_support
+from compile.kernels.ref import intersect_support_ref
+
+
+class TestPopcountFixed:
+    def test_disjoint_bitmaps(self):
+        a = np.full((4, 8), 0xAAAAAAAA, dtype=np.uint32)
+        b = np.full((4, 8), 0x55555555, dtype=np.uint32)
+        out = np.asarray(intersect_support(a, b))
+        np.testing.assert_array_equal(out, np.zeros(4, dtype=np.int32))
+
+    def test_identical_bitmaps(self):
+        a = np.full((3, 4), 0xFFFFFFFF, dtype=np.uint32)
+        out = np.asarray(intersect_support(a, a))
+        np.testing.assert_array_equal(out, np.full(3, 128, dtype=np.int32))
+
+    def test_known_overlap(self):
+        a = np.array([[0b1011, 0b1]], dtype=np.uint32)
+        b = np.array([[0b0011, 0b1]], dtype=np.uint32)
+        out = np.asarray(intersect_support(a, b))
+        assert out.tolist() == [3]  # bits {0,1} + bit {32}
+
+    def test_default_aot_shape(self):
+        rng = np.random.default_rng(0)
+        a = rng.integers(0, 2**32, (256, 64), dtype=np.uint32)
+        b = rng.integers(0, 2**32, (256, 64), dtype=np.uint32)
+        out = np.asarray(intersect_support(a, b))
+        np.testing.assert_array_equal(out, np.asarray(intersect_support_ref(a, b)))
+
+    def test_gridded_matches_single_block(self):
+        rng = np.random.default_rng(3)
+        a = rng.integers(0, 2**32, (64, 8), dtype=np.uint32)
+        b = rng.integers(0, 2**32, (64, 8), dtype=np.uint32)
+        whole = np.asarray(intersect_support(a, b))
+        blocked = np.asarray(intersect_support(a, b, block_n=16))
+        np.testing.assert_array_equal(whole, blocked)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 128),
+    w=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_popcount_matches_ref_sweep(n, w, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2**32, (n, w), dtype=np.uint32)
+    b = rng.integers(0, 2**32, (n, w), dtype=np.uint32)
+    out = np.asarray(intersect_support(a, b))
+    ref = np.asarray(intersect_support_ref(a, b))
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_against_python_sets():
+    """Cross-check against Python set semantics on dense tid sets."""
+    rng = np.random.default_rng(11)
+    universe = 256  # 8 lanes
+    rows = 32
+    a_sets = [set(rng.choice(universe, rng.integers(0, universe), replace=False).tolist()) for _ in range(rows)]
+    b_sets = [set(rng.choice(universe, rng.integers(0, universe), replace=False).tolist()) for _ in range(rows)]
+
+    def pack(s):
+        lanes = np.zeros(universe // 32, dtype=np.uint32)
+        for tid in s:
+            lanes[tid // 32] |= np.uint32(1) << np.uint32(tid % 32)
+        return lanes
+
+    a = np.stack([pack(s) for s in a_sets])
+    b = np.stack([pack(s) for s in b_sets])
+    out = np.asarray(intersect_support(a, b))
+    expect = np.array([len(x & y) for x, y in zip(a_sets, b_sets)], dtype=np.int32)
+    np.testing.assert_array_equal(out, expect)

@@ -1,0 +1,94 @@
+//! Micro-benchmarks of the RDD engine: narrow pipelines, shuffle
+//! (groupByKey/reduceByKey), partitionBy, caching, accumulators — the L3
+//! substrate costs under the paper's algorithms.
+
+use rdd_eclat::bench::{black_box, Bench, Report};
+use rdd_eclat::engine::ClusterContext;
+
+fn main() {
+    let bench = Bench::from_env();
+    let mut report = Report::new();
+    let cores = rdd_eclat::engine::available_cores();
+
+    // --- narrow pipeline: map+filter over 1M u32 ---
+    {
+        let ctx = ClusterContext::builder().cores(cores).build();
+        let data: Vec<u32> = (0..1_000_000).collect();
+        let rdd = ctx.parallelize(data, cores * 4);
+        report.add(bench.run("engine/narrow_map_filter_1M", || {
+            let out = rdd.map(|x| x.wrapping_mul(31)).filter(|x| x % 7 == 0);
+            black_box(out.count().unwrap())
+        }));
+    }
+
+    // --- reduceByKey word-count over 1M pairs, 10k keys ---
+    {
+        let ctx = ClusterContext::builder().cores(cores).build();
+        let data: Vec<(u32, u32)> = (0..1_000_000).map(|i| (i % 10_000, 1)).collect();
+        let rdd = ctx.parallelize(data, cores * 4);
+        report.add(bench.run("engine/reduce_by_key_1M_10k_keys", || {
+            black_box(rdd.reduce_by_key(cores, |a, b| a + b).count().unwrap())
+        }));
+    }
+
+    // --- groupByKey over 300k pairs, 1k keys ---
+    {
+        let ctx = ClusterContext::builder().cores(cores).build();
+        let data: Vec<(u32, u32)> = (0..300_000).map(|i| (i % 1000, i)).collect();
+        let rdd = ctx.parallelize(data, cores * 4);
+        report.add(bench.run("engine/group_by_key_300k_1k_keys", || {
+            black_box(rdd.group_by_key(cores).count().unwrap())
+        }));
+    }
+
+    // --- cache effectiveness: second pass should be ~free ---
+    {
+        let ctx = ClusterContext::builder().cores(cores).build();
+        let data: Vec<u64> = (0..500_000).collect();
+        let rdd = ctx
+            .parallelize(data, cores * 2)
+            .map(|x| {
+                // Some work worth caching.
+                let mut h = x;
+                for _ in 0..8 {
+                    h = h.wrapping_mul(0x9E3779B97F4A7C15).rotate_left(17);
+                }
+                h
+            })
+            .cache();
+        rdd.count().unwrap(); // populate
+        report.add(bench.run("engine/cached_recount_500k", || {
+            black_box(rdd.count().unwrap())
+        }));
+    }
+
+    // --- accumulator merge cost (per-partition matrices) ---
+    {
+        let ctx = ClusterContext::builder().cores(cores).build();
+        let txns: Vec<Vec<u32>> = (0..20_000)
+            .map(|i| (0..10).map(|j| ((i * 7 + j * 13) % 150) as u32).collect())
+            .collect();
+        let rdd = ctx.parallelize(txns, cores * 2);
+        report.add(bench.run("engine/trimatrix_accumulator_20k", || {
+            let acc = ctx.accumulator(
+                rdd_eclat::fim::TriMatrix::new(149),
+                |a: &mut rdd_eclat::fim::TriMatrix, b| a.merge(&b),
+            );
+            let task_acc = acc.clone();
+            rdd.map_partitions_with_index(move |_i, txns| {
+                let mut local = rdd_eclat::fim::TriMatrix::new(149);
+                for t in &txns {
+                    local.update_transaction(t);
+                }
+                task_acc.add(local);
+                Vec::<()>::new()
+            })
+            .run()
+            .unwrap();
+            black_box(acc.with_value(|m| m.support(1, 2)))
+        }));
+    }
+
+    report.write_csv("bench_engine_micro.csv").expect("write csv");
+    println!("\nwrote results/bench_engine_micro.csv");
+}

@@ -1,0 +1,37 @@
+//! `cargo bench` entry point for the paper's tables and figures.
+//!
+//! Defaults to `SCALE=quick` sanity sweeps (endpoints of each min-sup
+//! grid on truncated datasets) so `cargo bench` terminates in minutes;
+//! set `SCALE=paper` for the full Table 2 sizes the EXPERIMENTS.md
+//! numbers come from (or run `target/release/figures --all`).
+
+use rdd_eclat::bench::Bench;
+use rdd_eclat::figures::{
+    run_a1, run_a2, run_a3, run_a4, run_fig15, run_fig16, run_fig_minsup, run_table2,
+    FigureCtx, MINSUP_FIGS,
+};
+
+fn main() {
+    let mut fx = FigureCtx::from_env();
+    // cargo bench default: quick, unless SCALE=paper was set explicitly.
+    if !matches!(std::env::var("SCALE").as_deref(), Ok("paper")) {
+        fx.quick = true;
+        fx.bench = Bench::quick();
+    }
+    println!(
+        "figures bench at scale={} (SCALE=paper for full sizes)",
+        if fx.quick { "quick" } else { "paper" }
+    );
+
+    run_table2(&fx).expect("table2");
+    for (no, spec) in MINSUP_FIGS {
+        run_fig_minsup(&fx, no, spec).expect("minsup fig");
+    }
+    run_fig15(&fx).expect("fig15");
+    run_fig16(&fx).expect("fig16");
+    run_a1(&fx).expect("a1");
+    run_a2(&fx).expect("a2");
+    run_a3(&fx).expect("a3");
+    run_a4(&fx).expect("a4");
+    println!("\nall figure benches complete; CSVs under results/");
+}

@@ -1,0 +1,121 @@
+//! Micro-benchmarks of the FIM hot paths (criterion-style, own harness):
+//! tidset vs bitmap intersection, triangular-matrix updates, bottom-up
+//! recursion, candidate counting. These are the knobs the §Perf pass
+//! tunes; EXPERIMENTS.md records before/after.
+
+use rdd_eclat::bench::{black_box, Bench, Report};
+use rdd_eclat::fim::{
+    bottom_up, intersect, intersect_count, CandidateTrie, TidBitmap, Tidset, TriMatrix,
+};
+use rdd_eclat::util::prng::Rng;
+
+fn random_tidset(rng: &mut Rng, universe: usize, density: f64) -> Tidset {
+    (0..universe as u32).filter(|_| rng.chance(density)).collect()
+}
+
+fn main() {
+    let bench = Bench::from_env();
+    let mut report = Report::new();
+    let mut rng = Rng::new(2024);
+
+    // --- tidset intersection: sorted-vec vs bitmap, two densities ---
+    for &density in &[0.05, 0.4] {
+        let universe = 100_000;
+        let a = random_tidset(&mut rng, universe, density);
+        let b = random_tidset(&mut rng, universe, density);
+        let ba = TidBitmap::from_tids(universe, a.iter().copied());
+        let bb = TidBitmap::from_tids(universe, b.iter().copied());
+
+        report.add(bench.run(format!("intersect/vec/d={density}"), || {
+            black_box(intersect(&a, &b).len())
+        }));
+        report.add(bench.run(format!("intersect/vec_count/d={density}"), || {
+            black_box(intersect_count(&a, &b))
+        }));
+        report.add(bench.run(format!("intersect/bitmap_count/d={density}"), || {
+            black_box(ba.and_count(&bb))
+        }));
+        report.add(bench.run(format!("intersect/bitmap_and/d={density}"), || {
+            black_box(ba.and(&bb).count())
+        }));
+    }
+
+    // --- skewed (galloping) intersection ---
+    {
+        let small = random_tidset(&mut rng, 100_000, 0.001);
+        let large = random_tidset(&mut rng, 100_000, 0.5);
+        report.add(bench.run("intersect/vec_galloping", || {
+            black_box(intersect(&small, &large).len())
+        }));
+    }
+
+    // --- triangular matrix updates over transactions ---
+    {
+        let txns: Vec<Vec<u32>> = (0..5000)
+            .map(|_| {
+                let mut t: Vec<u32> = (0..20).map(|_| rng.below(200) as u32).collect();
+                t.sort_unstable();
+                t.dedup();
+                t
+            })
+            .collect();
+        report.add(bench.run("trimatrix/update_5k_txns_w20", || {
+            let mut m = TriMatrix::new(199);
+            for t in &txns {
+                m.update_transaction(t);
+            }
+            black_box(m.support(1, 2))
+        }));
+    }
+
+    // --- bottom-up recursion over a mid-sized class ---
+    {
+        let universe = 20_000;
+        let members: Vec<(u32, Tidset)> = (0..24)
+            .map(|i| (i, random_tidset(&mut rng, universe, 0.12)))
+            .collect();
+        let bitmap_members: Vec<(u32, TidBitmap)> = members
+            .iter()
+            .map(|(i, t)| (*i, TidBitmap::from_tids(universe, t.iter().copied())))
+            .collect();
+        let min_sup = (universe as f64 * 0.012) as u32;
+        report.add(bench.run("bottomup/tidset_24atoms", || {
+            let mut out = Vec::new();
+            bottom_up::<Tidset>(&[0], &members, min_sup, &mut out);
+            black_box(out.len())
+        }));
+        report.add(bench.run("bottomup/bitmap_24atoms", || {
+            let mut out = Vec::new();
+            bottom_up::<TidBitmap>(&[0], &bitmap_members, min_sup, &mut out);
+            black_box(out.len())
+        }));
+    }
+
+    // --- Apriori candidate subset counting ---
+    {
+        let mut trie = CandidateTrie::new();
+        for i in 0..40u32 {
+            for j in (i + 1)..40 {
+                trie.insert(&[i, j]);
+            }
+        }
+        let txns: Vec<Vec<u32>> = (0..2000)
+            .map(|_| {
+                let mut t: Vec<u32> = (0..15).map(|_| rng.below(40) as u32).collect();
+                t.sort_unstable();
+                t.dedup();
+                t
+            })
+            .collect();
+        report.add(bench.run("apriori/count_780cands_2k_txns", || {
+            let mut counts = vec![0u32; trie.len()];
+            for t in &txns {
+                trie.count_subsets(t, &mut counts);
+            }
+            black_box(counts[0])
+        }));
+    }
+
+    report.write_csv("bench_fim_micro.csv").expect("write csv");
+    println!("\nwrote results/bench_fim_micro.csv");
+}

@@ -1,0 +1,374 @@
+//! Shared phase implementations for the RDD-Eclat variants.
+//!
+//! Each function transcribes one phase of the paper's pseudo code
+//! (Algorithms 2–9) onto the engine. Variants compose these differently;
+//! see the per-variant modules for the exact pipelines.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::engine::{ClusterContext, Partitioner, Rdd};
+use crate::error::Result;
+use crate::fim::{
+    construct_classes, Database, Frequent, Item, Tid, Tidset, TriMatrix, VerticalDb,
+};
+
+use super::{CoocStrategy, TriMatrixProvider};
+
+/// Native (loop-based) [`TriMatrixProvider`] — the default per-partition
+/// compute inside the accumulator strategy, and the baseline side of the
+/// A4 native-vs-XLA ablation.
+pub struct NativeCooc;
+
+impl TriMatrixProvider for NativeCooc {
+    fn compute(&self, transactions: &[Vec<Item>], max_item: Item) -> Result<TriMatrix> {
+        let mut m = TriMatrix::new(max_item);
+        for t in transactions {
+            m.update_transaction(t);
+        }
+        Ok(m)
+    }
+}
+
+/// Create the transactions RDD from a parsed database (the `textFile` +
+/// split step of the paper collapsed: parsing happened at load).
+pub fn transactions_rdd(ctx: &ClusterContext, db: &Database, parts: usize) -> Rdd<Vec<Item>> {
+    ctx.parallelize(db.transactions().to_vec(), parts)
+}
+
+/// Phase-1 of EclatV2/V3 (Algorithm 5): word-count frequent items.
+/// Returns `(item, support)` sorted by item id (the paper's
+/// "alphanumeric" order).
+pub fn phase1_wordcount(
+    ctx: &ClusterContext,
+    transactions: &Rdd<Vec<Item>>,
+    min_sup: u32,
+) -> Result<Vec<(Item, u32)>> {
+    let par = ctx.default_parallelism();
+    let mut freq: Vec<(Item, u32)> = transactions
+        .flat_map(|t| t)
+        .map(|item| (item, 1u32))
+        .reduce_by_key(par, |a, b| a + b)
+        .filter(move |(_, c)| *c >= min_sup)
+        .collect()?;
+    freq.sort_unstable();
+    Ok(freq)
+}
+
+/// Phase-1 of EclatV1 (Algorithm 2): build `(item, tidset)` via
+/// `flatMapToPair` + `groupByKey` over an *unpartitioned* database (tids
+/// are assigned inside the single partition), filter by support, collect
+/// and sort ascending by support. Returns the vertical list.
+pub fn phase1_group_by_key(
+    ctx: &ClusterContext,
+    db: &Database,
+    min_sup: u32,
+) -> Result<Vec<(Item, Tidset)>> {
+    // One partition => tids are globally consistent (paper's rationale).
+    let transactions = transactions_rdd(ctx, db, 1);
+    let par = ctx.default_parallelism();
+    let pairs: Rdd<(Item, Tid)> = transactions.map_partitions_with_index(|_idx, txns| {
+        let mut out = Vec::new();
+        for (tid, t) in txns.into_iter().enumerate() {
+            for item in t {
+                out.push((item, tid as Tid));
+            }
+        }
+        out
+    });
+    let mut vertical: Vec<(Item, Tidset)> = pairs
+        .group_by_key(par)
+        .filter(move |(_, tids)| tids.len() as u32 >= min_sup)
+        .collect()?;
+    for (_, tids) in &mut vertical {
+        tids.sort_unstable();
+    }
+    // Ascending support, item id tie-break — the paper's total order.
+    vertical.sort_by(|a, b| a.1.len().cmp(&b.1.len()).then_with(|| a.0.cmp(&b.0)));
+    Ok(vertical)
+}
+
+/// Phase-2 (Algorithm 3/6): compute the triangular matrix of candidate
+/// 2-itemset counts over `transactions`, either through a per-partition
+/// accumulator (the paper) or a pluggable provider (XLA backend).
+pub fn phase2_trimatrix(
+    ctx: &ClusterContext,
+    transactions: &Rdd<Vec<Item>>,
+    max_item: Item,
+    strategy: &CoocStrategy,
+) -> Result<TriMatrix> {
+    match strategy {
+        CoocStrategy::Accumulator => {
+            let acc = ctx.accumulator(TriMatrix::new(max_item), |a: &mut TriMatrix, b: TriMatrix| {
+                a.merge(&b)
+            });
+            let task_acc = acc.clone();
+            transactions
+                .map_partitions_with_index(move |_idx, txns| {
+                    let mut local = TriMatrix::new(max_item);
+                    for t in &txns {
+                        local.update_transaction(t);
+                    }
+                    task_acc.add(local);
+                    Vec::<()>::new()
+                })
+                .run()?;
+            Ok(acc.take(TriMatrix::new(0)))
+        }
+        CoocStrategy::Provider(provider) => {
+            let acc = ctx.accumulator(TriMatrix::new(max_item), |a: &mut TriMatrix, b: TriMatrix| {
+                a.merge(&b)
+            });
+            let task_acc = acc.clone();
+            let provider: Arc<dyn TriMatrixProvider> = Arc::clone(provider);
+            transactions
+                .map_partitions_with_index(move |_idx, txns| {
+                    let local = provider
+                        .compute(&txns, max_item)
+                        .expect("cooc provider failed in task");
+                    task_acc.add(local);
+                    Vec::<()>::new()
+                })
+                .run()?;
+            Ok(acc.take(TriMatrix::new(0)))
+        }
+    }
+}
+
+/// Phase-3 of EclatV2 (Algorithm 7): vertical dataset from the filtered
+/// transactions via `coalesce(1)` + `flatMapToPair` + `groupByKey`.
+/// Returns the `(item, tidset)` list sorted ascending by support.
+pub fn phase3_vertical_grouped(
+    ctx: &ClusterContext,
+    filtered: &Rdd<Vec<Item>>,
+) -> Result<Vec<(Item, Tidset)>> {
+    let par = ctx.default_parallelism();
+    let single = filtered.coalesce(1);
+    let pairs: Rdd<(Item, Tid)> = single.map_partitions_with_index(|_idx, txns| {
+        let mut out = Vec::new();
+        for (tid, t) in txns.into_iter().enumerate() {
+            for item in t {
+                out.push((item, tid as Tid));
+            }
+        }
+        out
+    });
+    let mut vertical: Vec<(Item, Tidset)> = pairs.group_by_key(par).collect()?;
+    for (_, tids) in &mut vertical {
+        tids.sort_unstable();
+    }
+    vertical.sort_by(|a, b| a.1.len().cmp(&b.1.len()).then_with(|| a.0.cmp(&b.0)));
+    Ok(vertical)
+}
+
+/// Phase-3 of EclatV3 (Algorithm 8): vertical dataset accumulated into a
+/// shared hashmap accumulator (`accMap`) instead of shuffling.
+pub fn phase3_vertical_accumulated(
+    ctx: &ClusterContext,
+    filtered: &Rdd<Vec<Item>>,
+) -> Result<Vec<(Item, Tidset)>> {
+    type TidMap = HashMap<Item, Tidset>;
+    let acc = ctx.accumulator(TidMap::new(), |a: &mut TidMap, b: TidMap| {
+        for (k, mut v) in b {
+            a.entry(k).or_default().append(&mut v);
+        }
+    });
+    let task_acc = acc.clone();
+    filtered
+        .coalesce(1)
+        .map_partitions_with_index(move |_idx, txns| {
+            let mut local = TidMap::new();
+            for (tid, t) in txns.into_iter().enumerate() {
+                for item in t {
+                    local.entry(item).or_default().push(tid as Tid);
+                }
+            }
+            task_acc.add(local);
+            Vec::<()>::new()
+        })
+        .run()?;
+    let map = acc.take(TidMap::new());
+    let mut vertical: Vec<(Item, Tidset)> = map.into_iter().collect();
+    for (_, tids) in &mut vertical {
+        tids.sort_unstable();
+    }
+    vertical.sort_by(|a, b| a.1.len().cmp(&b.1.len()).then_with(|| a.0.cmp(&b.0)));
+    Ok(vertical)
+}
+
+/// Output of the final phase: mined itemsets plus the per-partition
+/// equivalence-class load (the §4.5 workload measure).
+pub struct MinedClasses {
+    /// Frequent itemsets of length ≥ 2.
+    pub frequents: Vec<Frequent>,
+    /// Class members routed to each partition.
+    pub loads: Vec<usize>,
+}
+
+/// Phase-3 of EclatV1 / Phase-4 of V2–V5 (Algorithm 4/9): build the
+/// 1-prefix equivalence classes from the vertical list (with optional
+/// triangular-matrix pruning), key each class by its dense prefix index
+/// `v`, `partitionBy` the given partitioner, cache, and mine every class
+/// with the bottom-up recursion.
+pub fn mine_equivalence_classes(
+    ctx: &ClusterContext,
+    vertical: Vec<(Item, Tidset)>,
+    universe: usize,
+    min_sup: u32,
+    tri: Option<&TriMatrix>,
+    partitioner: Arc<dyn Partitioner<usize>>,
+) -> Result<MinedClasses> {
+    let vdb = VerticalDb { items: vertical, universe };
+    let index_of: HashMap<Item, usize> =
+        vdb.items.iter().enumerate().map(|(i, (item, _))| (*item, i)).collect();
+    let classes = construct_classes(&vdb, min_sup, tri);
+
+    // Driver-side load accounting (cheap; mirrors what the partitioner
+    // will do so the harness can report balance).
+    let mut loads = vec![0usize; partitioner.num_partitions()];
+    let keyed: Vec<(usize, crate::fim::EqClass)> = classes
+        .into_iter()
+        .map(|c| {
+            let v = index_of[&c.prefix];
+            loads[partitioner.partition(&v)] += c.weight();
+            (v, c)
+        })
+        .collect();
+
+    // Initial partition count is irrelevant: partitionBy immediately
+    // redistributes by class key (paper Algorithm 4 line 17–18).
+    let ecs = ctx.parallelize(keyed, 1).partition_by(partitioner).cache();
+    let frequents: Vec<Frequent> =
+        ecs.flat_map(move |(_, ec)| ec.mine_auto(min_sup, universe)).collect()?;
+    Ok(MinedClasses { frequents, loads })
+}
+
+/// Assemble a [`super::FimResult`]: 1-itemsets from the vertical list +
+/// mined k-itemsets (k ≥ 2).
+pub fn assemble(
+    algorithm: &str,
+    vertical_supports: impl IntoIterator<Item = (Item, u32)>,
+    mined: Vec<Frequent>,
+) -> Vec<Frequent> {
+    let mut out: Vec<Frequent> = vertical_supports
+        .into_iter()
+        .map(|(item, sup)| Frequent::new(vec![item], sup))
+        .collect();
+    out.extend(mined);
+    let _ = algorithm;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::partitioners::DefaultClassPartitioner;
+    use crate::fim::sort_frequents;
+
+    fn demo_db() -> Database {
+        Database::from_rows(vec![
+            vec![1, 3, 4],
+            vec![2, 3, 5],
+            vec![1, 2, 3, 5],
+            vec![2, 5],
+            vec![1, 3, 5],
+            vec![2, 3, 5],
+        ])
+    }
+
+    fn ctx() -> ClusterContext {
+        ClusterContext::builder().cores(2).build()
+    }
+
+    #[test]
+    fn wordcount_matches_bruteforce() {
+        let ctx = ctx();
+        let db = demo_db();
+        let txns = transactions_rdd(&ctx, &db, 3);
+        let freq = phase1_wordcount(&ctx, &txns, 3).unwrap();
+        assert_eq!(freq, vec![(1, 3), (2, 4), (3, 5), (5, 5)]);
+    }
+
+    #[test]
+    fn groupbykey_phase1_builds_sorted_vertical() {
+        let ctx = ctx();
+        let db = demo_db();
+        let v = phase1_group_by_key(&ctx, &db, 3).unwrap();
+        let items: Vec<Item> = v.iter().map(|(i, _)| *i).collect();
+        assert_eq!(items, vec![1, 2, 3, 5], "ascending support order");
+        // Tidset of item 3: transactions 0,1,2,4,5.
+        let t3 = &v.iter().find(|(i, _)| *i == 3).unwrap().1;
+        assert_eq!(*t3, vec![0, 1, 2, 4, 5]);
+    }
+
+    #[test]
+    fn trimatrix_accumulator_counts_pairs() {
+        let ctx = ctx();
+        let db = demo_db();
+        let txns = transactions_rdd(&ctx, &db, 3);
+        let m = phase2_trimatrix(&ctx, &txns, 5, &CoocStrategy::Accumulator).unwrap();
+        assert_eq!(m.support(2, 5), 4);
+        assert_eq!(m.support(3, 5), 4);
+        assert_eq!(m.support(1, 3), 3);
+        assert_eq!(m.support(1, 2), 1);
+    }
+
+    #[test]
+    fn provider_strategy_equals_accumulator() {
+        let ctx = ctx();
+        let db = demo_db();
+        let txns = transactions_rdd(&ctx, &db, 2);
+        let a = phase2_trimatrix(&ctx, &txns, 5, &CoocStrategy::Accumulator).unwrap();
+        let b = phase2_trimatrix(
+            &ctx,
+            &txns,
+            5,
+            &CoocStrategy::Provider(Arc::new(NativeCooc)),
+        )
+        .unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn vertical_grouped_and_accumulated_agree() {
+        let ctx = ctx();
+        let db = demo_db();
+        let txns = transactions_rdd(&ctx, &db, 3);
+        let a = phase3_vertical_grouped(&ctx, &txns).unwrap();
+        let b = phase3_vertical_accumulated(&ctx, &txns).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn mine_classes_end_to_end() {
+        let ctx = ctx();
+        let db = demo_db();
+        let vertical = phase1_group_by_key(&ctx, &db, 3).unwrap();
+        let n = vertical.len();
+        let mined = mine_equivalence_classes(
+            &ctx,
+            vertical,
+            db.len(),
+            3,
+            None,
+            Arc::new(DefaultClassPartitioner::for_items(n)),
+        )
+        .unwrap();
+        let mut got = mined.frequents;
+        sort_frequents(&mut got);
+        let pairs: Vec<(Vec<Item>, u32)> =
+            got.into_iter().map(|f| (f.items, f.support)).collect();
+        assert_eq!(
+            pairs,
+            vec![
+                (vec![1, 3], 3),
+                (vec![2, 3], 3),
+                (vec![2, 5], 4),
+                (vec![3, 5], 4),
+                (vec![2, 3, 5], 3),
+            ]
+        );
+        // Class members: [1]->{3}, [2]->{3,5}, [3]->{5} = 4 atoms.
+        assert_eq!(mined.loads.iter().sum::<usize>(), 4);
+    }
+}

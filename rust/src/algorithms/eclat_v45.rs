@@ -1,0 +1,133 @@
+//! EclatV4 and EclatV5 (paper §4.4): EclatV3 with the equivalence
+//! classes spread over `p` user-chosen partitions by the **hash** (`v %
+//! p`) and **reverse-hash** partitioners of Algorithm 10 — the workload
+//! balancing heuristics that §5.2.1 shows dominating V1–V3.
+
+use std::sync::Arc;
+
+use crate::engine::ClusterContext;
+use crate::error::Result;
+use crate::fim::{Database, MinSup};
+
+use super::eclat_v3::run_v3_pipeline;
+use super::partitioners::{HashClassPartitioner, ReverseHashClassPartitioner};
+use super::{Algorithm, EclatOptions, FimResult};
+
+/// EclatV4: hash partitioner `v % p`.
+#[derive(Debug, Clone, Default)]
+pub struct EclatV4 {
+    /// Shared variant options; `options.partitions` is `p`.
+    pub options: EclatOptions,
+}
+
+impl EclatV4 {
+    /// With explicit options.
+    pub fn with_options(options: EclatOptions) -> Self {
+        EclatV4 { options }
+    }
+
+    /// Convenience: set `p` only.
+    pub fn with_partitions(p: usize) -> Self {
+        EclatV4 { options: EclatOptions { partitions: p, ..Default::default() } }
+    }
+}
+
+impl Algorithm for EclatV4 {
+    fn name(&self) -> &'static str {
+        "eclatV4"
+    }
+
+    fn run_on(&self, ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
+        let p = self.options.partitions;
+        run_v3_pipeline(self.name(), &self.options, ctx, db, min_sup, |_n| {
+            Arc::new(HashClassPartitioner::new(p))
+        })
+    }
+}
+
+/// EclatV5: reverse-hash partitioner.
+#[derive(Debug, Clone, Default)]
+pub struct EclatV5 {
+    /// Shared variant options; `options.partitions` is `p`.
+    pub options: EclatOptions,
+}
+
+impl EclatV5 {
+    /// With explicit options.
+    pub fn with_options(options: EclatOptions) -> Self {
+        EclatV5 { options }
+    }
+
+    /// Convenience: set `p` only.
+    pub fn with_partitions(p: usize) -> Self {
+        EclatV5 { options: EclatOptions { partitions: p, ..Default::default() } }
+    }
+}
+
+impl Algorithm for EclatV5 {
+    fn name(&self) -> &'static str {
+        "eclatV5"
+    }
+
+    fn run_on(&self, ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
+        let p = self.options.partitions;
+        run_v3_pipeline(self.name(), &self.options, ctx, db, min_sup, |_n| {
+            Arc::new(ReverseHashClassPartitioner::new(p))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::{apriori::apriori, sort_frequents};
+
+    fn demo_db() -> Database {
+        Database::from_rows(vec![
+            vec![1, 3, 4],
+            vec![2, 3, 5],
+            vec![1, 2, 3, 5],
+            vec![2, 5],
+            vec![1, 3, 5],
+            vec![2, 3, 5],
+        ])
+    }
+
+    #[test]
+    fn v4_and_v5_match_oracle() {
+        let ctx = ClusterContext::builder().cores(2).build();
+        let db = demo_db();
+        for min_sup in 1..=4 {
+            let mut want = apriori(&db, min_sup);
+            sort_frequents(&mut want);
+            for algo in [&EclatV4::default() as &dyn Algorithm, &EclatV5::default()] {
+                let mut got =
+                    algo.run_on(&ctx, &db, MinSup::count(min_sup)).unwrap().frequents;
+                sort_frequents(&mut got);
+                assert_eq!(got, want, "{} min_sup={min_sup}", algo.name());
+            }
+        }
+    }
+
+    #[test]
+    fn partition_loads_use_p_partitions() {
+        let ctx = ClusterContext::builder().cores(2).build();
+        let db = demo_db();
+        let r = EclatV4::with_partitions(3).run_on(&ctx, &db, MinSup::count(2)).unwrap();
+        assert_eq!(r.partition_loads.len(), 3);
+        let r = EclatV5::with_partitions(4).run_on(&ctx, &db, MinSup::count(2)).unwrap();
+        assert_eq!(r.partition_loads.len(), 4);
+    }
+
+    #[test]
+    fn p_one_still_correct() {
+        let ctx = ClusterContext::builder().cores(2).build();
+        let db = demo_db();
+        let r = EclatV4::with_partitions(1).run_on(&ctx, &db, MinSup::count(2)).unwrap();
+        let mut got = r.frequents;
+        let mut want = apriori(&db, 2);
+        sort_frequents(&mut got);
+        sort_frequents(&mut want);
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,139 @@
+//! The paper's algorithms: five RDD-Eclat variants (EclatV1–V5), the
+//! YAFIM-style RDD-Apriori baseline, and sequential oracles — all running
+//! on the [`crate::engine`] RDD substrate.
+//!
+//! | Variant | Phase structure (paper §4) |
+//! |---|---|
+//! | `EclatV1` | vertical DB via `groupByKey` on the raw transactions; triangular matrix accumulator; equivalence classes on the default `(n−1)` partitioner |
+//! | `EclatV2` | + Borgelt transaction filtering (word-count Phase-1, broadcast item trie) |
+//! | `EclatV3` | vertical DB accumulated in a shared hashmap accumulator instead of a shuffle |
+//! | `EclatV4` | EclatV3 + hash partitioner `v % p` |
+//! | `EclatV5` | EclatV3 + reverse-hash partitioner |
+//! | `RddApriori` | YAFIM: per-level candidate broadcast + subset-count `reduceByKey` |
+
+pub mod apriori_rdd;
+pub mod common;
+pub mod eclat_v1;
+pub mod eclat_v2;
+pub mod eclat_v3;
+pub mod eclat_v45;
+pub mod partitioners;
+pub mod seq;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::engine::ClusterContext;
+use crate::error::Result;
+use crate::fim::{Database, Frequent, Item, MinSup, TriMatrix};
+
+pub use apriori_rdd::RddApriori;
+pub use eclat_v1::EclatV1;
+pub use eclat_v2::EclatV2;
+pub use eclat_v3::EclatV3;
+pub use eclat_v45::{EclatV4, EclatV5};
+pub use seq::{SeqApriori, SeqEclat, SeqEclatDiffset, SeqFpGrowth};
+
+/// One timed phase of an algorithm run.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    /// Phase name as in the paper ("phase1", "phase2", ...).
+    pub name: String,
+    /// Wall time of the phase.
+    pub wall: Duration,
+}
+
+/// The output of one mining run: the frequent itemsets plus run metadata
+/// used by the experiment harness.
+#[derive(Debug, Clone)]
+pub struct FimResult {
+    /// Which algorithm produced this.
+    pub algorithm: String,
+    /// All frequent itemsets with supports (unsorted; use
+    /// [`crate::fim::sort_frequents`] for canonical order).
+    pub frequents: Vec<Frequent>,
+    /// Total wall time of the run.
+    pub wall: Duration,
+    /// Per-phase breakdown.
+    pub phases: Vec<Phase>,
+    /// Equivalence-class members routed to each partition (the §4.5
+    /// workload measure; empty for non-Eclat algorithms).
+    pub partition_loads: Vec<usize>,
+    /// Fractional reduction of total item occurrences achieved by
+    /// transaction filtering (EclatV2+; `None` when not applicable).
+    pub filtered_reduction: Option<f64>,
+}
+
+impl FimResult {
+    /// Does the result contain `items` with exactly `support`?
+    pub fn contains(&self, items: &[Item], support: u32) -> bool {
+        self.frequents.iter().any(|f| f.items == items && f.support == support)
+    }
+
+    /// Number of frequent itemsets found.
+    pub fn len(&self) -> usize {
+        self.frequents.len()
+    }
+
+    /// True when nothing is frequent.
+    pub fn is_empty(&self) -> bool {
+        self.frequents.is_empty()
+    }
+}
+
+/// A frequent-itemset mining algorithm runnable on a cluster context.
+pub trait Algorithm: Send + Sync {
+    /// Short name for tables/CSV ("eclatV1", "apriori", ...).
+    fn name(&self) -> &'static str;
+
+    /// Mine `db` at `min_sup` on `ctx`.
+    fn run_on(&self, ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult>;
+}
+
+/// Strategy for computing the Phase-2 triangular matrix.
+#[derive(Clone)]
+pub enum CoocStrategy {
+    /// The paper's approach: per-partition local matrices merged through a
+    /// Spark accumulator.
+    Accumulator,
+    /// A pluggable provider (the XLA/PJRT AOT-kernel backend lives here;
+    /// see `runtime::cooc`), called per partition batch.
+    Provider(Arc<dyn TriMatrixProvider>),
+}
+
+impl std::fmt::Debug for CoocStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CoocStrategy::Accumulator => write!(f, "Accumulator"),
+            CoocStrategy::Provider(_) => write!(f, "Provider(..)"),
+        }
+    }
+}
+
+/// Computes the candidate-2-itemset co-occurrence matrix for a batch of
+/// transactions. Implemented natively (loops) and by the PJRT runtime
+/// (AOT `cooc` kernel).
+pub trait TriMatrixProvider: Send + Sync {
+    /// Count all 2-itemset occurrences of `transactions` into a matrix
+    /// covering items `0..=max_item`.
+    fn compute(&self, transactions: &[Vec<Item>], max_item: Item) -> Result<TriMatrix>;
+}
+
+/// Shared knobs of the Eclat variants (the paper's `triMatrixMode` and
+/// `p`).
+#[derive(Debug, Clone)]
+pub struct EclatOptions {
+    /// Enable the triangular-matrix optimization (`triMatrixMode`).
+    pub tri_matrix: bool,
+    /// Number of equivalence-class partitions `p` (V4/V5 only; the paper
+    /// uses 10).
+    pub partitions: usize,
+    /// How Phase-2 computes the matrix.
+    pub cooc: CoocStrategy,
+}
+
+impl Default for EclatOptions {
+    fn default() -> Self {
+        EclatOptions { tri_matrix: true, partitions: 10, cooc: CoocStrategy::Accumulator }
+    }
+}

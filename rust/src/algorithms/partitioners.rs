@@ -1,0 +1,167 @@
+//! Equivalence-class partitioners — Algorithm 10 of the paper.
+//!
+//! Each equivalence class is keyed by `v`, the dense index of its prefix
+//! item in the mining order (ascending support). Because classes are
+//! built over a *totally ordered* item list, class `v` has at most
+//! `n−1−v` members: low `v` ⇒ heavy class. The three heuristics spread
+//! that skew differently:
+//!
+//! * **default** — `v` itself: one partition per class (`n−1` partitions),
+//!   used by EclatV1–V3.
+//! * **hash** — `v % p` (EclatV4): round-robin over `p` partitions.
+//! * **reverse hash** — `v % p` reversed to `(p−1) − (v % p)` once
+//!   `v ≥ p` (EclatV5): the second and later "rows" of classes are dealt
+//!   in the opposite direction, pairing the heaviest remaining class
+//!   with the partition that so far received the lightest load.
+
+use crate::engine::Partitioner;
+
+/// The class key: the dense index of the class prefix in mining order.
+pub type ClassKey = usize;
+
+/// `getPartition(v) = v` over `n−1` partitions (one class each).
+#[derive(Debug, Clone)]
+pub struct DefaultClassPartitioner {
+    parts: usize,
+}
+
+impl DefaultClassPartitioner {
+    /// `n` = number of frequent items; classes occupy `n−1` partitions.
+    pub fn for_items(n: usize) -> Self {
+        DefaultClassPartitioner { parts: n.saturating_sub(1).max(1) }
+    }
+}
+
+impl Partitioner<ClassKey> for DefaultClassPartitioner {
+    fn num_partitions(&self) -> usize {
+        self.parts
+    }
+    fn partition(&self, v: &ClassKey) -> usize {
+        *v % self.parts // v < n-1 by construction; % keeps the contract
+    }
+}
+
+/// `getPartition(v) = v % p` (EclatV4).
+#[derive(Debug, Clone)]
+pub struct HashClassPartitioner {
+    p: usize,
+}
+
+impl HashClassPartitioner {
+    /// `p` partitions (user-supplied; the paper uses p = 10).
+    pub fn new(p: usize) -> Self {
+        HashClassPartitioner { p: p.max(1) }
+    }
+}
+
+impl Partitioner<ClassKey> for HashClassPartitioner {
+    fn num_partitions(&self) -> usize {
+        self.p
+    }
+    fn partition(&self, v: &ClassKey) -> usize {
+        v % self.p
+    }
+}
+
+/// Reverse hash (EclatV5): identity on the first row (`v < p`), reversed
+/// remainder afterwards.
+#[derive(Debug, Clone)]
+pub struct ReverseHashClassPartitioner {
+    p: usize,
+}
+
+impl ReverseHashClassPartitioner {
+    /// `p` partitions.
+    pub fn new(p: usize) -> Self {
+        ReverseHashClassPartitioner { p: p.max(1) }
+    }
+}
+
+impl Partitioner<ClassKey> for ReverseHashClassPartitioner {
+    fn num_partitions(&self) -> usize {
+        self.p
+    }
+    fn partition(&self, v: &ClassKey) -> usize {
+        let r = v % self.p;
+        if *v >= self.p {
+            (self.p - 1) - r
+        } else {
+            r
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::imbalance;
+
+    #[test]
+    fn default_partitioner_is_identity() {
+        let p = DefaultClassPartitioner::for_items(6); // 5 partitions
+        assert_eq!(p.num_partitions(), 5);
+        for v in 0..5 {
+            assert_eq!(p.partition(&v), v);
+        }
+    }
+
+    #[test]
+    fn hash_partitioner_mods() {
+        let p = HashClassPartitioner::new(10);
+        assert_eq!(p.partition(&0), 0);
+        assert_eq!(p.partition(&13), 3);
+        assert_eq!(p.partition(&25), 5);
+    }
+
+    #[test]
+    fn reverse_hash_matches_algorithm_10() {
+        let p = ReverseHashClassPartitioner::new(10);
+        // v < p: identity.
+        for v in 0..10 {
+            assert_eq!(p.partition(&v), v);
+        }
+        // v >= p: (p-1) - (v % p).
+        assert_eq!(p.partition(&10), 9);
+        assert_eq!(p.partition(&11), 8);
+        assert_eq!(p.partition(&19), 0);
+        assert_eq!(p.partition(&20), 9);
+    }
+
+    /// The paper's §4.5 motivation: with triangular workloads
+    /// (class v has weight n−1−v), both hash partitioners beat nothing,
+    /// and reverse hash balances at least as well as plain hash.
+    #[test]
+    fn reverse_hash_balances_triangular_load() {
+        let n = 101usize; // 100 classes, weight(v) = n-1-v
+        let p = 10usize;
+        let weight = |v: usize| n - 1 - v;
+        let mut hash_loads = vec![0usize; p];
+        let mut rev_loads = vec![0usize; p];
+        let h = HashClassPartitioner::new(p);
+        let r = ReverseHashClassPartitioner::new(p);
+        for v in 0..(n - 1) {
+            hash_loads[h.partition(&v)] += weight(v);
+            rev_loads[r.partition(&v)] += weight(v);
+        }
+        let ih = imbalance(&hash_loads);
+        let ir = imbalance(&rev_loads);
+        assert!(ir <= ih + 1e-9, "reverse {ir} vs hash {ih}");
+        // Both are far better than one-class-per-partition (default), whose
+        // max/mean over used partitions is ~2x at this shape.
+        assert!(ih < 1.25 && ir < 1.25, "hash {ih} rev {ir}");
+    }
+
+    #[test]
+    fn all_partitions_in_range() {
+        let parts: Vec<Box<dyn Partitioner<usize>>> = vec![
+            Box::new(DefaultClassPartitioner::for_items(50)),
+            Box::new(HashClassPartitioner::new(7)),
+            Box::new(ReverseHashClassPartitioner::new(7)),
+        ];
+        for p in &parts {
+            for v in 0..200 {
+                assert!(p.partition(&v) < p.num_partitions());
+            }
+        }
+    }
+}

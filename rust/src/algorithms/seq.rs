@@ -1,0 +1,192 @@
+//! Sequential single-machine miners — correctness oracles and the
+//! "one core" reference points for the scaling studies.
+
+use crate::engine::ClusterContext;
+use crate::error::Result;
+use crate::fim::{
+    apriori::apriori, bottomup::bottom_up_diffset, construct_classes, fpgrowth::fp_growth,
+    Database, Frequent, MinSup, VerticalDb,
+};
+use crate::util::Stopwatch;
+
+use super::{Algorithm, FimResult};
+
+fn wrap(name: &str, frequents: Vec<Frequent>, sw: Stopwatch) -> FimResult {
+    FimResult {
+        algorithm: name.into(),
+        frequents,
+        wall: sw.elapsed(),
+        phases: Vec::new(),
+        partition_loads: Vec::new(),
+        filtered_reduction: None,
+    }
+}
+
+/// Sequential Eclat: vertical DB + equivalence classes + bottom-up, no
+/// engine involvement.
+#[derive(Debug, Clone, Default)]
+pub struct SeqEclat;
+
+impl SeqEclat {
+    /// Run directly on a database (no context needed). Uses the
+    /// triangular-matrix prune (Zaki's recommendation, §Perf iteration 4)
+    /// to avoid intersecting infrequent item pairs during class
+    /// construction.
+    pub fn mine(db: &Database, min_sup: MinSup) -> Vec<Frequent> {
+        let min_sup = min_sup.to_count(db.len());
+        let vdb = VerticalDb::build(db, min_sup);
+        let mut tri = crate::fim::TriMatrix::new(db.stats().max_item);
+        for t in db.transactions() {
+            tri.update_transaction(t);
+        }
+        let mut out: Vec<Frequent> = vdb
+            .items
+            .iter()
+            .map(|(i, t)| Frequent::new(vec![*i], t.len() as u32))
+            .collect();
+        for class in construct_classes(&vdb, min_sup, Some(&tri)) {
+            out.extend(class.mine_auto(min_sup, db.len()));
+        }
+        out
+    }
+}
+
+impl Algorithm for SeqEclat {
+    fn name(&self) -> &'static str {
+        "seq-eclat"
+    }
+
+    fn run_on(&self, _ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
+        let sw = Stopwatch::start();
+        Ok(wrap(self.name(), Self::mine(db, min_sup), sw))
+    }
+}
+
+/// Sequential dEclat (diffset) — extension ablation.
+#[derive(Debug, Clone, Default)]
+pub struct SeqEclatDiffset;
+
+impl Algorithm for SeqEclatDiffset {
+    fn name(&self) -> &'static str {
+        "seq-declat"
+    }
+
+    fn run_on(&self, _ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
+        let sw = Stopwatch::start();
+        let min_sup = min_sup.to_count(db.len());
+        let vdb = VerticalDb::build(db, min_sup);
+        let mut out: Vec<Frequent> = vdb
+            .items
+            .iter()
+            .map(|(i, t)| Frequent::new(vec![*i], t.len() as u32))
+            .collect();
+        // One top-level class over all frequent items: the diffset driver
+        // handles the level-1 → level-2 conversion internally.
+        bottom_up_diffset(&[], &vdb.items, min_sup, &mut out);
+        // bottom_up_diffset re-emits the 1-itemsets; drop the duplicates.
+        let mut seen = std::collections::HashSet::new();
+        out.retain(|f| seen.insert(f.items.clone()));
+        Ok(wrap(self.name(), out, sw))
+    }
+}
+
+/// Sequential Apriori (Agrawal–Srikant).
+#[derive(Debug, Clone, Default)]
+pub struct SeqApriori;
+
+impl Algorithm for SeqApriori {
+    fn name(&self) -> &'static str {
+        "seq-apriori"
+    }
+
+    fn run_on(&self, _ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
+        let sw = Stopwatch::start();
+        let min_sup = min_sup.to_count(db.len());
+        Ok(wrap(self.name(), apriori(db, min_sup), sw))
+    }
+}
+
+/// Sequential FP-Growth (Han et al.).
+#[derive(Debug, Clone, Default)]
+pub struct SeqFpGrowth;
+
+impl Algorithm for SeqFpGrowth {
+    fn name(&self) -> &'static str {
+        "seq-fpgrowth"
+    }
+
+    fn run_on(&self, _ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
+        let sw = Stopwatch::start();
+        let min_sup = min_sup.to_count(db.len());
+        Ok(wrap(self.name(), fp_growth(db, min_sup), sw))
+    }
+}
+
+/// Look up an algorithm by CLI name.
+pub fn by_name(name: &str) -> Option<Box<dyn Algorithm>> {
+    use super::{EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, RddApriori};
+    match name.to_ascii_lowercase().as_str() {
+        "eclatv1" | "v1" => Some(Box::new(EclatV1::default())),
+        "eclatv2" | "v2" => Some(Box::new(EclatV2::default())),
+        "eclatv3" | "v3" => Some(Box::new(EclatV3::default())),
+        "eclatv4" | "v4" => Some(Box::new(EclatV4::default())),
+        "eclatv5" | "v5" => Some(Box::new(EclatV5::default())),
+        "apriori" | "rdd-apriori" | "yafim" => Some(Box::new(RddApriori)),
+        "seq-eclat" => Some(Box::new(SeqEclat)),
+        "seq-declat" => Some(Box::new(SeqEclatDiffset)),
+        "seq-apriori" => Some(Box::new(SeqApriori)),
+        "seq-fpgrowth" | "fpgrowth" => Some(Box::new(SeqFpGrowth)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::sort_frequents;
+
+    fn demo_db() -> Database {
+        Database::from_rows(vec![
+            vec![1, 3, 4],
+            vec![2, 3, 5],
+            vec![1, 2, 3, 5],
+            vec![2, 5],
+            vec![1, 3, 5],
+            vec![2, 3, 5],
+        ])
+    }
+
+    #[test]
+    fn all_sequential_miners_agree() {
+        let ctx = ClusterContext::builder().cores(1).build();
+        let db = demo_db();
+        let algos: Vec<Box<dyn Algorithm>> = vec![
+            Box::new(SeqEclat),
+            Box::new(SeqEclatDiffset),
+            Box::new(SeqApriori),
+            Box::new(SeqFpGrowth),
+        ];
+        for min_sup in 1..=5 {
+            let mut reference: Option<Vec<Frequent>> = None;
+            for a in &algos {
+                let mut got = a.run_on(&ctx, &db, MinSup::count(min_sup)).unwrap().frequents;
+                sort_frequents(&mut got);
+                match &reference {
+                    None => reference = Some(got),
+                    Some(r) => assert_eq!(&got, r, "{} min_sup={min_sup}", a.name()),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn by_name_resolves_everything() {
+        for n in [
+            "eclatV1", "v2", "EclatV3", "v4", "eclatv5", "apriori", "yafim", "seq-eclat",
+            "seq-declat", "seq-apriori", "fpgrowth",
+        ] {
+            assert!(by_name(n).is_some(), "{n}");
+        }
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,72 @@
+//! `figures` — regenerate every table and figure of the paper's
+//! evaluation (DESIGN.md §5 per-experiment index).
+//!
+//! ```text
+//! figures --all                 # everything (SCALE=paper|quick)
+//! figures --fig 13              # one min-sup figure
+//! figures --fig table2|15|16|a1|a2|a3|a4
+//! ```
+
+use rdd_eclat::cli::{App, Command};
+use rdd_eclat::error::{Error, Result};
+use rdd_eclat::figures::{run_by_id, FigureCtx};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match real_main(&argv) {
+        Ok(()) => {}
+        Err(Error::Usage(msg)) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn real_main(argv: &[String]) -> Result<()> {
+    let app = App::new("figures", "regenerate the paper's tables and figures").command(
+        Command::new("gen", "run experiments")
+            .opt("fig", "table2 | 8..16 | a1..a4 | all")
+            .opt("cores", "executor cores for live runs")
+            .opt("data-dir", "dataset cache dir")
+            .flag("all", "run everything")
+            .flag("quick", "force quick scale (same as SCALE=quick)"),
+    );
+    // Allow both `figures gen --fig 13` and the shorthand `figures --fig 13`.
+    let argv: Vec<String> = if argv.first().map(String::as_str) == Some("gen") {
+        argv.to_vec()
+    } else {
+        let mut v = vec!["gen".to_string()];
+        v.extend(argv.iter().cloned());
+        v
+    };
+    let (cmd, args) = app.dispatch(&argv)?;
+    debug_assert_eq!(cmd.name, "gen");
+
+    let mut fx = FigureCtx::from_env();
+    if args.flag("quick") {
+        fx.quick = true;
+        fx.bench = rdd_eclat::bench::Bench::quick();
+    }
+    fx.cores = args.get_parse("cores", fx.cores)?;
+    if let Some(d) = args.get("data-dir") {
+        fx.data_dir = d.to_string();
+    }
+
+    let id = if args.flag("all") {
+        "all".to_string()
+    } else {
+        args.get("fig")
+            .ok_or_else(|| Error::Usage("need --fig <id> or --all\n".into()))?
+            .to_string()
+    };
+    println!(
+        "running experiment(s) `{id}` at scale={} cores={} (results/ CSVs)",
+        if fx.quick { "quick" } else { "paper" },
+        fx.cores
+    );
+    run_by_id(&fx, &id)
+}

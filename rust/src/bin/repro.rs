@@ -1,0 +1,238 @@
+//! `repro` — the launcher. Mines a dataset with any of the paper's
+//! algorithms, generates benchmark datasets, prints Table 2 statistics,
+//! and derives association rules.
+//!
+//! ```text
+//! repro run      --algo eclatV4 --dataset T10I4D100K --min-sup 0.01
+//! repro run      --config experiment.toml
+//! repro generate --dataset chess --data-dir datasets
+//! repro datasets
+//! repro rules    --dataset chess --min-sup 0.9 --min-conf 0.95
+//! ```
+
+use rdd_eclat::algorithms::{seq::by_name, CoocStrategy, EclatOptions};
+use rdd_eclat::cli::{App, Command};
+use rdd_eclat::conf::EclatConfig;
+use rdd_eclat::data::{self, DatasetSpec, TABLE2};
+use rdd_eclat::engine::ClusterContext;
+use rdd_eclat::error::{Error, Result};
+use rdd_eclat::fim::{generate_rules, sort_frequents};
+use rdd_eclat::util::time::fmt_duration;
+
+fn app() -> App {
+    App::new("repro", "RDD-Eclat: parallel Eclat on a Spark-like RDD engine")
+        .command(
+            Command::new("run", "mine frequent itemsets")
+                .opt("config", "TOML config file (flags override)")
+                .opt("algo", "eclatV1..V5 | apriori | seq-eclat | seq-apriori | fpgrowth")
+                .opt("dataset", "Table 2 name or FIMI file path")
+                .opt("min-sup", "fraction (0,1] or absolute count (>1)")
+                .opt("cores", "executor cores (default: all)")
+                .opt("p", "equivalence-class partitions for V4/V5 (default 10)")
+                .opt("backend", "phase-2 co-occurrence backend: native | xla")
+                .opt("data-dir", "dataset cache dir (default datasets/)")
+                .opt("output", "save frequent itemsets under this directory")
+                .flag("no-tri-matrix", "disable the triangular-matrix optimization")
+                .flag("quiet", "suppress the itemset listing"),
+        )
+        .command(
+            Command::new("generate", "generate a benchmark dataset to disk")
+                .opt("dataset", "Table 2 name (required)")
+                .opt("data-dir", "output dir (default datasets/)"),
+        )
+        .command(Command::new("datasets", "list Table 2 datasets with generated stats"))
+        .command(
+            Command::new("rules", "mine association rules (ARM step 2)")
+                .opt("dataset", "Table 2 name or FIMI file path")
+                .opt("min-sup", "fraction or count")
+                .opt("min-conf", "minimum confidence (default 0.8)")
+                .opt("top", "print at most N rules (default 20)")
+                .opt("data-dir", "dataset cache dir"),
+        )
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&argv) {
+        Ok(()) => {}
+        Err(Error::Usage(msg)) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let app = app();
+    let (cmd, args) = app.dispatch(argv)?;
+    match cmd.name {
+        "run" => cmd_run(&args),
+        "generate" => cmd_generate(&args),
+        "datasets" => cmd_datasets(),
+        "rules" => cmd_rules(&args),
+        _ => unreachable!(),
+    }
+}
+
+fn config_from_args(args: &rdd_eclat::cli::Args) -> Result<EclatConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => EclatConfig::from_file(path)?,
+        None => EclatConfig::default(),
+    };
+    if let Some(v) = args.get("algo") {
+        cfg.algorithm = v.to_string();
+    }
+    if let Some(v) = args.get("dataset") {
+        cfg.dataset = v.to_string();
+    }
+    cfg.min_sup = args.get_parse("min-sup", cfg.min_sup)?;
+    cfg.cores = args.get_parse("cores", cfg.cores)?;
+    cfg.partitions = args.get_parse("p", cfg.partitions)?;
+    cfg.min_conf = args.get_parse("min-conf", cfg.min_conf)?;
+    if let Some(v) = args.get("backend") {
+        if v != "native" && v != "xla" {
+            return Err(Error::Usage(format!("--backend must be native|xla, got {v}")));
+        }
+        cfg.backend = v.to_string();
+    }
+    if let Some(v) = args.get("data-dir") {
+        cfg.data_dir = v.to_string();
+    }
+    if let Some(v) = args.get("output") {
+        cfg.output = Some(v.to_string());
+    }
+    if args.flag("no-tri-matrix") {
+        cfg.tri_matrix = Some(false);
+    }
+    Ok(cfg)
+}
+
+/// Build the algorithm named in the config, applying options.
+fn build_algorithm(cfg: &EclatConfig) -> Result<Box<dyn rdd_eclat::algorithms::Algorithm>> {
+    use rdd_eclat::algorithms::{EclatV1, EclatV2, EclatV3, EclatV4, EclatV5};
+    // Per-dataset default for triMatrixMode (the paper disables it on BMS).
+    let tri_default = DatasetSpec::parse(&cfg.dataset).map(|s| s.tri_matrix_mode()).unwrap_or(true);
+    let cooc = if cfg.backend == "xla" {
+        let svc = std::sync::Arc::new(rdd_eclat::runtime::XlaService::start(
+            rdd_eclat::runtime::default_artifact_dir(),
+        )?);
+        CoocStrategy::Provider(std::sync::Arc::new(rdd_eclat::runtime::XlaCooc::new(svc)))
+    } else {
+        CoocStrategy::Accumulator
+    };
+    let opts = EclatOptions {
+        tri_matrix: cfg.tri_matrix.unwrap_or(tri_default),
+        partitions: cfg.partitions,
+        cooc,
+    };
+    let algo: Box<dyn rdd_eclat::algorithms::Algorithm> = match cfg
+        .algorithm
+        .to_ascii_lowercase()
+        .as_str()
+    {
+        "eclatv1" | "v1" => Box::new(EclatV1::with_options(opts)),
+        "eclatv2" | "v2" => Box::new(EclatV2::with_options(opts)),
+        "eclatv3" | "v3" => Box::new(EclatV3::with_options(opts)),
+        "eclatv4" | "v4" => Box::new(EclatV4::with_options(opts)),
+        "eclatv5" | "v5" => Box::new(EclatV5::with_options(opts)),
+        other => by_name(other)
+            .ok_or_else(|| Error::Usage(format!("unknown algorithm {other:?}")))?,
+    };
+    Ok(algo)
+}
+
+fn cmd_run(args: &rdd_eclat::cli::Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let db = data::resolve(&cfg.dataset, &cfg.data_dir)?;
+    let stats = db.stats();
+    let cores = if cfg.cores == 0 { rdd_eclat::engine::available_cores() } else { cfg.cores };
+    let ctx = ClusterContext::builder().cores(cores).build();
+    let algo = build_algorithm(&cfg)?;
+    println!(
+        "mining {} ({} txns, {} items, avg width {:.1}) with {} @ min_sup {} on {cores} cores",
+        cfg.dataset, stats.transactions, stats.distinct_items, stats.avg_width,
+        algo.name(), cfg.min_sup
+    );
+    let result = algo.run_on(&ctx, &db, cfg.min_sup_typed()?)?;
+    println!(
+        "found {} frequent itemsets in {}",
+        result.len(),
+        fmt_duration(result.wall)
+    );
+    for p in &result.phases {
+        println!("  {:<8} {}", p.name, fmt_duration(p.wall));
+    }
+    if let Some(red) = result.filtered_reduction {
+        println!("  filtering reduced transaction volume by {:.1}%", red * 100.0);
+    }
+    if let Some(dir) = &cfg.output {
+        std::fs::create_dir_all(dir)?;
+        let mut sorted = result.frequents.clone();
+        sort_frequents(&mut sorted);
+        let text: String = sorted.iter().map(|f| format!("{f}\n")).collect();
+        let path = format!("{dir}/frequent_itemsets.txt");
+        std::fs::write(&path, text)?;
+        println!("wrote {path}");
+    } else if !args.flag("quiet") {
+        let mut sorted = result.frequents.clone();
+        sort_frequents(&mut sorted);
+        for f in sorted.iter().take(20) {
+            println!("  {f}");
+        }
+        if sorted.len() > 20 {
+            println!("  ... ({} more; use --output to save all)", sorted.len() - 20);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &rdd_eclat::cli::Args) -> Result<()> {
+    let name = args.get("dataset").ok_or_else(|| Error::Usage("--dataset required".into()))?;
+    let dir = args.get("data-dir").unwrap_or("datasets");
+    let spec = DatasetSpec::parse(name)
+        .ok_or_else(|| Error::Usage(format!("unknown dataset {name:?}")))?;
+    let db = spec.materialize(dir)?;
+    let s = db.stats();
+    println!(
+        "{}/{}.dat: {} txns, {} items, avg width {:.2}",
+        dir, spec.name(), s.transactions, s.distinct_items, s.avg_width
+    );
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!(
+        "{:<16} {:>10} {:>8} {:>10}  (paper Table 2 targets)",
+        "dataset", "txns", "items", "avg_width"
+    );
+    for spec in TABLE2 {
+        let (t, i, w) = spec.table2_row();
+        println!("{:<16} {:>10} {:>8} {:>10.1}", spec.name(), t, i, w);
+    }
+    println!("\nuse `repro generate --dataset <name>` to materialize the twin");
+    Ok(())
+}
+
+fn cmd_rules(args: &rdd_eclat::cli::Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let top: usize = args.get_parse("top", 20usize)?;
+    let db = data::resolve(&cfg.dataset, &cfg.data_dir)?;
+    let ctx = ClusterContext::builder().build();
+    let algo = build_algorithm(&EclatConfig { algorithm: "eclatV4".into(), ..cfg.clone() })?;
+    let result = algo.run_on(&ctx, &db, cfg.min_sup_typed()?)?;
+    let rules = generate_rules(&result.frequents, cfg.min_conf, Some(db.len()));
+    println!(
+        "{} frequent itemsets -> {} rules at min_conf {}",
+        result.len(),
+        rules.len(),
+        cfg.min_conf
+    );
+    for r in rules.iter().take(top) {
+        println!("  {r}");
+    }
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! A small command-line argument parser (no `clap` offline).
+//!
+//! Model: `binary <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags are declared up front so typos fail fast with usage text.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+
+/// Declares one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    /// Long name without dashes ("min-sup").
+    pub name: &'static str,
+    /// Takes a value (`--key v`) vs boolean flag (`--flag`).
+    pub takes_value: bool,
+    /// Help text.
+    pub help: &'static str,
+}
+
+/// Parsed arguments of one subcommand.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// String value of `--name v`.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    /// Parsed value with a default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Usage(format!("--{name}: cannot parse {s:?}"))),
+        }
+    }
+
+    /// Was boolean `--name` given?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// A subcommand parser.
+#[derive(Debug, Clone)]
+pub struct Command {
+    /// Subcommand name.
+    pub name: &'static str,
+    /// One-line description for the usage listing.
+    pub about: &'static str,
+    opts: Vec<OptSpec>,
+}
+
+impl Command {
+    /// New subcommand.
+    pub fn new(name: &'static str, about: &'static str) -> Command {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    /// Declare a value option.
+    pub fn opt(mut self, name: &'static str, help: &'static str) -> Command {
+        self.opts.push(OptSpec { name, takes_value: true, help });
+        self
+    }
+
+    /// Declare a boolean flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Command {
+        self.opts.push(OptSpec { name, takes_value: false, help });
+        self
+    }
+
+    /// Usage text.
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n", self.name, self.about);
+        for o in &self.opts {
+            let arg = if o.takes_value { format!("--{} <v>", o.name) } else { format!("--{}", o.name) };
+            out.push_str(&format!("  {arg:24} {}\n", o.help));
+        }
+        out
+    }
+
+    /// Parse this subcommand's argument list (after the subcommand word).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| Error::Usage(format!("unknown option --{name}\n{}", self.usage())))?;
+                if spec.takes_value {
+                    let v = argv
+                        .get(i + 1)
+                        .ok_or_else(|| Error::Usage(format!("--{name} needs a value")))?;
+                    args.values.insert(name.to_string(), v.clone());
+                    i += 2;
+                } else {
+                    args.flags.push(name.to_string());
+                    i += 1;
+                }
+            } else {
+                args.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(args)
+    }
+}
+
+/// Top-level dispatcher over subcommands.
+pub struct App {
+    /// Binary name.
+    pub name: &'static str,
+    /// App description.
+    pub about: &'static str,
+    /// Registered subcommands.
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    /// Build the app.
+    pub fn new(name: &'static str, about: &'static str) -> App {
+        App { name, about, commands: Vec::new() }
+    }
+
+    /// Register a subcommand.
+    pub fn command(mut self, c: Command) -> App {
+        self.commands.push(c);
+        self
+    }
+
+    /// Full usage text.
+    pub fn usage(&self) -> String {
+        let mut out = format!("{} — {}\n\nsubcommands:\n", self.name, self.about);
+        for c in &self.commands {
+            out.push_str(&format!("  {:12} {}\n", c.name, c.about));
+        }
+        out.push_str(&format!("\nrun `{} <subcommand> --help` for options\n", self.name));
+        out
+    }
+
+    /// Dispatch `argv` (without the binary name). Returns the matched
+    /// subcommand name and its parsed args, or a usage error.
+    pub fn dispatch(&self, argv: &[String]) -> Result<(&Command, Args)> {
+        let Some(sub) = argv.first() else {
+            return Err(Error::Usage(self.usage()));
+        };
+        if sub == "--help" || sub == "help" || sub == "-h" {
+            return Err(Error::Usage(self.usage()));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == sub)
+            .ok_or_else(|| Error::Usage(format!("unknown subcommand {sub:?}\n{}", self.usage())))?;
+        if argv.iter().any(|a| a == "--help") {
+            return Err(Error::Usage(cmd.usage()));
+        }
+        let args = cmd.parse(&argv[1..])?;
+        Ok((cmd, args))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("repro", "test app").command(
+            Command::new("run", "run something")
+                .opt("algo", "algorithm")
+                .opt("min-sup", "support")
+                .flag("verbose", "chatty"),
+        )
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let a = app();
+        let (cmd, args) =
+            a.dispatch(&sv(&["run", "--algo", "v4", "--verbose", "extra"])).unwrap();
+        assert_eq!(cmd.name, "run");
+        assert_eq!(args.get("algo"), Some("v4"));
+        assert!(args.flag("verbose"));
+        assert_eq!(args.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn get_parse_with_default() {
+        let a = app();
+        let (_, args) = a.dispatch(&sv(&["run", "--min-sup", "0.05"])).unwrap();
+        assert_eq!(args.get_parse("min-sup", 1.0).unwrap(), 0.05);
+        assert_eq!(args.get_parse("algo", 7u32).unwrap(), 7);
+        let err = args.get_parse::<u32>("min-sup", 0).unwrap_err();
+        assert!(err.to_string().contains("cannot parse"));
+    }
+
+    #[test]
+    fn unknown_option_and_subcommand_error() {
+        let a = app();
+        assert!(a.dispatch(&sv(&["run", "--nope"])).is_err());
+        assert!(a.dispatch(&sv(&["zap"])).is_err());
+        assert!(a.dispatch(&sv(&[])).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let a = app();
+        let err = a.dispatch(&sv(&["run", "--algo"])).unwrap_err();
+        assert!(err.to_string().contains("needs a value"));
+    }
+
+    #[test]
+    fn help_yields_usage() {
+        let a = app();
+        let err = a.dispatch(&sv(&["--help"])).unwrap_err();
+        assert!(err.to_string().contains("subcommands"));
+        let err = a.dispatch(&sv(&["run", "--help"])).unwrap_err();
+        assert!(err.to_string().contains("--algo"));
+    }
+}

@@ -1,0 +1,188 @@
+//! Configuration: a TOML-subset parser (no `serde`/`toml` offline) and
+//! the typed [`EclatConfig`] the launcher and benches consume.
+//!
+//! Supported TOML subset — everything the config files of this project
+//! need: `[section]` headers, `key = value` with string/int/float/bool
+//! values, `#` comments. Arrays and nested tables are intentionally out
+//! of scope.
+
+pub mod toml;
+
+use crate::error::{Error, Result};
+
+pub use toml::TomlDoc;
+
+/// Runtime configuration of one mining run (CLI flags and config files
+/// both land here).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EclatConfig {
+    /// Algorithm name (`eclatV1`..`eclatV5`, `apriori`, `seq-*`).
+    pub algorithm: String,
+    /// Dataset name (Table 2 names or a path to a FIMI file).
+    pub dataset: String,
+    /// Minimum support as a fraction (0,1] or an absolute count (>1).
+    pub min_sup: f64,
+    /// Executor cores (thread-pool size). 0 = all available.
+    pub cores: usize,
+    /// Equivalence-class partitions `p` (V4/V5; paper default 10).
+    pub partitions: usize,
+    /// `triMatrixMode` (None = per-dataset default from the paper).
+    pub tri_matrix: Option<bool>,
+    /// Phase-2 backend: "native" or "xla".
+    pub backend: String,
+    /// Directory for generated/cached datasets.
+    pub data_dir: String,
+    /// Optional output directory for `saveAsTextFile`-style results.
+    pub output: Option<String>,
+    /// Minimum confidence for rule generation (only used by `rules`).
+    pub min_conf: f64,
+}
+
+impl Default for EclatConfig {
+    fn default() -> Self {
+        EclatConfig {
+            algorithm: "eclatV4".into(),
+            dataset: "T10I4D100K".into(),
+            min_sup: 0.01,
+            cores: 0,
+            partitions: 10,
+            tri_matrix: None,
+            backend: "native".into(),
+            data_dir: "datasets".into(),
+            output: None,
+            min_conf: 0.8,
+        }
+    }
+}
+
+impl EclatConfig {
+    /// Load from a TOML-subset file: top-level keys and/or a `[mining]`
+    /// section; unknown keys are rejected (typo safety).
+    pub fn from_file(path: &str) -> Result<EclatConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = TomlDoc::parse(&text)?;
+        let mut cfg = EclatConfig::default();
+        for (section, key, value) in doc.entries() {
+            if !(section.is_empty() || section == "mining") {
+                return Err(Error::config(format!("unknown section [{section}]")));
+            }
+            cfg.apply(key, value)?;
+        }
+        Ok(cfg)
+    }
+
+    /// Apply one key/value pair (shared by file and CLI paths).
+    pub fn apply(&mut self, key: &str, value: &toml::Value) -> Result<()> {
+        use toml::Value;
+        let bad = |k: &str, v: &Value| Error::config(format!("bad value for {k}: {v:?}"));
+        match key {
+            "algorithm" | "algo" => {
+                self.algorithm = value.as_str().ok_or_else(|| bad(key, value))?.to_string()
+            }
+            "dataset" => self.dataset = value.as_str().ok_or_else(|| bad(key, value))?.to_string(),
+            "min_sup" => self.min_sup = value.as_f64().ok_or_else(|| bad(key, value))?,
+            "min_conf" => self.min_conf = value.as_f64().ok_or_else(|| bad(key, value))?,
+            "cores" => self.cores = value.as_int().ok_or_else(|| bad(key, value))? as usize,
+            "partitions" | "p" => {
+                self.partitions = value.as_int().ok_or_else(|| bad(key, value))? as usize
+            }
+            "tri_matrix" => {
+                self.tri_matrix = Some(value.as_bool().ok_or_else(|| bad(key, value))?)
+            }
+            "backend" => {
+                let b = value.as_str().ok_or_else(|| bad(key, value))?;
+                if b != "native" && b != "xla" {
+                    return Err(Error::config(format!("backend must be native|xla, got {b}")));
+                }
+                self.backend = b.to_string();
+            }
+            "data_dir" => {
+                self.data_dir = value.as_str().ok_or_else(|| bad(key, value))?.to_string()
+            }
+            "output" => {
+                self.output = Some(value.as_str().ok_or_else(|| bad(key, value))?.to_string())
+            }
+            other => return Err(Error::config(format!("unknown config key {other:?}"))),
+        }
+        Ok(())
+    }
+
+    /// Resolve `min_sup` into the typed threshold.
+    pub fn min_sup_typed(&self) -> Result<crate::fim::MinSup> {
+        if self.min_sup <= 0.0 {
+            Err(Error::config(format!("min_sup must be positive, got {}", self.min_sup)))
+        } else if self.min_sup <= 1.0 {
+            Ok(crate::fim::MinSup::fraction(self.min_sup))
+        } else {
+            Ok(crate::fim::MinSup::count(self.min_sup as u32))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = EclatConfig::default();
+        assert_eq!(c.partitions, 10, "the paper's p");
+        assert_eq!(c.backend, "native");
+    }
+
+    #[test]
+    fn from_file_roundtrip() {
+        let dir = std::env::temp_dir().join("rdd_eclat_conf_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.toml");
+        std::fs::write(
+            &path,
+            r#"
+# experiment config
+algorithm = "eclatV5"
+
+[mining]
+dataset = "chess"
+min_sup = 0.85
+cores = 4
+p = 12
+tri_matrix = true
+backend = "xla"
+"#,
+        )
+        .unwrap();
+        let c = EclatConfig::from_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.algorithm, "eclatV5");
+        assert_eq!(c.dataset, "chess");
+        assert!((c.min_sup - 0.85).abs() < 1e-12);
+        assert_eq!(c.cores, 4);
+        assert_eq!(c.partitions, 12);
+        assert_eq!(c.tri_matrix, Some(true));
+        assert_eq!(c.backend, "xla");
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = EclatConfig::default();
+        let err = c.apply("typo_key", &toml::Value::Int(1)).unwrap_err();
+        assert!(err.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        let mut c = EclatConfig::default();
+        let err = c.apply("backend", &toml::Value::Str("gpu".into())).unwrap_err();
+        assert!(err.to_string().contains("native|xla"));
+    }
+
+    #[test]
+    fn min_sup_typed_interpretation() {
+        let mut c = EclatConfig::default();
+        c.min_sup = 0.05;
+        assert_eq!(c.min_sup_typed().unwrap().to_count(100), 5);
+        c.min_sup = 42.0;
+        assert_eq!(c.min_sup_typed().unwrap().to_count(100), 42);
+        c.min_sup = 0.0;
+        assert!(c.min_sup_typed().is_err());
+    }
+}

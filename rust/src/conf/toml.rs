@@ -1,0 +1,178 @@
+//! Minimal TOML-subset parser (sections, scalar key/values, comments).
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer.
+    Int(i64),
+    /// Float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+}
+
+impl Value {
+    /// As string, when `Str`.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As integer, when `Int`.
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As float (accepts `Int` too).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As bool, when `Bool`.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: `(section, key, value)` triples in file order.
+/// Top-level keys carry an empty section name.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, Value)>,
+}
+
+impl TomlDoc {
+    /// Parse the subset; errors carry line numbers.
+    pub fn parse(text: &str) -> Result<TomlDoc> {
+        let mut entries = Vec::new();
+        let mut section = String::new();
+        for (no, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((key, value)) = line.split_once('=') else {
+                return Err(Error::parse(format!("line {}: expected key = value", no + 1)));
+            };
+            let key = key.trim().to_string();
+            if key.is_empty() {
+                return Err(Error::parse(format!("line {}: empty key", no + 1)));
+            }
+            let value = parse_value(value.trim())
+                .ok_or_else(|| Error::parse(format!("line {}: bad value {value:?}", no + 1)))?;
+            entries.push((section.clone(), key, value));
+        }
+        Ok(TomlDoc { entries })
+    }
+
+    /// Iterate `(section, key, value)`.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &Value)> {
+        self.entries.iter().map(|(s, k, v)| (s.as_str(), k.as_str(), v))
+    }
+
+    /// Look up a key, optionally within a section.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries
+            .iter()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(stripped) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Some(Value::Str(stripped.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_value_kinds() {
+        let doc = TomlDoc::parse(
+            "a = \"s\"\nb = 3\nc = 0.5\nd = true\ne = false\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "a"), Some(&Value::Str("s".into())));
+        assert_eq!(doc.get("", "b"), Some(&Value::Int(3)));
+        assert_eq!(doc.get("", "c"), Some(&Value::Float(0.5)));
+        assert_eq!(doc.get("", "d"), Some(&Value::Bool(true)));
+        assert_eq!(doc.get("", "e"), Some(&Value::Bool(false)));
+    }
+
+    #[test]
+    fn sections_and_comments() {
+        let doc = TomlDoc::parse(
+            "# top\nx = 1\n[s1] # side\ny = 2\n[s2]\nz = \"a # not comment\"\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "x"), Some(&Value::Int(1)));
+        assert_eq!(doc.get("s1", "y"), Some(&Value::Int(2)));
+        assert_eq!(doc.get("s2", "z"), Some(&Value::Str("a # not comment".into())));
+        assert_eq!(doc.get("s1", "x"), None);
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("good = 1\nbad line\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        let err = TomlDoc::parse("k = @@\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = TomlDoc::parse("i = 2\nf = 2.0\n").unwrap();
+        assert_eq!(doc.get("", "i").unwrap().as_int(), Some(2));
+        assert_eq!(doc.get("", "f").unwrap().as_int(), None);
+        assert_eq!(doc.get("", "f").unwrap().as_f64(), Some(2.0));
+        assert_eq!(doc.get("", "i").unwrap().as_f64(), Some(2.0));
+    }
+}

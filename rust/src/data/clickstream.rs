@@ -1,0 +1,132 @@
+//! Sparse clickstream generator — statistical twin of the BMS-WebView
+//! datasets (Blue Martini e-commerce click sessions).
+//!
+//! BMS1/BMS2 are very sparse (average width 2.5 / 5 over 497 / 3340
+//! items) with heavily skewed product popularity and short sessions —
+//! the regime where the paper *disables* the triangular matrix (the item
+//! universe is large relative to support) and where transaction
+//! filtering barely shrinks anything. We reproduce those properties:
+//! session length ~ shifted geometric; items drawn from a Zipf catalogue;
+//! within a session, subsequent clicks stay near the seed product's
+//! popularity rank (browsing locality → some frequent pairs survive).
+
+use crate::fim::transaction::Database;
+use crate::fim::Item;
+use crate::util::prng::{Rng, Zipf};
+
+/// Parameters of the clickstream generator.
+#[derive(Debug, Clone)]
+pub struct ClickParams {
+    /// Number of sessions (transactions).
+    pub sessions: usize,
+    /// Catalogue size (distinct items).
+    pub items: usize,
+    /// Average session length.
+    pub avg_len: f64,
+    /// Zipf skew of product popularity.
+    pub skew: f64,
+    /// Browsing locality: probability a click is drawn from the
+    /// neighbourhood of the session seed instead of the global catalogue.
+    pub locality: f64,
+    /// Neighbourhood half-width (in popularity rank space).
+    pub radius: usize,
+}
+
+impl ClickParams {
+    /// BMS_WebView_1-like: 59602 sessions × 497 items, width 2.5.
+    pub fn bms1_like() -> ClickParams {
+        ClickParams { sessions: 59_602, items: 497, avg_len: 2.5, skew: 1.1, locality: 0.5, radius: 12 }
+    }
+
+    /// BMS_WebView_2-like: 77512 sessions × 3340 items, width 5.
+    pub fn bms2_like() -> ClickParams {
+        ClickParams { sessions: 77_512, items: 3340, avg_len: 5.0, skew: 1.15, locality: 0.5, radius: 25 }
+    }
+}
+
+/// Generate the clickstream database deterministically from `seed`.
+pub fn generate(params: &ClickParams, seed: u64) -> Database {
+    let mut rng = Rng::new(seed);
+    let zipf = Zipf::new(params.items, params.skew);
+    // Rank -> item id mapping is a fixed permutation so item ids do not
+    // leak popularity (like real catalogues).
+    let mut rank_to_item: Vec<Item> = (0..params.items as u32).collect();
+    rng.shuffle(&mut rank_to_item);
+
+    let mut rows = Vec::with_capacity(params.sessions);
+    for _ in 0..params.sessions {
+        // Shifted geometric with mean avg_len: length >= 1.
+        let len = rng.geometric(params.avg_len.max(1.0)).max(1);
+        let seed_rank = zipf.sample(&mut rng);
+        let mut t: Vec<Item> = Vec::with_capacity(len);
+        for click in 0..len {
+            let rank = if click > 0 && rng.chance(params.locality) {
+                // Stay near the seed's rank (browsing related products).
+                let lo = seed_rank.saturating_sub(params.radius);
+                let hi = (seed_rank + params.radius + 1).min(params.items);
+                rng.range(lo, hi)
+            } else {
+                zipf.sample(&mut rng)
+            };
+            t.push(rank_to_item[rank]);
+        }
+        t.sort_unstable();
+        t.dedup();
+        rows.push(t);
+    }
+    Database::from_rows(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> ClickParams {
+        ClickParams { sessions: 5000, items: 400, avg_len: 2.5, skew: 1.1, locality: 0.5, radius: 10 }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(generate(&small(), 1), generate(&small(), 1));
+        assert_ne!(generate(&small(), 1), generate(&small(), 2));
+    }
+
+    #[test]
+    fn shape_matches_bms_profile() {
+        let db = generate(&small(), 42);
+        let s = db.stats();
+        assert_eq!(s.transactions, 5000);
+        assert!(s.avg_width > 1.5 && s.avg_width < 3.5, "width {}", s.avg_width);
+        assert!(s.distinct_items > 250, "{}", s.distinct_items);
+        assert!(s.max_item < 400);
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let db = generate(&small(), 7);
+        let mut counts = std::collections::HashMap::new();
+        for t in db.transactions() {
+            for &i in t {
+                *counts.entry(i).or_insert(0u32) += 1;
+            }
+        }
+        let mut freqs: Vec<u32> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        let total: u32 = freqs.iter().sum();
+        let head: u32 = freqs.iter().take(20).sum();
+        assert!(
+            head as f64 / total as f64 > 0.25,
+            "top-20 items should dominate: {}",
+            head as f64 / total as f64
+        );
+    }
+
+    #[test]
+    fn locality_creates_frequent_pairs() {
+        let db = generate(&small(), 3);
+        let min_sup = (db.len() as f64 * 0.005).ceil() as u32; // 0.5%
+        let frequents = crate::fim::apriori::apriori(&db, min_sup);
+        let pairs = frequents.iter().filter(|f| f.items.len() == 2).count();
+        assert!(pairs > 0, "locality should produce co-clicked pairs");
+    }
+}

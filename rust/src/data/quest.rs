@@ -1,0 +1,185 @@
+//! IBM Quest-style synthetic transaction generator.
+//!
+//! The paper's synthetic datasets (T10I4D100K, T40I10D100K, c20d10k) come
+//! from the classic IBM Quest generator (Agrawal–Srikant §Experiments):
+//! transactions are built from a pool of *potentially frequent patterns* —
+//! itemsets with exponentially decaying weights, correlated with their
+//! predecessor, "corrupted" when inserted. This module reimplements that
+//! process (we have no network access to the originals; DESIGN.md §2.2).
+//!
+//! Parameter names follow the conventional dataset naming:
+//! `T` = average transaction width, `I` = average pattern length,
+//! `D` = number of transactions, `N` = number of items.
+
+use crate::fim::transaction::Database;
+use crate::fim::Item;
+use crate::util::prng::Rng;
+
+/// Quest generator parameters.
+#[derive(Debug, Clone)]
+pub struct QuestParams {
+    /// Number of transactions (`D`).
+    pub transactions: usize,
+    /// Average transaction width (`T`).
+    pub avg_width: f64,
+    /// Average pattern length (`I`).
+    pub avg_pattern_len: f64,
+    /// Number of distinct items (`N`).
+    pub items: usize,
+    /// Number of potentially frequent patterns (`L`; Quest default 2000,
+    /// scaled down with small vocabularies).
+    pub patterns: usize,
+    /// Fraction of a pattern reused from its predecessor (Quest default
+    /// 0.25).
+    pub correlation: f64,
+    /// Mean corruption level (Quest default 0.5): items are dropped from
+    /// a pattern instance while `rand < c`.
+    pub corruption: f64,
+}
+
+impl QuestParams {
+    /// Conventional `T{t}I{i}D{d}` parameterisation with `n` items.
+    pub fn tid(t: f64, i: f64, d: usize, n: usize) -> QuestParams {
+        QuestParams {
+            transactions: d,
+            avg_width: t,
+            avg_pattern_len: i,
+            items: n,
+            patterns: (n / 2).clamp(10, 2000),
+            correlation: 0.25,
+            corruption: 0.5,
+        }
+    }
+}
+
+/// One potentially frequent pattern: items + relative weight.
+struct Pattern {
+    items: Vec<Item>,
+    cum_weight: f64,
+}
+
+/// Generate a database per the Quest process, deterministically from
+/// `seed`.
+pub fn generate(params: &QuestParams, seed: u64) -> Database {
+    let mut rng = Rng::new(seed);
+    let patterns = build_patterns(params, &mut rng);
+    let total_weight = patterns.last().map(|p| p.cum_weight).unwrap_or(0.0);
+
+    let mut rows = Vec::with_capacity(params.transactions);
+    for _ in 0..params.transactions {
+        // Transaction size ~ Poisson(T), at least 1.
+        let size = params.avg_width.max(1.0);
+        let want = rng.poisson(size).max(1);
+        let mut t: Vec<Item> = Vec::with_capacity(want + 4);
+        let mut guard = 0;
+        while t.len() < want && guard < 50 {
+            guard += 1;
+            // Weighted pattern pick (binary search on cumulative weights).
+            let u = rng.f64() * total_weight;
+            let idx = patterns
+                .partition_point(|p| p.cum_weight < u)
+                .min(patterns.len() - 1);
+            // Corrupt: drop items from the tail while rand < corruption.
+            let p = &patterns[idx].items;
+            let mut keep = p.len();
+            while keep > 0 && rng.chance(params.corruption) {
+                keep -= 1;
+            }
+            if keep == 0 {
+                continue;
+            }
+            // Quest inserts the (corrupted) pattern even if it overshoots
+            // the transaction size, half the time.
+            if t.len() + keep > want && t.len() > 0 && rng.chance(0.5) {
+                break;
+            }
+            t.extend_from_slice(&p[..keep]);
+        }
+        t.sort_unstable();
+        t.dedup();
+        if t.is_empty() {
+            t.push(rng.below(params.items as u64) as Item);
+        }
+        rows.push(t);
+    }
+    Database::from_rows(rows)
+}
+
+fn build_patterns(params: &QuestParams, rng: &mut Rng) -> Vec<Pattern> {
+    let mut patterns: Vec<Pattern> = Vec::with_capacity(params.patterns);
+    let mut cum = 0.0;
+    let mut prev: Vec<Item> = Vec::new();
+    for _ in 0..params.patterns {
+        let len = rng.poisson(params.avg_pattern_len).max(1);
+        let mut items: Vec<Item> = Vec::with_capacity(len);
+        // Correlated fraction from the previous pattern.
+        if !prev.is_empty() {
+            let take = ((len as f64) * params.correlation).round() as usize;
+            for _ in 0..take.min(prev.len()) {
+                items.push(prev[rng.range(0, prev.len())]);
+            }
+        }
+        while items.len() < len {
+            items.push(rng.below(params.items as u64) as Item);
+        }
+        items.sort_unstable();
+        items.dedup();
+        // Exponential weights, as in Quest.
+        let w = -(rng.f64().max(f64::MIN_POSITIVE)).ln();
+        cum += w;
+        prev = items.clone();
+        patterns.push(Pattern { items, cum_weight: cum });
+    }
+    patterns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let p = QuestParams::tid(10.0, 4.0, 200, 100);
+        let a = generate(&p, 7);
+        let b = generate(&p, 7);
+        assert_eq!(a, b);
+        let c = generate(&p, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn matches_requested_shape() {
+        let p = QuestParams::tid(10.0, 4.0, 2000, 200);
+        let db = generate(&p, 42);
+        let s = db.stats();
+        assert_eq!(s.transactions, 2000);
+        assert!(s.max_item < 200);
+        // Width within a tolerant band of T (corruption narrows it a bit).
+        assert!(
+            s.avg_width > 4.0 && s.avg_width < 16.0,
+            "avg width {}",
+            s.avg_width
+        );
+        // Vocabulary largely used.
+        assert!(s.distinct_items > 120, "{} items", s.distinct_items);
+    }
+
+    #[test]
+    fn has_correlated_structure() {
+        // Patterns create recurring co-occurrence: mining at a moderate
+        // threshold should find some 2-itemsets, unlike i.i.d. noise.
+        let p = QuestParams::tid(12.0, 4.0, 1000, 150);
+        let db = generate(&p, 3);
+        let min_sup = 50; // 5%
+        let frequents = crate::fim::apriori::apriori(&db, min_sup);
+        let pairs = frequents.iter().filter(|f| f.items.len() >= 2).count();
+        assert!(pairs > 0, "expected frequent pairs from pattern structure");
+    }
+
+    #[test]
+    fn no_empty_transactions() {
+        let p = QuestParams::tid(2.0, 2.0, 500, 50);
+        let db = generate(&p, 11);
+        assert!(db.transactions().iter().all(|t| !t.is_empty()));
+    }
+}

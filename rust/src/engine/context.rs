@@ -1,0 +1,217 @@
+//! The driver-side entry point of the engine — the analogue of Spark's
+//! `SparkContext`.
+//!
+//! A [`ClusterContext`] owns the executor thread pool, the block cache,
+//! the shuffle store and the metrics registry. RDDs are created from it
+//! (`parallelize`, `text_file`) and carry a handle back to it; all jobs of
+//! one context share executors and stores, exactly like one Spark
+//! application.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::error::Result;
+
+use super::metrics::MetricsRegistry;
+use super::pool::ThreadPool;
+use super::rdd::{Rdd, RddId};
+use super::shared::{Accumulator, Broadcast};
+use super::shuffle::{ShuffleId, ShuffleStore};
+use super::storage::CacheStore;
+
+/// Shared internals of one "application".
+pub(crate) struct CtxInner {
+    pub(crate) pool: ThreadPool,
+    pub(crate) cores: usize,
+    pub(crate) default_parallelism: usize,
+    pub(crate) cache: CacheStore,
+    pub(crate) shuffle: ShuffleStore,
+    pub(crate) metrics: MetricsRegistry,
+    next_rdd: AtomicUsize,
+    next_shuffle: AtomicUsize,
+}
+
+/// Driver handle; cheap to clone (it is an `Arc`).
+#[derive(Clone)]
+pub struct ClusterContext {
+    pub(crate) inner: Arc<CtxInner>,
+}
+
+/// Builder for [`ClusterContext`].
+#[derive(Debug, Clone)]
+pub struct ContextBuilder {
+    cores: usize,
+    default_parallelism: Option<usize>,
+}
+
+impl Default for ContextBuilder {
+    fn default() -> Self {
+        ContextBuilder { cores: available_cores(), default_parallelism: None }
+    }
+}
+
+/// Number of cores the OS exposes (≥1).
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+impl ContextBuilder {
+    /// Executor core count (thread-pool size). Defaults to the machine's
+    /// available parallelism.
+    pub fn cores(mut self, n: usize) -> Self {
+        self.cores = n.max(1);
+        self
+    }
+
+    /// Default number of partitions for `parallelize`/shuffles. Defaults
+    /// to the core count (Spark's `sc.defaultParallelism`).
+    pub fn default_parallelism(mut self, n: usize) -> Self {
+        self.default_parallelism = Some(n.max(1));
+        self
+    }
+
+    /// Build the context, spawning executor threads.
+    pub fn build(self) -> ClusterContext {
+        let parallelism = self.default_parallelism.unwrap_or(self.cores);
+        ClusterContext {
+            inner: Arc::new(CtxInner {
+                pool: ThreadPool::new(self.cores),
+                cores: self.cores,
+                default_parallelism: parallelism,
+                cache: CacheStore::new(),
+                shuffle: ShuffleStore::new(),
+                metrics: MetricsRegistry::new(),
+                next_rdd: AtomicUsize::new(0),
+                next_shuffle: AtomicUsize::new(0),
+            }),
+        }
+    }
+}
+
+impl ClusterContext {
+    /// Start building a context.
+    pub fn builder() -> ContextBuilder {
+        ContextBuilder::default()
+    }
+
+    /// Context with default settings (all available cores).
+    pub fn local() -> ClusterContext {
+        Self::builder().build()
+    }
+
+    /// Executor core count.
+    pub fn cores(&self) -> usize {
+        self.inner.cores
+    }
+
+    /// Default parallelism (`sc.defaultParallelism`).
+    pub fn default_parallelism(&self) -> usize {
+        self.inner.default_parallelism
+    }
+
+    pub(crate) fn new_rdd_id(&self) -> RddId {
+        RddId(self.inner.next_rdd.fetch_add(1, Ordering::SeqCst))
+    }
+
+    pub(crate) fn new_shuffle_id(&self) -> ShuffleId {
+        ShuffleId(self.inner.next_shuffle.fetch_add(1, Ordering::SeqCst))
+    }
+
+    /// Metrics registry for this application.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.inner.metrics
+    }
+
+    /// The block cache (exposed for fault-injection tests).
+    pub fn cache_store(&self) -> &CacheStore {
+        &self.inner.cache
+    }
+
+    /// The shuffle store (exposed for fault-injection tests).
+    pub fn shuffle_store(&self) -> &ShuffleStore {
+        &self.inner.shuffle
+    }
+
+    /// Distribute a collection into `parts` partitions (Spark's
+    /// `sc.parallelize`). Items are split into contiguous chunks.
+    pub fn parallelize<T: super::rdd::Data>(&self, data: Vec<T>, parts: usize) -> Rdd<T> {
+        Rdd::from_collection(self.clone(), data, parts.max(1))
+    }
+
+    /// `sc.parallelize` with default parallelism.
+    pub fn parallelize_default<T: super::rdd::Data>(&self, data: Vec<T>) -> Rdd<T> {
+        let p = self.default_parallelism();
+        self.parallelize(data, p)
+    }
+
+    /// Read a text file into an RDD of lines split into `min_parts`
+    /// contiguous partitions (Spark's `sc.textFile`). The whole file is
+    /// read eagerly on the driver — the local filesystem plays HDFS here.
+    pub fn text_file(&self, path: &str, min_parts: usize) -> Result<Rdd<String>> {
+        let content = std::fs::read_to_string(path)?;
+        let lines: Vec<String> = content.lines().map(|s| s.to_string()).collect();
+        Ok(self.parallelize(lines, min_parts.max(1)))
+    }
+
+    /// Broadcast a read-only value to all tasks.
+    pub fn broadcast<T: Send + Sync + 'static>(&self, value: T) -> Broadcast<T> {
+        Broadcast::new(value)
+    }
+
+    /// Create an accumulator with a zero value and an associative,
+    /// commutative merge.
+    pub fn accumulator<T: Send + 'static>(
+        &self,
+        zero: T,
+        merge: impl Fn(&mut T, T) + Send + Sync + 'static,
+    ) -> Accumulator<T> {
+        Accumulator::new(zero, merge)
+    }
+}
+
+impl std::fmt::Debug for ClusterContext {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ClusterContext")
+            .field("cores", &self.inner.cores)
+            .field("default_parallelism", &self.inner.default_parallelism)
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_and_overrides() {
+        let ctx = ClusterContext::builder().cores(3).build();
+        assert_eq!(ctx.cores(), 3);
+        assert_eq!(ctx.default_parallelism(), 3);
+        let ctx = ClusterContext::builder().cores(2).default_parallelism(8).build();
+        assert_eq!(ctx.default_parallelism(), 8);
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let ctx = ClusterContext::builder().cores(1).build();
+        let a = ctx.new_rdd_id();
+        let b = ctx.new_rdd_id();
+        assert_ne!(a, b);
+        let s1 = ctx.new_shuffle_id();
+        let s2 = ctx.new_shuffle_id();
+        assert_ne!(s1, s2);
+    }
+
+    #[test]
+    fn text_file_roundtrip() {
+        let dir = std::env::temp_dir().join("rdd_eclat_ctx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lines.txt");
+        std::fs::write(&path, "a b\nc d\ne\n").unwrap();
+        let ctx = ClusterContext::builder().cores(2).build();
+        let rdd = ctx.text_file(path.to_str().unwrap(), 2).unwrap();
+        let mut lines = rdd.collect().unwrap();
+        lines.sort();
+        assert_eq!(lines, vec!["a b", "c d", "e"]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Per-task metrics and the job event log.
+//!
+//! Every task the scheduler runs records `(job, stage, partition, wall
+//! time, records produced)`. The virtual-cluster simulator
+//! ([`super::simcluster`]) replays these measurements at different core
+//! counts to produce the paper's Fig. 15 scaling curves on a small
+//! machine, and the benchmark harness reports stage breakdowns from the
+//! same log.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Identifies a job (one action).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub usize);
+
+/// What kind of stage a task belonged to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    /// Shuffle map stage (writes buckets).
+    ShuffleMap,
+    /// Final stage of an action (computes result partitions).
+    Result,
+}
+
+/// One completed task.
+#[derive(Debug, Clone)]
+pub struct TaskMetric {
+    /// Job this task belonged to.
+    pub job: JobId,
+    /// Stage index within the job (stages run in submission order).
+    pub stage: usize,
+    /// Map stage or result stage.
+    pub kind: StageKind,
+    /// Partition index the task computed.
+    pub partition: usize,
+    /// Task wall time.
+    pub wall: Duration,
+    /// Records produced by the task.
+    pub records: u64,
+}
+
+/// One completed job (action) span.
+#[derive(Debug, Clone)]
+pub struct JobSpan {
+    /// Job id.
+    pub job: JobId,
+    /// Human-readable action name (`collect`, `count`, ...).
+    pub name: String,
+    /// Total driver-observed wall time of the job.
+    pub wall: Duration,
+    /// Number of stages that ran.
+    pub stages: usize,
+}
+
+/// Registry collecting task metrics and job spans for one context.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    tasks: Mutex<Vec<TaskMetric>>,
+    jobs: Mutex<Vec<JobSpan>>,
+    next_job: AtomicUsize,
+}
+
+impl MetricsRegistry {
+    /// Create an empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Allocate the next job id.
+    pub fn next_job_id(&self) -> JobId {
+        JobId(self.next_job.fetch_add(1, Ordering::SeqCst))
+    }
+
+    /// Record one task.
+    pub fn record_task(&self, m: TaskMetric) {
+        self.tasks.lock().unwrap().push(m);
+    }
+
+    /// Record one finished job.
+    pub fn record_job(&self, span: JobSpan) {
+        self.jobs.lock().unwrap().push(span);
+    }
+
+    /// Snapshot of all task metrics.
+    pub fn tasks(&self) -> Vec<TaskMetric> {
+        self.tasks.lock().unwrap().clone()
+    }
+
+    /// Snapshot of all job spans.
+    pub fn jobs(&self) -> Vec<JobSpan> {
+        self.jobs.lock().unwrap().clone()
+    }
+
+    /// Tasks belonging to one job.
+    pub fn tasks_of(&self, job: JobId) -> Vec<TaskMetric> {
+        self.tasks.lock().unwrap().iter().filter(|t| t.job == job).cloned().collect()
+    }
+
+    /// Clear everything (between benchmark repetitions).
+    pub fn reset(&self) {
+        self.tasks.lock().unwrap().clear();
+        self.jobs.lock().unwrap().clear();
+    }
+
+    /// Sum of task wall time over all recorded tasks (the "total compute"
+    /// that the simulator spreads over virtual cores).
+    pub fn total_task_time(&self) -> Duration {
+        self.tasks.lock().unwrap().iter().map(|t| t.wall).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tm(job: usize, stage: usize, part: usize, ms: u64) -> TaskMetric {
+        TaskMetric {
+            job: JobId(job),
+            stage,
+            kind: StageKind::Result,
+            partition: part,
+            wall: Duration::from_millis(ms),
+            records: 1,
+        }
+    }
+
+    #[test]
+    fn job_ids_monotonic() {
+        let r = MetricsRegistry::new();
+        assert_eq!(r.next_job_id(), JobId(0));
+        assert_eq!(r.next_job_id(), JobId(1));
+    }
+
+    #[test]
+    fn record_and_filter_by_job() {
+        let r = MetricsRegistry::new();
+        r.record_task(tm(0, 0, 0, 5));
+        r.record_task(tm(1, 0, 0, 7));
+        r.record_task(tm(0, 1, 1, 3));
+        assert_eq!(r.tasks().len(), 3);
+        assert_eq!(r.tasks_of(JobId(0)).len(), 2);
+        assert_eq!(r.total_task_time(), Duration::from_millis(15));
+        r.reset();
+        assert!(r.tasks().is_empty());
+    }
+}

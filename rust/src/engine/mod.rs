@@ -1,0 +1,31 @@
+//! A from-scratch Spark-like RDD engine — the distributed substrate the
+//! paper's algorithms run on (DESIGN.md §2.1, systems S1–S8).
+//!
+//! The public surface mirrors the subset of the Spark RDD API that the
+//! paper's pseudo code uses: `parallelize`/`textFile`, lazy
+//! transformations (`map`, `flatMap`, `filter`, `mapPartitionsWithIndex`,
+//! `groupByKey`, `reduceByKey`, `partitionBy`, `coalesce`,
+//! `repartition`), actions (`collect`, `count`, `saveAsTextFile`),
+//! `.cache()`, broadcast variables and accumulators — plus per-task
+//! metrics and a virtual-cluster simulator for core-scaling studies.
+
+pub mod context;
+pub mod lineage;
+pub mod metrics;
+pub mod partitioner;
+pub mod pool;
+pub mod rdd;
+pub mod shared;
+pub mod shuffle;
+pub mod simcluster;
+pub mod storage;
+
+pub use context::{available_cores, ClusterContext, ContextBuilder};
+pub use lineage::FaultInjector;
+pub use metrics::{JobId, JobSpan, MetricsRegistry, StageKind, TaskMetric};
+pub use partitioner::{FnPartitioner, HashPartitioner, Partitioner};
+pub use rdd::{Data, Rdd, RddId};
+pub use shared::{Accumulator, Broadcast};
+pub use shuffle::{ShuffleId, ShuffleStore};
+pub use simcluster::{simulate, stage_makespan, sweep, SimResult};
+pub use storage::{CacheStore, StorageLevel};

@@ -1,0 +1,106 @@
+//! Key partitioners for wide (shuffle) dependencies.
+//!
+//! The engine ships Spark's `HashPartitioner` equivalent; the paper's
+//! equivalence-class partitioners (default `(n-1)`, hash `%p`, reverse
+//! hash — Algorithm 10) are built on this trait in
+//! [`crate::algorithms::partitioners`].
+
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+/// Maps a key to a reduce partition in `[0, num_partitions)`.
+pub trait Partitioner<K>: Send + Sync {
+    /// Number of reduce partitions.
+    fn num_partitions(&self) -> usize;
+    /// Partition index for `key`; must be `< num_partitions()`.
+    fn partition(&self, key: &K) -> usize;
+}
+
+/// Spark-style hash partitioner: `hash(key) mod p`.
+#[derive(Debug, Clone)]
+pub struct HashPartitioner {
+    parts: usize,
+}
+
+impl HashPartitioner {
+    /// Create with `parts >= 1` partitions.
+    pub fn new(parts: usize) -> Self {
+        HashPartitioner { parts: parts.max(1) }
+    }
+}
+
+impl<K: Hash> Partitioner<K> for HashPartitioner {
+    fn num_partitions(&self) -> usize {
+        self.parts
+    }
+
+    fn partition(&self, key: &K) -> usize {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() % self.parts as u64) as usize
+    }
+}
+
+/// Partitioner from a plain function — how custom partitioners (the
+/// paper's Algorithm 10) are expressed.
+pub struct FnPartitioner<K> {
+    parts: usize,
+    f: Box<dyn Fn(&K) -> usize + Send + Sync>,
+}
+
+impl<K> FnPartitioner<K> {
+    /// Wrap `f`; the result of `f` is clamped into range by `% parts`.
+    pub fn new(parts: usize, f: impl Fn(&K) -> usize + Send + Sync + 'static) -> Self {
+        FnPartitioner { parts: parts.max(1), f: Box::new(f) }
+    }
+}
+
+impl<K> Partitioner<K> for FnPartitioner<K> {
+    fn num_partitions(&self) -> usize {
+        self.parts
+    }
+
+    fn partition(&self, key: &K) -> usize {
+        (self.f)(key) % self.parts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_partitioner_in_range_and_deterministic() {
+        let p = HashPartitioner::new(7);
+        for k in 0..1000u32 {
+            let a = p.partition(&k);
+            assert!(a < 7);
+            assert_eq!(a, p.partition(&k));
+        }
+    }
+
+    #[test]
+    fn hash_partitioner_spreads_keys() {
+        let p = HashPartitioner::new(8);
+        let mut counts = [0usize; 8];
+        for k in 0..8000u32 {
+            counts[p.partition(&k)] += 1;
+        }
+        // Every bucket should get a decent share.
+        assert!(counts.iter().all(|&c| c > 500), "{counts:?}");
+    }
+
+    #[test]
+    fn min_one_partition() {
+        let p = HashPartitioner::new(0);
+        assert_eq!(Partitioner::<u32>::num_partitions(&p), 1);
+        assert_eq!(p.partition(&123u32), 0);
+    }
+
+    #[test]
+    fn fn_partitioner_clamps() {
+        let p = FnPartitioner::new(3, |k: &usize| *k);
+        assert_eq!(p.partition(&10), 1);
+        assert_eq!(p.num_partitions(), 3);
+    }
+}

@@ -1,0 +1,210 @@
+//! A from-scratch worker thread pool — the "executors" of the mini-Spark
+//! engine. The offline crate set has no `tokio`/`rayon`, and the paper's
+//! substrate (Spark executors running tasks) is exactly a fixed pool of
+//! workers pulling tasks from a queue, so we build that.
+//!
+//! Tasks are plain closures; [`ThreadPool::run_all`] is the scatter/gather
+//! primitive used by the stage scheduler: submit one closure per partition,
+//! block until all complete, and return results in partition order.
+//! Panics inside tasks are caught and surfaced as [`Error::Engine`] so a
+//! bad task cannot wedge the driver.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size worker pool. The number of workers models the number of
+/// executor cores of the simulated cluster.
+pub struct ThreadPool {
+    sender: Sender<Message>,
+    // The shared receiver the workers pull from.
+    _recv_keepalive: Arc<Mutex<Receiver<Message>>>,
+    workers: Vec<JoinHandle<()>>,
+    size: usize,
+}
+
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("size", &self.size).finish()
+    }
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `size` workers (`size >= 1`).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = channel::<Message>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("executor-{i}"))
+                    .spawn(move || loop {
+                        // Hold the lock only while receiving.
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Message::Run(job)) => job(),
+                            Ok(Message::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn executor thread"),
+            );
+        }
+        ThreadPool { sender: tx, _recv_keepalive: rx, workers, size }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .send(Message::Run(Box::new(f)))
+            .expect("thread pool has shut down");
+    }
+
+    /// Run every task and gather results **in task order**. Tasks run
+    /// concurrently across the pool's workers; the calling thread blocks
+    /// until all tasks finish. A panicking task yields `Error::Engine`
+    /// carrying the panic payload (all other tasks still run to
+    /// completion).
+    pub fn run_all<T, F>(&self, tasks: Vec<F>) -> Result<Vec<T>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        for (i, task) in tasks.into_iter().enumerate() {
+            let tx = tx.clone();
+            self.execute(move || {
+                let r = catch_unwind(AssertUnwindSafe(task));
+                // Receiver may be gone if the driver already failed; ignore.
+                let _ = tx.send((i, r));
+            });
+        }
+        drop(tx);
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut first_err: Option<String> = None;
+        for _ in 0..n {
+            let (i, r) = rx
+                .recv()
+                .map_err(|_| Error::engine("executor pool disconnected"))?;
+            match r {
+                Ok(v) => slots[i] = Some(v),
+                Err(payload) => {
+                    if first_err.is_none() {
+                        first_err = Some(panic_message(payload));
+                    }
+                }
+            }
+        }
+        if let Some(msg) = first_err {
+            return Err(Error::engine(format!("task panicked: {msg}")));
+        }
+        Ok(slots.into_iter().map(|s| s.expect("all tasks reported")).collect())
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.sender.send(Message::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn run_all_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let tasks: Vec<_> = (0..32).map(|i| move || i * 10).collect();
+        let out = pool.run_all(tasks).unwrap();
+        assert_eq!(out, (0..32).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_all_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<i32> = pool.run_all(Vec::<fn() -> i32>::new()).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn tasks_actually_run_concurrently_on_workers() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        let tasks: Vec<_> = (0..100)
+            .map(|_| {
+                let c = Arc::clone(&counter);
+                move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        pool.run_all(tasks).unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn panicking_task_reports_engine_error() {
+        let pool = ThreadPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("boom in task")),
+            Box::new(|| 3),
+        ];
+        let err = pool.run_all(tasks).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("boom in task"), "{msg}");
+    }
+
+    #[test]
+    fn pool_survives_panic_and_runs_more() {
+        let pool = ThreadPool::new(2);
+        let _ = pool.run_all(vec![Box::new(|| panic!("x")) as Box<dyn FnOnce() + Send>]);
+        let out = pool.run_all(vec![|| 7, || 8]).unwrap();
+        assert_eq!(out, vec![7, 8]);
+    }
+
+    #[test]
+    fn size_clamped_to_one() {
+        let pool = ThreadPool::new(0);
+        assert_eq!(pool.size(), 1);
+        assert_eq!(pool.run_all(vec![|| 42]).unwrap(), vec![42]);
+    }
+}

@@ -1,0 +1,954 @@
+//! Resilient Distributed Datasets — the lazy, partitioned, lineage-tracked
+//! collection at the core of the engine.
+//!
+//! Semantics follow Spark's RDD model (§2.2 of the paper):
+//!
+//! * **Transformations are lazy.** `map`/`flat_map`/`filter`/... build a
+//!   new [`Rdd`] whose compute closure pulls parent partitions; nothing
+//!   runs until an **action** (`collect`, `count`, `save_as_text_file`).
+//! * **Narrow dependencies pipeline.** A chain of narrow transformations
+//!   executes inside one task per partition, with no materialization
+//!   between steps.
+//! * **Wide dependencies shuffle.** `group_by_key`, `reduce_by_key`,
+//!   `partition_by` and `repartition` cut the job into stages. An action
+//!   first materializes every un-materialized shuffle map stage in
+//!   topological order (the DAG scheduler), then runs the final result
+//!   stage. All stages execute their tasks on the context's executor
+//!   pool.
+//! * **Lineage.** A cached/shuffled partition that is lost (see
+//!   [`super::lineage`]) is transparently recomputed from its parents.
+//!
+//! Per-task wall time and record counts are recorded in the context's
+//! [`super::metrics::MetricsRegistry`]; the virtual-cluster simulator
+//! replays them at other core counts.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::util::Stopwatch;
+
+use super::context::ClusterContext;
+use super::metrics::{JobId, StageKind, TaskMetric};
+use super::partitioner::Partitioner;
+use super::shuffle::ShuffleId;
+use super::storage::StorageLevel;
+
+/// Marker for element types an RDD can carry.
+pub trait Data: Send + Sync + Clone + 'static {}
+impl<T: Send + Sync + Clone + 'static> Data for T {}
+
+/// Unique id of an RDD within its context.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RddId(pub usize);
+
+/// A dependency edge in the lineage DAG.
+pub(crate) enum Dep {
+    /// Child partitions are computed from parent partitions directly
+    /// (pipelined inside the same task).
+    Narrow(Arc<dyn DagNode>),
+    /// Child requires a shuffle; the handle knows how to run the map
+    /// stage.
+    Shuffle(Arc<ShuffleDepHandle>),
+}
+
+impl Clone for Dep {
+    fn clone(&self) -> Self {
+        match self {
+            Dep::Narrow(n) => Dep::Narrow(Arc::clone(n)),
+            Dep::Shuffle(s) => Dep::Shuffle(Arc::clone(s)),
+        }
+    }
+}
+
+/// A wide dependency: how to (re-)materialize the shuffle's map outputs.
+pub(crate) struct ShuffleDepHandle {
+    pub(crate) shuffle_id: ShuffleId,
+    pub(crate) parent: Arc<dyn DagNode>,
+    /// Runs the map stage: `(job, stage index)`.
+    pub(crate) run_map_stage: Box<dyn Fn(JobId, usize) -> Result<()> + Send + Sync>,
+}
+
+/// Type-erased view of an RDD used by the DAG scheduler walk.
+pub(crate) trait DagNode: Send + Sync {
+    fn id(&self) -> RddId;
+    fn deps(&self) -> Vec<Dep>;
+}
+
+pub(crate) struct RddCore<T: Data> {
+    id: RddId,
+    ctx: ClusterContext,
+    name: String,
+    parts: usize,
+    compute: Box<dyn Fn(usize) -> Vec<T> + Send + Sync>,
+    deps: Vec<Dep>,
+}
+
+impl<T: Data> DagNode for RddCore<T> {
+    fn id(&self) -> RddId {
+        self.id
+    }
+    fn deps(&self) -> Vec<Dep> {
+        self.deps.clone()
+    }
+}
+
+/// A lazy, partitioned, immutable distributed collection.
+pub struct Rdd<T: Data> {
+    pub(crate) core: Arc<RddCore<T>>,
+}
+
+impl<T: Data> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Rdd { core: Arc::clone(&self.core) }
+    }
+}
+
+impl<T: Data> std::fmt::Debug for Rdd<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Rdd")
+            .field("id", &self.core.id)
+            .field("name", &self.core.name)
+            .field("parts", &self.core.parts)
+            .finish()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Construction + partition access
+// ---------------------------------------------------------------------------
+
+impl<T: Data> Rdd<T> {
+    pub(crate) fn new(
+        ctx: ClusterContext,
+        name: impl Into<String>,
+        parts: usize,
+        compute: impl Fn(usize) -> Vec<T> + Send + Sync + 'static,
+        deps: Vec<Dep>,
+    ) -> Rdd<T> {
+        let id = ctx.new_rdd_id();
+        Rdd {
+            core: Arc::new(RddCore {
+                id,
+                ctx,
+                name: name.into(),
+                parts,
+                compute: Box::new(compute),
+                deps,
+            }),
+        }
+    }
+
+    pub(crate) fn from_collection(ctx: ClusterContext, data: Vec<T>, parts: usize) -> Rdd<T> {
+        let parts = parts.max(1);
+        let n = data.len();
+        let data = Arc::new(data);
+        // Contiguous chunking, like Spark's ParallelCollectionRDD.
+        let chunk = n.div_ceil(parts).max(1);
+        Rdd::new(ctx, "parallelize", parts, move |p| {
+            let lo = (p * chunk).min(n);
+            let hi = ((p + 1) * chunk).min(n);
+            data[lo..hi].to_vec()
+        }, Vec::new())
+    }
+
+    /// The owning context.
+    pub fn ctx(&self) -> &ClusterContext {
+        &self.core.ctx
+    }
+
+    /// Number of partitions.
+    pub fn num_partitions(&self) -> usize {
+        self.core.parts
+    }
+
+    /// Unique id within the context.
+    pub fn id(&self) -> RddId {
+        self.core.id
+    }
+
+    /// Debug name of the last transformation.
+    pub fn name(&self) -> &str {
+        &self.core.name
+    }
+
+    /// Compute (or fetch from cache) one partition. Pipelines through
+    /// narrow parents; respects `.cache()`.
+    pub(crate) fn partition(&self, p: usize) -> Vec<T> {
+        let store = self.ctx().cache_store();
+        if store.level(self.core.id) == StorageLevel::Memory {
+            if let Some(v) = store.get::<T>(self.core.id, p) {
+                return v;
+            }
+            let v = (self.core.compute)(p);
+            store.put(self.core.id, p, v.clone());
+            return v;
+        }
+        (self.core.compute)(p)
+    }
+
+    /// Mark this RDD for in-memory caching (Spark's `.cache()`).
+    pub fn cache(&self) -> Rdd<T> {
+        self.ctx().cache_store().set_level(self.core.id, StorageLevel::Memory);
+        self.clone()
+    }
+
+    fn dag_node(&self) -> Arc<dyn DagNode> {
+        Arc::clone(&self.core) as Arc<dyn DagNode>
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Narrow transformations
+// ---------------------------------------------------------------------------
+
+impl<T: Data> Rdd<T> {
+    fn derive<U: Data>(
+        &self,
+        name: &str,
+        parts: usize,
+        compute: impl Fn(usize) -> Vec<U> + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        Rdd::new(
+            self.ctx().clone(),
+            name,
+            parts,
+            compute,
+            vec![Dep::Narrow(self.dag_node())],
+        )
+    }
+
+    /// Element-wise map.
+    pub fn map<U: Data>(&self, f: impl Fn(T) -> U + Send + Sync + 'static) -> Rdd<U> {
+        let parent = self.clone();
+        self.derive("map", self.num_partitions(), move |p| {
+            parent.partition(p).into_iter().map(&f).collect()
+        })
+    }
+
+    /// Map each element to zero or more outputs.
+    pub fn flat_map<U: Data, I>(&self, f: impl Fn(T) -> I + Send + Sync + 'static) -> Rdd<U>
+    where
+        I: IntoIterator<Item = U>,
+    {
+        let parent = self.clone();
+        self.derive("flatMap", self.num_partitions(), move |p| {
+            parent.partition(p).into_iter().flat_map(&f).collect()
+        })
+    }
+
+    /// Keep elements satisfying the predicate.
+    pub fn filter(&self, pred: impl Fn(&T) -> bool + Send + Sync + 'static) -> Rdd<T> {
+        let parent = self.clone();
+        self.derive("filter", self.num_partitions(), move |p| {
+            parent.partition(p).into_iter().filter(|t| pred(t)).collect()
+        })
+    }
+
+    /// Map a whole partition at once, with its index — Spark's
+    /// `mapPartitionsWithIndex`. The workhorse for per-partition local
+    /// aggregation (triangular-matrix updates, local tid assignment).
+    pub fn map_partitions_with_index<U: Data>(
+        &self,
+        f: impl Fn(usize, Vec<T>) -> Vec<U> + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        let parent = self.clone();
+        self.derive("mapPartitionsWithIndex", self.num_partitions(), move |p| {
+            f(p, parent.partition(p))
+        })
+    }
+
+    /// Shrink to `n` partitions without a shuffle (Spark's `coalesce`).
+    /// Child partition `i` concatenates a contiguous group of parents.
+    pub fn coalesce(&self, n: usize) -> Rdd<T> {
+        let n = n.clamp(1, self.num_partitions());
+        let parent = self.clone();
+        let m = self.num_partitions();
+        self.derive("coalesce", n, move |p| {
+            // Parent j goes to child j * n / m (contiguous, balanced).
+            let mut out = Vec::new();
+            for j in 0..m {
+                if j * n / m == p {
+                    out.extend(parent.partition(j));
+                }
+            }
+            out
+        })
+    }
+
+    /// Key every element with a globally unique, partition-ordered index
+    /// (Spark's `zipWithIndex`). Triggers a job to size the partitions.
+    pub fn zip_with_index(&self) -> Result<Rdd<(T, u64)>> {
+        let sizes = self.partition_sizes()?;
+        let mut offsets = vec![0u64; sizes.len()];
+        let mut acc = 0u64;
+        for (i, s) in sizes.iter().enumerate() {
+            offsets[i] = acc;
+            acc += *s as u64;
+        }
+        let parent = self.clone();
+        Ok(self.derive("zipWithIndex", self.num_partitions(), move |p| {
+            let base = offsets[p];
+            parent
+                .partition(p)
+                .into_iter()
+                .enumerate()
+                .map(|(i, t)| (t, base + i as u64))
+                .collect()
+        }))
+    }
+
+    /// Distribute elements evenly over `n` partitions via a shuffle
+    /// (Spark's `repartition`).
+    pub fn repartition(&self, n: usize) -> Rdd<T> {
+        let n = n.max(1);
+        let ctx = self.ctx().clone();
+        let sid = ctx.new_shuffle_id();
+        let parent = self.clone();
+        let m = self.num_partitions();
+
+        let map_parent = parent.clone();
+        let map_ctx = ctx.clone();
+        let run_map_stage = Box::new(move |job: JobId, stage: usize| -> Result<()> {
+            let tasks: Vec<_> = (0..m)
+                .map(|mp| {
+                    let parent = map_parent.clone();
+                    let ctx = map_ctx.clone();
+                    move || {
+                        let items = parent.partition(mp);
+                        let mut buckets: Vec<Vec<T>> = (0..n).map(|_| Vec::new()).collect();
+                        // Round-robin with per-map-task offset => even spread.
+                        for (i, t) in items.into_iter().enumerate() {
+                            buckets[(i + mp) % n].push(t);
+                        }
+                        let records: u64 = buckets.iter().map(|b| b.len() as u64).sum();
+                        for (r, b) in buckets.into_iter().enumerate() {
+                            ctx.shuffle_store().put(sid, mp, r, b);
+                        }
+                        ((), records)
+                    }
+                })
+                .collect();
+            run_stage(&map_ctx, job, stage, StageKind::ShuffleMap, tasks).map(|_| ())
+        });
+
+        let fetch_ctx = ctx.clone();
+        Rdd::new(
+            ctx,
+            "repartition",
+            n,
+            move |r| fetch_ctx.shuffle_store().fetch::<T>(sid, m, r),
+            vec![Dep::Shuffle(Arc::new(ShuffleDepHandle {
+                shuffle_id: sid,
+                parent: self.dag_node(),
+                run_map_stage,
+            }))],
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pair-RDD (shuffle) transformations
+// ---------------------------------------------------------------------------
+
+impl<K, V> Rdd<(K, V)>
+where
+    K: Data + Hash + Eq,
+    V: Data,
+{
+    /// Repartition by key with an explicit partitioner (Spark's
+    /// `partitionBy`). Used by the paper's Phase-3/4 to spread equivalence
+    /// classes with the default/hash/reverse-hash partitioners.
+    pub fn partition_by(&self, partitioner: Arc<dyn Partitioner<K>>) -> Rdd<(K, V)> {
+        let ctx = self.ctx().clone();
+        let sid = ctx.new_shuffle_id();
+        let parent = self.clone();
+        let m = self.num_partitions();
+        let n = partitioner.num_partitions();
+
+        let map_parent = parent.clone();
+        let map_ctx = ctx.clone();
+        let map_partitioner = Arc::clone(&partitioner);
+        let run_map_stage = Box::new(move |job: JobId, stage: usize| -> Result<()> {
+            let tasks: Vec<_> = (0..m)
+                .map(|mp| {
+                    let parent = map_parent.clone();
+                    let ctx = map_ctx.clone();
+                    let partitioner = Arc::clone(&map_partitioner);
+                    move || {
+                        let items = parent.partition(mp);
+                        let mut buckets: Vec<Vec<(K, V)>> = (0..n).map(|_| Vec::new()).collect();
+                        let records = items.len() as u64;
+                        for (k, v) in items {
+                            let r = partitioner.partition(&k);
+                            debug_assert!(r < n, "partitioner out of range");
+                            buckets[r % n].push((k, v));
+                        }
+                        for (r, b) in buckets.into_iter().enumerate() {
+                            ctx.shuffle_store().put(sid, mp, r, b);
+                        }
+                        ((), records)
+                    }
+                })
+                .collect();
+            run_stage(&map_ctx, job, stage, StageKind::ShuffleMap, tasks).map(|_| ())
+        });
+
+        let fetch_ctx = ctx.clone();
+        Rdd::new(
+            ctx,
+            "partitionBy",
+            n,
+            move |r| fetch_ctx.shuffle_store().fetch::<(K, V)>(sid, m, r),
+            vec![Dep::Shuffle(Arc::new(ShuffleDepHandle {
+                shuffle_id: sid,
+                parent: self.dag_node(),
+                run_map_stage,
+            }))],
+        )
+    }
+
+    /// Group values sharing a key (Spark's `groupByKey`) into `n` reduce
+    /// partitions with hash partitioning.
+    pub fn group_by_key(&self, n: usize) -> Rdd<(K, Vec<V>)> {
+        let ctx = self.ctx().clone();
+        let sid = ctx.new_shuffle_id();
+        let parent = self.clone();
+        let m = self.num_partitions();
+        let n = n.max(1);
+        let hasher = Arc::new(super::partitioner::HashPartitioner::new(n));
+
+        let map_parent = parent.clone();
+        let map_ctx = ctx.clone();
+        let map_hasher = Arc::clone(&hasher);
+        let run_map_stage = Box::new(move |job: JobId, stage: usize| -> Result<()> {
+            let tasks: Vec<_> = (0..m)
+                .map(|mp| {
+                    let parent = map_parent.clone();
+                    let ctx = map_ctx.clone();
+                    let hasher = Arc::clone(&map_hasher);
+                    move || {
+                        let items = parent.partition(mp);
+                        let records = items.len() as u64;
+                        let mut buckets: Vec<Vec<(K, V)>> = (0..n).map(|_| Vec::new()).collect();
+                        for (k, v) in items {
+                            let r = Partitioner::<K>::partition(hasher.as_ref(), &k);
+                            buckets[r].push((k, v));
+                        }
+                        for (r, b) in buckets.into_iter().enumerate() {
+                            ctx.shuffle_store().put(sid, mp, r, b);
+                        }
+                        ((), records)
+                    }
+                })
+                .collect();
+            run_stage(&map_ctx, job, stage, StageKind::ShuffleMap, tasks).map(|_| ())
+        });
+
+        let fetch_ctx = ctx.clone();
+        Rdd::new(
+            ctx,
+            "groupByKey",
+            n,
+            move |r| {
+                let raw = fetch_ctx.shuffle_store().fetch::<(K, V)>(sid, m, r);
+                let mut groups: HashMap<K, Vec<V>> = HashMap::new();
+                for (k, v) in raw {
+                    groups.entry(k).or_default().push(v);
+                }
+                groups.into_iter().collect()
+            },
+            vec![Dep::Shuffle(Arc::new(ShuffleDepHandle {
+                shuffle_id: sid,
+                parent: self.dag_node(),
+                run_map_stage,
+            }))],
+        )
+    }
+
+    /// Merge values per key with an associative, commutative `f` (Spark's
+    /// `reduceByKey`), with map-side combining.
+    pub fn reduce_by_key(&self, n: usize, f: impl Fn(V, V) -> V + Send + Sync + 'static) -> Rdd<(K, V)> {
+        let ctx = self.ctx().clone();
+        let sid = ctx.new_shuffle_id();
+        let parent = self.clone();
+        let m = self.num_partitions();
+        let n = n.max(1);
+        let f = Arc::new(f);
+        let hasher = Arc::new(super::partitioner::HashPartitioner::new(n));
+
+        let map_parent = parent.clone();
+        let map_ctx = ctx.clone();
+        let map_f = Arc::clone(&f);
+        let map_hasher = Arc::clone(&hasher);
+        let run_map_stage = Box::new(move |job: JobId, stage: usize| -> Result<()> {
+            let tasks: Vec<_> = (0..m)
+                .map(|mp| {
+                    let parent = map_parent.clone();
+                    let ctx = map_ctx.clone();
+                    let f = Arc::clone(&map_f);
+                    let hasher = Arc::clone(&map_hasher);
+                    move || {
+                        let items = parent.partition(mp);
+                        let records = items.len() as u64;
+                        // Map-side combine.
+                        let mut combined: HashMap<K, V> = HashMap::new();
+                        for (k, v) in items {
+                            match combined.remove(&k) {
+                                Some(prev) => {
+                                    combined.insert(k, f(prev, v));
+                                }
+                                None => {
+                                    combined.insert(k, v);
+                                }
+                            }
+                        }
+                        let mut buckets: Vec<Vec<(K, V)>> = (0..n).map(|_| Vec::new()).collect();
+                        for (k, v) in combined {
+                            let r = Partitioner::<K>::partition(hasher.as_ref(), &k);
+                            buckets[r].push((k, v));
+                        }
+                        for (r, b) in buckets.into_iter().enumerate() {
+                            ctx.shuffle_store().put(sid, mp, r, b);
+                        }
+                        ((), records)
+                    }
+                })
+                .collect();
+            run_stage(&map_ctx, job, stage, StageKind::ShuffleMap, tasks).map(|_| ())
+        });
+
+        let fetch_ctx = ctx.clone();
+        let reduce_f = Arc::clone(&f);
+        Rdd::new(
+            ctx,
+            "reduceByKey",
+            n,
+            move |r| {
+                let raw = fetch_ctx.shuffle_store().fetch::<(K, V)>(sid, m, r);
+                let mut merged: HashMap<K, V> = HashMap::new();
+                for (k, v) in raw {
+                    match merged.remove(&k) {
+                        Some(prev) => {
+                            merged.insert(k, reduce_f(prev, v));
+                        }
+                        None => {
+                            merged.insert(k, v);
+                        }
+                    }
+                }
+                merged.into_iter().collect()
+            },
+            vec![Dep::Shuffle(Arc::new(ShuffleDepHandle {
+                shuffle_id: sid,
+                parent: self.dag_node(),
+                run_map_stage,
+            }))],
+        )
+    }
+
+    /// Project out the keys.
+    pub fn keys(&self) -> Rdd<K> {
+        self.map(|(k, _)| k)
+    }
+
+    /// Project out the values.
+    pub fn values(&self) -> Rdd<V> {
+        self.map(|(_, v)| v)
+    }
+
+    /// Map over values, keeping keys (no shuffle).
+    pub fn map_values<W: Data>(&self, f: impl Fn(V) -> W + Send + Sync + 'static) -> Rdd<(K, W)> {
+        self.map(move |(k, v)| (k, f(v)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Actions
+// ---------------------------------------------------------------------------
+
+impl<T: Data> Rdd<T> {
+    /// Materialize every partition and return all elements in partition
+    /// order (Spark's `collect`).
+    pub fn collect(&self) -> Result<Vec<T>> {
+        let parts = self.run_job("collect")?;
+        Ok(parts.into_iter().flatten().collect())
+    }
+
+    /// Like `collect`, but keeps partition boundaries.
+    pub fn collect_partitions(&self) -> Result<Vec<Vec<T>>> {
+        self.run_job("collectPartitions")
+    }
+
+    /// Count elements (action).
+    pub fn count(&self) -> Result<u64> {
+        let parts = self.run_job("count")?;
+        Ok(parts.iter().map(|p| p.len() as u64).sum())
+    }
+
+    /// Run the job for its side effects (accumulator updates), discarding
+    /// outputs — Spark's `foreach`-style action. The paper's Phase-2 uses
+    /// this shape: a `flatMap` that only updates an accumulator.
+    pub fn run(&self) -> Result<()> {
+        self.run_job("run").map(|_| ())
+    }
+
+    /// Per-partition element counts (used by `zip_with_index`).
+    pub fn partition_sizes(&self) -> Result<Vec<usize>> {
+        Ok(self.run_job("partitionSizes")?.iter().map(Vec::len).collect())
+    }
+
+    /// Write one text file per partition under `dir` (Spark's
+    /// `saveAsTextFile`): `part-00000`, `part-00001`, ...
+    pub fn save_as_text_file(&self, dir: &str) -> Result<()>
+    where
+        T: std::fmt::Display,
+    {
+        std::fs::create_dir_all(dir)?;
+        let parts = self.run_job("saveAsTextFile")?;
+        for (i, part) in parts.iter().enumerate() {
+            let mut out = String::new();
+            for item in part {
+                out.push_str(&item.to_string());
+                out.push('\n');
+            }
+            std::fs::write(format!("{dir}/part-{i:05}"), out)?;
+        }
+        Ok(())
+    }
+
+    /// DAG-schedule and run this RDD as a job: materialize shuffle
+    /// dependencies in topological order, then execute the result stage.
+    fn run_job(&self, action: &str) -> Result<Vec<Vec<T>>> {
+        let ctx = self.ctx().clone();
+        let job = ctx.metrics().next_job_id();
+        let sw = Stopwatch::start();
+        let mut stage = 0usize;
+        self.prepare_shuffles(job, &mut stage)?;
+        let tasks: Vec<_> = (0..self.num_partitions())
+            .map(|p| {
+                let rdd = self.clone();
+                move || {
+                    let data = rdd.partition(p);
+                    let records = data.len() as u64;
+                    (data, records)
+                }
+            })
+            .collect();
+        let out = run_stage(&ctx, job, stage, StageKind::Result, tasks)?;
+        ctx.metrics().record_job(super::metrics::JobSpan {
+            job,
+            name: action.to_string(),
+            wall: sw.elapsed(),
+            stages: stage + 1,
+        });
+        Ok(out)
+    }
+
+    /// Walk the lineage DAG and materialize every not-yet-materialized
+    /// shuffle, parents first.
+    fn prepare_shuffles(&self, job: JobId, stage: &mut usize) -> Result<()> {
+        let mut visited = std::collections::HashSet::new();
+        let mut ordered: Vec<Arc<ShuffleDepHandle>> = Vec::new();
+        collect_shuffles(&self.dag_node(), &mut visited, &mut ordered);
+        for handle in ordered {
+            if !self.ctx().shuffle_store().is_materialized(handle.shuffle_id) {
+                (handle.run_map_stage)(job, *stage)?;
+                self.ctx().shuffle_store().mark_materialized(handle.shuffle_id);
+                *stage += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Post-order DFS: parents' shuffles come before children's.
+fn collect_shuffles(
+    node: &Arc<dyn DagNode>,
+    visited: &mut std::collections::HashSet<RddId>,
+    out: &mut Vec<Arc<ShuffleDepHandle>>,
+) {
+    if !visited.insert(node.id()) {
+        return;
+    }
+    for dep in node.deps() {
+        match dep {
+            Dep::Narrow(parent) => collect_shuffles(&parent, visited, out),
+            Dep::Shuffle(handle) => {
+                collect_shuffles(&handle.parent, visited, out);
+                out.push(handle);
+            }
+        }
+    }
+}
+
+/// Execute one stage's tasks on the context's executor pool, recording a
+/// [`TaskMetric`] per task. Tasks return `(result, records)`.
+pub(crate) fn run_stage<R, F>(
+    ctx: &ClusterContext,
+    job: JobId,
+    stage: usize,
+    kind: StageKind,
+    tasks: Vec<F>,
+) -> Result<Vec<R>>
+where
+    R: Send + 'static,
+    F: FnOnce() -> (R, u64) + Send + 'static,
+{
+    let wrapped: Vec<_> = tasks
+        .into_iter()
+        .enumerate()
+        .map(|(p, task)| {
+            let ctx = ctx.clone();
+            move || {
+                let sw = Stopwatch::start();
+                let (result, records) = task();
+                ctx.metrics().record_task(TaskMetric {
+                    job,
+                    stage,
+                    kind,
+                    partition: p,
+                    wall: sw.elapsed(),
+                    records,
+                });
+                result
+            }
+        })
+        .collect();
+    ctx.inner.pool.run_all(wrapped).map_err(|e| match e {
+        Error::Engine(msg) => Error::Engine(format!("stage {stage} of job {job:?} failed: {msg}")),
+        other => other,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::context::ClusterContext;
+    use crate::engine::partitioner::FnPartitioner;
+
+    fn ctx() -> ClusterContext {
+        ClusterContext::builder().cores(4).build()
+    }
+
+    #[test]
+    fn parallelize_collect_roundtrip() {
+        let c = ctx();
+        let data: Vec<u32> = (0..100).collect();
+        let rdd = c.parallelize(data.clone(), 7);
+        assert_eq!(rdd.num_partitions(), 7);
+        assert_eq!(rdd.collect().unwrap(), data);
+    }
+
+    #[test]
+    fn map_filter_flatmap_pipeline() {
+        let c = ctx();
+        let rdd = c.parallelize((1u32..=10).collect(), 3);
+        let out = rdd
+            .map(|x| x * 2)
+            .filter(|x| x % 3 == 0)
+            .flat_map(|x| vec![x, x + 1])
+            .collect()
+            .unwrap();
+        assert_eq!(out, vec![6, 7, 12, 13, 18, 19]);
+    }
+
+    #[test]
+    fn count_and_partition_sizes() {
+        let c = ctx();
+        let rdd = c.parallelize((0..10u8).collect(), 4);
+        assert_eq!(rdd.count().unwrap(), 10);
+        let sizes = rdd.partition_sizes().unwrap();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert_eq!(sizes.len(), 4);
+    }
+
+    #[test]
+    fn group_by_key_groups_all_values() {
+        let c = ctx();
+        let pairs: Vec<(u32, u32)> = (0..60).map(|i| (i % 5, i)).collect();
+        let rdd = c.parallelize(pairs, 6);
+        let mut grouped = rdd.group_by_key(3).collect().unwrap();
+        grouped.sort_by_key(|(k, _)| *k);
+        assert_eq!(grouped.len(), 5);
+        for (k, mut vs) in grouped {
+            vs.sort_unstable();
+            let expect: Vec<u32> = (0..60).filter(|i| i % 5 == k).collect();
+            assert_eq!(vs, expect, "key {k}");
+        }
+    }
+
+    #[test]
+    fn reduce_by_key_matches_fold() {
+        let c = ctx();
+        let pairs: Vec<(String, u64)> =
+            (0..100).map(|i| (format!("k{}", i % 7), i as u64)).collect();
+        let expect: std::collections::HashMap<String, u64> =
+            pairs.iter().fold(std::collections::HashMap::new(), |mut m, (k, v)| {
+                *m.entry(k.clone()).or_default() += v;
+                m
+            });
+        let rdd = c.parallelize(pairs, 5);
+        let reduced: std::collections::HashMap<String, u64> =
+            rdd.reduce_by_key(4, |a, b| a + b).collect().unwrap().into_iter().collect();
+        assert_eq!(reduced, expect);
+    }
+
+    #[test]
+    fn partition_by_routes_keys() {
+        let c = ctx();
+        let pairs: Vec<(usize, usize)> = (0..40).map(|i| (i % 8, i)).collect();
+        let rdd = c.parallelize(pairs, 4);
+        let partitioned = rdd.partition_by(Arc::new(FnPartitioner::new(4, |k: &usize| *k)));
+        let parts = partitioned.collect_partitions().unwrap();
+        assert_eq!(parts.len(), 4);
+        for (r, part) in parts.iter().enumerate() {
+            for (k, _) in part {
+                assert_eq!(k % 4, r, "key {k} in reduce partition {r}");
+            }
+        }
+        // Nothing lost.
+        let total: usize = parts.iter().map(Vec::len).sum();
+        assert_eq!(total, 40);
+    }
+
+    #[test]
+    fn coalesce_preserves_elements_without_shuffle() {
+        let c = ctx();
+        let rdd = c.parallelize((0..50u32).collect(), 10);
+        let co = rdd.coalesce(3);
+        assert_eq!(co.num_partitions(), 3);
+        let mut all = co.collect().unwrap();
+        all.sort_unstable();
+        assert_eq!(all, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn coalesce_to_one_keeps_order() {
+        let c = ctx();
+        let rdd = c.parallelize((0..20u32).collect(), 4);
+        assert_eq!(rdd.coalesce(1).collect().unwrap(), (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn repartition_spreads_evenly() {
+        let c = ctx();
+        let rdd = c.parallelize((0..100u32).collect(), 2);
+        let rep = rdd.repartition(5);
+        let sizes = rep.partition_sizes().unwrap();
+        assert_eq!(sizes.iter().sum::<usize>(), 100);
+        assert!(sizes.iter().all(|&s| s == 20), "{sizes:?}");
+        let mut all = rep.collect().unwrap();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zip_with_index_is_dense_and_ordered() {
+        let c = ctx();
+        let rdd = c.parallelize(vec!["a", "b", "c", "d", "e"], 2);
+        let zipped = rdd.zip_with_index().unwrap().collect().unwrap();
+        assert_eq!(
+            zipped,
+            vec![("a", 0), ("b", 1), ("c", 2), ("d", 3), ("e", 4)]
+        );
+    }
+
+    #[test]
+    fn cache_avoids_recompute() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let c = ctx();
+        let computes = Arc::new(AtomicUsize::new(0));
+        let counter = Arc::clone(&computes);
+        let rdd = c
+            .parallelize((0..10u32).collect(), 2)
+            .map(move |x| {
+                counter.fetch_add(1, Ordering::SeqCst);
+                x * 2
+            })
+            .cache();
+        rdd.collect().unwrap();
+        let after_first = computes.load(Ordering::SeqCst);
+        rdd.collect().unwrap();
+        assert_eq!(computes.load(Ordering::SeqCst), after_first, "second collect served from cache");
+    }
+
+    #[test]
+    fn shuffle_map_stage_runs_once_across_jobs() {
+        let c = ctx();
+        let pairs: Vec<(u32, u32)> = (0..20).map(|i| (i % 4, i)).collect();
+        let grouped = c.parallelize(pairs, 4).group_by_key(2);
+        grouped.count().unwrap();
+        let tasks_after_first = c.metrics().tasks().len();
+        grouped.count().unwrap();
+        let tasks_after_second = c.metrics().tasks().len();
+        // Second job only runs the result stage (2 tasks), not the map stage.
+        assert_eq!(tasks_after_second - tasks_after_first, 2);
+    }
+
+    #[test]
+    fn metrics_record_stages_and_records() {
+        let c = ctx();
+        let pairs: Vec<(u8, u8)> = (0..30).map(|i| ((i % 3) as u8, i as u8)).collect();
+        c.parallelize(pairs, 3).reduce_by_key(2, |a, b| a.wrapping_add(b)).collect().unwrap();
+        let tasks = c.metrics().tasks();
+        let maps = tasks.iter().filter(|t| t.kind == StageKind::ShuffleMap).count();
+        let results = tasks.iter().filter(|t| t.kind == StageKind::Result).count();
+        assert_eq!(maps, 3);
+        assert_eq!(results, 2);
+        let jobs = c.metrics().jobs();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].stages, 2);
+    }
+
+    #[test]
+    fn chained_shuffles_materialize_in_order() {
+        let c = ctx();
+        let pairs: Vec<(u32, u64)> = (0..50).map(|i| (i % 10, 1u64)).collect();
+        // wordcount -> re-key by parity of count -> group
+        let counts = c.parallelize(pairs, 5).reduce_by_key(4, |a, b| a + b);
+        let regrouped = counts.map(|(k, v)| (v % 2, k)).group_by_key(2);
+        let out = regrouped.collect().unwrap();
+        let total: usize = out.iter().map(|(_, vs)| vs.len()).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn save_as_text_file_writes_parts() {
+        let c = ctx();
+        let dir = std::env::temp_dir().join("rdd_eclat_save_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rdd = c.parallelize((0..10u32).collect(), 3);
+        rdd.save_as_text_file(dir.to_str().unwrap()).unwrap();
+        let mut lines = Vec::new();
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let content = std::fs::read_to_string(entry.unwrap().path()).unwrap();
+            lines.extend(content.lines().map(|l| l.parse::<u32>().unwrap()));
+        }
+        lines.sort_unstable();
+        assert_eq!(lines, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn keys_values_map_values() {
+        let c = ctx();
+        let rdd = c.parallelize(vec![(1u8, "a"), (2, "b")], 1);
+        assert_eq!(rdd.keys().collect().unwrap(), vec![1, 2]);
+        assert_eq!(rdd.values().collect().unwrap(), vec!["a", "b"]);
+        assert_eq!(
+            rdd.map_values(|v| v.to_uppercase()).collect().unwrap(),
+            vec![(1, "A".to_string()), (2, "B".to_string())]
+        );
+    }
+
+    #[test]
+    fn empty_rdd_everything_works() {
+        let c = ctx();
+        let rdd: Rdd<u32> = c.parallelize(Vec::new(), 3);
+        assert_eq!(rdd.count().unwrap(), 0);
+        assert!(rdd.map(|x| x + 1).collect().unwrap().is_empty());
+        let pairs: Rdd<(u32, u32)> = c.parallelize(Vec::new(), 2);
+        assert!(pairs.group_by_key(2).collect().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,166 @@
+//! Hash shuffle — the engine's wide-dependency data plane.
+//!
+//! A shuffle has `m` map tasks (one per parent partition) and `r` reduce
+//! partitions. Each map task writes one type-erased bucket per reduce
+//! partition; reduce-side compute fetches column `r` across all map
+//! outputs. The store also tracks which shuffles are fully materialized so
+//! the stage scheduler runs each map stage exactly once — and can
+//! re-materialize after an injected fault (lineage recovery).
+
+use std::any::Any;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+/// Identifies one shuffle (one wide dependency).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ShuffleId(pub usize);
+
+type Bucket = Box<dyn Any + Send + Sync>;
+
+/// In-memory map-output store: `(shuffle, map task, reduce partition) →
+/// bucket`.
+#[derive(Default)]
+pub struct ShuffleStore {
+    buckets: RwLock<HashMap<(ShuffleId, usize, usize), Bucket>>,
+    materialized: RwLock<HashSet<ShuffleId>>,
+    bytes_approx: AtomicU64,
+    records: AtomicU64,
+}
+
+impl ShuffleStore {
+    /// Create an empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write one map task's bucket for one reduce partition.
+    pub fn put<T: Send + Sync + 'static>(
+        &self,
+        shuffle: ShuffleId,
+        map_task: usize,
+        reduce: usize,
+        data: Vec<T>,
+    ) {
+        self.records.fetch_add(data.len() as u64, Ordering::Relaxed);
+        self.bytes_approx
+            .fetch_add((data.len() * std::mem::size_of::<T>()) as u64, Ordering::Relaxed);
+        self.buckets
+            .write()
+            .unwrap()
+            .insert((shuffle, map_task, reduce), Box::new(data));
+    }
+
+    /// Fetch all buckets for reduce partition `reduce`, concatenated in map
+    /// task order. Cloning out keeps the store reusable for recomputes.
+    pub fn fetch<T: Clone + 'static>(
+        &self,
+        shuffle: ShuffleId,
+        num_map_tasks: usize,
+        reduce: usize,
+    ) -> Vec<T> {
+        let buckets = self.buckets.read().unwrap();
+        let mut out = Vec::new();
+        for m in 0..num_map_tasks {
+            if let Some(b) = buckets.get(&(shuffle, m, reduce)) {
+                let v = b
+                    .downcast_ref::<Vec<T>>()
+                    .expect("shuffle type mismatch: bucket stored with a different type");
+                out.extend(v.iter().cloned());
+            }
+        }
+        out
+    }
+
+    /// Mark a shuffle's map stage complete.
+    pub fn mark_materialized(&self, shuffle: ShuffleId) {
+        self.materialized.write().unwrap().insert(shuffle);
+    }
+
+    /// Whether the map stage for this shuffle already ran.
+    pub fn is_materialized(&self, shuffle: ShuffleId) -> bool {
+        self.materialized.read().unwrap().contains(&shuffle)
+    }
+
+    /// Fault injection: drop every map output of a shuffle and clear its
+    /// materialized flag — the next job that needs it recomputes the map
+    /// stage through lineage. Returns the number of dropped buckets.
+    pub fn lose(&self, shuffle: ShuffleId) -> usize {
+        let mut buckets = self.buckets.write().unwrap();
+        let keys: Vec<_> = buckets.keys().filter(|(s, _, _)| *s == shuffle).cloned().collect();
+        for k in &keys {
+            buckets.remove(k);
+        }
+        self.materialized.write().unwrap().remove(&shuffle);
+        keys.len()
+    }
+
+    /// (records shuffled, approximate payload bytes) — feeds metrics.
+    pub fn traffic(&self) -> (u64, u64) {
+        (self.records.load(Ordering::Relaxed), self.bytes_approx.load(Ordering::Relaxed))
+    }
+
+    /// Number of buckets currently stored.
+    pub fn len(&self) -> usize {
+        self.buckets.read().unwrap().len()
+    }
+
+    /// True when no buckets stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_fetch_concatenates_in_map_order() {
+        let s = ShuffleStore::new();
+        let id = ShuffleId(0);
+        s.put(id, 1, 0, vec![("b", 2)]);
+        s.put(id, 0, 0, vec![("a", 1)]);
+        s.put(id, 0, 1, vec![("z", 9)]);
+        let r0: Vec<(&str, i32)> = s.fetch(id, 2, 0);
+        assert_eq!(r0, vec![("a", 1), ("b", 2)]);
+        let r1: Vec<(&str, i32)> = s.fetch(id, 2, 1);
+        assert_eq!(r1, vec![("z", 9)]);
+        let r2: Vec<(&str, i32)> = s.fetch(id, 2, 2);
+        assert!(r2.is_empty());
+    }
+
+    #[test]
+    fn materialization_flag_and_loss() {
+        let s = ShuffleStore::new();
+        let id = ShuffleId(3);
+        assert!(!s.is_materialized(id));
+        s.put(id, 0, 0, vec![1u64]);
+        s.mark_materialized(id);
+        assert!(s.is_materialized(id));
+        assert_eq!(s.lose(id), 1);
+        assert!(!s.is_materialized(id));
+        let empty: Vec<u64> = s.fetch(id, 1, 0);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn traffic_counters_accumulate() {
+        let s = ShuffleStore::new();
+        s.put(ShuffleId(1), 0, 0, vec![1u32, 2, 3]);
+        let (recs, bytes) = s.traffic();
+        assert_eq!(recs, 3);
+        assert_eq!(bytes, 12);
+    }
+
+    #[test]
+    fn independent_shuffles_do_not_collide() {
+        let s = ShuffleStore::new();
+        s.put(ShuffleId(1), 0, 0, vec![1u8]);
+        s.put(ShuffleId(2), 0, 0, vec![2u8]);
+        assert_eq!(s.fetch::<u8>(ShuffleId(1), 1, 0), vec![1]);
+        assert_eq!(s.fetch::<u8>(ShuffleId(2), 1, 0), vec![2]);
+        s.lose(ShuffleId(1));
+        assert_eq!(s.fetch::<u8>(ShuffleId(2), 1, 0), vec![2]);
+    }
+}

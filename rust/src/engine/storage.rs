@@ -1,0 +1,149 @@
+//! Partition cache — the engine's analogue of Spark's block manager /
+//! `RDD.cache()`. Cached partitions are type-erased (`Box<dyn Any>`) and
+//! keyed by `(rdd id, partition index)`; the typed accessor lives on the
+//! RDD side which knows `T`.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, RwLock};
+
+use super::rdd::RddId;
+
+/// Where a cached partition lives. `Memory` is the only real store in this
+/// single-process engine; `None` means not cached. (Spark's disk levels
+/// would go here.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageLevel {
+    /// Not persisted; recomputed from lineage on every access.
+    None,
+    /// Kept in the in-memory block store after first computation.
+    Memory,
+}
+
+type Block = Box<dyn Any + Send + Sync>;
+
+/// In-memory block store with hit/miss counters (counters feed the metrics
+/// tests and the EXPERIMENTS.md cache-effectiveness note).
+#[derive(Default)]
+pub struct CacheStore {
+    blocks: RwLock<HashMap<(RddId, usize), Block>>,
+    levels: Mutex<HashMap<RddId, StorageLevel>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CacheStore {
+    /// Create an empty store.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the declared storage level of an RDD (`.cache()`).
+    pub fn set_level(&self, rdd: RddId, level: StorageLevel) {
+        self.levels.lock().unwrap().insert(rdd, level);
+    }
+
+    /// The declared storage level (None when never declared).
+    pub fn level(&self, rdd: RddId) -> StorageLevel {
+        *self.levels.lock().unwrap().get(&rdd).unwrap_or(&StorageLevel::None)
+    }
+
+    /// Fetch a cached partition, cloning out the typed value.
+    pub fn get<T: Clone + 'static>(&self, rdd: RddId, partition: usize) -> Option<Vec<T>> {
+        let blocks = self.blocks.read().unwrap();
+        match blocks.get(&(rdd, partition)) {
+            Some(b) => {
+                let v = b
+                    .downcast_ref::<Vec<T>>()
+                    .expect("cache type mismatch: same RDD id stored with two types");
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert a computed partition.
+    pub fn put<T: Clone + Send + Sync + 'static>(&self, rdd: RddId, partition: usize, data: Vec<T>) {
+        self.blocks.write().unwrap().insert((rdd, partition), Box::new(data));
+    }
+
+    /// Drop a single cached partition (fault injection / eviction).
+    /// Returns true when something was actually dropped.
+    pub fn evict(&self, rdd: RddId, partition: usize) -> bool {
+        self.blocks.write().unwrap().remove(&(rdd, partition)).is_some()
+    }
+
+    /// Drop every cached partition of an RDD; returns how many were dropped.
+    pub fn evict_rdd(&self, rdd: RddId) -> usize {
+        let mut blocks = self.blocks.write().unwrap();
+        let keys: Vec<_> = blocks.keys().filter(|(r, _)| *r == rdd).cloned().collect();
+        for k in &keys {
+            blocks.remove(k);
+        }
+        keys.len()
+    }
+
+    /// Number of cached partitions currently held.
+    pub fn len(&self) -> usize {
+        self.blocks.read().unwrap().len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// (hits, misses) counters.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let c = CacheStore::new();
+        c.put(RddId(1), 0, vec![1u32, 2, 3]);
+        assert_eq!(c.get::<u32>(RddId(1), 0), Some(vec![1, 2, 3]));
+        assert_eq!(c.get::<u32>(RddId(1), 1), None);
+        let (h, m) = c.counters();
+        assert_eq!((h, m), (1, 1));
+    }
+
+    #[test]
+    fn evict_partition_and_rdd() {
+        let c = CacheStore::new();
+        c.put(RddId(5), 0, vec![0u8]);
+        c.put(RddId(5), 1, vec![1u8]);
+        c.put(RddId(6), 0, vec![2u8]);
+        assert!(c.evict(RddId(5), 0));
+        assert!(!c.evict(RddId(5), 0));
+        assert_eq!(c.evict_rdd(RddId(5)), 1);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get::<u8>(RddId(6), 0), Some(vec![2]));
+    }
+
+    #[test]
+    fn levels_tracked() {
+        let c = CacheStore::new();
+        assert_eq!(c.level(RddId(9)), StorageLevel::None);
+        c.set_level(RddId(9), StorageLevel::Memory);
+        assert_eq!(c.level(RddId(9)), StorageLevel::Memory);
+    }
+
+    #[test]
+    #[should_panic(expected = "cache type mismatch")]
+    fn type_mismatch_panics() {
+        let c = CacheStore::new();
+        c.put(RddId(1), 0, vec![1u32]);
+        let _ = c.get::<String>(RddId(1), 0);
+    }
+}

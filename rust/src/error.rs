@@ -1,0 +1,80 @@
+//! Unified error type for the crate.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Errors surfaced by the engine, the FIM algorithms, the dataset layer,
+/// the PJRT runtime and the CLI.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Filesystem / IO failures (dataset files, artifact files, results).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// A dataset line or CLI value failed to parse.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Bad configuration (unknown key, invalid value, missing artifact).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// The engine detected an internal inconsistency (lost shuffle output
+    /// that cannot be recomputed, a poisoned lock, a panicked task).
+    #[error("engine error: {0}")]
+    Engine(String),
+
+    /// PJRT / XLA runtime failure (artifact missing, compile or execute
+    /// failure, shape mismatch between host buffers and the artifact).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// CLI usage error; carries the message shown to the user.
+    #[error("usage error: {0}")]
+    Usage(String),
+}
+
+impl Error {
+    /// Shorthand for [`Error::Parse`].
+    pub fn parse(msg: impl Into<String>) -> Self {
+        Error::Parse(msg.into())
+    }
+
+    /// Shorthand for [`Error::Config`].
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+
+    /// Shorthand for [`Error::Engine`].
+    pub fn engine(msg: impl Into<String>) -> Self {
+        Error::Engine(msg.into())
+    }
+
+    /// Shorthand for [`Error::Runtime`].
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Error::Runtime(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_includes_kind_and_message() {
+        let e = Error::parse("bad line 3");
+        assert_eq!(e.to_string(), "parse error: bad line 3");
+        let e = Error::engine("lost partition");
+        assert_eq!(e.to_string(), "engine error: lost partition");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("gone"));
+    }
+}

@@ -1,0 +1,478 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (DESIGN.md §5 maps each to its experiment id). Every driver prints the
+//! series the paper plots and writes a CSV under `results/`.
+//!
+//! Scale control: `SCALE=quick` (fast sanity sweep on truncated datasets,
+//! used by `cargo bench` defaults) vs `SCALE=paper` (full Table 2 sizes).
+
+use std::sync::Arc;
+
+use crate::algorithms::{
+    Algorithm, EclatOptions, EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, RddApriori,
+};
+use crate::bench::{Bench, Measurement, Report};
+use crate::data::{Database, DatasetSpec, TABLE2};
+use crate::engine::{simcluster, ClusterContext};
+use crate::error::Result;
+use crate::fim::MinSup;
+use crate::util::stats::imbalance;
+use crate::util::{Stopwatch, Summary};
+
+/// Shared driver state.
+pub struct FigureCtx {
+    /// Measurement harness.
+    pub bench: Bench,
+    /// Dataset cache directory.
+    pub data_dir: String,
+    /// Executor cores for live runs.
+    pub cores: usize,
+    /// Quick mode truncates datasets (see [`FigureCtx::dataset`]).
+    pub quick: bool,
+}
+
+impl FigureCtx {
+    /// From environment (`SCALE`), with defaults.
+    pub fn from_env() -> FigureCtx {
+        let quick = matches!(std::env::var("SCALE").as_deref(), Ok("quick"));
+        FigureCtx {
+            // Full-scale mining runs take seconds-to-minutes each; one
+            // sample per point keeps `figures --all` tractable (micro
+            // benches use multi-sample Bench::from_env instead).
+            bench: if quick { Bench::quick() } else { Bench { warmup: 0, samples: 1 } },
+            data_dir: "datasets".into(),
+            cores: crate::engine::available_cores(),
+            quick,
+        }
+    }
+
+    fn cluster(&self) -> ClusterContext {
+        ClusterContext::builder().cores(self.cores).build()
+    }
+
+    /// Load (or generate) a dataset; quick mode truncates to keep sweeps
+    /// fast while preserving per-transaction statistics.
+    pub fn dataset(&self, spec: DatasetSpec) -> Result<Database> {
+        let db = spec.materialize(&self.data_dir)?;
+        if self.quick {
+            let cap = match spec {
+                DatasetSpec::Chess => 800,
+                DatasetSpec::Mushroom | DatasetSpec::C20d10k => 2000,
+                DatasetSpec::Bms1 | DatasetSpec::Bms2 => 8000,
+                _ => 5000,
+            };
+            if db.len() > cap {
+                return Ok(Database::from_rows(
+                    db.transactions()[..cap].to_vec(),
+                ));
+            }
+        }
+        Ok(db)
+    }
+
+    /// The paper's per-dataset minimum-support grids (DESIGN.md §5; the
+    /// paper's axes are images — grids chosen per dataset density, the
+    /// T40 grid is quoted in its text).
+    pub fn sup_grid(&self, spec: DatasetSpec) -> Vec<f64> {
+        let full: Vec<f64> = match spec {
+            DatasetSpec::C20d10k => vec![0.1, 0.08, 0.06, 0.04, 0.02],
+            DatasetSpec::Chess => vec![0.95, 0.925, 0.9, 0.875, 0.85],
+            DatasetSpec::Mushroom => vec![0.4, 0.35, 0.3, 0.25, 0.2],
+            DatasetSpec::Bms1 | DatasetSpec::Bms2 => vec![0.01, 0.008, 0.006, 0.004, 0.002],
+            DatasetSpec::T10i4d100k | DatasetSpec::T10i4Scaled(_) => {
+                vec![0.05, 0.04, 0.03, 0.02, 0.01]
+            }
+            DatasetSpec::T40i10d100k => vec![0.04, 0.03, 0.02, 0.01],
+        };
+        if self.quick {
+            // Endpoints only.
+            vec![full[0], *full.last().unwrap()]
+        } else {
+            full
+        }
+    }
+
+    /// The six algorithms of Figs 8–14(a) with the paper's settings for
+    /// `spec` (`triMatrixMode` off for BMS1/2, `p = 10`).
+    pub fn standard_algos(&self, spec: DatasetSpec) -> Vec<Box<dyn Algorithm>> {
+        let opts = EclatOptions {
+            tri_matrix: spec.tri_matrix_mode(),
+            ..Default::default()
+        };
+        vec![
+            Box::new(EclatV1::with_options(opts.clone())),
+            Box::new(EclatV2::with_options(opts.clone())),
+            Box::new(EclatV3::with_options(opts.clone())),
+            Box::new(EclatV4::with_options(opts.clone())),
+            Box::new(EclatV5::with_options(opts)),
+            Box::new(RddApriori),
+        ]
+    }
+}
+
+/// Table 2: regenerate every dataset and report its statistics next to
+/// the paper's targets.
+pub fn run_table2(fx: &FigureCtx) -> Result<Report> {
+    let mut report = Report::new();
+    println!("\n== Table 2: dataset properties (generated twin vs paper target) ==");
+    println!(
+        "{:<16} {:>10} {:>10} {:>8} {:>12} {:>12} {:>9}",
+        "dataset", "txns", "txns*", "items", "items*", "avg_width", "width*"
+    );
+    for spec in TABLE2 {
+        let sw = Stopwatch::start();
+        let db = fx.dataset(spec)?;
+        let s = db.stats();
+        let (t_txns, t_items, t_width) = spec.table2_row();
+        println!(
+            "{:<16} {:>10} {:>10} {:>8} {:>12} {:>12.2} {:>9.1}",
+            spec.name(),
+            s.transactions,
+            t_txns,
+            s.distinct_items,
+            t_items,
+            s.avg_width,
+            t_width
+        );
+        report.add(Measurement {
+            name: format!("table2/{}/generate", spec.name()),
+            secs: Summary::of(&[sw.secs()]),
+        });
+    }
+    report.write_csv("table2.csv")?;
+    Ok(report)
+}
+
+/// Figs 8–14: execution time vs minimum support for one dataset, all six
+/// algorithms (the (a) panels; the five Eclat rows are the (b) panels).
+pub fn run_fig_minsup(fx: &FigureCtx, fig_no: u32, spec: DatasetSpec) -> Result<Report> {
+    let db = fx.dataset(spec)?;
+    let mut report = Report::new();
+    println!(
+        "\n== Fig {fig_no}: exec time vs min_sup on {} ({} txns) ==",
+        spec.name(),
+        db.len()
+    );
+    for algo in fx.standard_algos(spec) {
+        for &sup in &fx.sup_grid(spec) {
+            let ctx = fx.cluster();
+            let m = fx.bench.try_run(
+                format!("fig{fig_no}/{}/{}/sup={sup}", spec.name(), algo.name()),
+                || algo.run_on(&ctx, &db, MinSup::fraction(sup)),
+            )?;
+            report.add(m);
+        }
+    }
+    report.write_csv(&format!("fig{fig_no}_{}.csv", spec.name()))?;
+    Ok(report)
+}
+
+/// Fig 15: execution time vs executor cores (simulated makespan from
+/// measured task durations; DESIGN.md §2.3 documents the substitution).
+pub fn run_fig15(fx: &FigureCtx) -> Result<Report> {
+    let panels: Vec<(DatasetSpec, f64)> = vec![
+        (DatasetSpec::C20d10k, 0.02),
+        (DatasetSpec::Chess, 0.85),
+        (DatasetSpec::Mushroom, 0.2),
+        (DatasetSpec::T10i4d100k, 0.01),
+        (DatasetSpec::T40i10d100k, 0.01),
+    ];
+    let cores_axis = [2usize, 4, 6, 8, 10];
+    let mut report = Report::new();
+    println!("\n== Fig 15: exec time vs executor cores (simulated from measured tasks) ==");
+    for (spec, sup) in panels {
+        let db = fx.dataset(spec)?;
+        for algo in fx.standard_algos(spec).into_iter().take(5) {
+            // Live run, recording per-task wall times.
+            let ctx = fx.cluster();
+            ctx.metrics().reset();
+            let sw = Stopwatch::start();
+            algo.run_on(&ctx, &db, MinSup::fraction(sup))?;
+            let wall = sw.elapsed();
+            let tasks = ctx.metrics().tasks();
+            let serial = simcluster::derive_serial(&tasks, wall, ctx.cores());
+            for r in simcluster::sweep(&tasks, &cores_axis, serial) {
+                report.add(Measurement {
+                    name: format!(
+                        "fig15/{}/sup={sup}/{}/cores={}",
+                        spec.name(),
+                        algo.name(),
+                        r.cores
+                    ),
+                    secs: Summary::of(&[r.makespan.as_secs_f64()]),
+                });
+            }
+        }
+    }
+    report.write_csv("fig15.csv")?;
+    Ok(report)
+}
+
+/// Fig 16: execution time vs dataset size (T10I4D100K doubled up to
+/// 1600K transactions) at min_sup = 0.05.
+pub fn run_fig16(fx: &FigureCtx) -> Result<Report> {
+    let max_k: u8 = if fx.quick { 2 } else { 4 };
+    let mut report = Report::new();
+    println!("\n== Fig 16: exec time vs dataset size (T10I4, min_sup=0.05) ==");
+    for k in 0..=max_k {
+        let spec = DatasetSpec::T10i4Scaled(k);
+        let db = fx.dataset(spec)?;
+        for algo in fx.standard_algos(spec).into_iter().take(5) {
+            let ctx = fx.cluster();
+            let m = fx.bench.try_run(
+                format!("fig16/{}/{}/txns={}", spec.name(), algo.name(), db.len()),
+                || algo.run_on(&ctx, &db, MinSup::fraction(0.05)),
+            )?;
+            report.add(m);
+        }
+    }
+    report.write_csv("fig16.csv")?;
+    Ok(report)
+}
+
+/// A1 (§5.2.1): filtered-transaction shrinkage on T40I10D100K — the paper
+/// quotes reductions of 3.2/8.4/16.1/25.8 % at min_sup 0.01–0.04.
+pub fn run_a1(fx: &FigureCtx) -> Result<Report> {
+    let spec = DatasetSpec::T40i10d100k;
+    let db = fx.dataset(spec)?;
+    let mut report = Report::new();
+    println!("\n== A1: transaction-filtering shrinkage on T40I10D100K ==");
+    println!("paper quotes: sup 0.01→3.2%, 0.02→8.4%, 0.03→16.1%, 0.04→25.8%");
+    for sup in [0.01, 0.02, 0.03, 0.04] {
+        let ctx = fx.cluster();
+        let r = EclatV2::default().run_on(&ctx, &db, MinSup::fraction(sup))?;
+        let red = r.filtered_reduction.unwrap_or(0.0);
+        println!("  sup={sup}: filtered size reduced by {:.1}%", red * 100.0);
+        report.add(Measurement {
+            name: format!("a1/T40I10D100K/sup={sup}/reduction_pct={:.2}", red * 100.0),
+            secs: Summary::of(&[red]),
+        });
+    }
+    report.write_csv("a1_filtering.csv")?;
+    Ok(report)
+}
+
+/// A2 (§4.5): equivalence-class workload balance across the three
+/// partitioners, measured as members-per-partition imbalance (max/mean).
+pub fn run_a2(fx: &FigureCtx) -> Result<Report> {
+    let spec = DatasetSpec::T10i4d100k;
+    let db = fx.dataset(spec)?;
+    let sup = if fx.quick { 0.02 } else { 0.01 };
+    let mut report = Report::new();
+    println!("\n== A2: partitioner workload balance on {} (sup={sup}) ==", spec.name());
+    let algos: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(EclatV3::default()), // default (n-1) partitioner
+        Box::new(EclatV4::default()), // hash %p
+        Box::new(EclatV5::default()), // reverse hash
+    ];
+    for algo in algos {
+        let ctx = fx.cluster();
+        let r = algo.run_on(&ctx, &db, MinSup::fraction(sup))?;
+        let imb = imbalance(&r.partition_loads);
+        let nonzero = r.partition_loads.iter().filter(|&&l| l > 0).count();
+        println!(
+            "  {:<8} partitions={:<5} nonzero={:<5} imbalance(max/mean)={:.3}",
+            algo.name(),
+            r.partition_loads.len(),
+            nonzero,
+            imb
+        );
+        report.add(Measurement {
+            name: format!(
+                "a2/{}/partitions={}/imbalance={imb:.4}",
+                algo.name(),
+                r.partition_loads.len()
+            ),
+            secs: Summary::of(&[imb]),
+        });
+    }
+    report.write_csv("a2_partitioners.csv")?;
+    Ok(report)
+}
+
+/// A3: triangular-matrix on/off ablation.
+pub fn run_a3(fx: &FigureCtx) -> Result<Report> {
+    let mut report = Report::new();
+    println!("\n== A3: triMatrixMode on/off ==");
+    for (spec, sup) in [(DatasetSpec::C20d10k, 0.1), (DatasetSpec::T10i4d100k, 0.01)] {
+        let db = fx.dataset(spec)?;
+        for tri in [true, false] {
+            let opts = EclatOptions { tri_matrix: tri, ..Default::default() };
+            let algo = EclatV4::with_options(opts);
+            let ctx = fx.cluster();
+            let m = fx.bench.try_run(
+                format!("a3/{}/sup={sup}/tri={tri}", spec.name()),
+                || algo.run_on(&ctx, &db, MinSup::fraction(sup)),
+            )?;
+            report.add(m);
+        }
+    }
+    report.write_csv("a3_trimatrix.csv")?;
+    Ok(report)
+}
+
+/// A4: native vs XLA (AOT PJRT artifact) backends for the Phase-2
+/// co-occurrence and batched tidset intersection. Skips (with a notice)
+/// when `make artifacts` has not run.
+pub fn run_a4(fx: &FigureCtx) -> Result<Report> {
+    use crate::algorithms::common::NativeCooc;
+    use crate::algorithms::TriMatrixProvider;
+    use crate::fim::TidBitmap;
+    use crate::runtime::{XlaCooc, XlaIntersect, XlaService};
+
+    let mut report = Report::new();
+    println!("\n== A4: native vs XLA backend ==");
+    if !crate::runtime::artifacts_available() {
+        println!("  artifacts/ missing — run `make artifacts`; skipping A4");
+        return Ok(report);
+    }
+    let svc = Arc::new(XlaService::start(crate::runtime::default_artifact_dir())?);
+
+    // Co-occurrence over a mid-sized block of chess-like transactions.
+    let db = fx.dataset(DatasetSpec::Chess)?;
+    let max_item = db.stats().max_item;
+    let txns = db.transactions().to_vec();
+    let native = NativeCooc;
+    let xla = XlaCooc::new(Arc::clone(&svc));
+    let a = fx.bench.try_run("a4/cooc/native", || native.compute(&txns, max_item))?;
+    report.add(a);
+    let b = fx.bench.try_run("a4/cooc/xla", || xla.compute(&txns, max_item))?;
+    report.add(b);
+    // Equality spot check.
+    assert_eq!(
+        native.compute(&txns, max_item)?,
+        xla.compute(&txns, max_item)?,
+        "backends disagree"
+    );
+
+    // Batched intersection.
+    let universe = 2048usize;
+    let mut rng = crate::util::prng::Rng::new(99);
+    let bitmaps: Vec<(TidBitmap, TidBitmap)> = (0..512)
+        .map(|_| {
+            let mk = |rng: &mut crate::util::prng::Rng| {
+                TidBitmap::from_tids(
+                    universe,
+                    (0..universe as u32).filter(|_| rng.chance(0.2)),
+                )
+            };
+            (mk(&mut rng), mk(&mut rng))
+        })
+        .collect();
+    let pairs: Vec<(&TidBitmap, &TidBitmap)> = bitmaps.iter().map(|(a, b)| (a, b)).collect();
+    let xi = XlaIntersect::new(svc);
+    let m = fx.bench.run("a4/intersect/native", || {
+        pairs.iter().map(|(a, b)| a.and_count(b)).collect::<Vec<_>>()
+    });
+    report.add(m);
+    let m = fx.bench.try_run("a4/intersect/xla", || xi.batch_supports(&pairs))?;
+    report.add(m);
+
+    report.write_csv("a4_backend.csv")?;
+    Ok(report)
+}
+
+/// The seven min-sup figures in paper order.
+pub const MINSUP_FIGS: [(u32, DatasetSpec); 7] = [
+    (8, DatasetSpec::C20d10k),
+    (9, DatasetSpec::Chess),
+    (10, DatasetSpec::Mushroom),
+    (11, DatasetSpec::Bms1),
+    (12, DatasetSpec::Bms2),
+    (13, DatasetSpec::T10i4d100k),
+    (14, DatasetSpec::T40i10d100k),
+];
+
+/// Run one experiment by id (`table2`, `8`..`16`, `a1`..`a4`, `all`).
+pub fn run_by_id(fx: &FigureCtx, id: &str) -> Result<()> {
+    match id {
+        "table2" => {
+            run_table2(fx)?;
+        }
+        "15" => {
+            run_fig15(fx)?;
+        }
+        "16" => {
+            run_fig16(fx)?;
+        }
+        "a1" => {
+            run_a1(fx)?;
+        }
+        "a2" => {
+            run_a2(fx)?;
+        }
+        "a3" => {
+            run_a3(fx)?;
+        }
+        "a4" => {
+            run_a4(fx)?;
+        }
+        "all" => {
+            run_table2(fx)?;
+            for (no, spec) in MINSUP_FIGS {
+                run_fig_minsup(fx, no, spec)?;
+            }
+            run_fig15(fx)?;
+            run_fig16(fx)?;
+            run_a1(fx)?;
+            run_a2(fx)?;
+            run_a3(fx)?;
+            run_a4(fx)?;
+        }
+        other => {
+            let fig: u32 = other
+                .parse()
+                .map_err(|_| crate::error::Error::Usage(format!("unknown figure id {other:?}")))?;
+            let spec = MINSUP_FIGS
+                .iter()
+                .find(|(no, _)| *no == fig)
+                .map(|(_, s)| *s)
+                .ok_or_else(|| crate::error::Error::Usage(format!("no figure {fig}")))?;
+            run_fig_minsup(fx, fig, spec)?;
+        }
+    }
+    Ok(())
+}
+
+/// Convenience for tests: a tiny quick-mode context.
+pub fn quick_ctx() -> FigureCtx {
+    FigureCtx {
+        bench: Bench::quick(),
+        data_dir: std::env::temp_dir()
+            .join("rdd_eclat_fig_cache")
+            .to_string_lossy()
+            .into_owned(),
+        cores: 2,
+        quick: true,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sup_grids_are_descending() {
+        let mut fx = quick_ctx();
+        fx.quick = false;
+        for spec in TABLE2 {
+            let grid = fx.sup_grid(spec);
+            for w in grid.windows(2) {
+                assert!(w[0] > w[1], "{spec:?} grid not descending");
+            }
+        }
+    }
+
+    #[test]
+    fn quick_dataset_truncates() {
+        let fx = quick_ctx();
+        let db = fx.dataset(DatasetSpec::Chess).unwrap();
+        assert!(db.len() <= 800);
+    }
+
+    #[test]
+    fn a2_runs_and_reports_three_partitioners() {
+        let fx = quick_ctx();
+        let r = run_a2(&fx).unwrap();
+        assert_eq!(r.rows().len(), 3);
+    }
+}

@@ -1,0 +1,200 @@
+//! Apriori primitives — candidate generation, pruning and support
+//! counting (Agrawal–Srikant). These power both the sequential oracle and
+//! the YAFIM-style RDD-Apriori baseline the paper compares against.
+
+use std::collections::HashMap;
+
+use super::itemset::{is_subset, prefix_join, Frequent, Item, ItemSet};
+use super::transaction::Database;
+use super::trie::CandidateTrie;
+
+/// Generate candidate (k+1)-itemsets from the frequent k-itemsets
+/// (sorted, deduped), applying the Apriori prune: every k-subset of a
+/// candidate must itself be frequent.
+pub fn candidate_gen(frequents: &[ItemSet]) -> Vec<ItemSet> {
+    if frequents.is_empty() {
+        return Vec::new();
+    }
+    // Membership structure for pruning.
+    let mut known = CandidateTrie::new();
+    for f in frequents {
+        known.insert(f);
+    }
+    let mut candidates = Vec::new();
+    // Frequents sharing a (k-1)-prefix are adjacent once sorted.
+    let mut sorted: Vec<&ItemSet> = frequents.iter().collect();
+    sorted.sort();
+    for (idx, a) in sorted.iter().enumerate() {
+        for b in &sorted[idx + 1..] {
+            match prefix_join(a, b) {
+                Some(cand) => {
+                    if all_subsets_frequent(&cand, &known) {
+                        candidates.push(cand);
+                    }
+                }
+                // Sorted order: once prefixes diverge, stop the inner scan.
+                None => break,
+            }
+        }
+    }
+    candidates
+}
+
+/// Check the Apriori prune condition: all k-subsets of the (k+1)-candidate
+/// are frequent. (The two subsets used in the join are frequent by
+/// construction; checking the rest suffices, but checking all is simpler
+/// and costs one trie probe each.)
+fn all_subsets_frequent(cand: &[Item], known: &CandidateTrie) -> bool {
+    let mut subset = Vec::with_capacity(cand.len() - 1);
+    for skip in 0..cand.len() {
+        subset.clear();
+        subset.extend(cand.iter().enumerate().filter(|(i, _)| *i != skip).map(|(_, &x)| x));
+        if !known.contains(&subset) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Count candidate supports over a slice of transactions using the
+/// candidate trie (hash-tree role). Returns per-candidate counts aligned
+/// with insertion order.
+pub fn count_candidates(candidates: &[ItemSet], transactions: &[Vec<Item>]) -> Vec<u32> {
+    let mut trie = CandidateTrie::new();
+    let mut order = Vec::with_capacity(candidates.len());
+    for c in candidates {
+        order.push(trie.insert(c));
+    }
+    let mut counts = vec![0u32; trie.len()];
+    for t in transactions {
+        trie.count_subsets(t, &mut counts);
+    }
+    // Map back to the caller's candidate order (insert deduplicates).
+    order.into_iter().map(|idx| counts[idx]).collect()
+}
+
+/// Sequential Apriori over a horizontal database — the reference
+/// implementation (and the per-partition worker of RDD-Apriori).
+pub fn apriori(db: &Database, min_sup_count: u32) -> Vec<Frequent> {
+    let mut out: Vec<Frequent> = Vec::new();
+    // L1.
+    let mut item_counts: HashMap<Item, u32> = HashMap::new();
+    for t in db.transactions() {
+        for &i in t {
+            *item_counts.entry(i).or_default() += 1;
+        }
+    }
+    let mut level: Vec<ItemSet> = item_counts
+        .iter()
+        .filter(|(_, &c)| c >= min_sup_count)
+        .map(|(&i, _)| vec![i])
+        .collect();
+    level.sort();
+    for items in &level {
+        out.push(Frequent::new(items.clone(), item_counts[&items[0]]));
+    }
+    // Lk for k >= 2.
+    while !level.is_empty() {
+        let candidates = candidate_gen(&level);
+        if candidates.is_empty() {
+            break;
+        }
+        let counts = count_candidates(&candidates, db.transactions());
+        let mut next: Vec<ItemSet> = Vec::new();
+        for (cand, count) in candidates.into_iter().zip(counts) {
+            if count >= min_sup_count {
+                out.push(Frequent::new(cand.clone(), count));
+                next.push(cand);
+            }
+        }
+        next.sort();
+        level = next;
+    }
+    out
+}
+
+/// Brute-force support of one itemset (test oracle).
+pub fn support_of(db: &Database, itemset: &[Item]) -> u32 {
+    db.transactions().iter().filter(|t| is_subset(itemset, t)).count() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::itemset::sort_frequents;
+
+    fn demo_db() -> Database {
+        Database::from_rows(vec![
+            vec![1, 3, 4],
+            vec![2, 3, 5],
+            vec![1, 2, 3, 5],
+            vec![2, 5],
+            vec![1, 3, 5],
+            vec![2, 3, 5],
+        ])
+    }
+
+    #[test]
+    fn candidate_gen_joins_and_prunes() {
+        // L2 = {12,13,14,23,24,34} -> joins give 123,124,134,234; all pass
+        // the prune.
+        let l2: Vec<ItemSet> = vec![
+            vec![1, 2], vec![1, 3], vec![1, 4], vec![2, 3], vec![2, 4], vec![3, 4],
+        ];
+        let mut c3 = candidate_gen(&l2);
+        c3.sort();
+        assert_eq!(c3, vec![vec![1, 2, 3], vec![1, 2, 4], vec![1, 3, 4], vec![2, 3, 4]]);
+
+        // Remove {3,4}: 134 and 234 must be pruned.
+        let l2b: Vec<ItemSet> = vec![vec![1, 2], vec![1, 3], vec![1, 4], vec![2, 3], vec![2, 4]];
+        let mut c3b = candidate_gen(&l2b);
+        c3b.sort();
+        assert_eq!(c3b, vec![vec![1, 2, 3], vec![1, 2, 4]]);
+    }
+
+    #[test]
+    fn counting_matches_bruteforce() {
+        let db = demo_db();
+        let candidates: Vec<ItemSet> = vec![vec![2, 5], vec![3, 5], vec![1, 3, 5], vec![2, 3, 5]];
+        let counts = count_candidates(&candidates, db.transactions());
+        for (c, n) in candidates.iter().zip(&counts) {
+            assert_eq!(*n, support_of(&db, c), "candidate {c:?}");
+        }
+    }
+
+    #[test]
+    fn apriori_mines_known_result() {
+        let db = demo_db();
+        let mut got = apriori(&db, 3);
+        sort_frequents(&mut got);
+        // Hand-checked: σ(1)=3, σ(2)=4, σ(3)=5, σ(5)=5, σ(13)=3, σ(25)=4,
+        // σ(35)=4, σ(23)=3, σ(235)=3.
+        let expect: Vec<(Vec<Item>, u32)> = vec![
+            (vec![1], 3),
+            (vec![2], 4),
+            (vec![3], 5),
+            (vec![5], 5),
+            (vec![1, 3], 3),
+            (vec![2, 3], 3),
+            (vec![2, 5], 4),
+            (vec![3, 5], 4),
+            (vec![2, 3, 5], 3),
+        ];
+        let got: Vec<(Vec<Item>, u32)> = got.into_iter().map(|f| (f.items, f.support)).collect();
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn apriori_empty_db_and_high_minsup() {
+        let db = Database::from_rows(vec![]);
+        assert!(apriori(&db, 1).is_empty());
+        let db = demo_db();
+        assert!(apriori(&db, 100).is_empty());
+    }
+
+    #[test]
+    fn candidate_gen_empty() {
+        assert!(candidate_gen(&[]).is_empty());
+        assert!(candidate_gen(&[vec![1]]).is_empty());
+    }
+}

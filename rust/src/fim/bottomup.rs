@@ -1,0 +1,274 @@
+//! The bottom-up recursive search of Eclat (the paper's Algorithm 1,
+//! after Zaki).
+//!
+//! Generic over the tidset representation: the paper's sorted-vector
+//! tidsets ([`Tidset`]) or packed bitmaps ([`TidBitmap`]) — the
+//! performance ablation of DESIGN.md §9. A diffset (dEclat) variant is
+//! provided as the paper's "future directions" extension.
+
+use super::bitmap::TidBitmap;
+use super::itemset::{Frequent, Item};
+use super::tidset::{difference, intersect, Tidset};
+
+/// A tidset representation usable by the bottom-up search.
+pub trait TidRepr: Clone + Send + Sync + 'static {
+    /// Support = number of transactions represented.
+    fn support(&self) -> u32;
+    /// Set intersection.
+    fn intersect_with(&self, other: &Self) -> Self;
+    /// Fused intersection + support count (§Perf iteration 3: one pass
+    /// instead of intersect-then-recount).
+    fn intersect_counted(&self, other: &Self) -> (Self, u32) {
+        let out = self.intersect_with(other);
+        let n = out.support();
+        (out, n)
+    }
+}
+
+impl TidRepr for Tidset {
+    fn support(&self) -> u32 {
+        self.len() as u32
+    }
+    fn intersect_with(&self, other: &Self) -> Self {
+        intersect(self, other)
+    }
+    fn intersect_counted(&self, other: &Self) -> (Self, u32) {
+        let out = intersect(self, other);
+        let n = out.len() as u32;
+        (out, n)
+    }
+}
+
+impl TidRepr for TidBitmap {
+    fn support(&self) -> u32 {
+        self.count()
+    }
+    fn intersect_with(&self, other: &Self) -> Self {
+        self.and(other)
+    }
+    fn intersect_counted(&self, other: &Self) -> (Self, u32) {
+        self.and_counted(other)
+    }
+}
+
+fn emit(prefix: &[Item], item: Item, support: u32, out: &mut Vec<Frequent>) {
+    let mut items = Vec::with_capacity(prefix.len() + 1);
+    items.extend_from_slice(prefix);
+    items.push(item);
+    items.sort_unstable();
+    out.push(Frequent::new(items, support));
+}
+
+/// Bottom-Up(EC) — Algorithm 1. `prefix` is the class prefix itemset,
+/// `members` the class atoms: `(last item, tidset(prefix ∪ item))`, each
+/// already frequent. Emits every member itemset and recurses into the
+/// next-level classes. Members are processed in the order given (the
+/// ascending-support "total order" established in Phase-1).
+pub fn bottom_up<R: TidRepr>(
+    prefix: &[Item],
+    members: &[(Item, R)],
+    min_sup: u32,
+    out: &mut Vec<Frequent>,
+) {
+    // Count each atom once up front; the recursion below carries supports
+    // alongside tidsets so nothing is ever re-counted (§Perf iteration 3).
+    let counted: Vec<(Item, R, u32)> =
+        members.iter().map(|(i, t)| (*i, t.clone(), t.support())).collect();
+    bottom_up_counted(prefix, &counted, min_sup, out);
+}
+
+fn bottom_up_counted<R: TidRepr>(
+    prefix: &[Item],
+    members: &[(Item, R, u32)],
+    min_sup: u32,
+    out: &mut Vec<Frequent>,
+) {
+    for (item, _, support) in members {
+        emit(prefix, *item, *support, out);
+    }
+    if members.len() < 2 {
+        return;
+    }
+    let mut child_prefix = Vec::with_capacity(prefix.len() + 1);
+    for i in 0..members.len() - 1 {
+        let (item_i, tids_i, _) = &members[i];
+        let mut next: Vec<(Item, R, u32)> = Vec::new();
+        for (item_j, tids_j, _) in &members[i + 1..] {
+            let (tids_ij, count) = tids_i.intersect_counted(tids_j);
+            if count >= min_sup {
+                next.push((*item_j, tids_ij, count));
+            }
+        }
+        if !next.is_empty() {
+            child_prefix.clear();
+            child_prefix.extend_from_slice(prefix);
+            child_prefix.push(*item_i);
+            bottom_up_counted(&child_prefix, &next, min_sup, out);
+        }
+    }
+}
+
+/// dEclat: the diffset-based bottom-up search (Zaki's follow-up — the
+/// paper's related work cites it via Peclat's mixsets; here it is the
+/// ablation extension). Entry takes *tidsets*; the first join converts to
+/// diffsets (`d(ab) = t(a) − t(b)`, `σ(ab) = σ(a) − |d(ab)|`), deeper
+/// levels stay in diffset space (`d(Pab) = d(Pb) − d(Pa)`).
+pub fn bottom_up_diffset(
+    prefix: &[Item],
+    members: &[(Item, Tidset)],
+    min_sup: u32,
+    out: &mut Vec<Frequent>,
+) {
+    for (item, tids) in members {
+        emit(prefix, *item, tids.len() as u32, out);
+    }
+    if members.len() < 2 {
+        return;
+    }
+    for i in 0..members.len() - 1 {
+        let (item_i, tids_i) = &members[i];
+        let sup_i = tids_i.len() as u32;
+        let mut next: Vec<(Item, Tidset, u32)> = Vec::new();
+        for (item_j, tids_j) in &members[i + 1..] {
+            let diff = difference(tids_i, tids_j);
+            let support = sup_i - diff.len() as u32;
+            if support >= min_sup {
+                next.push((*item_j, diff, support));
+            }
+        }
+        if !next.is_empty() {
+            let mut child_prefix = prefix.to_vec();
+            child_prefix.push(*item_i);
+            diffset_recurse(&child_prefix, &next, min_sup, out);
+        }
+    }
+}
+
+fn diffset_recurse(
+    prefix: &[Item],
+    members: &[(Item, Tidset, u32)],
+    min_sup: u32,
+    out: &mut Vec<Frequent>,
+) {
+    for (item, _, support) in members {
+        emit(prefix, *item, *support, out);
+    }
+    if members.len() < 2 {
+        return;
+    }
+    for i in 0..members.len() - 1 {
+        let (item_i, diff_i, sup_i) = &members[i];
+        let mut next: Vec<(Item, Tidset, u32)> = Vec::new();
+        for (item_j, diff_j, _) in &members[i + 1..] {
+            // d(Pab) = d(Pb) − d(Pa); σ(Pab) = σ(Pa) − |d(Pab)|.
+            let diff = difference(diff_j, diff_i);
+            let support = sup_i - diff.len() as u32;
+            if support >= min_sup {
+                next.push((*item_j, diff, support));
+            }
+        }
+        if !next.is_empty() {
+            let mut child_prefix = prefix.to_vec();
+            child_prefix.push(*item_i);
+            diffset_recurse(&child_prefix, &next, min_sup, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::itemset::sort_frequents;
+
+    /// Zaki's running example: items 1..5 over 6 transactions.
+    fn example_members() -> Vec<(Item, Tidset)> {
+        // t(1)={0,2,3}, t(2)={1,2,3,4,5}, t(3)={0,1,2,3,4,5}
+        vec![
+            (1, vec![0, 2, 3]),
+            (2, vec![1, 2, 3, 4, 5]),
+            (3, vec![0, 1, 2, 3, 4, 5]),
+        ]
+    }
+
+    #[test]
+    fn bottom_up_enumerates_class() {
+        let mut out = Vec::new();
+        bottom_up::<Tidset>(&[], &example_members(), 2, &mut out);
+        sort_frequents(&mut out);
+        let got: Vec<(Vec<Item>, u32)> =
+            out.into_iter().map(|f| (f.items, f.support)).collect();
+        assert_eq!(
+            got,
+            vec![
+                (vec![1], 3),
+                (vec![2], 5),
+                (vec![3], 6),
+                (vec![1, 2], 2),
+                (vec![1, 3], 3),
+                (vec![2, 3], 5),
+                (vec![1, 2, 3], 2),
+            ]
+        );
+    }
+
+    #[test]
+    fn min_sup_prunes_recursion() {
+        let mut out = Vec::new();
+        bottom_up::<Tidset>(&[], &example_members(), 3, &mut out);
+        assert!(out.iter().all(|f| f.support >= 3));
+        assert!(!out.iter().any(|f| f.items == vec![1, 2]));
+        assert!(!out.iter().any(|f| f.items == vec![1, 2, 3]));
+        assert!(out.iter().any(|f| f.items == vec![1, 3] && f.support == 3));
+    }
+
+    #[test]
+    fn bitmap_repr_agrees_with_tidset_repr() {
+        let members = example_members();
+        let bitmap_members: Vec<(Item, TidBitmap)> = members
+            .iter()
+            .map(|(i, t)| (*i, TidBitmap::from_tids(6, t.iter().copied())))
+            .collect();
+        for min_sup in 1..=6 {
+            let mut a = Vec::new();
+            bottom_up::<Tidset>(&[], &members, min_sup, &mut a);
+            let mut b = Vec::new();
+            bottom_up::<TidBitmap>(&[], &bitmap_members, min_sup, &mut b);
+            sort_frequents(&mut a);
+            sort_frequents(&mut b);
+            assert_eq!(a, b, "min_sup={min_sup}");
+        }
+    }
+
+    #[test]
+    fn diffset_variant_agrees() {
+        let members = example_members();
+        for min_sup in 1..=6 {
+            let mut a = Vec::new();
+            bottom_up::<Tidset>(&[], &members, min_sup, &mut a);
+            let mut b = Vec::new();
+            bottom_up_diffset(&[], &members, min_sup, &mut b);
+            sort_frequents(&mut a);
+            sort_frequents(&mut b);
+            assert_eq!(a, b, "min_sup={min_sup}");
+        }
+    }
+
+    #[test]
+    fn emit_sorts_itemsets_with_unsorted_mining_order() {
+        // Mining order by ascending support can put a larger item id first.
+        let members: Vec<(Item, Tidset)> = vec![(9, vec![0, 1]), (2, vec![0, 1, 2])];
+        let mut out = Vec::new();
+        bottom_up::<Tidset>(&[], &members, 2, &mut out);
+        assert!(out.iter().any(|f| f.items == vec![2, 9] && f.support == 2));
+    }
+
+    #[test]
+    fn empty_and_singleton_members() {
+        let mut out = Vec::new();
+        bottom_up::<Tidset>(&[], &[], 1, &mut out);
+        assert!(out.is_empty());
+        bottom_up::<Tidset>(&[5], &[(7, vec![0])], 1, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].items, vec![5, 7]);
+    }
+}

@@ -1,0 +1,204 @@
+//! Sequential FP-Growth (Han et al.) — the third classical miner the
+//! paper's related work surveys. Used here as an independent cross-oracle
+//! for correctness testing and as an extra baseline in the benches.
+
+use std::collections::HashMap;
+
+use super::itemset::{Frequent, Item};
+use super::transaction::Database;
+
+#[derive(Debug)]
+struct Node {
+    item: Item,
+    count: u32,
+    parent: usize,
+    children: HashMap<Item, usize>,
+}
+
+/// An FP-tree with a header table of per-item node lists.
+struct FpTree {
+    nodes: Vec<Node>,
+    header: HashMap<Item, Vec<usize>>,
+}
+
+impl FpTree {
+    fn new() -> FpTree {
+        FpTree {
+            nodes: vec![Node { item: u32::MAX, count: 0, parent: usize::MAX, children: HashMap::new() }],
+            header: HashMap::new(),
+        }
+    }
+
+    fn insert(&mut self, items: &[Item], count: u32) {
+        let mut cur = 0usize;
+        for &item in items {
+            let next = match self.nodes[cur].children.get(&item) {
+                Some(&n) => {
+                    self.nodes[n].count += count;
+                    n
+                }
+                None => {
+                    let n = self.nodes.len();
+                    self.nodes.push(Node { item, count, parent: cur, children: HashMap::new() });
+                    self.nodes[cur].children.insert(item, n);
+                    self.header.entry(item).or_default().push(n);
+                    n
+                }
+            };
+            cur = next;
+        }
+    }
+
+    /// Conditional pattern base of `item`: (prefix path, count) pairs.
+    fn pattern_base(&self, item: Item) -> Vec<(Vec<Item>, u32)> {
+        let mut out = Vec::new();
+        if let Some(nodes) = self.header.get(&item) {
+            for &n in nodes {
+                let count = self.nodes[n].count;
+                let mut path = Vec::new();
+                let mut cur = self.nodes[n].parent;
+                while cur != 0 && cur != usize::MAX {
+                    path.push(self.nodes[cur].item);
+                    cur = self.nodes[cur].parent;
+                }
+                path.reverse();
+                if !path.is_empty() {
+                    out.push((path, count));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Mine all frequent itemsets with FP-Growth.
+pub fn fp_growth(db: &Database, min_sup_count: u32) -> Vec<Frequent> {
+    // Global frequent items, ordered by descending support (FP order).
+    let mut counts: HashMap<Item, u32> = HashMap::new();
+    for t in db.transactions() {
+        for &i in t {
+            *counts.entry(i).or_default() += 1;
+        }
+    }
+    let weighted: Vec<(Vec<Item>, u32)> = db
+        .transactions()
+        .iter()
+        .map(|t| (t.clone(), 1))
+        .collect();
+    let mut out = Vec::new();
+    mine(&weighted, &counts, min_sup_count, &[], &mut out);
+    out
+}
+
+/// Recursive FP-Growth over a weighted (conditional) database.
+fn mine(
+    weighted: &[(Vec<Item>, u32)],
+    counts: &HashMap<Item, u32>,
+    min_sup: u32,
+    suffix: &[Item],
+    out: &mut Vec<Frequent>,
+) {
+    // Frequent items of this conditional DB, descending count (ties by id).
+    let mut freq: Vec<(Item, u32)> = counts
+        .iter()
+        .filter(|(_, &c)| c >= min_sup)
+        .map(|(&i, &c)| (i, c))
+        .collect();
+    freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    if freq.is_empty() {
+        return;
+    }
+    let order: HashMap<Item, usize> = freq.iter().enumerate().map(|(r, (i, _))| (*i, r)).collect();
+
+    // Build the tree with items in FP order.
+    let mut tree = FpTree::new();
+    for (t, w) in weighted {
+        let mut proj: Vec<Item> = t.iter().copied().filter(|i| order.contains_key(i)).collect();
+        proj.sort_by_key(|i| order[i]);
+        if !proj.is_empty() {
+            tree.insert(&proj, *w);
+        }
+    }
+
+    // For each frequent item (bottom of the order first is conventional;
+    // any order is correct), emit suffix∪{item} and recurse on its
+    // conditional pattern base.
+    for (item, count) in freq.iter().rev() {
+        let mut items = suffix.to_vec();
+        items.push(*item);
+        items.sort_unstable();
+        out.push(Frequent::new(items.clone(), *count));
+
+        let base = tree.pattern_base(*item);
+        if base.is_empty() {
+            continue;
+        }
+        let mut cond_counts: HashMap<Item, u32> = HashMap::new();
+        for (path, w) in &base {
+            for &i in path {
+                *cond_counts.entry(i).or_default() += w;
+            }
+        }
+        let mut new_suffix = suffix.to_vec();
+        new_suffix.push(*item);
+        mine(&base, &cond_counts, min_sup, &new_suffix, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::apriori::apriori;
+    use crate::fim::itemset::sort_frequents;
+    use crate::util::prng::Rng;
+
+    fn demo_db() -> Database {
+        Database::from_rows(vec![
+            vec![1, 3, 4],
+            vec![2, 3, 5],
+            vec![1, 2, 3, 5],
+            vec![2, 5],
+            vec![1, 3, 5],
+            vec![2, 3, 5],
+        ])
+    }
+
+    #[test]
+    fn agrees_with_apriori_on_demo() {
+        for min_sup in 1..=6 {
+            let mut a = apriori(&demo_db(), min_sup);
+            let mut f = fp_growth(&demo_db(), min_sup);
+            sort_frequents(&mut a);
+            sort_frequents(&mut f);
+            assert_eq!(a, f, "min_sup={min_sup}");
+        }
+    }
+
+    #[test]
+    fn agrees_with_apriori_on_random_dbs() {
+        let mut rng = Rng::new(31);
+        for case in 0..20 {
+            let n_items = rng.range(3, 12) as u32;
+            let n_txns = rng.range(5, 40);
+            let rows: Vec<Vec<Item>> = (0..n_txns)
+                .map(|_| {
+                    (0..n_items).filter(|_| rng.chance(0.4)).collect()
+                })
+                .filter(|t: &Vec<Item>| !t.is_empty())
+                .collect();
+            let db = Database::from_rows(rows);
+            let min_sup = rng.range(1, 5) as u32;
+            let mut a = apriori(&db, min_sup);
+            let mut f = fp_growth(&db, min_sup);
+            sort_frequents(&mut a);
+            sort_frequents(&mut f);
+            assert_eq!(a, f, "case {case} min_sup={min_sup}");
+        }
+    }
+
+    #[test]
+    fn empty_db() {
+        let db = Database::from_rows(vec![]);
+        assert!(fp_growth(&db, 1).is_empty());
+    }
+}

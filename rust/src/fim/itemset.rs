@@ -1,0 +1,170 @@
+//! Core item/itemset types shared across the FIM stack.
+
+/// An item identifier. Datasets map their vocabulary to dense `u32`s.
+pub type Item = u32;
+
+/// A transaction identifier.
+pub type Tid = u32;
+
+/// An itemset: items sorted ascending, no duplicates.
+pub type ItemSet = Vec<Item>;
+
+/// A mined frequent itemset with its support count.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Frequent {
+    /// The itemset (sorted ascending).
+    pub items: ItemSet,
+    /// Number of transactions containing it.
+    pub support: u32,
+}
+
+impl Frequent {
+    /// Construct, asserting sortedness in debug builds.
+    pub fn new(items: ItemSet, support: u32) -> Self {
+        debug_assert!(items.windows(2).all(|w| w[0] < w[1]), "itemset not sorted/unique: {items:?}");
+        Frequent { items, support }
+    }
+}
+
+impl std::fmt::Display for Frequent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for (i, item) in self.items.iter().enumerate() {
+            if i > 0 {
+                write!(f, " ")?;
+            }
+            write!(f, "{item}")?;
+        }
+        write!(f, " #SUP: {}", self.support)
+    }
+}
+
+/// Minimum support threshold — either an absolute transaction count or a
+/// fraction of the database size (the paper quotes fractions like 0.01).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MinSup {
+    /// Absolute count of transactions.
+    Count(u32),
+    /// Fraction of the database size, in `(0, 1]`.
+    Fraction(f64),
+}
+
+impl MinSup {
+    /// Absolute-count threshold.
+    pub fn count(c: u32) -> MinSup {
+        MinSup::Count(c)
+    }
+
+    /// Relative threshold.
+    pub fn fraction(f: f64) -> MinSup {
+        assert!(f > 0.0 && f <= 1.0, "min_sup fraction out of range: {f}");
+        MinSup::Fraction(f)
+    }
+
+    /// Resolve to an absolute count for a database of `n` transactions.
+    /// Fractions round up (an itemset must appear in at least ⌈f·n⌉
+    /// transactions), with a floor of 1.
+    pub fn to_count(self, n: usize) -> u32 {
+        match self {
+            MinSup::Count(c) => c.max(1),
+            MinSup::Fraction(f) => ((f * n as f64).ceil() as u32).max(1),
+        }
+    }
+}
+
+/// Join two sorted itemsets sharing all but their last item (the classic
+/// Apriori/Eclat k-itemset join): `{p, a} ⋈ {p, b} = {p, a, b}` for a<b.
+/// Returns `None` when prefixes differ.
+pub fn prefix_join(a: &[Item], b: &[Item]) -> Option<ItemSet> {
+    if a.len() != b.len() || a.is_empty() {
+        return None;
+    }
+    let k = a.len() - 1;
+    if a[..k] != b[..k] || a[k] >= b[k] {
+        return None;
+    }
+    let mut out = Vec::with_capacity(a.len() + 1);
+    out.extend_from_slice(a);
+    out.push(b[k]);
+    Some(out)
+}
+
+/// True when `needle` ⊆ `haystack`; both sorted ascending.
+pub fn is_subset(needle: &[Item], haystack: &[Item]) -> bool {
+    let mut it = haystack.iter();
+    'outer: for &n in needle {
+        for &h in it.by_ref() {
+            if h == n {
+                continue 'outer;
+            }
+            if h > n {
+                return false;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Canonical sort for mined results: by length, then lexicographically.
+pub fn sort_frequents(items: &mut [Frequent]) {
+    items.sort_by(|a, b| a.items.len().cmp(&b.items.len()).then_with(|| a.items.cmp(&b.items)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_sup_resolution() {
+        assert_eq!(MinSup::count(5).to_count(100), 5);
+        assert_eq!(MinSup::fraction(0.05).to_count(100), 5);
+        assert_eq!(MinSup::fraction(0.001).to_count(100), 1);
+        // Ceil: 0.025 * 100 = 2.5 -> 3
+        assert_eq!(MinSup::fraction(0.025).to_count(100), 3);
+        assert_eq!(MinSup::count(0).to_count(10), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn min_sup_fraction_validated() {
+        MinSup::fraction(1.5);
+    }
+
+    #[test]
+    fn prefix_join_rules() {
+        assert_eq!(prefix_join(&[1, 2], &[1, 3]), Some(vec![1, 2, 3]));
+        assert_eq!(prefix_join(&[1, 3], &[1, 2]), None, "order matters");
+        assert_eq!(prefix_join(&[1, 2], &[2, 3]), None, "prefix differs");
+        assert_eq!(prefix_join(&[1], &[2]), Some(vec![1, 2]));
+        assert_eq!(prefix_join(&[], &[]), None);
+        assert_eq!(prefix_join(&[1, 2], &[1, 2]), None, "equal last items");
+    }
+
+    #[test]
+    fn subset_checks() {
+        assert!(is_subset(&[2, 5], &[1, 2, 3, 5, 8]));
+        assert!(!is_subset(&[2, 6], &[1, 2, 3, 5, 8]));
+        assert!(is_subset(&[], &[1]));
+        assert!(!is_subset(&[1], &[]));
+        assert!(is_subset(&[1, 2, 3], &[1, 2, 3]));
+    }
+
+    #[test]
+    fn display_matches_spmf_style() {
+        let f = Frequent::new(vec![3, 7], 42);
+        assert_eq!(f.to_string(), "3 7 #SUP: 42");
+    }
+
+    #[test]
+    fn sort_frequents_by_len_then_lex() {
+        let mut v = vec![
+            Frequent::new(vec![2], 5),
+            Frequent::new(vec![1, 2], 3),
+            Frequent::new(vec![1], 9),
+            Frequent::new(vec![1, 3], 2),
+        ];
+        sort_frequents(&mut v);
+        let shapes: Vec<&[Item]> = v.iter().map(|f| f.items.as_slice()).collect();
+        assert_eq!(shapes, vec![&[1][..], &[2], &[1, 2], &[1, 3]]);
+    }
+}

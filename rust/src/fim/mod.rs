@@ -1,0 +1,26 @@
+//! Frequent-itemset-mining primitives (DESIGN.md systems S9–S15, S27):
+//! the domain substrate under the paper's RDD-Eclat algorithms.
+
+pub mod apriori;
+pub mod bitmap;
+pub mod bottomup;
+pub mod eqclass;
+pub mod fpgrowth;
+pub mod itemset;
+pub mod rules;
+pub mod tidset;
+pub mod transaction;
+pub mod trie;
+pub mod trimatrix;
+
+pub use bitmap::TidBitmap;
+pub use bottomup::{bottom_up, bottom_up_diffset, TidRepr};
+pub use eqclass::{construct_classes, to_bitmap_class, EqClass};
+pub use itemset::{
+    is_subset, prefix_join, sort_frequents, Frequent, Item, ItemSet, MinSup, Tid,
+};
+pub use rules::{generate_rules, Rule};
+pub use tidset::{difference, intersect, intersect_count, Tidset, VerticalDb};
+pub use transaction::{Database, DbStats};
+pub use trie::{CandidateTrie, ItemFilter};
+pub use trimatrix::TriMatrix;

@@ -1,0 +1,168 @@
+//! Association-rule generation — step 2 of ARM (§2.1 of the paper):
+//! from the frequent itemsets, produce every confident rule `X ⇒ Y`
+//! with `X ∪ Y` frequent, `X ∩ Y = ∅`, and confidence
+//! `σ(X∪Y)/σ(X) ≥ min_conf`.
+
+use std::collections::HashMap;
+
+use super::itemset::{Frequent, Item, ItemSet};
+
+/// An association rule `antecedent ⇒ consequent`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rule {
+    /// Left-hand side (non-empty, sorted).
+    pub antecedent: ItemSet,
+    /// Right-hand side (non-empty, sorted, disjoint from lhs).
+    pub consequent: ItemSet,
+    /// Support count of `antecedent ∪ consequent`.
+    pub support: u32,
+    /// `σ(X∪Y) / σ(X)`.
+    pub confidence: f64,
+    /// `confidence / (σ(Y)/n)` — lift, when the db size is known.
+    pub lift: Option<f64>,
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let fmt_set = |s: &[Item]| {
+            s.iter().map(|i| i.to_string()).collect::<Vec<_>>().join(" ")
+        };
+        write!(
+            f,
+            "{} => {}  (sup={}, conf={:.3})",
+            fmt_set(&self.antecedent),
+            fmt_set(&self.consequent),
+            self.support,
+            self.confidence
+        )
+    }
+}
+
+/// Generate all confident rules from a mined frequent-itemset collection.
+/// `db_size` (when known) enables lift. Standard subset enumeration: for
+/// each frequent itemset of length ≥ 2, every non-empty proper subset is a
+/// candidate antecedent.
+pub fn generate_rules(
+    frequents: &[Frequent],
+    min_conf: f64,
+    db_size: Option<usize>,
+) -> Vec<Rule> {
+    let support_map: HashMap<&[Item], u32> =
+        frequents.iter().map(|f| (f.items.as_slice(), f.support)).collect();
+    let mut rules = Vec::new();
+    for f in frequents {
+        let k = f.items.len();
+        if k < 2 {
+            continue;
+        }
+        // Enumerate non-empty proper subsets via bitmask (itemsets in FIM
+        // practice are short; guard anyway).
+        if k > 20 {
+            continue;
+        }
+        for mask in 1..((1u32 << k) - 1) {
+            let mut ante = Vec::new();
+            let mut cons = Vec::new();
+            for (idx, &item) in f.items.iter().enumerate() {
+                if (mask >> idx) & 1 == 1 {
+                    ante.push(item);
+                } else {
+                    cons.push(item);
+                }
+            }
+            let Some(&ante_sup) = support_map.get(ante.as_slice()) else {
+                continue; // can't happen for a correct miner, but stay safe
+            };
+            let confidence = f.support as f64 / ante_sup as f64;
+            if confidence >= min_conf {
+                let lift = match (db_size, support_map.get(cons.as_slice())) {
+                    (Some(n), Some(&cons_sup)) if cons_sup > 0 => {
+                        Some(confidence / (cons_sup as f64 / n as f64))
+                    }
+                    _ => None,
+                };
+                rules.push(Rule { antecedent: ante, consequent: cons, support: f.support, confidence, lift });
+            }
+        }
+    }
+    rules.sort_by(|a, b| {
+        b.confidence
+            .partial_cmp(&a.confidence)
+            .unwrap()
+            .then_with(|| b.support.cmp(&a.support))
+            .then_with(|| a.antecedent.cmp(&b.antecedent))
+    });
+    rules
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::apriori::apriori;
+    use crate::fim::transaction::Database;
+
+    fn mined() -> (Database, Vec<Frequent>) {
+        let db = Database::from_rows(vec![
+            vec![1, 2],
+            vec![1, 2],
+            vec![1, 2, 3],
+            vec![1, 3],
+        ]);
+        let f = apriori(&db, 2);
+        (db, f)
+    }
+
+    #[test]
+    fn rules_have_correct_confidence() {
+        let (db, f) = mined();
+        let rules = generate_rules(&f, 0.0, Some(db.len()));
+        // σ(12)=3, σ(1)=4 -> conf(1=>2)=0.75 ; σ(2)=3 -> conf(2=>1)=1.0
+        let r12 = rules
+            .iter()
+            .find(|r| r.antecedent == vec![1] && r.consequent == vec![2])
+            .unwrap();
+        assert!((r12.confidence - 0.75).abs() < 1e-12);
+        let r21 = rules
+            .iter()
+            .find(|r| r.antecedent == vec![2] && r.consequent == vec![1])
+            .unwrap();
+        assert!((r21.confidence - 1.0).abs() < 1e-12);
+        // lift(2=>1) = 1.0 / (4/4) = 1.0
+        assert!((r21.lift.unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_conf_filters() {
+        let (db, f) = mined();
+        let all = generate_rules(&f, 0.0, Some(db.len()));
+        let high = generate_rules(&f, 0.9, Some(db.len()));
+        assert!(high.len() < all.len());
+        assert!(high.iter().all(|r| r.confidence >= 0.9));
+    }
+
+    #[test]
+    fn rules_sorted_by_confidence() {
+        let (db, f) = mined();
+        let rules = generate_rules(&f, 0.0, Some(db.len()));
+        for w in rules.windows(2) {
+            assert!(w[0].confidence >= w[1].confidence);
+        }
+    }
+
+    #[test]
+    fn antecedent_consequent_disjoint_and_nonempty() {
+        let (db, f) = mined();
+        for r in generate_rules(&f, 0.0, Some(db.len())) {
+            assert!(!r.antecedent.is_empty() && !r.consequent.is_empty());
+            for a in &r.antecedent {
+                assert!(!r.consequent.contains(a));
+            }
+        }
+    }
+
+    #[test]
+    fn no_rules_from_singletons() {
+        let f = vec![Frequent::new(vec![1], 5)];
+        assert!(generate_rules(&f, 0.0, None).is_empty());
+    }
+}

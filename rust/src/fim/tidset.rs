@@ -1,0 +1,218 @@
+//! Sorted-vector tidsets and the vertical database.
+//!
+//! Eclat's vertical format (§2.1): `item → tidset(item)`. Tidsets here are
+//! sorted `Vec<Tid>`; support is length; candidate support is intersection
+//! size. The engine-level RDD-Eclat variants move these around as RDD
+//! values, so they stay plain clonable vectors. The packed-bitmap
+//! representation in [`super::bitmap`] is the optimized alternative used
+//! by the bottom-up search once classes are local to a task.
+
+use std::collections::HashMap;
+
+use super::itemset::{Item, Tid};
+use super::transaction::Database;
+
+/// A sorted, de-duplicated list of transaction ids.
+pub type Tidset = Vec<Tid>;
+
+/// Intersect two sorted tidsets (linear merge; switches to galloping when
+/// sizes are very skewed).
+pub fn intersect(a: &[Tid], b: &[Tid]) -> Tidset {
+    // Galloping pays when one side is ≥ ~8x smaller.
+    if a.len() * 8 < b.len() {
+        return gallop_intersect(a, b);
+    }
+    if b.len() * 8 < a.len() {
+        return gallop_intersect(b, a);
+    }
+    let mut out = Vec::with_capacity(a.len().min(b.len()));
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Intersection via binary search of the smaller side into the larger.
+fn gallop_intersect(small: &[Tid], large: &[Tid]) -> Tidset {
+    let mut out = Vec::with_capacity(small.len());
+    let mut lo = 0usize;
+    for &t in small {
+        match large[lo..].binary_search(&t) {
+            Ok(pos) => {
+                out.push(t);
+                lo += pos + 1;
+            }
+            Err(pos) => {
+                lo += pos;
+            }
+        }
+        if lo >= large.len() {
+            break;
+        }
+    }
+    out
+}
+
+/// `|a ∩ b|` without materializing (support counting).
+pub fn intersect_count(a: &[Tid], b: &[Tid]) -> u32 {
+    if a.len() * 8 < b.len() || b.len() * 8 < a.len() {
+        return intersect(a, b).len() as u32;
+    }
+    let (mut i, mut j, mut n) = (0, 0, 0u32);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Set difference `a \ b` of sorted tidsets — the diffset representation
+/// (Zaki's dEclat), an optional optimization ablated in the benches.
+pub fn difference(a: &[Tid], b: &[Tid]) -> Tidset {
+    let mut out = Vec::with_capacity(a.len());
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() {
+        if j >= b.len() || a[i] < b[j] {
+            out.push(a[i]);
+            i += 1;
+        } else if a[i] > b[j] {
+            j += 1;
+        } else {
+            i += 1;
+            j += 1;
+        }
+    }
+    out
+}
+
+/// The vertical database: frequent items with their tidsets, in a chosen
+/// item order (the paper sorts by ascending support — the "total order"
+/// that balances equivalence-class fan-out).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VerticalDb {
+    /// `(item, tidset)` pairs, in mining order.
+    pub items: Vec<(Item, Tidset)>,
+    /// Number of transactions in the underlying horizontal database.
+    pub universe: usize,
+}
+
+impl VerticalDb {
+    /// Build from a horizontal database, keeping only items with support
+    /// ≥ `min_sup_count`, ordered by ascending support with item id as the
+    /// tie-break (the order EclatV1 Phase-1 produces via
+    /// `sort(freqItemTids.collect())`).
+    pub fn build(db: &Database, min_sup_count: u32) -> VerticalDb {
+        let mut tidsets: HashMap<Item, Tidset> = HashMap::new();
+        for (tid, t) in db.transactions().iter().enumerate() {
+            for &item in t {
+                tidsets.entry(item).or_default().push(tid as Tid);
+            }
+        }
+        let mut items: Vec<(Item, Tidset)> = tidsets
+            .into_iter()
+            .filter(|(_, tids)| tids.len() as u32 >= min_sup_count)
+            .collect();
+        items.sort_by(|a, b| a.1.len().cmp(&b.1.len()).then_with(|| a.0.cmp(&b.0)));
+        VerticalDb { items, universe: db.len() }
+    }
+
+    /// Number of frequent items (`n` in the paper).
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when no item is frequent.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The frequent items in mining order.
+    pub fn item_order(&self) -> Vec<Item> {
+        self.items.iter().map(|(i, _)| *i).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn intersect_basics() {
+        assert_eq!(intersect(&[1, 3, 5, 7], &[3, 4, 5]), vec![3, 5]);
+        assert_eq!(intersect(&[], &[1, 2]), Vec::<Tid>::new());
+        assert_eq!(intersect_count(&[1, 3, 5, 7], &[3, 4, 5]), 2);
+    }
+
+    #[test]
+    fn galloping_path_matches_linear() {
+        let small = vec![5u32, 100, 900];
+        let large: Vec<u32> = (0..1000).collect();
+        assert_eq!(intersect(&small, &large), small);
+        assert_eq!(intersect(&large, &small), small);
+        assert_eq!(intersect_count(&small, &large), 3);
+    }
+
+    #[test]
+    fn difference_basics() {
+        assert_eq!(difference(&[1, 2, 3, 4], &[2, 4]), vec![1, 3]);
+        assert_eq!(difference(&[1, 2], &[]), vec![1, 2]);
+        assert_eq!(difference(&[], &[1]), Vec::<Tid>::new());
+    }
+
+    #[test]
+    fn random_against_hashsets() {
+        let mut rng = Rng::new(9);
+        for _ in 0..100 {
+            let mut a: Vec<u32> = (0..rng.range(0, 80)).map(|_| rng.below(100) as u32).collect();
+            let mut b: Vec<u32> = (0..rng.range(0, 80)).map(|_| rng.below(100) as u32).collect();
+            a.sort_unstable();
+            a.dedup();
+            b.sort_unstable();
+            b.dedup();
+            let sa: std::collections::HashSet<_> = a.iter().copied().collect();
+            let sb: std::collections::HashSet<_> = b.iter().copied().collect();
+            let mut want: Vec<u32> = sa.intersection(&sb).copied().collect();
+            want.sort_unstable();
+            assert_eq!(intersect(&a, &b), want);
+            assert_eq!(intersect_count(&a, &b) as usize, want.len());
+            let mut want_diff: Vec<u32> = sa.difference(&sb).copied().collect();
+            want_diff.sort_unstable();
+            assert_eq!(difference(&a, &b), want_diff);
+        }
+    }
+
+    #[test]
+    fn vertical_build_orders_by_support() {
+        // item 1 in 3 txns, item 2 in 2, item 3 in 1, item 9 in 1.
+        let db = Database::from_rows(vec![vec![1, 2], vec![1, 2, 3], vec![1, 9]]);
+        let v = VerticalDb::build(&db, 2);
+        assert_eq!(v.universe, 3);
+        assert_eq!(v.item_order(), vec![2, 1], "ascending support");
+        assert_eq!(v.items[0].1, vec![0, 1]);
+        assert_eq!(v.items[1].1, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn vertical_empty_when_nothing_frequent() {
+        let db = Database::from_rows(vec![vec![1], vec![2]]);
+        let v = VerticalDb::build(&db, 2);
+        assert!(v.is_empty());
+    }
+}

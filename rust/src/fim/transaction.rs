@@ -1,0 +1,206 @@
+//! Horizontal transaction database: parsing, stats, filtering.
+//!
+//! The on-disk format is the FIMI/SPMF standard the paper's datasets use —
+//! one transaction per line, space-separated integer items.
+
+use std::collections::HashSet;
+
+use crate::error::{Error, Result};
+
+use super::itemset::Item;
+
+/// A horizontal transaction database. Each transaction's items are sorted
+/// ascending and de-duplicated at construction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Database {
+    transactions: Vec<Vec<Item>>,
+}
+
+impl Database {
+    /// Build from raw rows; sorts and dedups each transaction.
+    pub fn from_rows(rows: Vec<Vec<Item>>) -> Database {
+        let transactions = rows
+            .into_iter()
+            .map(|mut t| {
+                t.sort_unstable();
+                t.dedup();
+                t
+            })
+            .collect();
+        Database { transactions }
+    }
+
+    /// Parse the FIMI text format (one space-separated transaction per
+    /// line; blank lines skipped).
+    pub fn parse(text: &str) -> Result<Database> {
+        let mut rows = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut t = Vec::new();
+            for tok in line.split_ascii_whitespace() {
+                let item: Item = tok
+                    .parse()
+                    .map_err(|_| Error::parse(format!("line {}: bad item {tok:?}", lineno + 1)))?;
+                t.push(item);
+            }
+            rows.push(t);
+        }
+        Ok(Database::from_rows(rows))
+    }
+
+    /// Parse one transaction line (used inside RDD closures).
+    pub fn parse_line(line: &str) -> Vec<Item> {
+        let mut t: Vec<Item> = line
+            .split_ascii_whitespace()
+            .filter_map(|tok| tok.parse().ok())
+            .collect();
+        t.sort_unstable();
+        t.dedup();
+        t
+    }
+
+    /// Number of transactions.
+    pub fn len(&self) -> usize {
+        self.transactions.len()
+    }
+
+    /// True when there are no transactions.
+    pub fn is_empty(&self) -> bool {
+        self.transactions.is_empty()
+    }
+
+    /// Borrow the transactions.
+    pub fn transactions(&self) -> &[Vec<Item>] {
+        &self.transactions
+    }
+
+    /// Consume into the raw rows.
+    pub fn into_rows(self) -> Vec<Vec<Item>> {
+        self.transactions
+    }
+
+    /// Serialize to the FIMI text format.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for t in &self.transactions {
+            for (i, item) in t.iter().enumerate() {
+                if i > 0 {
+                    out.push(' ');
+                }
+                out.push_str(&item.to_string());
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Dataset statistics in the shape of the paper's Table 2.
+    pub fn stats(&self) -> DbStats {
+        let mut items: HashSet<Item> = HashSet::new();
+        let mut total_width = 0usize;
+        let mut max_item = 0;
+        for t in &self.transactions {
+            total_width += t.len();
+            for &i in t {
+                items.insert(i);
+                max_item = max_item.max(i);
+            }
+        }
+        DbStats {
+            transactions: self.transactions.len(),
+            distinct_items: items.len(),
+            avg_width: if self.transactions.is_empty() {
+                0.0
+            } else {
+                total_width as f64 / self.transactions.len() as f64
+            },
+            max_item,
+        }
+    }
+
+    /// The filtered-transaction technique of Borgelt [18], used by
+    /// EclatV2+: drop infrequent items from every transaction, dropping
+    /// transactions that become empty. `keep` must answer membership for
+    /// frequent items.
+    pub fn filter_items(&self, keep: &dyn Fn(Item) -> bool) -> Database {
+        let transactions = self
+            .transactions
+            .iter()
+            .map(|t| t.iter().copied().filter(|&i| keep(i)).collect::<Vec<_>>())
+            .filter(|t: &Vec<Item>| !t.is_empty())
+            .collect();
+        Database { transactions }
+    }
+
+    /// Total number of item occurrences (sum of transaction widths) —
+    /// the size measure behind the paper's filtering-shrinkage percentages.
+    pub fn total_items(&self) -> usize {
+        self.transactions.iter().map(Vec::len).sum()
+    }
+}
+
+/// Table 2-shaped statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DbStats {
+    /// Number of transactions.
+    pub transactions: usize,
+    /// Number of distinct items occurring.
+    pub distinct_items: usize,
+    /// Average transaction width.
+    pub avg_width: f64,
+    /// Largest item id (drives the paper's triangular-matrix size concern).
+    pub max_item: Item,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_roundtrip() {
+        let db = Database::parse("1 2 3\n2 3\n\n1\n").unwrap();
+        assert_eq!(db.len(), 3);
+        assert_eq!(db.transactions()[0], vec![1, 2, 3]);
+        assert_eq!(db.to_text(), "1 2 3\n2 3\n1\n");
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Database::parse("1 x 3").is_err());
+    }
+
+    #[test]
+    fn rows_are_sorted_and_deduped() {
+        let db = Database::from_rows(vec![vec![3, 1, 2, 3, 1]]);
+        assert_eq!(db.transactions()[0], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn stats_match_hand_count() {
+        let db = Database::parse("1 2 3\n2 3\n7\n").unwrap();
+        let s = db.stats();
+        assert_eq!(s.transactions, 3);
+        assert_eq!(s.distinct_items, 4);
+        assert!((s.avg_width - 2.0).abs() < 1e-12);
+        assert_eq!(s.max_item, 7);
+    }
+
+    #[test]
+    fn filter_items_borgelt() {
+        let db = Database::parse("1 2 3\n2 3\n1 9\n9\n").unwrap();
+        // Keep only items 2 and 3 (pretend 1 and 9 are infrequent).
+        let filtered = db.filter_items(&|i| i == 2 || i == 3);
+        assert_eq!(filtered.len(), 2, "empty transactions dropped");
+        assert_eq!(filtered.transactions()[0], vec![2, 3]);
+        assert_eq!(filtered.total_items(), 4);
+    }
+
+    #[test]
+    fn parse_line_lenient() {
+        assert_eq!(Database::parse_line("5 1 5 3"), vec![1, 3, 5]);
+        assert!(Database::parse_line("").is_empty());
+    }
+}

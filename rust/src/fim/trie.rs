@@ -1,0 +1,208 @@
+//! Item tries: the frequent-item filter trie (`trieL1` in the paper's
+//! Phase-2 of EclatV2) and the candidate prefix trie used by Apriori's
+//! subset-counting step (the hash-tree role in the classic algorithm).
+
+use std::collections::HashMap;
+
+use super::itemset::Item;
+
+/// Membership structure for frequent items — the paper stores `trieL1`
+/// and broadcasts it to executors for transaction filtering. Backed by a
+/// bitset over item ids (dense vocabularies) — the degenerate 1-level
+/// trie, matching Borgelt's filter semantics exactly.
+#[derive(Debug, Clone)]
+pub struct ItemFilter {
+    bits: Vec<u64>,
+}
+
+impl ItemFilter {
+    /// Build from the frequent item list.
+    pub fn new(items: impl IntoIterator<Item = Item>) -> ItemFilter {
+        let mut bits = Vec::new();
+        for i in items {
+            let w = (i as usize) >> 6;
+            if w >= bits.len() {
+                bits.resize(w + 1, 0);
+            }
+            bits[w] |= 1u64 << (i & 63);
+        }
+        ItemFilter { bits }
+    }
+
+    /// Is `i` frequent?
+    #[inline]
+    pub fn contains(&self, i: Item) -> bool {
+        let w = (i as usize) >> 6;
+        w < self.bits.len() && (self.bits[w] >> (i & 63)) & 1 == 1
+    }
+
+    /// Borgelt's transaction filter: keep only frequent items.
+    pub fn filter_transaction(&self, t: &[Item]) -> Vec<Item> {
+        t.iter().copied().filter(|&i| self.contains(i)).collect()
+    }
+
+    /// Number of frequent items.
+    pub fn len(&self) -> usize {
+        self.bits.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True when no item is frequent.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A prefix trie over sorted candidate itemsets — Apriori's candidate
+/// store. Supports insertion of k-itemsets and counting every candidate
+/// subset of a transaction in one walk (the role the hash tree plays in
+/// Agrawal–Srikant).
+#[derive(Debug, Default)]
+pub struct CandidateTrie {
+    root: Node,
+    len: usize,
+}
+
+#[derive(Debug, Default)]
+struct Node {
+    children: HashMap<Item, Node>,
+    /// Index into the external count vector when a candidate ends here.
+    leaf: Option<usize>,
+}
+
+impl CandidateTrie {
+    /// Empty trie.
+    pub fn new() -> CandidateTrie {
+        CandidateTrie::default()
+    }
+
+    /// Insert a sorted candidate; returns its dense leaf index.
+    pub fn insert(&mut self, itemset: &[Item]) -> usize {
+        let mut node = &mut self.root;
+        for &i in itemset {
+            node = node.children.entry(i).or_default();
+        }
+        if let Some(idx) = node.leaf {
+            idx
+        } else {
+            let idx = self.len;
+            node.leaf = Some(idx);
+            self.len += 1;
+            idx
+        }
+    }
+
+    /// Number of distinct candidates inserted.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no candidates were inserted.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Does the trie contain exactly this itemset? (Used by Apriori's
+    /// prune step: all (k−1)-subsets must be frequent.)
+    pub fn contains(&self, itemset: &[Item]) -> bool {
+        let mut node = &self.root;
+        for &i in itemset {
+            match node.children.get(&i) {
+                Some(n) => node = n,
+                None => return false,
+            }
+        }
+        node.leaf.is_some()
+    }
+
+    /// Count every candidate that is a subset of (sorted) transaction `t`,
+    /// incrementing `counts[leaf]`. One recursive walk — each trie edge is
+    /// matched against the remaining suffix of the transaction.
+    pub fn count_subsets(&self, t: &[Item], counts: &mut [u32]) {
+        fn walk(node: &Node, t: &[Item], counts: &mut [u32]) {
+            if let Some(idx) = node.leaf {
+                counts[idx] += 1;
+            }
+            if node.children.is_empty() {
+                return;
+            }
+            for (pos, &item) in t.iter().enumerate() {
+                if let Some(child) = node.children.get(&item) {
+                    walk(child, &t[pos + 1..], counts);
+                }
+            }
+        }
+        walk(&self.root, t, counts);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn item_filter_membership() {
+        let f = ItemFilter::new([1u32, 70, 500]);
+        assert!(f.contains(1) && f.contains(70) && f.contains(500));
+        assert!(!f.contains(0) && !f.contains(71) && !f.contains(10_000));
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn item_filter_filters_transactions() {
+        let f = ItemFilter::new([2u32, 3]);
+        assert_eq!(f.filter_transaction(&[1, 2, 3, 9]), vec![2, 3]);
+        assert!(f.filter_transaction(&[1, 9]).is_empty());
+    }
+
+    #[test]
+    fn trie_insert_contains() {
+        let mut t = CandidateTrie::new();
+        let a = t.insert(&[1, 2, 3]);
+        let b = t.insert(&[1, 2, 4]);
+        let a2 = t.insert(&[1, 2, 3]);
+        assert_eq!(a, a2, "re-insert returns same index");
+        assert_ne!(a, b);
+        assert_eq!(t.len(), 2);
+        assert!(t.contains(&[1, 2, 3]));
+        assert!(!t.contains(&[1, 2]), "prefix is not a member");
+        assert!(!t.contains(&[1, 2, 5]));
+    }
+
+    #[test]
+    fn count_subsets_counts_exactly_contained_candidates() {
+        let mut t = CandidateTrie::new();
+        let c12 = t.insert(&[1, 2]);
+        let c13 = t.insert(&[1, 3]);
+        let c23 = t.insert(&[2, 3]);
+        let c24 = t.insert(&[2, 4]);
+        let mut counts = vec![0u32; t.len()];
+        t.count_subsets(&[1, 2, 3], &mut counts);
+        assert_eq!(counts[c12], 1);
+        assert_eq!(counts[c13], 1);
+        assert_eq!(counts[c23], 1);
+        assert_eq!(counts[c24], 0);
+        t.count_subsets(&[2, 4], &mut counts);
+        assert_eq!(counts[c24], 1);
+    }
+
+    #[test]
+    fn count_subsets_three_level() {
+        let mut t = CandidateTrie::new();
+        let c = t.insert(&[1, 3, 5]);
+        let mut counts = vec![0u32; 1];
+        t.count_subsets(&[1, 2, 3, 4, 5], &mut counts);
+        assert_eq!(counts[c], 1);
+        t.count_subsets(&[1, 3], &mut counts);
+        assert_eq!(counts[c], 1, "no false positive on prefix");
+    }
+
+    #[test]
+    fn empty_structures() {
+        let f = ItemFilter::new([]);
+        assert!(f.is_empty());
+        let t = CandidateTrie::new();
+        assert!(t.is_empty());
+        let mut counts: Vec<u32> = vec![];
+        t.count_subsets(&[1, 2, 3], &mut counts);
+    }
+}

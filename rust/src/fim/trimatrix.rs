@@ -1,0 +1,208 @@
+//! Upper-triangular matrix of candidate-2-itemset counts.
+//!
+//! Zaki's recommendation (adopted by the paper's Phase-2): computing
+//! frequent 2-itemsets by tidset intersection is the most expensive level,
+//! so count all 2-itemset occurrences with one pass over the horizontal
+//! database into a triangular matrix, then use those counts to prune
+//! intersections. The matrix is indexed by *item value* (like the paper,
+//! whose matrix size depends on the max item id — the reason it is
+//! disabled for BMS1/BMS2), flattened row-major over `i < j`.
+//!
+//! The matrix is the accumulator payload in EclatV1/V2/V3's Phase-2, and
+//! the object the L1 `cooc` Pallas kernel computes as `Aᵀ·A` over 0/1
+//! transaction blocks (see `runtime::cooc` for the XLA-backed path).
+
+use super::itemset::Item;
+
+/// Upper-triangular co-occurrence count matrix over items `0..=max_item`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TriMatrix {
+    n: usize,
+    counts: Vec<u32>,
+}
+
+impl TriMatrix {
+    /// Matrix covering items `0..=max_item`. Memory is
+    /// `(n·(n−1)/2)·4` bytes for `n = max_item+1` — the paper's reason to
+    /// disable it for large-vocabulary datasets.
+    pub fn new(max_item: Item) -> TriMatrix {
+        let n = max_item as usize + 1;
+        TriMatrix { n, counts: vec![0; n * (n - 1) / 2] }
+    }
+
+    /// Number of item slots (`max_item + 1`).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Approximate heap footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.counts.len() * 4
+    }
+
+    #[inline]
+    fn index(&self, i: Item, j: Item) -> usize {
+        debug_assert!(i < j, "triangular index requires i < j ({i}, {j})");
+        let (i, j, n) = (i as usize, j as usize, self.n);
+        debug_assert!(j < n);
+        // Row-major upper triangle: row i starts after rows 0..i.
+        i * (2 * n - i - 1) / 2 + (j - i - 1)
+    }
+
+    /// Increment the count of pair `{i, j}` (any order, i ≠ j).
+    #[inline]
+    pub fn update(&mut self, a: Item, b: Item) {
+        let (i, j) = if a < b { (a, b) } else { (b, a) };
+        let idx = self.index(i, j);
+        self.counts[idx] += 1;
+    }
+
+    /// Count every 2-combination of one (sorted, deduped) transaction —
+    /// the body of the paper's Phase-2 `flatMap`.
+    pub fn update_transaction(&mut self, t: &[Item]) {
+        for (x, &i) in t.iter().enumerate() {
+            for &j in &t[x + 1..] {
+                self.update(i, j);
+            }
+        }
+    }
+
+    /// Add `count` occurrences of pair `{a, b}` (the bulk import path used
+    /// by the XLA co-occurrence backend).
+    #[inline]
+    pub fn add_count(&mut self, a: Item, b: Item, count: u32) {
+        if a == b || count == 0 {
+            return;
+        }
+        let (i, j) = if a < b { (a, b) } else { (b, a) };
+        let idx = self.index(i, j);
+        self.counts[idx] += count;
+    }
+
+    /// Support of pair `{a, b}`.
+    #[inline]
+    pub fn support(&self, a: Item, b: Item) -> u32 {
+        if a == b {
+            return 0;
+        }
+        let (i, j) = if a < b { (a, b) } else { (b, a) };
+        self.counts[self.index(i, j)]
+    }
+
+    /// Merge another matrix in (the accumulator's associative combine).
+    pub fn merge(&mut self, other: &TriMatrix) {
+        assert_eq!(self.n, other.n, "merging matrices of different size");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+    }
+
+    /// Overwrite from a dense `n×n` co-occurrence matrix (row-major),
+    /// taking the upper triangle — the import path from the XLA `cooc`
+    /// artifact, whose output is the full symmetric `AᵀA`.
+    pub fn from_dense_upper(n: usize, dense: &[f32]) -> TriMatrix {
+        assert_eq!(dense.len(), n * n);
+        let mut m = TriMatrix { n, counts: vec![0; n * (n - 1) / 2] };
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let idx = m.index(i as Item, j as Item);
+                m.counts[idx] = dense[i * n + j].round() as u32;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use std::collections::HashMap;
+
+    #[test]
+    fn index_is_bijective() {
+        let m = TriMatrix::new(9);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..10u32 {
+            for j in (i + 1)..10u32 {
+                assert!(seen.insert(m.index(i, j)), "collision at ({i},{j})");
+            }
+        }
+        assert_eq!(seen.len(), 45);
+        assert_eq!(*seen.iter().max().unwrap(), 44);
+    }
+
+    #[test]
+    fn update_and_support_symmetric() {
+        let mut m = TriMatrix::new(5);
+        m.update(3, 1);
+        m.update(1, 3);
+        assert_eq!(m.support(1, 3), 2);
+        assert_eq!(m.support(3, 1), 2);
+        assert_eq!(m.support(1, 2), 0);
+        assert_eq!(m.support(2, 2), 0);
+    }
+
+    #[test]
+    fn transaction_update_counts_all_pairs() {
+        let mut m = TriMatrix::new(4);
+        m.update_transaction(&[0, 2, 4]);
+        assert_eq!(m.support(0, 2), 1);
+        assert_eq!(m.support(0, 4), 1);
+        assert_eq!(m.support(2, 4), 1);
+        assert_eq!(m.support(0, 1), 0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = TriMatrix::new(3);
+        let mut b = TriMatrix::new(3);
+        a.update(0, 1);
+        b.update(0, 1);
+        b.update(1, 2);
+        a.merge(&b);
+        assert_eq!(a.support(0, 1), 2);
+        assert_eq!(a.support(1, 2), 1);
+    }
+
+    #[test]
+    fn random_matches_hashmap_counts() {
+        let mut rng = Rng::new(21);
+        let mut m = TriMatrix::new(19);
+        let mut reference: HashMap<(u32, u32), u32> = HashMap::new();
+        for _ in 0..200 {
+            let mut t: Vec<u32> = (0..rng.range(2, 8)).map(|_| rng.below(20) as u32).collect();
+            t.sort_unstable();
+            t.dedup();
+            m.update_transaction(&t);
+            for x in 0..t.len() {
+                for y in (x + 1)..t.len() {
+                    *reference.entry((t[x], t[y])).or_default() += 1;
+                }
+            }
+        }
+        for (&(i, j), &c) in &reference {
+            assert_eq!(m.support(i, j), c, "pair ({i},{j})");
+        }
+    }
+
+    #[test]
+    fn from_dense_upper_roundtrip() {
+        // Dense symmetric 3x3 with upper triangle (0,1)=2, (0,2)=1, (1,2)=3.
+        let dense = vec![
+            5.0, 2.0, 1.0, //
+            2.0, 4.0, 3.0, //
+            1.0, 3.0, 6.0,
+        ];
+        let m = TriMatrix::from_dense_upper(3, &dense);
+        assert_eq!(m.support(0, 1), 2);
+        assert_eq!(m.support(0, 2), 1);
+        assert_eq!(m.support(1, 2), 3);
+    }
+
+    #[test]
+    fn bytes_reflects_triangle() {
+        let m = TriMatrix::new(99);
+        assert_eq!(m.bytes(), 100 * 99 / 2 * 4);
+    }
+}

@@ -1,0 +1,73 @@
+//! # RDD-Eclat
+//!
+//! A production-quality reproduction of *"RDD-Eclat: Approaches to
+//! Parallelize Eclat Algorithm on Spark RDD Framework"* (Singh, Singh,
+//! Mishra, Garg — ICCNCT 2019 / extended 2021).
+//!
+//! The crate is organised as three layers:
+//!
+//! * [`engine`] — a from-scratch Spark-like RDD engine (the substrate the
+//!   paper's algorithms run on): lazy RDDs with narrow/shuffle
+//!   dependencies, a DAG → stage → task scheduler over an own thread pool,
+//!   hash shuffle, broadcast variables, accumulators, partition caching,
+//!   lineage-based recomputation with fault injection, per-task metrics,
+//!   and a virtual-cluster makespan simulator used for core-scaling
+//!   studies on small machines.
+//! * [`fim`] — frequent-itemset-mining primitives: horizontal/vertical
+//!   databases, packed tidset bitmaps, the triangular matrix of
+//!   candidate-2-itemset counts, prefix tries, equivalence classes, the
+//!   bottom-up Eclat recursion, Apriori candidate generation, FP-Growth,
+//!   and association-rule generation.
+//! * [`algorithms`] — the paper's contribution: the five RDD-Eclat
+//!   variants (`EclatV1`..`EclatV5`), the YAFIM-style RDD-Apriori
+//!   baseline, and sequential oracles used for correctness testing.
+//!
+//! Supporting layers: [`data`] (benchmark dataset generators matching the
+//! paper's Table 2), [`runtime`] (PJRT execution of AOT-compiled
+//! JAX/Pallas artifacts for the support-counting hot spot), [`bench`] (a
+//! small criterion-like measurement harness), [`conf`]/[`cli`]
+//! (configuration + launcher), and [`figures`] (drivers that regenerate
+//! every table and figure of the paper's evaluation).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use rdd_eclat::prelude::*;
+//!
+//! // A tiny in-memory transaction database.
+//! let db = Database::from_rows(vec![
+//!     vec![1, 2, 3],
+//!     vec![1, 2],
+//!     vec![2, 3],
+//!     vec![1, 2, 3, 4],
+//! ]);
+//! let ctx = ClusterContext::builder().cores(2).build();
+//! let result = EclatV4::default().run_on(&ctx, &db, MinSup::count(2)).unwrap();
+//! assert!(result.contains(&[1, 2], 3));
+//! assert!(result.contains(&[1, 2, 3], 2));
+//! ```
+
+pub mod algorithms;
+pub mod bench;
+pub mod cli;
+pub mod conf;
+pub mod data;
+pub mod engine;
+pub mod error;
+pub mod figures;
+pub mod fim;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports for the common API surface.
+pub mod prelude {
+    pub use crate::algorithms::{
+        Algorithm, EclatOptions, EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, FimResult,
+        RddApriori, SeqApriori, SeqEclat,
+    };
+    pub use crate::conf::EclatConfig;
+    pub use crate::data::{Database, DatasetSpec};
+    pub use crate::engine::{ClusterContext, Rdd};
+    pub use crate::error::{Error, Result};
+    pub use crate::fim::{generate_rules, sort_frequents, Frequent, Item, ItemSet, MinSup, Tid};
+}

@@ -1,0 +1,134 @@
+//! XLA-backed triangular-matrix computation (DESIGN.md A4 ablation).
+//!
+//! Implements [`TriMatrixProvider`] on top of the AOT `cooc` artifact:
+//! transactions are encoded as 0/1 f32 blocks of shape `(TILE_T,
+//! TILE_I)`; for each row block and each (column-chunk, column-chunk)
+//! pair, one PJRT call computes `A_ci^T · A_cj`, whose entries are
+//! accumulated into the item-value-keyed [`TriMatrix`] the Eclat phases
+//! consume. Equivalent by construction to the native loop provider
+//! ([`crate::algorithms::common::NativeCooc`]) — the property tests
+//! assert bit-equality.
+
+use std::sync::Arc;
+
+use crate::algorithms::TriMatrixProvider;
+use crate::error::Result;
+use crate::fim::{Item, TriMatrix};
+
+use super::service::{HostBuffer, XlaService};
+
+/// Row tile (transactions per block) — matches the AOT artifact shape.
+pub const TILE_T: usize = 256;
+/// Column tile (items per chunk) — matches the AOT artifact shape.
+pub const TILE_I: usize = 128;
+
+/// The PJRT-backed co-occurrence provider.
+pub struct XlaCooc {
+    svc: Arc<XlaService>,
+    artifact: String,
+}
+
+impl XlaCooc {
+    /// Wrap a running service (expects the default `cooc_256x128`
+    /// artifact from `make artifacts`).
+    pub fn new(svc: Arc<XlaService>) -> XlaCooc {
+        XlaCooc { svc, artifact: format!("cooc_{TILE_T}x{TILE_I}") }
+    }
+}
+
+impl TriMatrixProvider for XlaCooc {
+    fn compute(&self, transactions: &[Vec<Item>], max_item: Item) -> Result<TriMatrix> {
+        let mut tri = TriMatrix::new(max_item);
+        let n_items = max_item as usize + 1;
+        let n_chunks = n_items.div_ceil(TILE_I);
+        let dims = vec![TILE_T as i64, TILE_I as i64];
+
+        for row_block in transactions.chunks(TILE_T) {
+            // Encode this row block once per column chunk.
+            let mut chunks: Vec<Vec<f32>> = vec![vec![0f32; TILE_T * TILE_I]; n_chunks];
+            for (r, t) in row_block.iter().enumerate() {
+                for &item in t {
+                    let (c, local) = ((item as usize) / TILE_I, (item as usize) % TILE_I);
+                    chunks[c][r * TILE_I + local] = 1.0;
+                }
+            }
+            // All chunk pairs ci <= cj (the upper block triangle).
+            for ci in 0..n_chunks {
+                for cj in ci..n_chunks {
+                    let out = self.svc.execute(
+                        &self.artifact,
+                        vec![
+                            HostBuffer::F32(chunks[ci].clone(), dims.clone()),
+                            HostBuffer::F32(chunks[cj].clone(), dims.clone()),
+                        ],
+                    )?;
+                    let c = out[0].as_f32()?;
+                    for li in 0..TILE_I {
+                        let gi = ci * TILE_I + li;
+                        if gi >= n_items {
+                            break;
+                        }
+                        for lj in 0..TILE_I {
+                            let gj = cj * TILE_I + lj;
+                            if gj >= n_items {
+                                break;
+                            }
+                            if gi < gj {
+                                let count = c[li * TILE_I + lj];
+                                if count > 0.0 {
+                                    tri.add_count(gi as Item, gj as Item, count as u32);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(tri)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::common::NativeCooc;
+    use crate::util::prng::Rng;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn xla_cooc_matches_native_small() {
+        let Some(dir) = artifacts_dir() else { return };
+        let svc = Arc::new(XlaService::start(dir).unwrap());
+        let xla = XlaCooc::new(svc);
+        let txns = vec![vec![0, 2, 5], vec![1, 2], vec![0, 2, 5], vec![5]];
+        let a = xla.compute(&txns, 5).unwrap();
+        let b = NativeCooc.compute(&txns, 5).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn xla_cooc_matches_native_multi_chunk() {
+        let Some(dir) = artifacts_dir() else { return };
+        // max_item 300 -> 3 column chunks; 600 transactions -> 3 row blocks.
+        let svc = Arc::new(XlaService::start(dir).unwrap());
+        let xla = XlaCooc::new(svc);
+        let mut rng = Rng::new(5);
+        let txns: Vec<Vec<Item>> = (0..600)
+            .map(|_| {
+                let mut t: Vec<Item> =
+                    (0..rng.range(1, 12)).map(|_| rng.below(301) as Item).collect();
+                t.sort_unstable();
+                t.dedup();
+                t
+            })
+            .collect();
+        let a = xla.compute(&txns, 300).unwrap();
+        let b = NativeCooc.compute(&txns, 300).unwrap();
+        assert_eq!(a, b);
+    }
+}

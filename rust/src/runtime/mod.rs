@@ -1,0 +1,27 @@
+//! PJRT runtime (DESIGN.md S21–S22): loads the HLO-text artifacts that
+//! `python/compile/aot.py` produced (`make artifacts`), compiles them once
+//! on a dedicated service thread via the `xla` crate's CPU PJRT client,
+//! and executes them from the mining hot path. Python never runs here.
+
+pub mod cooc;
+pub mod intersect;
+pub mod service;
+
+pub use cooc::XlaCooc;
+pub use intersect::XlaIntersect;
+pub use service::{HostBuffer, XlaService};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$REPRO_ARTIFACTS` or `<crate>/artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    match std::env::var("REPRO_ARTIFACTS") {
+        Ok(d) => PathBuf::from(d),
+        Err(_) => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    }
+}
+
+/// True when artifacts have been built (`make artifacts`).
+pub fn artifacts_available() -> bool {
+    default_artifact_dir().join("manifest.txt").exists()
+}

@@ -1,0 +1,360 @@
+//! The PJRT execution service.
+//!
+//! The published `xla` crate's `PjRtClient` is `Rc`-based (`!Send`), so
+//! the runtime owns a dedicated **service thread** that holds the client
+//! and every compiled executable; callers (driver or executor tasks) talk
+//! to it over a channel with plain host buffers. This mirrors a real
+//! deployment where one process-wide device service serializes access to
+//! an accelerator.
+//!
+//! Artifacts are the HLO-text files produced by `python/compile/aot.py`
+//! (`make artifacts`), listed in `artifacts/manifest.txt`. Each artifact
+//! is compiled once, on first use, and cached for the life of the
+//! service.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc::{channel, Sender};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+
+/// A typed host-side tensor crossing the service boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostBuffer {
+    /// f32 tensor with row-major dims.
+    F32(Vec<f32>, Vec<i64>),
+    /// u32 tensor with row-major dims.
+    U32(Vec<u32>, Vec<i64>),
+    /// i32 tensor with row-major dims.
+    I32(Vec<i32>, Vec<i64>),
+}
+
+impl HostBuffer {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            HostBuffer::F32(v, _) => v.len(),
+            HostBuffer::U32(v, _) => v.len(),
+            HostBuffer::I32(v, _) => v.len(),
+        }
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 slice (error if a different dtype).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostBuffer::F32(v, _) => Ok(v),
+            other => Err(Error::runtime(format!("expected f32 buffer, got {other:?}"))),
+        }
+    }
+
+    /// Borrow as i32 slice.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostBuffer::I32(v, _) => Ok(v),
+            other => Err(Error::runtime(format!("expected i32 buffer, got {other:?}"))),
+        }
+    }
+}
+
+struct Request {
+    artifact: String,
+    inputs: Vec<HostBuffer>,
+    reply: Sender<Result<Vec<HostBuffer>>>,
+}
+
+/// Handle to the PJRT service thread. Cheap to clone via `Arc`; `Send +
+/// Sync`, usable from executor tasks.
+pub struct XlaService {
+    tx: Sender<Request>,
+    handle: Option<JoinHandle<()>>,
+    artifacts: Vec<String>,
+}
+
+impl std::fmt::Debug for XlaService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaService").field("artifacts", &self.artifacts).finish()
+    }
+}
+
+impl XlaService {
+    /// Start the service over an artifact directory (must contain
+    /// `manifest.txt`). Fails fast if the directory or manifest is
+    /// missing; artifact compilation is lazy.
+    pub fn start(artifact_dir: impl AsRef<Path>) -> Result<XlaService> {
+        let dir: PathBuf = artifact_dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let manifest_text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let mut files: HashMap<String, PathBuf> = HashMap::new();
+        let mut names = Vec::new();
+        for line in manifest_text.lines() {
+            let mut parts = line.split_whitespace();
+            if let (Some(name), Some(file)) = (parts.next(), parts.next()) {
+                files.insert(name.to_string(), dir.join(file));
+                names.push(name.to_string());
+            }
+        }
+        if files.is_empty() {
+            return Err(Error::runtime("manifest.txt lists no artifacts"));
+        }
+
+        let (tx, rx) = channel::<Request>();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                // Client + executable cache live only on this thread.
+                let client = match xla::PjRtClient::cpu() {
+                    Ok(c) => c,
+                    Err(e) => {
+                        // Answer every request with the failure.
+                        while let Ok(req) = rx.recv() {
+                            let _ = req
+                                .reply
+                                .send(Err(Error::runtime(format!("PJRT client failed: {e}"))));
+                        }
+                        return;
+                    }
+                };
+                let mut exes: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+                while let Ok(req) = rx.recv() {
+                    let result = serve(&client, &mut exes, &files, &req.artifact, &req.inputs);
+                    let _ = req.reply.send(result);
+                }
+            })
+            .map_err(|e| Error::runtime(format!("cannot spawn pjrt-service: {e}")))?;
+
+        Ok(XlaService { tx, handle: Some(handle), artifacts: names })
+    }
+
+    /// Names of available artifacts.
+    pub fn artifacts(&self) -> &[String] {
+        &self.artifacts
+    }
+
+    /// Execute an artifact with host inputs; blocks for the outputs.
+    pub fn execute(&self, artifact: &str, inputs: Vec<HostBuffer>) -> Result<Vec<HostBuffer>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request { artifact: artifact.to_string(), inputs, reply: reply_tx })
+            .map_err(|_| Error::runtime("pjrt-service is gone"))?;
+        reply_rx.recv().map_err(|_| Error::runtime("pjrt-service dropped the reply"))?
+    }
+}
+
+impl Drop for XlaService {
+    fn drop(&mut self) {
+        // Closing the channel stops the loop.
+        let (dummy_tx, _) = channel();
+        let tx = std::mem::replace(&mut self.tx, dummy_tx);
+        drop(tx);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One request, on the service thread.
+fn serve(
+    client: &xla::PjRtClient,
+    exes: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    files: &HashMap<String, PathBuf>,
+    artifact: &str,
+    inputs: &[HostBuffer],
+) -> Result<Vec<HostBuffer>> {
+    if !exes.contains_key(artifact) {
+        let path = files
+            .get(artifact)
+            .ok_or_else(|| Error::runtime(format!("unknown artifact {artifact:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::runtime("non-utf8 artifact path"))?,
+        )
+        .map_err(|e| Error::runtime(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| Error::runtime(format!("compile {artifact}: {e}")))?;
+        exes.insert(artifact.to_string(), exe);
+    }
+    let exe = exes.get(artifact).expect("just inserted");
+
+    let literals: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|b| -> Result<xla::Literal> {
+            let lit = match b {
+                HostBuffer::F32(v, dims) => xla::Literal::vec1(v)
+                    .reshape(dims)
+                    .map_err(|e| Error::runtime(format!("reshape f32{dims:?}: {e}")))?,
+                HostBuffer::U32(v, dims) => xla::Literal::vec1(v)
+                    .reshape(dims)
+                    .map_err(|e| Error::runtime(format!("reshape u32{dims:?}: {e}")))?,
+                HostBuffer::I32(v, dims) => xla::Literal::vec1(v)
+                    .reshape(dims)
+                    .map_err(|e| Error::runtime(format!("reshape i32{dims:?}: {e}")))?,
+            };
+            Ok(lit)
+        })
+        .collect::<Result<_>>()?;
+
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| Error::runtime(format!("execute {artifact}: {e}")))?;
+    let first = result
+        .first()
+        .and_then(|d| d.first())
+        .ok_or_else(|| Error::runtime("no output buffer"))?
+        .to_literal_sync()
+        .map_err(|e| Error::runtime(format!("fetch output: {e}")))?;
+
+    // aot.py lowers with return_tuple=True: unpack the tuple.
+    let outputs = first
+        .to_tuple()
+        .map_err(|e| Error::runtime(format!("untuple output: {e}")))?;
+    outputs
+        .into_iter()
+        .map(|lit| -> Result<HostBuffer> {
+            let shape = lit.shape().map_err(|e| Error::runtime(format!("shape: {e}")))?;
+            let dims: Vec<i64> = match &shape {
+                xla::Shape::Array(a) => a.dims().to_vec(),
+                _ => return Err(Error::runtime("nested tuple output unsupported")),
+            };
+            let ty = lit
+                .element_type()
+                .map_err(|e| Error::runtime(format!("element type: {e}")))?;
+            match ty {
+                xla::ElementType::F32 => Ok(HostBuffer::F32(
+                    lit.to_vec::<f32>().map_err(|e| Error::runtime(e.to_string()))?,
+                    dims,
+                )),
+                xla::ElementType::U32 => Ok(HostBuffer::U32(
+                    lit.to_vec::<u32>().map_err(|e| Error::runtime(e.to_string()))?,
+                    dims,
+                )),
+                xla::ElementType::S32 => Ok(HostBuffer::I32(
+                    lit.to_vec::<i32>().map_err(|e| Error::runtime(e.to_string()))?,
+                    dims,
+                )),
+                other => Err(Error::runtime(format!("unsupported output dtype {other:?}"))),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Artifacts directory when built (`make artifacts`), else None and
+    /// the PJRT tests are skipped (CI runs them via the Makefile).
+    pub(crate) fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.txt").exists().then_some(dir)
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        let err = XlaService::start("/nonexistent/artifacts").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        let Some(dir) = artifacts_dir() else { return };
+        let svc = XlaService::start(dir).unwrap();
+        let err = svc.execute("nope", vec![]).unwrap_err();
+        assert!(err.to_string().contains("unknown artifact"), "{err}");
+    }
+
+    #[test]
+    fn cooc_artifact_round_trip() {
+        let Some(dir) = artifacts_dir() else { return };
+        let svc = XlaService::start(dir).unwrap();
+        // A = identity-ish block: transaction t has item t % 128.
+        let (t, i) = (256usize, 128usize);
+        let mut a = vec![0f32; t * i];
+        for row in 0..t {
+            a[row * i + (row % i)] = 1.0;
+        }
+        let out = svc
+            .execute(
+                "cooc_256x128",
+                vec![
+                    HostBuffer::F32(a.clone(), vec![t as i64, i as i64]),
+                    HostBuffer::F32(a, vec![t as i64, i as i64]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let c = out[0].as_f32().unwrap();
+        // Diagonal = 2 (each item appears twice in 256 rows), off-diag 0.
+        for x in 0..i {
+            for y in 0..i {
+                let want = if x == y { 2.0 } else { 0.0 };
+                assert_eq!(c[x * i + y], want, "({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn popcount_artifact_round_trip() {
+        let Some(dir) = artifacts_dir() else { return };
+        let svc = XlaService::start(dir).unwrap();
+        let (n, w) = (256usize, 64usize);
+        let a = vec![0xFFFF_FFFFu32; n * w];
+        let mut b = vec![0u32; n * w];
+        // Row r: r of 32 bits set in the first lane.
+        for (r, chunk) in b.chunks_mut(w).enumerate() {
+            let bits = (r % 33) as u32;
+            chunk[0] = if bits == 0 { 0 } else { u32::MAX >> (32 - bits) };
+        }
+        let out = svc
+            .execute(
+                "popcount_256x64",
+                vec![
+                    HostBuffer::U32(a, vec![n as i64, w as i64]),
+                    HostBuffer::U32(b, vec![n as i64, w as i64]),
+                ],
+            )
+            .unwrap();
+        let counts = out[0].as_i32().unwrap();
+        for (r, &c) in counts.iter().enumerate() {
+            assert_eq!(c as usize, r % 33, "row {r}");
+        }
+    }
+
+    #[test]
+    fn service_is_usable_from_many_threads() {
+        let Some(dir) = artifacts_dir() else { return };
+        let svc = std::sync::Arc::new(XlaService::start(dir).unwrap());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let svc = std::sync::Arc::clone(&svc);
+                std::thread::spawn(move || {
+                    let a = vec![1f32; 256 * 128];
+                    let out = svc
+                        .execute(
+                            "cooc_256x128",
+                            vec![
+                                HostBuffer::F32(a.clone(), vec![256, 128]),
+                                HostBuffer::F32(a, vec![256, 128]),
+                            ],
+                        )
+                        .unwrap();
+                    assert_eq!(out[0].as_f32().unwrap()[0], 256.0);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities: deterministic PRNG, summary statistics,
+//! timing helpers, and a miniature property-testing harness.
+//!
+//! The offline crate set has neither `rand` nor `proptest`, so this module
+//! provides the pieces the rest of the crate needs, built from scratch.
+
+pub mod prng;
+pub mod prop;
+pub mod stats;
+pub mod time;
+
+pub use prng::Rng;
+pub use stats::Summary;
+pub use time::Stopwatch;

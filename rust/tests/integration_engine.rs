@@ -1,0 +1,158 @@
+//! Engine semantics under randomized workloads + fault injection during
+//! real mining runs (lineage recovery end-to-end).
+
+use rdd_eclat::algorithms::{Algorithm, EclatV4};
+use rdd_eclat::data::Database;
+use rdd_eclat::engine::{ClusterContext, FaultInjector, ShuffleId};
+use rdd_eclat::fim::{sort_frequents, MinSup};
+use rdd_eclat::util::prng::Rng;
+use rdd_eclat::util::prop::{check, prop_assert_eq, Config};
+
+#[test]
+fn group_by_key_equals_reference_grouping() {
+    check(Config::default().cases(20).seed(1), |rng| {
+        let ctx = ClusterContext::builder().cores(rng.range(1, 5)).build();
+        let n = rng.range(0, 500);
+        let keys = rng.range(1, 20) as u64;
+        let pairs: Vec<(u64, u64)> = (0..n).map(|i| (rng.below(keys), i as u64)).collect();
+        let mut want: std::collections::HashMap<u64, Vec<u64>> = Default::default();
+        for (k, v) in &pairs {
+            want.entry(*k).or_default().push(*v);
+        }
+        let parts = rng.range(1, 8);
+        let reduces = rng.range(1, 6);
+        let mut got: Vec<(u64, Vec<u64>)> =
+            ctx.parallelize(pairs, parts).group_by_key(reduces).collect().unwrap();
+        for (_, vs) in &mut got {
+            vs.sort_unstable();
+        }
+        let mut want: Vec<(u64, Vec<u64>)> = want
+            .into_iter()
+            .map(|(k, mut v)| {
+                v.sort_unstable();
+                (k, v)
+            })
+            .collect();
+        want.sort();
+        got.sort();
+        prop_assert_eq(got, want, "groupByKey grouping")
+    });
+}
+
+#[test]
+fn reduce_by_key_equals_fold_under_any_partitioning() {
+    check(Config::default().cases(20).seed(2), |rng| {
+        let ctx = ClusterContext::builder().cores(rng.range(1, 4)).build();
+        let pairs: Vec<(u32, u64)> =
+            (0..rng.range(0, 400)).map(|_| (rng.below(15) as u32, rng.below(100))).collect();
+        let mut want: std::collections::HashMap<u32, u64> = Default::default();
+        for (k, v) in &pairs {
+            *want.entry(*k).or_default() += v;
+        }
+        let got: std::collections::HashMap<u32, u64> = ctx
+            .parallelize(pairs, rng.range(1, 9))
+            .reduce_by_key(rng.range(1, 5), |a, b| a + b)
+            .collect()
+            .unwrap()
+            .into_iter()
+            .collect();
+        prop_assert_eq(got, want, "reduceByKey sums")
+    });
+}
+
+#[test]
+fn repartition_and_coalesce_preserve_multiset() {
+    check(Config::default().cases(20).seed(3), |rng| {
+        let ctx = ClusterContext::builder().cores(2).build();
+        let data: Vec<u64> = (0..rng.range(0, 300)).map(|_| rng.below(1000)).collect();
+        let mut want = data.clone();
+        want.sort_unstable();
+        let rdd = ctx.parallelize(data, rng.range(1, 10));
+        let transformed = if rng.chance(0.5) {
+            rdd.repartition(rng.range(1, 12))
+        } else {
+            rdd.coalesce(rng.range(1, 12))
+        };
+        let mut got = transformed.collect().unwrap();
+        got.sort_unstable();
+        prop_assert_eq(got, want, "multiset preserved")
+    });
+}
+
+#[test]
+fn fault_injection_mid_mining_recovers_identical_results() {
+    // Mine, inject loss of every shuffle + all cached partitions, re-run
+    // the same lazily-defined pipeline: results must be identical.
+    let mut rng = Rng::new(44);
+    for case in 0..5 {
+        let rows: Vec<Vec<u32>> = (0..60)
+            .map(|_| (0..15u32).filter(|_| rng.chance(0.35)).collect())
+            .filter(|t: &Vec<u32>| !t.is_empty())
+            .collect();
+        let db = Database::from_rows(rows);
+        let ctx = ClusterContext::builder().cores(2).build();
+        let algo = EclatV4::default();
+        let mut first = algo.run_on(&ctx, &db, MinSup::count(3)).unwrap().frequents;
+        sort_frequents(&mut first);
+
+        // Kill everything the first run left behind.
+        let mut inj = FaultInjector::new(&ctx, case as u64);
+        for sid in 0..64 {
+            inj.lose_shuffle(ShuffleId(sid));
+        }
+        // A fresh run on the SAME context must rebuild all state.
+        let mut second = algo.run_on(&ctx, &db, MinSup::count(3)).unwrap().frequents;
+        sort_frequents(&mut second);
+        assert_eq!(first, second, "case {case}");
+    }
+}
+
+#[test]
+fn accumulators_see_every_partition_exactly_once_per_job() {
+    let ctx = ClusterContext::builder().cores(3).build();
+    let data: Vec<u32> = (0..1000).collect();
+    let rdd = ctx.parallelize(data, 7);
+    let acc = ctx.accumulator(0u64, |a, b| *a += b);
+    let task_acc = acc.clone();
+    rdd.map_partitions_with_index(move |_i, xs| {
+        task_acc.add(xs.len() as u64);
+        Vec::<()>::new()
+    })
+    .run()
+    .unwrap();
+    assert_eq!(acc.value(), 1000);
+}
+
+#[test]
+fn metrics_feed_simulator_with_sane_scaling() {
+    use rdd_eclat::engine::simcluster;
+    let ctx = ClusterContext::builder().cores(2).build();
+    let db = Database::from_rows(
+        (0..200u32).map(|i| vec![i % 7, 7 + i % 5, 12 + i % 3]).collect(),
+    );
+    ctx.metrics().reset();
+    EclatV4::default().run_on(&ctx, &db, MinSup::count(5)).unwrap();
+    let tasks = ctx.metrics().tasks();
+    assert!(!tasks.is_empty(), "mining recorded tasks");
+    let sweep = simcluster::sweep(&tasks, &[1, 2, 4, 8], std::time::Duration::ZERO);
+    for w in sweep.windows(2) {
+        assert!(
+            w[0].makespan >= w[1].makespan,
+            "makespan must not increase with cores: {sweep:?}"
+        );
+    }
+}
+
+#[test]
+fn zip_with_index_unique_dense_over_random_partitions() {
+    check(Config::default().cases(15).seed(5), |rng| {
+        let ctx = ClusterContext::builder().cores(2).build();
+        let n = rng.range(0, 200);
+        let data: Vec<u64> = (0..n as u64).collect();
+        let rdd = ctx.parallelize(data, rng.range(1, 9));
+        let idx: Vec<u64> = rdd.zip_with_index().unwrap().map(|(_, i)| i).collect().unwrap();
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        prop_assert_eq(sorted, (0..n as u64).collect::<Vec<_>>(), "dense indices")
+    });
+}

@@ -1,0 +1,67 @@
+//! End-to-end runtime integration: mining with the XLA (AOT PJRT)
+//! co-occurrence backend must match the native path exactly, on generated
+//! benchmark data. Tests no-op politely when `make artifacts` hasn't run
+//! (the Makefile orders artifacts before tests).
+
+use std::sync::Arc;
+
+use rdd_eclat::algorithms::{Algorithm, CoocStrategy, EclatOptions, EclatV4};
+use rdd_eclat::data::quest::{generate, QuestParams};
+use rdd_eclat::engine::ClusterContext;
+use rdd_eclat::fim::{sort_frequents, MinSup};
+use rdd_eclat::runtime::{artifacts_available, default_artifact_dir, XlaCooc, XlaService};
+
+fn service() -> Option<Arc<XlaService>> {
+    if !artifacts_available() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Arc::new(XlaService::start(default_artifact_dir()).expect("service")))
+}
+
+#[test]
+fn mining_with_xla_cooc_backend_matches_native() {
+    let Some(svc) = service() else { return };
+    let db = generate(&QuestParams::tid(8.0, 3.0, 3000, 200), 17);
+    let ctx = ClusterContext::builder().cores(2).build();
+
+    let native = EclatV4::default();
+    let mut want = native.run_on(&ctx, &db, MinSup::fraction(0.01)).unwrap().frequents;
+    sort_frequents(&mut want);
+
+    let xla = EclatV4::with_options(EclatOptions {
+        tri_matrix: true,
+        cooc: CoocStrategy::Provider(Arc::new(XlaCooc::new(svc))),
+        ..Default::default()
+    });
+    let mut got = xla.run_on(&ctx, &db, MinSup::fraction(0.01)).unwrap().frequents;
+    sort_frequents(&mut got);
+    assert_eq!(got, want);
+    assert!(!got.is_empty(), "workload actually mined something");
+}
+
+#[test]
+fn xla_service_survives_repeated_use_across_contexts() {
+    let Some(svc) = service() else { return };
+    // Several independent mining runs sharing one service (the deployment
+    // shape: one device service per process).
+    for seed in 0..3 {
+        let db = generate(&QuestParams::tid(6.0, 3.0, 1000, 150), seed);
+        let ctx = ClusterContext::builder().cores(2).build();
+        let algo = EclatV4::with_options(EclatOptions {
+            tri_matrix: true,
+            cooc: CoocStrategy::Provider(Arc::new(XlaCooc::new(Arc::clone(&svc)))),
+            ..Default::default()
+        });
+        let r = algo.run_on(&ctx, &db, MinSup::fraction(0.02)).unwrap();
+        assert!(!r.frequents.is_empty());
+    }
+}
+
+#[test]
+fn artifact_dir_override_via_env_is_respected() {
+    // Point at a bogus dir: the service must fail with the make-artifacts
+    // hint, proving the env knob is honored.
+    let err = XlaService::start("/definitely/not/here").unwrap_err();
+    assert!(err.to_string().contains("make artifacts"));
+}
