@@ -10,12 +10,10 @@
 //! cargo run --release --example clickstream
 //! ```
 
-use std::sync::Arc;
-
-use rdd_eclat::algorithms::{Algorithm, CoocStrategy, EclatOptions, EclatV2, EclatV5};
+use rdd_eclat::algorithms::{Algorithm, EclatOptions, EclatV2, EclatV5};
 use rdd_eclat::data::clickstream::{generate, ClickParams};
 use rdd_eclat::engine::ClusterContext;
-use rdd_eclat::fim::MinSup;
+use rdd_eclat::fim::{Database, MinSup};
 use rdd_eclat::util::time::fmt_duration;
 
 fn main() -> rdd_eclat::error::Result<()> {
@@ -57,26 +55,53 @@ fn main() -> rdd_eclat::error::Result<()> {
     assert_eq!(r.len(), r5.len(), "variants must agree");
 
     // Optional: the same mining with Phase-2 offloaded to the AOT XLA
-    // artifact through PJRT (A4 ablation path). Needs `make artifacts`.
-    if rdd_eclat::runtime::artifacts_available() {
-        let svc = Arc::new(rdd_eclat::runtime::XlaService::start(
-            rdd_eclat::runtime::default_artifact_dir(),
-        )?);
-        let opts = EclatOptions {
-            tri_matrix: true, // force the matrix on so the backend runs
-            cooc: CoocStrategy::Provider(Arc::new(rdd_eclat::runtime::XlaCooc::new(svc))),
-            ..Default::default()
-        };
-        let vx = EclatV5::with_options(opts);
-        let rx = vx.run_on(&ctx, &db, min_sup)?;
-        println!(
-            "eclatV5 (XLA cooc backend): {} itemsets in {}",
-            rx.len(),
-            fmt_duration(rx.wall)
-        );
-        assert_eq!(rx.len(), r5.len(), "XLA backend must agree");
-    } else {
+    // artifact through PJRT (A4 ablation path). Needs the `xla` cargo
+    // feature and `make artifacts`.
+    xla_demo(&ctx, &db, min_sup, r5.len())?;
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn xla_demo(
+    ctx: &ClusterContext,
+    db: &Database,
+    min_sup: MinSup,
+    baseline_len: usize,
+) -> rdd_eclat::error::Result<()> {
+    use std::sync::Arc;
+
+    use rdd_eclat::algorithms::CoocStrategy;
+
+    if !rdd_eclat::runtime::artifacts_available() {
         println!("(artifacts/ missing — run `make artifacts` to exercise the XLA backend)");
+        return Ok(());
     }
+    let svc = Arc::new(rdd_eclat::runtime::XlaService::start(
+        rdd_eclat::runtime::default_artifact_dir(),
+    )?);
+    let opts = EclatOptions {
+        tri_matrix: true, // force the matrix on so the backend runs
+        cooc: CoocStrategy::Provider(Arc::new(rdd_eclat::runtime::XlaCooc::new(svc))),
+        ..Default::default()
+    };
+    let vx = EclatV5::with_options(opts);
+    let rx = vx.run_on(ctx, db, min_sup)?;
+    println!(
+        "eclatV5 (XLA cooc backend): {} itemsets in {}",
+        rx.len(),
+        fmt_duration(rx.wall)
+    );
+    assert_eq!(rx.len(), baseline_len, "XLA backend must agree");
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_demo(
+    _ctx: &ClusterContext,
+    _db: &Database,
+    _min_sup: MinSup,
+    _baseline_len: usize,
+) -> rdd_eclat::error::Result<()> {
+    println!("(built without the `xla` feature — rebuild with `--features xla` to exercise the XLA backend)");
     Ok(())
 }

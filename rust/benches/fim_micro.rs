@@ -1,7 +1,15 @@
 //! Micro-benchmarks of the FIM hot paths (criterion-style, own harness):
 //! tidset vs bitmap intersection, triangular-matrix updates, bottom-up
 //! recursion, candidate counting. These are the knobs the §Perf pass
-//! tunes; EXPERIMENTS.md records before/after.
+//! tunes.
+//!
+//! Besides the CSV under `results/`, the run emits the perf-trajectory
+//! file `BENCH_fim.json` at the repository root (override the path with
+//! `BENCH_FIM_OUT`). Reproduce with:
+//!
+//! ```text
+//! cargo bench --bench fim_micro          # SCALE=paper for full samples
+//! ```
 
 use rdd_eclat::bench::{black_box, Bench, Report};
 use rdd_eclat::fim::{
@@ -118,4 +126,13 @@ fn main() {
 
     report.write_csv("bench_fim_micro.csv").expect("write csv");
     println!("\nwrote results/bench_fim_micro.csv");
+
+    // Perf trajectory: BENCH_fim.json at the repo root (cargo runs
+    // benches with the package dir as CWD, hence the `..`).
+    let out = std::env::var("BENCH_FIM_OUT").unwrap_or_else(|_| {
+        format!("{}/../BENCH_fim.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    let scale = std::env::var("SCALE").unwrap_or_else(|_| "paper".to_string());
+    report.write_json(&out, "fim_micro", &scale).expect("write BENCH_fim.json");
+    println!("wrote {out}");
 }

@@ -1,73 +1,92 @@
 //! Bench: native vs XLA (AOT PJRT) backends for the support-counting hot
 //! spots — the L1/runtime side of the A4 ablation, at several block
-//! sizes. Skips with a notice when `make artifacts` has not run.
+//! sizes. Skips with a notice when `make artifacts` has not run, and
+//! compiles to a notice-only stub without the `xla` cargo feature.
 
-use std::sync::Arc;
+#[cfg(feature = "xla")]
+mod real {
+    use std::sync::Arc;
 
-use rdd_eclat::algorithms::common::NativeCooc;
-use rdd_eclat::algorithms::TriMatrixProvider;
-use rdd_eclat::bench::{black_box, Bench, Report};
-use rdd_eclat::fim::TidBitmap;
-use rdd_eclat::runtime::{XlaCooc, XlaIntersect, XlaService};
-use rdd_eclat::util::prng::Rng;
+    use rdd_eclat::algorithms::common::NativeCooc;
+    use rdd_eclat::algorithms::TriMatrixProvider;
+    use rdd_eclat::bench::{black_box, Bench, Report};
+    use rdd_eclat::fim::TidBitmap;
+    use rdd_eclat::runtime::{XlaCooc, XlaIntersect, XlaService};
+    use rdd_eclat::util::prng::Rng;
 
+    pub fn main() {
+        if !rdd_eclat::runtime::artifacts_available() {
+            println!("artifacts/ missing — run `make artifacts`; skipping xla_backend bench");
+            return;
+        }
+        let bench = Bench::from_env();
+        let mut report = Report::new();
+        let svc =
+            Arc::new(XlaService::start(rdd_eclat::runtime::default_artifact_dir()).unwrap());
+        let mut rng = Rng::new(7);
+
+        // --- co-occurrence at three transaction-count scales ---
+        for &n_txns in &[512usize, 2048, 8192] {
+            let txns: Vec<Vec<u32>> = (0..n_txns)
+                .map(|_| {
+                    let mut t: Vec<u32> = (0..16).map(|_| rng.below(120) as u32).collect();
+                    t.sort_unstable();
+                    t.dedup();
+                    t
+                })
+                .collect();
+            let native = NativeCooc;
+            let xla = XlaCooc::new(Arc::clone(&svc));
+            report.add(
+                bench
+                    .try_run(format!("cooc/native/txns={n_txns}"), || native.compute(&txns, 119))
+                    .unwrap(),
+            );
+            report.add(
+                bench
+                    .try_run(format!("cooc/xla/txns={n_txns}"), || xla.compute(&txns, 119))
+                    .unwrap(),
+            );
+        }
+
+        // --- batched intersection at two batch sizes ---
+        let xi = XlaIntersect::new(svc);
+        for &batch in &[256usize, 2048] {
+            let universe = 2048;
+            let bitmaps: Vec<(TidBitmap, TidBitmap)> = (0..batch)
+                .map(|_| {
+                    let mk = |rng: &mut Rng| {
+                        TidBitmap::from_tids(
+                            universe,
+                            (0..universe as u32).filter(|_| rng.chance(0.15)),
+                        )
+                    };
+                    (mk(&mut rng), mk(&mut rng))
+                })
+                .collect();
+            let pairs: Vec<(&TidBitmap, &TidBitmap)> =
+                bitmaps.iter().map(|(a, b)| (a, b)).collect();
+            report.add(bench.run(format!("intersect/native/batch={batch}"), || {
+                black_box(pairs.iter().map(|(a, b)| a.and_count(b)).sum::<u32>())
+            }));
+            report.add(
+                bench
+                    .try_run(format!("intersect/xla/batch={batch}"), || xi.batch_supports(&pairs))
+                    .unwrap(),
+            );
+        }
+
+        report.write_csv("bench_xla_backend.csv").expect("write csv");
+        println!("\nwrote results/bench_xla_backend.csv");
+    }
+}
+
+#[cfg(feature = "xla")]
 fn main() {
-    if !rdd_eclat::runtime::artifacts_available() {
-        println!("artifacts/ missing — run `make artifacts`; skipping xla_backend bench");
-        return;
-    }
-    let bench = Bench::from_env();
-    let mut report = Report::new();
-    let svc = Arc::new(XlaService::start(rdd_eclat::runtime::default_artifact_dir()).unwrap());
-    let mut rng = Rng::new(7);
+    real::main();
+}
 
-    // --- co-occurrence at three transaction-count scales ---
-    for &n_txns in &[512usize, 2048, 8192] {
-        let txns: Vec<Vec<u32>> = (0..n_txns)
-            .map(|_| {
-                let mut t: Vec<u32> = (0..16).map(|_| rng.below(120) as u32).collect();
-                t.sort_unstable();
-                t.dedup();
-                t
-            })
-            .collect();
-        let native = NativeCooc;
-        let xla = XlaCooc::new(Arc::clone(&svc));
-        report.add(
-            bench
-                .try_run(format!("cooc/native/txns={n_txns}"), || native.compute(&txns, 119))
-                .unwrap(),
-        );
-        report.add(
-            bench
-                .try_run(format!("cooc/xla/txns={n_txns}"), || xla.compute(&txns, 119))
-                .unwrap(),
-        );
-    }
-
-    // --- batched intersection at two batch sizes ---
-    let xi = XlaIntersect::new(svc);
-    for &batch in &[256usize, 2048] {
-        let universe = 2048;
-        let bitmaps: Vec<(TidBitmap, TidBitmap)> = (0..batch)
-            .map(|_| {
-                let mk = |rng: &mut Rng| {
-                    TidBitmap::from_tids(universe, (0..universe as u32).filter(|_| rng.chance(0.15)))
-                };
-                (mk(&mut rng), mk(&mut rng))
-            })
-            .collect();
-        let pairs: Vec<(&TidBitmap, &TidBitmap)> = bitmaps.iter().map(|(a, b)| (a, b)).collect();
-        report.add(bench.run(format!("intersect/native/batch={batch}"), || {
-            black_box(pairs.iter().map(|(a, b)| a.and_count(b)).sum::<u32>())
-        }));
-        report.add(
-            bench
-                .try_run(format!("intersect/xla/batch={batch}"), || xi.batch_supports(&pairs))
-                .unwrap(),
-        );
-    }
-
-    report.write_csv("bench_xla_backend.csv").expect("write csv");
-    println!("\nwrote results/bench_xla_backend.csv");
+#[cfg(not(feature = "xla"))]
+fn main() {
+    println!("xla_backend bench requires the `xla` feature — rerun with `cargo bench --features xla`");
 }

@@ -56,22 +56,40 @@ pub fn phase1_wordcount(
 }
 
 /// Phase-1 of EclatV1 (Algorithm 2): build `(item, tidset)` via
-/// `flatMapToPair` + `groupByKey` over an *unpartitioned* database (tids
-/// are assigned inside the single partition), filter by support, collect
-/// and sort ascending by support. Returns the vertical list.
+/// `flatMapToPair` + `groupByKey`, filter by support, collect and sort
+/// ascending by support. Returns the vertical list.
+///
+/// The paper collapses the database to **one** partition so tids stay
+/// globally consistent — its acknowledged scalability bottleneck. Here
+/// the same global tid assignment is obtained over the full
+/// `default_parallelism` partitioning: one cheap sizing job yields the
+/// per-partition element counts, their prefix sums become per-partition
+/// tid offsets (the `zipWithIndex` construction), and every partition
+/// then emits `(item, offset + local index)` pairs in parallel. The
+/// resulting vertical database is identical to the single-partition
+/// build.
 pub fn phase1_group_by_key(
     ctx: &ClusterContext,
     db: &Database,
     min_sup: u32,
 ) -> Result<Vec<(Item, Tidset)>> {
-    // One partition => tids are globally consistent (paper's rationale).
-    let transactions = transactions_rdd(ctx, db, 1);
     let par = ctx.default_parallelism();
-    let pairs: Rdd<(Item, Tid)> = transactions.map_partitions_with_index(|_idx, txns| {
+    let transactions = transactions_rdd(ctx, db, par);
+    // Prefix sums of partition sizes -> globally consistent tid offsets.
+    let sizes = transactions.partition_sizes()?;
+    let mut offsets: Vec<Tid> = vec![0; sizes.len()];
+    let mut acc: Tid = 0;
+    for (i, s) in sizes.iter().enumerate() {
+        offsets[i] = acc;
+        acc += *s as Tid;
+    }
+    let pairs: Rdd<(Item, Tid)> = transactions.map_partitions_with_index(move |idx, txns| {
+        let base = offsets[idx];
         let mut out = Vec::new();
-        for (tid, t) in txns.into_iter().enumerate() {
+        for (local, t) in txns.into_iter().enumerate() {
+            let tid = base + local as Tid;
             for item in t {
-                out.push((item, tid as Tid));
+                out.push((item, tid));
             }
         }
         out

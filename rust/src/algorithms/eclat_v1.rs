@@ -1,11 +1,13 @@
 //! EclatV1 — the first RDD-Eclat variant (paper §4.1, Algorithms 2–4).
 //!
 //! * **Phase-1**: `(item, tidset)` pairs via `flatMapToPair` +
-//!   `groupByKey` over the unpartitioned database; filter by `min_sup`;
+//!   `groupByKey` over the partitioned database (per-partition tid
+//!   offsets from prefix sums keep tids globally consistent — see
+//!   [`super::common::phase1_group_by_key`]); filter by `min_sup`;
 //!   collect and sort ascending by support.
-//! * **Phase-2** (optional, `triMatrixMode`): repartition the raw
-//!   transactions to the default parallelism and accumulate the
-//!   triangular matrix of candidate-2-itemset counts.
+//! * **Phase-2** (optional, `triMatrixMode`): accumulate the triangular
+//!   matrix of candidate-2-itemset counts over the raw transactions at
+//!   the default parallelism.
 //! * **Phase-3**: build 1-prefix equivalence classes on the driver
 //!   (pruned by the matrix), `partitionBy` the default `(n−1)`
 //!   partitioner, and mine each class with the bottom-up recursion.
@@ -54,7 +56,7 @@ impl Algorithm for EclatV1 {
 
         // Phase-2 (Algorithm 3) — on the *raw* transactions.
         let tri = if self.options.tri_matrix {
-            let txns = transactions_rdd(ctx, db, 1).repartition(ctx.default_parallelism());
+            let txns = transactions_rdd(ctx, db, ctx.default_parallelism());
             let max_item = db.stats().max_item;
             Some(phase2_trimatrix(ctx, &txns, max_item, &self.options.cooc)?)
         } else {

@@ -141,6 +141,61 @@ impl Report {
         std::fs::write(&path, self.to_csv())?;
         Ok(path)
     }
+
+    /// Serialize as a JSON document (no serde offline; the measurement
+    /// schema is flat enough to emit by hand). `bench` names the suite,
+    /// `scale` records the `SCALE` setting the numbers were taken at, so
+    /// trajectory diffs compare like with like.
+    pub fn to_json(&self, bench: &str, scale: &str) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": {},\n", json_str(bench)));
+        out.push_str(&format!("  \"scale\": {},\n", json_str(scale)));
+        out.push_str("  \"results\": [\n");
+        for (i, m) in self.rows.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": {}, \"mean_s\": {:.6}, \"std_s\": {:.6}, \"min_s\": {:.6}, \"max_s\": {:.6}, \"n\": {}}}{}\n",
+                json_str(&m.name),
+                m.secs.mean,
+                m.secs.std_dev,
+                m.secs.min,
+                m.secs.max,
+                m.secs.n,
+                if i + 1 < self.rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON trajectory file at an explicit path.
+    pub fn write_json(&self, path: &str, bench: &str, scale: &str) -> crate::error::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json(bench, scale))?;
+        Ok(())
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
 }
 
 #[cfg(test)]
@@ -174,6 +229,34 @@ mod tests {
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("name,mean_s"));
         assert!(lines[1].starts_with("a/b,1.5"));
+    }
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let mut r = Report::new();
+        r.add(Measurement { name: "a\"b/c".into(), secs: Summary::of(&[1.0, 3.0]) });
+        r.add(Measurement { name: "plain".into(), secs: Summary::of(&[2.0]) });
+        let json = r.to_json("fim_micro", "quick");
+        assert!(json.contains("\"bench\": \"fim_micro\""), "{json}");
+        assert!(json.contains("\"scale\": \"quick\""), "{json}");
+        assert!(json.contains("\"a\\\"b/c\""), "escaped name: {json}");
+        assert!(json.contains("\"mean_s\": 2.000000"), "{json}");
+        // Exactly one comma between the two result rows, none trailing.
+        assert_eq!(json.matches("},\n").count(), 1, "{json}");
+        assert!(!json.contains(",\n  ]"), "no trailing comma: {json}");
+    }
+
+    #[test]
+    fn write_json_roundtrip() {
+        let dir = std::env::temp_dir().join("rdd_eclat_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_fim.json");
+        let mut r = Report::new();
+        r.add(Measurement { name: "x".into(), secs: Summary::of(&[0.5]) });
+        r.write_json(path.to_str().unwrap(), "fim_micro", "paper").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('{') && text.trim_end().ends_with('}'));
+        assert!(text.contains("\"n\": 1"));
     }
 
     #[test]

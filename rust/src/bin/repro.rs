@@ -111,16 +111,31 @@ fn config_from_args(args: &rdd_eclat::cli::Args) -> Result<EclatConfig> {
     Ok(cfg)
 }
 
+/// The `--backend xla` co-occurrence strategy (feature-gated).
+#[cfg(feature = "xla")]
+fn xla_cooc_strategy() -> Result<CoocStrategy> {
+    let svc = std::sync::Arc::new(rdd_eclat::runtime::XlaService::start(
+        rdd_eclat::runtime::default_artifact_dir(),
+    )?);
+    Ok(CoocStrategy::Provider(std::sync::Arc::new(rdd_eclat::runtime::XlaCooc::new(svc))))
+}
+
+#[cfg(not(feature = "xla"))]
+fn xla_cooc_strategy() -> Result<CoocStrategy> {
+    Err(Error::Usage(
+        "this binary was built without the `xla` feature; rebuild with \
+         `cargo build --release --features xla` to use --backend xla"
+            .into(),
+    ))
+}
+
 /// Build the algorithm named in the config, applying options.
 fn build_algorithm(cfg: &EclatConfig) -> Result<Box<dyn rdd_eclat::algorithms::Algorithm>> {
     use rdd_eclat::algorithms::{EclatV1, EclatV2, EclatV3, EclatV4, EclatV5};
     // Per-dataset default for triMatrixMode (the paper disables it on BMS).
     let tri_default = DatasetSpec::parse(&cfg.dataset).map(|s| s.tri_matrix_mode()).unwrap_or(true);
     let cooc = if cfg.backend == "xla" {
-        let svc = std::sync::Arc::new(rdd_eclat::runtime::XlaService::start(
-            rdd_eclat::runtime::default_artifact_dir(),
-        )?);
-        CoocStrategy::Provider(std::sync::Arc::new(rdd_eclat::runtime::XlaCooc::new(svc)))
+        xla_cooc_strategy()?
     } else {
         CoocStrategy::Accumulator
     };

@@ -90,7 +90,7 @@ pub fn generate(params: &QuestParams, seed: u64) -> Database {
             }
             // Quest inserts the (corrupted) pattern even if it overshoots
             // the transaction size, half the time.
-            if t.len() + keep > want && t.len() > 0 && rng.chance(0.5) {
+            if t.len() + keep > want && !t.is_empty() && rng.chance(0.5) {
                 break;
             }
             t.extend_from_slice(&p[..keep]);

@@ -5,8 +5,6 @@
 //! Scale control: `SCALE=quick` (fast sanity sweep on truncated datasets,
 //! used by `cargo bench` defaults) vs `SCALE=paper` (full Table 2 sizes).
 
-use std::sync::Arc;
-
 use crate::algorithms::{
     Algorithm, EclatOptions, EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, RddApriori,
 };
@@ -312,8 +310,12 @@ pub fn run_a3(fx: &FigureCtx) -> Result<Report> {
 
 /// A4: native vs XLA (AOT PJRT artifact) backends for the Phase-2
 /// co-occurrence and batched tidset intersection. Skips (with a notice)
-/// when `make artifacts` has not run.
+/// when `make artifacts` has not run, or when the crate was built
+/// without the `xla` feature.
+#[cfg(feature = "xla")]
 pub fn run_a4(fx: &FigureCtx) -> Result<Report> {
+    use std::sync::Arc;
+
     use crate::algorithms::common::NativeCooc;
     use crate::algorithms::TriMatrixProvider;
     use crate::fim::TidBitmap;
@@ -369,6 +371,14 @@ pub fn run_a4(fx: &FigureCtx) -> Result<Report> {
 
     report.write_csv("a4_backend.csv")?;
     Ok(report)
+}
+
+/// A4 placeholder for default builds: the XLA backend is feature-gated.
+#[cfg(not(feature = "xla"))]
+pub fn run_a4(_fx: &FigureCtx) -> Result<Report> {
+    println!("\n== A4: native vs XLA backend ==");
+    println!("  built without the `xla` feature — rebuild with `--features xla`; skipping A4");
+    Ok(Report::new())
 }
 
 /// The seven min-sup figures in paper order.

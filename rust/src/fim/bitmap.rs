@@ -74,32 +74,27 @@ impl TidBitmap {
 
     /// Fused materialize + count of `self ∩ other` — one pass over the
     /// words (the bottom-up search's hot call; §Perf iteration 3).
+    ///
+    /// Mismatched universes use pad-with-zero semantics (the shorter
+    /// word vector behaves as if extended with zero words), matching
+    /// [`TidBitmap::and_count`] / [`TidBitmap::andnot_count`]. The
+    /// result covers the larger universe.
     pub fn and_counted(&self, other: &TidBitmap) -> (TidBitmap, u32) {
-        debug_assert_eq!(self.universe, other.universe);
+        let common = self.words.len().min(other.words.len());
+        let mut words = vec![0u64; self.words.len().max(other.words.len())];
         let mut count = 0u32;
-        let words = self
-            .words
-            .iter()
-            .zip(&other.words)
-            .map(|(a, b)| {
-                let w = a & b;
-                count += w.count_ones();
-                w
-            })
-            .collect();
-        (TidBitmap { words, universe: self.universe }, count)
+        for (i, w) in words.iter_mut().enumerate().take(common) {
+            let v = self.words[i] & other.words[i];
+            count += v.count_ones();
+            *w = v;
+        }
+        (TidBitmap { words, universe: self.universe.max(other.universe) }, count)
     }
 
-    /// Materialize `self ∩ other` (same universe).
+    /// Materialize `self ∩ other`. Mismatched universes pad the shorter
+    /// side with zero words (see [`TidBitmap::and_counted`]).
     pub fn and(&self, other: &TidBitmap) -> TidBitmap {
-        debug_assert_eq!(self.universe, other.universe);
-        let words = self
-            .words
-            .iter()
-            .zip(&other.words)
-            .map(|(a, b)| a & b)
-            .collect();
-        TidBitmap { words, universe: self.universe }
+        self.and_counted(other).0
     }
 
     /// `|self \ other|` — powering the diffset variant of Eclat.
@@ -112,14 +107,15 @@ impl TidBitmap {
         acc
     }
 
-    /// Materialize `self \ other`.
+    /// Materialize `self \ other`. Missing `other` words count as zero
+    /// (pad-with-zero, as in [`TidBitmap::andnot_count`]); the result is
+    /// a subset of `self`, so it keeps `self`'s universe.
     pub fn andnot(&self, other: &TidBitmap) -> TidBitmap {
-        debug_assert_eq!(self.universe, other.universe);
         let words = self
             .words
             .iter()
-            .zip(&other.words)
-            .map(|(a, b)| a & !b)
+            .enumerate()
+            .map(|(i, w)| w & !other.words.get(i).copied().unwrap_or(0))
             .collect();
         TidBitmap { words, universe: self.universe }
     }
@@ -203,6 +199,35 @@ mod tests {
         assert_eq!(lanes, vec![1, 2, 1, 0]);
         // Padding beyond words:
         assert_eq!(bm.to_u32_lanes(6), vec![1, 2, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn mismatched_universes_pad_with_zero() {
+        // a covers 0..70 (two words), b covers 0..200 (four words): the
+        // old `zip`-based and/and_counted silently truncated b's view of
+        // a to two words — consistent here — but dropped a's view when
+        // called the other way around only by luck of zip's min-length
+        // semantics. All six ops must agree with explicit set math.
+        let a = TidBitmap::from_tids(70, [0u32, 5, 63, 64, 69]);
+        let b = TidBitmap::from_tids(200, [5u32, 64, 128, 199]);
+        let expect_and: Vec<Tid> = vec![5, 64];
+
+        for (x, y) in [(&a, &b), (&b, &a)] {
+            let (m, c) = x.and_counted(y);
+            assert_eq!(c, 2, "and_counted count");
+            assert_eq!(m.iter().collect::<Vec<_>>(), expect_and, "and_counted words");
+            assert_eq!(m.universe(), 200, "result covers the larger universe");
+            assert_eq!(m.words().len(), 4, "result padded to the longer word vec");
+            assert_eq!(x.and(y).iter().collect::<Vec<_>>(), expect_and);
+            assert_eq!(x.and_count(y), 2);
+        }
+        // Difference is relative to the left side's universe.
+        assert_eq!(a.andnot_count(&b), 3);
+        assert_eq!(a.andnot(&b).iter().collect::<Vec<_>>(), vec![0, 63, 69]);
+        assert_eq!(b.andnot_count(&a), 2);
+        assert_eq!(b.andnot(&a).iter().collect::<Vec<_>>(), vec![128, 199]);
+        // Set bits beyond the shorter side's words survive andnot.
+        assert!(b.andnot(&a).contains(199));
     }
 
     #[test]

@@ -62,10 +62,37 @@ fn gallop_intersect(small: &[Tid], large: &[Tid]) -> Tidset {
     out
 }
 
-/// `|a ∩ b|` without materializing (support counting).
+/// Count-only galloping intersection: binary-search the smaller side
+/// into the larger without materializing the result — skewed support
+/// counting allocates nothing.
+fn gallop_intersect_count(small: &[Tid], large: &[Tid]) -> u32 {
+    let mut n = 0u32;
+    let mut lo = 0usize;
+    for &t in small {
+        match large[lo..].binary_search(&t) {
+            Ok(pos) => {
+                n += 1;
+                lo += pos + 1;
+            }
+            Err(pos) => {
+                lo += pos;
+            }
+        }
+        if lo >= large.len() {
+            break;
+        }
+    }
+    n
+}
+
+/// `|a ∩ b|` without materializing (support counting). Skewed sizes take
+/// the count-only galloping path.
 pub fn intersect_count(a: &[Tid], b: &[Tid]) -> u32 {
-    if a.len() * 8 < b.len() || b.len() * 8 < a.len() {
-        return intersect(a, b).len() as u32;
+    if a.len() * 8 < b.len() {
+        return gallop_intersect_count(a, b);
+    }
+    if b.len() * 8 < a.len() {
+        return gallop_intersect_count(b, a);
     }
     let (mut i, mut j, mut n) = (0, 0, 0u32);
     while i < a.len() && j < b.len() {
@@ -178,10 +205,19 @@ mod tests {
 
     #[test]
     fn random_against_hashsets() {
+        // Case 0..99: similar sizes (linear path); 100..199: heavily
+        // skewed sizes so both galloping paths (materializing and
+        // count-only) are exercised and must agree with the linear walk.
         let mut rng = Rng::new(9);
-        for _ in 0..100 {
-            let mut a: Vec<u32> = (0..rng.range(0, 80)).map(|_| rng.below(100) as u32).collect();
-            let mut b: Vec<u32> = (0..rng.range(0, 80)).map(|_| rng.below(100) as u32).collect();
+        for case in 0..200 {
+            let skewed = case >= 100;
+            let (n_a, n_b, universe) = if skewed {
+                (rng.range(0, 6), rng.range(100, 300), 2000u64)
+            } else {
+                (rng.range(0, 80), rng.range(0, 80), 100u64)
+            };
+            let mut a: Vec<u32> = (0..n_a).map(|_| rng.below(universe) as u32).collect();
+            let mut b: Vec<u32> = (0..n_b).map(|_| rng.below(universe) as u32).collect();
             a.sort_unstable();
             a.dedup();
             b.sort_unstable();
@@ -190,11 +226,14 @@ mod tests {
             let sb: std::collections::HashSet<_> = b.iter().copied().collect();
             let mut want: Vec<u32> = sa.intersection(&sb).copied().collect();
             want.sort_unstable();
-            assert_eq!(intersect(&a, &b), want);
-            assert_eq!(intersect_count(&a, &b) as usize, want.len());
+            assert_eq!(intersect(&a, &b), want, "case {case}");
+            assert_eq!(intersect(&b, &a), want, "case {case} swapped");
+            // Count-only path (galloping when skewed) == linear walk.
+            assert_eq!(intersect_count(&a, &b) as usize, want.len(), "case {case}");
+            assert_eq!(intersect_count(&b, &a) as usize, want.len(), "case {case} swapped");
             let mut want_diff: Vec<u32> = sa.difference(&sb).copied().collect();
             want_diff.sort_unstable();
-            assert_eq!(difference(&a, &b), want_diff);
+            assert_eq!(difference(&a, &b), want_diff, "case {case}");
         }
     }
 

@@ -2,13 +2,23 @@
 //! `python/compile/aot.py` produced (`make artifacts`), compiles them once
 //! on a dedicated service thread via the `xla` crate's CPU PJRT client,
 //! and executes them from the mining hot path. Python never runs here.
+//!
+//! The whole backend sits behind the default-off `xla` cargo feature —
+//! only the artifact-path helpers below are always available, so the
+//! default build carries no `xla`-crate dependency.
 
+#[cfg(feature = "xla")]
 pub mod cooc;
+#[cfg(feature = "xla")]
 pub mod intersect;
+#[cfg(feature = "xla")]
 pub mod service;
 
+#[cfg(feature = "xla")]
 pub use cooc::XlaCooc;
+#[cfg(feature = "xla")]
 pub use intersect::XlaIntersect;
+#[cfg(feature = "xla")]
 pub use service::{HostBuffer, XlaService};
 
 use std::path::PathBuf;

@@ -47,7 +47,9 @@ fn all_algorithms_agree_on_random_databases() {
     ];
     check(Config::default().cases(25).seed(0xA11), |rng| {
         let db = random_db(rng);
-        let min_sup = MinSup::count(rng.range(1, 1 + db.len() / 3).max(1) as u32);
+        // `2 +` keeps the range non-empty even when filtering left the
+        // database with fewer than three transactions.
+        let min_sup = MinSup::count(rng.range(1, 2 + db.len() / 3) as u32);
         let want = mined(&SeqApriori, &ctx, &db, min_sup);
         for algo in &algos {
             let got = mined(algo.as_ref(), &ctx, &db, min_sup);
@@ -87,6 +89,9 @@ fn fraction_thresholds_match_counts() {
     for _ in 0..5 {
         let db = random_db(&mut rng);
         let n = db.len();
+        if n < 2 {
+            continue; // fraction thresholds need a non-trivial db
+        }
         let count = rng.range(1, 1 + n / 2).max(1) as u32;
         let frac = count as f64 / n as f64;
         let a = mined(&EclatV5::default(), &ctx, &db, MinSup::count(count));
@@ -194,5 +199,97 @@ fn empty_and_degenerate_databases() {
     for algo in &algos {
         let r = algo.run_on(&ctx, &db, MinSup::count(2)).unwrap();
         assert!(r.is_empty(), "{}", algo.name());
+    }
+}
+
+/// Shared degenerate-input hardening: an empty database, `min_sup`
+/// larger than `|DB|`, and vertical lists with zero or one frequent item
+/// must not panic in any of the five variants (these shapes reach
+/// `DefaultClassPartitioner::for_items(0|1)` and
+/// `mine_equivalence_classes` with an empty/singleton vertical list).
+#[test]
+fn degenerate_inputs_never_panic_across_all_variants() {
+    let ctx = ClusterContext::builder().cores(2).build();
+    let variants: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(EclatV1::default()),
+        Box::new(EclatV2::default()),
+        Box::new(EclatV3::default()),
+        Box::new(EclatV4::default()),
+        Box::new(EclatV5::default()),
+    ];
+    let cases: Vec<(&str, Database, u32)> = vec![
+        ("empty db", Database::from_rows(vec![]), 1),
+        ("empty db, high min_sup", Database::from_rows(vec![]), 50),
+        (
+            "min_sup > |DB|",
+            Database::from_rows(vec![vec![1, 2], vec![1, 2], vec![2, 3]]),
+            4,
+        ),
+        (
+            "exactly one frequent item",
+            Database::from_rows(vec![vec![1, 2], vec![1, 3], vec![1, 4]]),
+            3,
+        ),
+        (
+            "one frequent item, others on the edge",
+            Database::from_rows(vec![vec![5], vec![5], vec![6]]),
+            2,
+        ),
+        ("single txn, single item", Database::from_rows(vec![vec![9]]), 1),
+    ];
+    for (label, db, min_sup) in &cases {
+        for algo in &variants {
+            let r = algo
+                .run_on(&ctx, db, MinSup::count(*min_sup))
+                .unwrap_or_else(|e| panic!("{} on {label}: {e}", algo.name()));
+            // Cross-check against the sequential oracle.
+            let mut want = rdd_eclat::fim::apriori::apriori(db, *min_sup);
+            let mut got = r.frequents;
+            sort_frequents(&mut want);
+            sort_frequents(&mut got);
+            assert_eq!(got, want, "{} on {label}", algo.name());
+        }
+    }
+    // The degenerate shapes also hit the partitioner/miner entry points
+    // directly: zero and one frequent items must stay in-range.
+    use rdd_eclat::algorithms::partitioners::DefaultClassPartitioner;
+    use rdd_eclat::engine::Partitioner;
+    for n in [0usize, 1, 2] {
+        let p = DefaultClassPartitioner::for_items(n);
+        assert!(p.num_partitions() >= 1, "for_items({n})");
+        assert!(p.partition(&0) < p.num_partitions(), "for_items({n})");
+    }
+}
+
+/// The distributed Phase-1 property (tentpole regression): EclatV1 over
+/// 1, 2, 4 and 7 partitions yields byte-identical sorted frequents to
+/// the sequential oracle on QUEST-generated data, across min_sup sweeps.
+#[test]
+fn eclat_v1_partition_counts_match_seq_eclat_on_quest_data() {
+    use rdd_eclat::data::quest::{generate, QuestParams};
+
+    let mut seeds = Rng::new(0x5EED_F1);
+    for case in 0..3 {
+        let seed = seeds.next_u64();
+        let db = generate(&QuestParams::tid(8.0, 3.0, 400, 60), seed);
+        for min_sup in [2u32, 8, 40] {
+            let mut want = SeqEclat::mine(&db, MinSup::count(min_sup));
+            sort_frequents(&mut want);
+            for parts in [1usize, 2, 4, 7] {
+                let ctx = ClusterContext::builder()
+                    .cores(2)
+                    .default_parallelism(parts)
+                    .build();
+                let mut got = EclatV1::default()
+                    .run_on(&ctx, &db, MinSup::count(min_sup))
+                    .unwrap()
+                    .frequents;
+                sort_frequents(&mut got);
+                assert_eq!(
+                    got, want,
+                    "case {case} seed {seed:#x} min_sup {min_sup} parts {parts}"
+                );
+            }
+        }
     }
 }

@@ -1,7 +1,9 @@
 //! End-to-end runtime integration: mining with the XLA (AOT PJRT)
 //! co-occurrence backend must match the native path exactly, on generated
 //! benchmark data. Tests no-op politely when `make artifacts` hasn't run
-//! (the Makefile orders artifacts before tests).
+//! (the Makefile orders artifacts before tests). The whole file is gated
+//! on the `xla` cargo feature.
+#![cfg(feature = "xla")]
 
 use std::sync::Arc;
 
