@@ -1,0 +1,96 @@
+//! Streaming micro-benchmark: steady-state per-batch mining cost of the
+//! sliding-window clickstream workload, incremental vs from-scratch.
+//!
+//! Both modes consume the same pre-generated drifting clickstream. The
+//! window is filled outside measurement; each sample then ingests one
+//! micro-batch (slide 1), so the measured unit is exactly "one window
+//! emission". Besides the CSV under `results/`, the run emits the
+//! perf-trajectory file `BENCH_stream.json` at the repository root
+//! (override with `BENCH_STREAM_OUT`). Reproduce with:
+//!
+//! ```text
+//! cargo bench --bench stream_micro       # SCALE=quick for a fast pass
+//! ```
+
+use rdd_eclat::bench::{black_box, Bench, Report};
+use rdd_eclat::data::clickstream::{generate_range, ClickParams};
+use rdd_eclat::engine::ClusterContext;
+use rdd_eclat::fim::MinSup;
+use rdd_eclat::stream::{MineMode, StreamConfig, StreamingMiner, WindowSpec};
+
+struct Workload {
+    batch: usize,
+    window: usize,
+    min_sup: u32,
+}
+
+fn main() {
+    let bench = Bench::from_env();
+    let scale = std::env::var("SCALE").unwrap_or_else(|_| "paper".to_string());
+    let w = if scale == "quick" {
+        Workload { batch: 100, window: 10, min_sup: 8 }
+    } else {
+        Workload { batch: 250, window: 40, min_sup: 30 }
+    };
+    // Per-mode batch budget: window fill + warmup + samples + slack.
+    let per_mode = w.window + bench.warmup + bench.samples + 4;
+    let params = ClickParams { sessions: per_mode * w.batch, ..ClickParams::drift() };
+    let batches: Vec<Vec<Vec<u32>>> = (0..per_mode)
+        .map(|b| generate_range(&params, 2024, b * w.batch, w.batch))
+        .collect();
+    println!(
+        "sliding clickstream: {} txns/batch, window {} batches, min_sup {} ({} items)",
+        w.batch, w.window, w.min_sup, params.items
+    );
+
+    let mut report = Report::new();
+    let mut final_counts = Vec::new();
+    for (mode, name) in [
+        (MineMode::Incremental, "stream/incremental/per_batch"),
+        (MineMode::FromScratch, "stream/from_scratch/per_batch"),
+    ] {
+        let ctx = ClusterContext::builder().build();
+        let cfg = StreamConfig::new(
+            WindowSpec::sliding(w.window, 1),
+            MinSup::count(w.min_sup),
+        )
+        .mode(mode)
+        .min_conf(0.9);
+        let mut miner = StreamingMiner::new(ctx, cfg);
+        // Fill the window outside measurement so every sample sees the
+        // steady state: full window, one batch in, one batch out.
+        let mut feed = batches.iter().cloned();
+        for _ in 0..w.window {
+            let _ = miner.push_batch(feed.next().expect("fill batches")).expect("push");
+        }
+        let mut last_len = 0usize;
+        report.add(bench.run(name, || {
+            let batch = feed.next().expect("measured batches pre-generated");
+            let snap = miner.push_batch(batch).expect("push").expect("slide 1 emits every batch");
+            last_len = snap.frequents.len();
+            black_box(snap.frequents.len())
+        }));
+        final_counts.push((name, miner.window_txns(), last_len));
+    }
+
+    // Both modes consumed the identical stream prefix; their final
+    // windows — and therefore itemset counts — must agree.
+    assert_eq!(final_counts[0].1, final_counts[1].1, "window sizes diverged");
+    assert_eq!(
+        final_counts[0].2, final_counts[1].2,
+        "incremental and from-scratch disagree on the final window"
+    );
+    let speedup = report.rows()[1].mean() / report.rows()[0].mean().max(1e-12);
+    println!("\nincremental speedup over from-scratch: {speedup:.2}x per batch");
+
+    report.write_csv("bench_stream_micro.csv").expect("write csv");
+    println!("wrote results/bench_stream_micro.csv");
+
+    // Perf trajectory: BENCH_stream.json at the repo root (cargo runs
+    // benches with the package dir as CWD, hence the `..`).
+    let out = std::env::var("BENCH_STREAM_OUT").unwrap_or_else(|_| {
+        format!("{}/../BENCH_stream.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    report.write_json(&out, "stream_micro", &scale).expect("write BENCH_stream.json");
+    println!("wrote {out}");
+}

@@ -3,6 +3,7 @@
 //! plus CSV/markdown reporting used by every bench target and the figure
 //! harness.
 
+use crate::util::json::json_str;
 use crate::util::{Stopwatch, Summary};
 
 /// Harness configuration.
@@ -177,25 +178,6 @@ impl Report {
         std::fs::write(path, self.to_json(bench, scale))?;
         Ok(())
     }
-}
-
-/// Minimal JSON string escaping (quotes, backslashes, control chars).
-fn json_str(s: &str) -> String {
-    let mut out = String::with_capacity(s.len() + 2);
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\t' => out.push_str("\\t"),
-            '\r' => out.push_str("\\r"),
-            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
-            c => out.push(c),
-        }
-    }
-    out.push('"');
-    out
 }
 
 #[cfg(test)]

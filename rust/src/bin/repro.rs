@@ -7,16 +7,22 @@
 //! repro run      --config experiment.toml
 //! repro generate --dataset chess --data-dir datasets
 //! repro datasets
-//! repro rules    --dataset chess --min-sup 0.9 --min-conf 0.95
+//! repro rules    --dataset chess --min-sup 0.9 --min-conf 0.95 --json rules.json
+//! repro stream   --batch 500 --window 20 --slide 1 --min-sup 0.01
 //! ```
 
 use rdd_eclat::algorithms::{seq::by_name, CoocStrategy, EclatOptions};
 use rdd_eclat::cli::{App, Command};
 use rdd_eclat::conf::EclatConfig;
+use rdd_eclat::data::clickstream::ClickParams;
 use rdd_eclat::data::{self, DatasetSpec, TABLE2};
 use rdd_eclat::engine::ClusterContext;
 use rdd_eclat::error::{Error, Result};
-use rdd_eclat::fim::{generate_rules, sort_frequents};
+use rdd_eclat::fim::{generate_rules, rules_to_json, sort_frequents};
+use rdd_eclat::stream::{
+    BatchSource, ClickstreamSource, MineMode, Paced, ReplaySource, StreamConfig, StreamingMiner,
+    WindowSpec,
+};
 use rdd_eclat::util::time::fmt_duration;
 
 fn app() -> App {
@@ -47,7 +53,24 @@ fn app() -> App {
                 .opt("min-sup", "fraction or count")
                 .opt("min-conf", "minimum confidence (default 0.8)")
                 .opt("top", "print at most N rules (default 20)")
+                .opt("json", "also write all rules as JSON to this path")
                 .opt("data-dir", "dataset cache dir"),
+        )
+        .command(
+            Command::new("stream", "micro-batch sliding-window mining (DStream-style)")
+                .opt("dataset", "Table 2 name or FIMI path to replay (default: drifting clickstream)")
+                .opt("batch", "transactions per micro-batch (default 500)")
+                .opt("window", "window length in batches (default 20)")
+                .opt("slide", "slide step in batches (default 1)")
+                .opt("batches", "micro-batches to ingest (default 60)")
+                .opt("min-sup", "fraction (0,1] or absolute count (>1)")
+                .opt("min-conf", "minimum rule confidence (default 0.8)")
+                .opt("cores", "executor cores (default: all)")
+                .opt("mode", "incremental | from-scratch (default incremental)")
+                .opt("interval", "inter-batch pacing in milliseconds (default 0)")
+                .opt("json", "write the final snapshot (itemsets + rules) as JSON")
+                .opt("data-dir", "dataset cache dir")
+                .flag("quiet", "suppress the per-emission progress lines"),
         )
 }
 
@@ -74,6 +97,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "generate" => cmd_generate(&args),
         "datasets" => cmd_datasets(),
         "rules" => cmd_rules(&args),
+        "stream" => cmd_stream(&args),
         _ => unreachable!(),
     }
 }
@@ -164,7 +188,7 @@ fn cmd_run(args: &rdd_eclat::cli::Args) -> Result<()> {
     let cfg = config_from_args(args)?;
     let db = data::resolve(&cfg.dataset, &cfg.data_dir)?;
     let stats = db.stats();
-    let cores = if cfg.cores == 0 { rdd_eclat::engine::available_cores() } else { cfg.cores };
+    let cores = cfg.effective_cores();
     let ctx = ClusterContext::builder().cores(cores).build();
     let algo = build_algorithm(&cfg)?;
     println!(
@@ -213,8 +237,11 @@ fn cmd_generate(args: &rdd_eclat::cli::Args) -> Result<()> {
     let db = spec.materialize(dir)?;
     let s = db.stats();
     println!(
-        "{}/{}.dat: {} txns, {} items, avg width {:.2}",
-        dir, spec.name(), s.transactions, s.distinct_items, s.avg_width
+        "{}: {} txns, {} items, avg width {:.2}",
+        spec.cache_path(dir),
+        s.transactions,
+        s.distinct_items,
+        s.avg_width
     );
     Ok(())
 }
@@ -248,6 +275,94 @@ fn cmd_rules(args: &rdd_eclat::cli::Args) -> Result<()> {
     );
     for r in rules.iter().take(top) {
         println!("  {r}");
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, rules_to_json(&rules))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let batch: usize = args.get_parse("batch", 500usize)?;
+    let window: usize = args.get_parse("window", 20usize)?;
+    let slide: usize = args.get_parse("slide", 1usize)?;
+    // Replayed datasets default to running until the source is
+    // exhausted; the endless generator needs a bound (default 60).
+    let batches: usize = match (args.get("batches"), args.get("dataset")) {
+        (None, Some(_)) => usize::MAX,
+        _ => args.get_parse("batches", 60usize)?,
+    };
+    let interval_ms: u64 = args.get_parse("interval", 0u64)?;
+    if batch == 0 || window == 0 || slide == 0 {
+        return Err(Error::Usage("--batch, --window and --slide must be >= 1".into()));
+    }
+    let mode = match args.get("mode").unwrap_or("incremental") {
+        "incremental" | "inc" => MineMode::Incremental,
+        "from-scratch" | "scratch" | "rebuild" => MineMode::FromScratch,
+        other => {
+            return Err(Error::Usage(format!(
+                "--mode must be incremental|from-scratch, got {other}"
+            )))
+        }
+    };
+
+    // Source: replay a dataset, or run the drifting clickstream generator.
+    let mut source: Box<dyn BatchSource> = match args.get("dataset") {
+        Some(name) => Box::new(ReplaySource::new(data::resolve(name, &cfg.data_dir)?, batch)),
+        None => {
+            let params = ClickParams::drift();
+            Box::new(ClickstreamSource::new(params, 42, batch).with_limit(batches * batch))
+        }
+    };
+    if interval_ms > 0 {
+        source = Box::new(Paced::new(source, std::time::Duration::from_millis(interval_ms)));
+    }
+
+    let cores = cfg.effective_cores();
+    let ctx = ClusterContext::builder().cores(cores).build();
+    let stream_cfg = StreamConfig::new(WindowSpec::sliding(window, slide), cfg.min_sup_typed()?)
+        .mode(mode)
+        .min_conf(cfg.min_conf);
+    let mut miner = StreamingMiner::new(ctx, stream_cfg);
+    println!(
+        "streaming {} txns/batch, window {window} batches slide {slide}, min_sup {} \
+         min_conf {} ({mode:?}, {cores} cores)",
+        batch, cfg.min_sup, cfg.min_conf
+    );
+
+    let mut last = None;
+    let mut emissions = 0usize;
+    for _ in 0..batches {
+        let Some(rows) = source.next_batch() else { break };
+        if let Some(snap) = miner.push_batch(rows)? {
+            emissions += 1;
+            if !args.flag("quiet") {
+                println!("{}", snap.summary());
+            }
+            last = Some(snap);
+        }
+    }
+    let Some(snap) = last else {
+        println!("stream ended before the first emission (need >= {slide} batches)");
+        return Ok(());
+    };
+    println!(
+        "\n{emissions} emissions; final window: {} txns, {} frequent itemsets, {} rules",
+        snap.window_txns,
+        snap.frequents.len(),
+        snap.rules.len()
+    );
+    for r in snap.rules.iter().take(10) {
+        println!("  {r}");
+    }
+    if snap.rules.len() > 10 {
+        println!("  ... ({} more rules)", snap.rules.len() - 10);
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, snap.to_json())?;
+        println!("wrote {path}");
     }
     Ok(())
 }

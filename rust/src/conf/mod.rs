@@ -107,6 +107,16 @@ impl EclatConfig {
         Ok(())
     }
 
+    /// Resolve `cores` (0 = all available) to a concrete executor count
+    /// — the one place the 0-means-all convention is encoded.
+    pub fn effective_cores(&self) -> usize {
+        if self.cores == 0 {
+            crate::engine::available_cores()
+        } else {
+            self.cores
+        }
+    }
+
     /// Resolve `min_sup` into the typed threshold.
     pub fn min_sup_typed(&self) -> Result<crate::fim::MinSup> {
         if self.min_sup <= 0.0 {
@@ -173,6 +183,14 @@ backend = "xla"
         let mut c = EclatConfig::default();
         let err = c.apply("backend", &toml::Value::Str("gpu".into())).unwrap_err();
         assert!(err.to_string().contains("native|xla"));
+    }
+
+    #[test]
+    fn effective_cores_resolves_zero() {
+        let mut c = EclatConfig::default();
+        assert!(c.effective_cores() >= 1, "0 means all available");
+        c.cores = 3;
+        assert_eq!(c.effective_cores(), 3);
     }
 
     #[test]

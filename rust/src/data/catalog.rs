@@ -16,6 +16,13 @@ use super::quest::{self, QuestParams};
 /// Fixed seed base so every experiment in EXPERIMENTS.md is replayable.
 const SEED: u64 = 0x5EED_2021;
 
+/// Generator version, embedded in cache filenames so stale on-disk
+/// datasets miss automatically whenever a generator's sampling scheme
+/// changes. v2: the clickstream generator became randomly accessible by
+/// transaction index (per-transaction seeding) for the streaming
+/// sources, changing BMS twin contents for identical params + seed.
+const GEN_VERSION: u32 = 2;
+
 /// One of the paper's benchmark datasets (Table 2), or a scaled variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DatasetSpec {
@@ -134,10 +141,17 @@ impl DatasetSpec {
         }
     }
 
+    /// On-disk cache location under `dir` for this dataset, versioned by
+    /// [`GEN_VERSION`] so caches written by older generators are never
+    /// silently reused.
+    pub fn cache_path(&self, dir: &str) -> String {
+        format!("{dir}/{}.v{GEN_VERSION}.dat", self.name())
+    }
+
     /// Generate-or-load through the on-disk cache at `dir`.
     pub fn materialize(&self, dir: &str) -> Result<Database> {
         std::fs::create_dir_all(dir)?;
-        let path = format!("{dir}/{}.dat", self.name());
+        let path = self.cache_path(dir);
         if std::path::Path::new(&path).exists() {
             return Database::parse(&std::fs::read_to_string(&path)?);
         }
@@ -192,7 +206,9 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let d = dir.to_str().unwrap();
         let a = DatasetSpec::Chess.materialize(d).unwrap();
-        assert!(std::path::Path::new(&format!("{d}/chess.dat")).exists());
+        let cache = DatasetSpec::Chess.cache_path(d);
+        assert!(cache.ends_with(".v2.dat"), "cache name is generator-versioned: {cache}");
+        assert!(std::path::Path::new(&cache).exists());
         let b = DatasetSpec::Chess.materialize(d).unwrap();
         assert_eq!(a, b, "cache read equals generated");
     }

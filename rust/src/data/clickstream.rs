@@ -30,51 +30,149 @@ pub struct ClickParams {
     pub locality: f64,
     /// Neighbourhood half-width (in popularity rank space).
     pub radius: usize,
+    /// Popularity drift: how far the hot spot rotates through the
+    /// catalogue (in popularity-rank positions) per transaction. `0.0`
+    /// keeps the distribution stationary; nonzero values make item
+    /// supports churn over the transaction index — the regime streaming
+    /// windows must handle.
+    pub drift: f64,
 }
 
 impl ClickParams {
     /// BMS_WebView_1-like: 59602 sessions × 497 items, width 2.5.
     pub fn bms1_like() -> ClickParams {
-        ClickParams { sessions: 59_602, items: 497, avg_len: 2.5, skew: 1.1, locality: 0.5, radius: 12 }
+        ClickParams {
+            sessions: 59_602,
+            items: 497,
+            avg_len: 2.5,
+            skew: 1.1,
+            locality: 0.5,
+            radius: 12,
+            drift: 0.0,
+        }
     }
 
     /// BMS_WebView_2-like: 77512 sessions × 3340 items, width 5.
     pub fn bms2_like() -> ClickParams {
-        ClickParams { sessions: 77_512, items: 3340, avg_len: 5.0, skew: 1.15, locality: 0.5, radius: 25 }
+        ClickParams {
+            sessions: 77_512,
+            items: 3340,
+            avg_len: 5.0,
+            skew: 1.15,
+            locality: 0.5,
+            radius: 25,
+            drift: 0.0,
+        }
     }
+
+    /// Drifting clickstream: a mid-sized catalogue whose popular region
+    /// rotates through roughly one full catalogue revolution over the
+    /// configured sessions — every streaming window sees both rising and
+    /// fading items, so incremental mining faces real support churn.
+    pub fn drift() -> ClickParams {
+        let sessions = 50_000;
+        let items = 800;
+        ClickParams {
+            sessions,
+            items,
+            avg_len: 3.0,
+            skew: 0.9,
+            locality: 0.5,
+            radius: 15,
+            drift: items as f64 / sessions as f64,
+        }
+    }
+}
+
+/// The per-transaction popularity-rank rotation at transaction `t`.
+fn drift_offset(params: &ClickParams, t: usize) -> usize {
+    if params.drift <= 0.0 {
+        0
+    } else {
+        (t as f64 * params.drift) as usize % params.items
+    }
+}
+
+/// Precomputed sampler state for one clickstream `(params, seed)`: the
+/// Zipf tables and the rank→item permutation are built once, after which
+/// any transaction index generates in O(session length · log items) —
+/// the streaming sources hold one of these across batches.
+#[derive(Debug, Clone)]
+pub struct ClickGen {
+    params: ClickParams,
+    seed: u64,
+    zipf: Zipf,
+    rank_to_item: Vec<Item>,
+}
+
+impl ClickGen {
+    /// Build the sampler tables for `(params, seed)`.
+    pub fn new(params: ClickParams, seed: u64) -> ClickGen {
+        let zipf = Zipf::new(params.items, params.skew);
+        // Rank -> item id mapping is a fixed permutation so item ids do
+        // not leak popularity (like real catalogues).
+        let mut rank_to_item: Vec<Item> = (0..params.items as u32).collect();
+        Rng::new(seed).shuffle(&mut rank_to_item);
+        ClickGen { params, seed, zipf, rank_to_item }
+    }
+
+    /// The stream's parameters.
+    pub fn params(&self) -> &ClickParams {
+        &self.params
+    }
+
+    /// Generate transaction `t` of the stream. Each transaction derives
+    /// its own splitmix-seeded generator from `(seed, t)`, making the
+    /// stream randomly accessible by transaction index.
+    pub fn session(&self, t: usize) -> Vec<Item> {
+        let mut rng =
+            Rng::new(self.seed ^ (t as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let offset = drift_offset(&self.params, t);
+        // Shifted geometric with mean avg_len: length >= 1.
+        let len = rng.geometric(self.params.avg_len.max(1.0)).max(1);
+        let seed_rank = self.zipf.sample(&mut rng);
+        let mut row: Vec<Item> = Vec::with_capacity(len);
+        for click in 0..len {
+            let rank = if click > 0 && rng.chance(self.params.locality) {
+                // Stay near the seed's rank (browsing related products).
+                let lo = seed_rank.saturating_sub(self.params.radius);
+                let hi = (seed_rank + self.params.radius + 1).min(self.params.items);
+                rng.range(lo, hi)
+            } else {
+                self.zipf.sample(&mut rng)
+            };
+            // Drift rotates which items occupy the popular ranks.
+            row.push(self.rank_to_item[(rank + offset) % self.params.items]);
+        }
+        row.sort_unstable();
+        row.dedup();
+        row
+    }
+
+    /// Generate transactions `start..start + count`.
+    pub fn range(&self, start: usize, count: usize) -> Vec<Vec<Item>> {
+        (start..start + count).map(|t| self.session(t)).collect()
+    }
+}
+
+/// Generate transactions `start..start + count` of the stream defined by
+/// `(params, seed)`. `generate_range(p, s, 0, n)` concatenated in any
+/// batching equals `generate(p, s)` rows — the property the streaming
+/// sources rely on. One-shot convenience; hold a [`ClickGen`] instead
+/// when generating repeatedly.
+pub fn generate_range(
+    params: &ClickParams,
+    seed: u64,
+    start: usize,
+    count: usize,
+) -> Vec<Vec<Item>> {
+    ClickGen::new(params.clone(), seed).range(start, count)
 }
 
 /// Generate the clickstream database deterministically from `seed`.
 pub fn generate(params: &ClickParams, seed: u64) -> Database {
-    let mut rng = Rng::new(seed);
-    let zipf = Zipf::new(params.items, params.skew);
-    // Rank -> item id mapping is a fixed permutation so item ids do not
-    // leak popularity (like real catalogues).
-    let mut rank_to_item: Vec<Item> = (0..params.items as u32).collect();
-    rng.shuffle(&mut rank_to_item);
-
-    let mut rows = Vec::with_capacity(params.sessions);
-    for _ in 0..params.sessions {
-        // Shifted geometric with mean avg_len: length >= 1.
-        let len = rng.geometric(params.avg_len.max(1.0)).max(1);
-        let seed_rank = zipf.sample(&mut rng);
-        let mut t: Vec<Item> = Vec::with_capacity(len);
-        for click in 0..len {
-            let rank = if click > 0 && rng.chance(params.locality) {
-                // Stay near the seed's rank (browsing related products).
-                let lo = seed_rank.saturating_sub(params.radius);
-                let hi = (seed_rank + params.radius + 1).min(params.items);
-                rng.range(lo, hi)
-            } else {
-                zipf.sample(&mut rng)
-            };
-            t.push(rank_to_item[rank]);
-        }
-        t.sort_unstable();
-        t.dedup();
-        rows.push(t);
-    }
-    Database::from_rows(rows)
+    let sessions = params.sessions;
+    Database::from_rows(ClickGen::new(params.clone(), seed).range(0, sessions))
 }
 
 #[cfg(test)]
@@ -82,7 +180,15 @@ mod tests {
     use super::*;
 
     fn small() -> ClickParams {
-        ClickParams { sessions: 5000, items: 400, avg_len: 2.5, skew: 1.1, locality: 0.5, radius: 10 }
+        ClickParams {
+            sessions: 5000,
+            items: 400,
+            avg_len: 2.5,
+            skew: 1.1,
+            locality: 0.5,
+            radius: 10,
+            drift: 0.0,
+        }
     }
 
     #[test]
@@ -119,6 +225,52 @@ mod tests {
             "top-20 items should dominate: {}",
             head as f64 / total as f64
         );
+    }
+
+    #[test]
+    fn range_generation_matches_full_generation() {
+        let p = small();
+        let full = generate(&p, 11);
+        // Any batching of generate_range reassembles the same rows.
+        let mut rows = Vec::new();
+        for (start, count) in [(0usize, 700usize), (700, 1), (701, 2299), (3000, 2000)] {
+            rows.extend(generate_range(&p, 11, start, count));
+        }
+        assert_eq!(Database::from_rows(rows), full);
+    }
+
+    /// Top-20 most-clicked items of a row slice.
+    fn top_items(rows: &[Vec<Item>]) -> std::collections::HashSet<Item> {
+        let mut counts = std::collections::HashMap::new();
+        for r in rows {
+            for &i in r {
+                *counts.entry(i).or_insert(0u32) += 1;
+            }
+        }
+        let mut v: Vec<(Item, u32)> = counts.into_iter().collect();
+        v.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.into_iter().take(20).map(|(i, _)| i).collect()
+    }
+
+    #[test]
+    fn drift_shifts_item_popularity_over_time() {
+        let p = ClickParams { sessions: 20_000, drift: 800.0 / 20_000.0, ..ClickParams::drift() };
+        // Offsets 0..80 vs 360..440 rank positions: disjoint hot regions.
+        let head = top_items(&generate_range(&p, 5, 0, 2000));
+        let tail = top_items(&generate_range(&p, 5, 9000, 2000));
+        let overlap = head.intersection(&tail).count();
+        assert!(overlap < 10, "popular sets should diverge under drift, overlap {overlap}");
+    }
+
+    #[test]
+    fn zero_drift_is_stationary() {
+        // Same stream positions as the drift test, but drift disabled:
+        // the popular set must now be stable over the transaction index.
+        let p = ClickParams { sessions: 20_000, drift: 0.0, ..ClickParams::drift() };
+        let head = top_items(&generate_range(&p, 5, 0, 2000));
+        let tail = top_items(&generate_range(&p, 5, 9000, 2000));
+        let overlap = head.intersection(&tail).count();
+        assert!(overlap >= 12, "popular sets should persist without drift, overlap {overlap}");
     }
 
     #[test]

@@ -97,6 +97,45 @@ impl TidBitmap {
         self.and_counted(other).0
     }
 
+    /// Extend the universe to at least `universe`, padding with zero
+    /// words. Never shrinks. The streaming vertical store grows per-item
+    /// bitmaps lazily as new transaction ids arrive.
+    pub fn grow(&mut self, universe: usize) {
+        if universe > self.universe {
+            self.universe = universe;
+            self.words.resize(universe.div_ceil(64), 0);
+        }
+    }
+
+    /// Clear every bit in `[lo, hi)` and return how many were set — the
+    /// range-masking primitive behind sliding-window eviction (tids of
+    /// evicted batches form contiguous ranges). Bits outside the current
+    /// universe are treated as already clear.
+    pub fn clear_range(&mut self, lo: Tid, hi: Tid) -> u32 {
+        if hi <= lo {
+            return 0;
+        }
+        let hi = (hi as usize).min(self.universe) as Tid;
+        if hi <= lo {
+            return 0;
+        }
+        // hi <= universe here, so w_hi < words.len().
+        let (w_lo, w_hi) = ((lo as usize) >> 6, ((hi - 1) as usize) >> 6);
+        let mut cleared = 0u32;
+        for wi in w_lo..=w_hi {
+            let mut mask = u64::MAX;
+            if wi == w_lo {
+                mask &= u64::MAX << (lo & 63);
+            }
+            if wi == w_hi && (hi & 63) != 0 {
+                mask &= u64::MAX >> (64 - (hi & 63));
+            }
+            cleared += (self.words[wi] & mask).count_ones();
+            self.words[wi] &= !mask;
+        }
+        cleared
+    }
+
     /// `|self \ other|` — powering the diffset variant of Eclat.
     pub fn andnot_count(&self, other: &TidBitmap) -> u32 {
         let mut acc = 0u32;
@@ -228,6 +267,60 @@ mod tests {
         assert_eq!(b.andnot(&a).iter().collect::<Vec<_>>(), vec![128, 199]);
         // Set bits beyond the shorter side's words survive andnot.
         assert!(b.andnot(&a).contains(199));
+    }
+
+    #[test]
+    fn grow_extends_universe_preserving_bits() {
+        let mut bm = TidBitmap::from_tids(70, [0u32, 63, 69]);
+        bm.grow(50); // no-op: never shrinks
+        assert_eq!(bm.universe(), 70);
+        bm.grow(200);
+        assert_eq!(bm.universe(), 200);
+        assert_eq!(bm.words().len(), 4);
+        assert_eq!(bm.iter().collect::<Vec<_>>(), vec![0, 63, 69]);
+        bm.insert(199);
+        assert_eq!(bm.count(), 4);
+    }
+
+    #[test]
+    fn clear_range_masks_and_counts() {
+        // Bits straddling word boundaries; range [60, 70) clears 63, 64, 69.
+        let mut bm = TidBitmap::from_tids(200, [0u32, 5, 63, 64, 69, 128, 199]);
+        assert_eq!(bm.clear_range(60, 70), 3);
+        assert_eq!(bm.iter().collect::<Vec<_>>(), vec![0, 5, 128, 199]);
+        // Already-clear range counts zero.
+        assert_eq!(bm.clear_range(60, 70), 0);
+        // Word-aligned end, single-word range, full-universe range.
+        assert_eq!(bm.clear_range(0, 64), 2);
+        assert_eq!(bm.clear_range(0, 200), 2);
+        assert_eq!(bm.count(), 0);
+        // Degenerate ranges and out-of-universe ranges are no-ops.
+        assert_eq!(bm.clear_range(10, 10), 0);
+        assert_eq!(bm.clear_range(10, 5), 0);
+        assert_eq!(bm.clear_range(500, 900), 0);
+        let mut empty = TidBitmap::new(0);
+        assert_eq!(empty.clear_range(0, 100), 0);
+    }
+
+    #[test]
+    fn clear_range_random_cross_check() {
+        let mut rng = Rng::new(77);
+        for _ in 0..50 {
+            let universe = rng.range(1, 400);
+            let tids: Vec<u32> =
+                (0..rng.range(0, universe)).map(|_| rng.below(universe as u64) as u32).collect();
+            let mut bm = TidBitmap::from_tids(universe, tids.iter().copied());
+            let lo = rng.range(0, universe + 1) as u32;
+            let hi = rng.range(0, universe + 50) as u32;
+            let mut set: std::collections::HashSet<u32> = tids.into_iter().collect();
+            let before = set.len();
+            set.retain(|&t| !(lo..hi).contains(&t));
+            let cleared = bm.clear_range(lo, hi);
+            assert_eq!(cleared as usize, before - set.len());
+            let mut want: Vec<u32> = set.into_iter().collect();
+            want.sort_unstable();
+            assert_eq!(bm.iter().collect::<Vec<_>>(), want);
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub use eqclass::{construct_classes, to_bitmap_class, EqClass};
 pub use itemset::{
     is_subset, prefix_join, sort_frequents, Frequent, Item, ItemSet, MinSup, Tid,
 };
-pub use rules::{generate_rules, Rule};
+pub use rules::{generate_rules, rules_to_json, Rule};
 pub use tidset::{difference, intersect, intersect_count, Tidset, VerticalDb};
 pub use transaction::{Database, DbStats};
 pub use trie::{CandidateTrie, ItemFilter};

@@ -5,6 +5,8 @@
 
 use std::collections::HashMap;
 
+use crate::util::json::json_f64;
+
 use super::itemset::{Frequent, Item, ItemSet};
 
 /// An association rule `antecedent ⇒ consequent`.
@@ -95,6 +97,30 @@ pub fn generate_rules(
     rules
 }
 
+/// Serialize rules as a JSON array (items are integers, so no string
+/// escaping is needed beyond the fixed keys). Consumed by the CLI's
+/// `--json` outputs and the streaming snapshot writer.
+pub fn rules_to_json(rules: &[Rule]) -> String {
+    let fmt_set = |s: &[Item]| {
+        let inner: Vec<String> = s.iter().map(|i| i.to_string()).collect();
+        format!("[{}]", inner.join(", "))
+    };
+    let mut out = String::from("[\n");
+    for (i, r) in rules.iter().enumerate() {
+        out.push_str(&format!(
+            "  {{\"antecedent\": {}, \"consequent\": {}, \"support\": {}, \"confidence\": {}, \"lift\": {}}}{}\n",
+            fmt_set(&r.antecedent),
+            fmt_set(&r.consequent),
+            r.support,
+            json_f64(r.confidence),
+            r.lift.map_or("null".to_string(), json_f64),
+            if i + 1 < rules.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("]\n");
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,5 +190,22 @@ mod tests {
     fn no_rules_from_singletons() {
         let f = vec![Frequent::new(vec![1], 5)];
         assert!(generate_rules(&f, 0.0, None).is_empty());
+    }
+
+    #[test]
+    fn json_shape() {
+        let (db, f) = mined();
+        let rules = generate_rules(&f, 0.9, Some(db.len()));
+        let json = rules_to_json(&rules);
+        assert!(json.starts_with("[\n") && json.trim_end().ends_with(']'));
+        assert!(json.contains("\"antecedent\": [2]"), "{json}");
+        assert!(json.contains("\"confidence\": 1.000000"), "{json}");
+        // One comma fewer than there are rules, none trailing.
+        assert_eq!(json.matches("},\n").count(), rules.len() - 1, "{json}");
+        assert!(!json.contains(",\n]"), "{json}");
+        // Rules without db_size carry lift: null.
+        let no_lift = generate_rules(&f, 0.9, None);
+        assert!(rules_to_json(&no_lift).contains("\"lift\": null"));
+        assert_eq!(rules_to_json(&[]), "[\n]\n");
     }
 }

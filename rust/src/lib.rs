@@ -26,8 +26,11 @@
 //! paper's Table 2), [`runtime`] (PJRT execution of AOT-compiled
 //! JAX/Pallas artifacts for the support-counting hot spot), [`bench`] (a
 //! small criterion-like measurement harness), [`conf`]/[`cli`]
-//! (configuration + launcher), and [`figures`] (drivers that regenerate
-//! every table and figure of the paper's evaluation).
+//! (configuration + launcher), [`figures`] (drivers that regenerate
+//! every table and figure of the paper's evaluation), and [`stream`]
+//! (DStream-style micro-batch mining: sliding windows over an
+//! incrementally maintained vertical store, with per-batch frequent
+//! itemset and association-rule snapshots).
 //!
 //! ## Quickstart
 //!
@@ -57,6 +60,7 @@ pub mod error;
 pub mod figures;
 pub mod fim;
 pub mod runtime;
+pub mod stream;
 pub mod util;
 
 /// Convenience re-exports for the common API surface.
@@ -70,4 +74,7 @@ pub mod prelude {
     pub use crate::engine::{ClusterContext, Rdd};
     pub use crate::error::{Error, Result};
     pub use crate::fim::{generate_rules, sort_frequents, Frequent, Item, ItemSet, MinSup, Tid};
+    pub use crate::stream::{
+        BatchSnapshot, BatchSource, MineMode, StreamConfig, StreamingMiner, WindowSpec,
+    };
 }

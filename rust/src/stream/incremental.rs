@@ -1,0 +1,267 @@
+//! The incrementally-maintained vertical database.
+//!
+//! The companion work on RDD-Apriori data structures (arXiv:1908.01338)
+//! argues the vertical/bitset layout is what makes re-counting cheap;
+//! this module exploits that for streaming: each item keeps one
+//! [`TidBitmap`] over the window's transaction-id space. Appending a
+//! batch sets bits at the tail; evicting a batch clears one contiguous
+//! tid range per touched item ([`TidBitmap::clear_range`]); per-item
+//! supports are maintained as running counts, so the frequent-item scan
+//! never re-counts bitmaps. When the dead prefix outgrows the live span,
+//! the store compacts — rebasing every bitmap onto a fresh tid origin —
+//! so memory tracks the window size, not the stream length.
+//!
+//! Supports of *itemsets* over the window change only when a transaction
+//! containing the whole itemset enters or leaves — which requires every
+//! one of its items to be **dirty** (present in an appended or evicted
+//! batch). The mining job builds its reuse/re-mine split on exactly that
+//! observation, so `append`/`evict` report touched items into the
+//! caller's dirty set.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::fim::{Item, Tid, TidBitmap};
+
+/// Per-item vertical store maintained across micro-batches. Transactions
+/// enter at the tail and leave from the head (FIFO), mirroring the
+/// sliding window that drives it.
+#[derive(Debug, Default)]
+pub struct IncrementalVerticalDb {
+    bitmaps: HashMap<Item, TidBitmap>,
+    supports: HashMap<Item, u32>,
+    /// Local tid one past the newest appended transaction.
+    next: Tid,
+    /// Local tid of the oldest live transaction.
+    live_lo: Tid,
+    /// Live transaction count (`next - live_lo`).
+    txns: usize,
+}
+
+impl IncrementalVerticalDb {
+    /// Empty store.
+    pub fn new() -> IncrementalVerticalDb {
+        IncrementalVerticalDb::default()
+    }
+
+    /// Live transaction count.
+    pub fn txns(&self) -> usize {
+        self.txns
+    }
+
+    /// Number of distinct live items.
+    pub fn distinct_items(&self) -> usize {
+        self.supports.len()
+    }
+
+    /// Current support of `item` over the window.
+    pub fn support(&self, item: Item) -> u32 {
+        self.supports.get(&item).copied().unwrap_or(0)
+    }
+
+    /// Append one batch at the tail. Rows must be normalized (sorted,
+    /// de-duplicated). Every item occurring in the batch is added to
+    /// `dirty`.
+    pub fn append(&mut self, rows: &[Vec<Item>], dirty: &mut HashSet<Item>) {
+        for row in rows {
+            debug_assert!(row.windows(2).all(|w| w[0] < w[1]), "row not normalized: {row:?}");
+            let t = self.next;
+            self.next += 1;
+            for &item in row {
+                let bm = self.bitmaps.entry(item).or_insert_with(|| TidBitmap::new(0));
+                bm.grow(self.next as usize);
+                bm.insert(t);
+                *self.supports.entry(item).or_insert(0) += 1;
+                dirty.insert(item);
+            }
+        }
+        self.txns += rows.len();
+    }
+
+    /// Evict the oldest `rows.len()` transactions, whose contents must be
+    /// `rows` (the window evicts whole batches FIFO, so the caller always
+    /// has them). Clears each touched item's tid range once, updates the
+    /// running supports from the cleared-bit counts, and adds every
+    /// occurring item to `dirty`. Compacts when the dead prefix outgrows
+    /// the live span.
+    pub fn evict(&mut self, rows: &[Vec<Item>], dirty: &mut HashSet<Item>) {
+        let k = rows.len() as Tid;
+        debug_assert!(self.txns >= rows.len(), "evicting more transactions than live");
+        let (lo, hi) = (self.live_lo, self.live_lo + k);
+        let mut touched: HashSet<Item> = HashSet::new();
+        for row in rows {
+            touched.extend(row.iter().copied());
+        }
+        for &item in &touched {
+            dirty.insert(item);
+            let Some(bm) = self.bitmaps.get_mut(&item) else { continue };
+            let cleared = bm.clear_range(lo, hi);
+            let support = self.supports.entry(item).or_insert(0);
+            *support = support.saturating_sub(cleared);
+            if *support == 0 {
+                self.supports.remove(&item);
+                self.bitmaps.remove(&item);
+            }
+        }
+        self.live_lo = hi;
+        self.txns -= rows.len();
+        self.maybe_compact();
+    }
+
+    /// Rebase every bitmap onto tid origin 0 once the evicted prefix
+    /// exceeds the live span: O(live bits), amortized O(1) per eviction.
+    /// Pure renumbering — all pairwise intersection counts are shift
+    /// invariant, so mining results (and the job's reuse cache) are
+    /// unaffected.
+    fn maybe_compact(&mut self) {
+        let span = self.next - self.live_lo;
+        if self.live_lo < 64 || self.live_lo <= span {
+            return;
+        }
+        let delta = self.live_lo;
+        let universe = span as usize;
+        for bm in self.bitmaps.values_mut() {
+            let shifted =
+                TidBitmap::from_tids(universe, bm.iter().filter(|&t| t >= delta).map(|t| t - delta));
+            debug_assert_eq!(shifted.count(), bm.count(), "compaction dropped live bits");
+            *bm = shifted;
+        }
+        self.live_lo = 0;
+        self.next = span;
+    }
+
+    /// Frequent atoms for mining: `(item, tidset bitmap, support)` for
+    /// every item with `support >= min_sup` **and** `keep(item)`, ordered
+    /// by ascending support with item id as tie-break (the paper's
+    /// Phase-1 total order). Bitmaps are cloned — mining tasks need owned
+    /// data to move onto executor threads.
+    pub fn atoms(&self, min_sup: u32, keep: impl Fn(Item) -> bool) -> Vec<(Item, TidBitmap, u32)> {
+        let mut out: Vec<(Item, TidBitmap, u32)> = Vec::new();
+        for (&item, &sup) in &self.supports {
+            if sup >= min_sup && keep(item) {
+                out.push((item, self.bitmaps[&item].clone(), sup));
+            }
+        }
+        out.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
+        out
+    }
+
+    /// Number of items with `support >= min_sup`.
+    pub fn frequent_count(&self, min_sup: u32) -> usize {
+        self.frequent_count_where(min_sup, |_| true)
+    }
+
+    /// Number of items with `support >= min_sup` satisfying `keep` —
+    /// the churn measurement, taken without cloning any bitmaps.
+    pub fn frequent_count_where(&self, min_sup: u32, keep: impl Fn(Item) -> bool) -> usize {
+        let mut n = 0;
+        for (&item, &sup) in &self.supports {
+            if sup >= min_sup && keep(item) {
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dirty() -> HashSet<Item> {
+        HashSet::new()
+    }
+
+    #[test]
+    fn append_tracks_supports_and_dirty() {
+        let mut db = IncrementalVerticalDb::new();
+        let mut d = dirty();
+        db.append(&[vec![1, 2], vec![2, 3], vec![]], &mut d);
+        assert_eq!(db.txns(), 3);
+        assert_eq!(db.support(2), 2);
+        assert_eq!(db.support(1), 1);
+        assert_eq!(db.support(9), 0);
+        assert_eq!(d, HashSet::from([1, 2, 3]));
+        assert_eq!(db.distinct_items(), 3);
+        assert_eq!(db.frequent_count(2), 1);
+    }
+
+    #[test]
+    fn evict_masks_ranges_and_updates_supports() {
+        let mut db = IncrementalVerticalDb::new();
+        let mut d = dirty();
+        let b0 = vec![vec![1, 2], vec![1, 3]];
+        let b1 = vec![vec![1, 2], vec![2, 3]];
+        db.append(&b0, &mut d);
+        db.append(&b1, &mut d);
+        assert_eq!(db.support(1), 3);
+        d.clear();
+        db.evict(&b0, &mut d);
+        assert_eq!(db.txns(), 2);
+        assert_eq!(db.support(1), 1);
+        assert_eq!(db.support(3), 1);
+        assert_eq!(d, HashSet::from([1, 2, 3]), "evicted items are dirty");
+        // Item 1's remaining tid is batch 1's first transaction.
+        let atoms = db.atoms(1, |_| true);
+        let one = atoms.iter().find(|(i, _, _)| *i == 1).unwrap();
+        assert_eq!(one.1.iter().collect::<Vec<_>>(), vec![2]);
+        assert_eq!(one.2, 1);
+    }
+
+    #[test]
+    fn evict_to_empty_removes_items() {
+        let mut db = IncrementalVerticalDb::new();
+        let mut d = dirty();
+        let b = vec![vec![4, 5]];
+        db.append(&b, &mut d);
+        db.evict(&b, &mut d);
+        assert_eq!(db.txns(), 0);
+        assert_eq!(db.distinct_items(), 0);
+        assert!(db.atoms(1, |_| true).is_empty());
+        // The store stays usable after full eviction.
+        db.append(&[vec![4]], &mut d);
+        assert_eq!(db.support(4), 1);
+    }
+
+    #[test]
+    fn atoms_order_and_filter() {
+        let mut db = IncrementalVerticalDb::new();
+        let mut d = dirty();
+        db.append(&[vec![1, 2, 3], vec![2, 3], vec![3]], &mut d);
+        let all = db.atoms(1, |_| true);
+        let order: Vec<(Item, u32)> = all.iter().map(|(i, _, s)| (*i, *s)).collect();
+        assert_eq!(order, vec![(1, 1), (2, 2), (3, 3)], "ascending support");
+        let only_23 = db.atoms(2, |_| true);
+        assert_eq!(only_23.len(), 2);
+        let filtered = db.atoms(1, |i| i != 2);
+        assert_eq!(filtered.iter().map(|(i, _, _)| *i).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(db.frequent_count_where(1, |i| i != 2), 2);
+        assert_eq!(db.frequent_count_where(2, |_| true), db.frequent_count(2));
+    }
+
+    #[test]
+    fn compaction_preserves_contents() {
+        let mut db = IncrementalVerticalDb::new();
+        let mut d = dirty();
+        // Slide a window of 2 one-transaction batches far enough that the
+        // dead prefix repeatedly exceeds the live span.
+        let mut pending: std::collections::VecDeque<Vec<Vec<Item>>> =
+            std::collections::VecDeque::new();
+        for step in 0..200u32 {
+            let batch = vec![vec![step % 5, 5 + (step % 3)]];
+            db.append(&batch, &mut d);
+            pending.push_back(batch);
+            if pending.len() > 2 {
+                db.evict(&pending.pop_front().unwrap(), &mut d);
+            }
+        }
+        assert_eq!(db.txns(), 2);
+        // Window holds steps 198 and 199: items {198%5, 5+198%3, 199%5, 5+199%3}.
+        let expect: HashSet<Item> = HashSet::from([198 % 5, 5 + 198 % 3, 199 % 5, 5 + 199 % 3]);
+        let got: HashSet<Item> = db.atoms(1, |_| true).iter().map(|(i, _, _)| *i).collect();
+        assert_eq!(got, expect);
+        for (_, bm, sup) in db.atoms(1, |_| true) {
+            assert_eq!(bm.count(), sup, "running support equals bitmap population");
+            assert!(bm.universe() <= 128, "compaction bounded the universe");
+        }
+    }
+}

@@ -1,0 +1,544 @@
+//! The per-batch mining job: ties the window, the incremental vertical
+//! store and the bottom-up Eclat search into a DStream-style driver.
+//!
+//! Every emission mines the live window and produces a
+//! [`BatchSnapshot`]: the frequent itemsets plus the association rules
+//! (ARM step 2) the serving layer would publish. Two execution modes:
+//!
+//! * [`MineMode::FromScratch`] — materialize the window and run
+//!   [`SeqEclat`] end to end, every time. The baseline the bench
+//!   compares against.
+//! * [`MineMode::Incremental`] — mine from the maintained vertical
+//!   store. The support of an itemset over the window can only change
+//!   when a transaction containing **all** of its items enters or
+//!   leaves, i.e. when every item is dirty. So only the sub-lattice of
+//!   all-dirty itemsets is re-mined (equivalence classes over dirty
+//!   frequent atoms, run on the engine's executor pool); every cached
+//!   itemset containing at least one clean item is reused verbatim.
+//!   When churn exceeds [`StreamConfig::churn_threshold`] — or min_sup
+//!   resolves to a different count than the cached snapshot's — the
+//!   job falls back to re-mining every class from the store.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::algorithms::SeqEclat;
+use crate::engine::ClusterContext;
+use crate::error::Result;
+use crate::fim::{
+    bottom_up, generate_rules, rules_to_json, sort_frequents, Frequent, Item, MinSup, Rule,
+    TidBitmap,
+};
+use crate::util::json::json_str;
+use crate::util::Stopwatch;
+
+use super::incremental::IncrementalVerticalDb;
+use super::window::{normalize_row, PushResult, SlidingWindow, WindowSpec};
+
+/// How each emission is mined.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MineMode {
+    /// Maintain the vertical store and re-mine only dirty classes.
+    Incremental,
+    /// Materialize the window and run `SeqEclat` from scratch per batch.
+    FromScratch,
+}
+
+/// What the job actually executed for one emission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MinePlan {
+    /// Window materialized and mined from scratch (`MineMode::FromScratch`).
+    Rebuild,
+    /// Every frequent atom re-mined from the maintained store (first
+    /// emission, min_sup count change, or churn above threshold).
+    FullRemine,
+    /// Only the dirty sub-lattice was re-mined.
+    Delta {
+        /// Dirty frequent atoms the fresh sub-mine ran over.
+        remined_atoms: usize,
+        /// Cached itemsets (≥ one clean item) reused without recounting.
+        reused_itemsets: usize,
+    },
+}
+
+impl MinePlan {
+    fn as_str(&self) -> &'static str {
+        match self {
+            MinePlan::Rebuild => "rebuild",
+            MinePlan::FullRemine => "full",
+            MinePlan::Delta { .. } => "delta",
+        }
+    }
+}
+
+/// Configuration of a streaming mining job.
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Window geometry.
+    pub window: WindowSpec,
+    /// Support threshold, resolved against the live window size at every
+    /// emission (fractions therefore track the window as it fills).
+    pub min_sup: MinSup,
+    /// Minimum confidence for the per-batch rule snapshot.
+    pub min_conf: f64,
+    /// Execution mode.
+    pub mode: MineMode,
+    /// Fraction of frequent atoms dirty above which `Incremental` falls
+    /// back to a full re-mine (delta bookkeeping would outweigh reuse).
+    pub churn_threshold: f64,
+    /// Keep at most this many rules per snapshot (they are sorted by
+    /// confidence, so this keeps the strongest). `None` keeps all.
+    pub max_rules: Option<usize>,
+}
+
+impl StreamConfig {
+    /// Incremental mining with the common defaults (`min_conf` 0.8,
+    /// churn fallback at 75% dirty, unbounded rules).
+    pub fn new(window: WindowSpec, min_sup: MinSup) -> StreamConfig {
+        StreamConfig {
+            window,
+            min_sup,
+            min_conf: 0.8,
+            mode: MineMode::Incremental,
+            churn_threshold: 0.75,
+            max_rules: None,
+        }
+    }
+
+    /// Switch the execution mode.
+    pub fn mode(mut self, mode: MineMode) -> StreamConfig {
+        self.mode = mode;
+        self
+    }
+
+    /// Set the rule-confidence threshold.
+    pub fn min_conf(mut self, c: f64) -> StreamConfig {
+        self.min_conf = c;
+        self
+    }
+}
+
+/// One emitted result: the live snapshot a rule-serving layer would
+/// swap in atomically.
+#[derive(Debug, Clone)]
+pub struct BatchSnapshot {
+    /// Sequence number of the newest batch in the window.
+    pub batch_id: u64,
+    /// Live transactions covered.
+    pub window_txns: usize,
+    /// Live batches covered.
+    pub window_batches: usize,
+    /// The absolute support threshold this emission used.
+    pub min_sup_count: u32,
+    /// Frequent 1-itemsets in the window.
+    pub frequent_items: usize,
+    /// Of those, how many were dirty since the previous emission.
+    pub dirty_frequent_items: usize,
+    /// What was executed.
+    pub plan: MinePlan,
+    /// All frequent itemsets, canonically sorted.
+    pub frequents: Vec<Frequent>,
+    /// Confident association rules over `frequents`, sorted by
+    /// confidence descending.
+    pub rules: Vec<Rule>,
+    /// Wall time of this emission (mining + rule generation).
+    pub wall: Duration,
+}
+
+impl BatchSnapshot {
+    /// One-line progress summary for CLI/demo output.
+    pub fn summary(&self) -> String {
+        format!(
+            "batch {:>4} | window {:>6} txns | {:>5} itemsets | {:>4} rules | {:<7} | {}",
+            self.batch_id,
+            self.window_txns,
+            self.frequents.len(),
+            self.rules.len(),
+            self.plan.as_str(),
+            crate::util::time::fmt_duration(self.wall),
+        )
+    }
+
+    /// Serialize the snapshot (stats, frequents, rules) as JSON.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"batch_id\": {},\n", self.batch_id));
+        out.push_str(&format!("  \"window_txns\": {},\n", self.window_txns));
+        out.push_str(&format!("  \"window_batches\": {},\n", self.window_batches));
+        out.push_str(&format!("  \"min_sup_count\": {},\n", self.min_sup_count));
+        out.push_str(&format!("  \"frequent_items\": {},\n", self.frequent_items));
+        out.push_str(&format!("  \"dirty_frequent_items\": {},\n", self.dirty_frequent_items));
+        out.push_str(&format!("  \"plan\": {},\n", json_str(self.plan.as_str())));
+        out.push_str(&format!("  \"wall_s\": {:.6},\n", self.wall.as_secs_f64()));
+        out.push_str("  \"frequents\": [\n");
+        for (i, f) in self.frequents.iter().enumerate() {
+            let items: Vec<String> = f.items.iter().map(|x| x.to_string()).collect();
+            out.push_str(&format!(
+                "    {{\"items\": [{}], \"support\": {}}}{}\n",
+                items.join(", "),
+                f.support,
+                if i + 1 < self.frequents.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n");
+        out.push_str(&format!("  \"rules\": {}\n", rules_to_json(&self.rules).trim_end()));
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// Cached result of the previous emission (Incremental mode).
+#[derive(Debug)]
+struct Cached {
+    min_sup_count: u32,
+    frequents: Vec<Frequent>,
+}
+
+/// The micro-batch mining driver.
+pub struct StreamingMiner {
+    ctx: ClusterContext,
+    cfg: StreamConfig,
+    window: SlidingWindow,
+    store: IncrementalVerticalDb,
+    dirty: HashSet<Item>,
+    cache: Option<Cached>,
+}
+
+impl StreamingMiner {
+    /// New job over an existing cluster context (jobs share executors
+    /// with everything else running on the context, like one Spark app).
+    pub fn new(ctx: ClusterContext, cfg: StreamConfig) -> StreamingMiner {
+        let window = SlidingWindow::new(cfg.window);
+        StreamingMiner {
+            ctx,
+            cfg,
+            window,
+            store: IncrementalVerticalDb::new(),
+            dirty: HashSet::new(),
+            cache: None,
+        }
+    }
+
+    /// The job's configuration.
+    pub fn config(&self) -> &StreamConfig {
+        &self.cfg
+    }
+
+    /// Live window size in transactions.
+    pub fn window_txns(&self) -> usize {
+        self.window.txns()
+    }
+
+    /// Materialize the live window (parity testing / debugging).
+    pub fn materialize_window(&self) -> crate::fim::Database {
+        self.window.materialize()
+    }
+
+    /// Ingest one micro-batch. Returns a snapshot when the window's
+    /// slide cadence makes this batch an emission point, `None`
+    /// otherwise.
+    pub fn push_batch(&mut self, rows: Vec<Vec<Item>>) -> Result<Option<BatchSnapshot>> {
+        let rows: Vec<Vec<Item>> = rows.into_iter().map(normalize_row).collect();
+        if self.cfg.mode == MineMode::Incremental {
+            self.store.append(&rows, &mut self.dirty);
+        }
+        let res = self.window.push(rows);
+        if self.cfg.mode == MineMode::Incremental {
+            for b in &res.evicted {
+                self.store.evict(&b.rows, &mut self.dirty);
+            }
+        }
+        if !res.emit {
+            return Ok(None);
+        }
+        self.emit(&res).map(Some)
+    }
+
+    fn emit(&mut self, res: &PushResult) -> Result<BatchSnapshot> {
+        let sw = Stopwatch::start();
+        let window_txns = self.window.txns();
+        let min_sup_count = self.cfg.min_sup.to_count(window_txns);
+        let (mut frequents, plan, dirty_frequent, frequent_items) = match self.cfg.mode {
+            MineMode::FromScratch => {
+                let db = self.window.materialize();
+                let frequents = SeqEclat::mine(&db, MinSup::count(min_sup_count));
+                let items = frequents.iter().filter(|f| f.items.len() == 1).count();
+                (frequents, MinePlan::Rebuild, 0, items)
+            }
+            MineMode::Incremental => self.mine_incremental(min_sup_count)?,
+        };
+        sort_frequents(&mut frequents);
+        let mut rules = generate_rules(&frequents, self.cfg.min_conf, Some(window_txns));
+        if let Some(cap) = self.cfg.max_rules {
+            rules.truncate(cap);
+        }
+        // Only the incremental path reads the reuse cache; FromScratch
+        // skips the clone entirely.
+        if self.cfg.mode == MineMode::Incremental {
+            self.cache = Some(Cached { min_sup_count, frequents: frequents.clone() });
+        }
+        self.dirty.clear();
+        Ok(BatchSnapshot {
+            batch_id: res.batch_id,
+            window_txns,
+            window_batches: self.window.len_batches(),
+            min_sup_count,
+            frequent_items,
+            dirty_frequent_items: dirty_frequent,
+            plan,
+            frequents,
+            rules,
+            wall: sw.elapsed(),
+        })
+    }
+
+    /// Incremental emission: decide between full re-mine and delta
+    /// re-mine + cache reuse.
+    fn mine_incremental(
+        &mut self,
+        min_sup_count: u32,
+    ) -> Result<(Vec<Frequent>, MinePlan, usize, usize)> {
+        let frequent_items = self.store.frequent_count(min_sup_count);
+        // Count before cloning any bitmaps: the fallback path would
+        // otherwise materialize the dirty atoms only to throw them away.
+        let dirty_frequent =
+            self.store.frequent_count_where(min_sup_count, |i| self.dirty.contains(&i));
+        let full = match &self.cache {
+            None => true,
+            Some(c) => {
+                c.min_sup_count != min_sup_count
+                    || dirty_frequent as f64 > self.cfg.churn_threshold * frequent_items as f64
+            }
+        };
+        if full {
+            let atoms = self.store.atoms(min_sup_count, |_| true);
+            let frequents = mine_atoms(&self.ctx, atoms, min_sup_count)?;
+            return Ok((frequents, MinePlan::FullRemine, dirty_frequent, frequent_items));
+        }
+        let dirty_atoms = self.store.atoms(min_sup_count, |i| self.dirty.contains(&i));
+        let fresh = mine_atoms(&self.ctx, dirty_atoms, min_sup_count)?;
+        let cache = self.cache.as_ref().expect("checked above");
+        // Reuse every cached itemset with at least one clean item: its
+        // window support cannot have changed (any entering/leaving
+        // transaction containing it would contain the clean item too).
+        let mut merged: Vec<Frequent> = cache
+            .frequents
+            .iter()
+            .filter(|f| f.items.iter().any(|i| !self.dirty.contains(i)))
+            .cloned()
+            .collect();
+        let reused = merged.len();
+        merged.extend(fresh);
+        let plan = MinePlan::Delta { remined_atoms: dirty_frequent, reused_itemsets: reused };
+        Ok((merged, plan, dirty_frequent, frequent_items))
+    }
+}
+
+impl std::fmt::Debug for StreamingMiner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamingMiner")
+            .field("window", &self.window.spec())
+            .field("mode", &self.cfg.mode)
+            .field("window_txns", &self.window.txns())
+            .finish()
+    }
+}
+
+/// Mine the full sub-lattice over `atoms` (already support-ordered):
+/// singletons plus one equivalence class per prefix atom, classes mined
+/// in parallel on the context's executor pool — the same scatter/gather
+/// the batch Eclat variants use for Phase 3.
+fn mine_atoms(
+    ctx: &ClusterContext,
+    atoms: Vec<(Item, TidBitmap, u32)>,
+    min_sup: u32,
+) -> Result<Vec<Frequent>> {
+    let mut out: Vec<Frequent> =
+        atoms.iter().map(|(i, _, s)| Frequent::new(vec![*i], *s)).collect();
+    if atoms.len() < 2 {
+        return Ok(out);
+    }
+    let shared = Arc::new(atoms);
+    let tasks: Vec<_> = (0..shared.len() - 1)
+        .map(|i| {
+            let atoms = Arc::clone(&shared);
+            move || {
+                let (item_i, bm_i, _) = &atoms[i];
+                let mut members: Vec<(Item, TidBitmap)> = Vec::new();
+                for (item_j, bm_j, _) in &atoms[i + 1..] {
+                    let (bm_ij, count) = bm_i.and_counted(bm_j);
+                    if count >= min_sup {
+                        members.push((*item_j, bm_ij));
+                    }
+                }
+                let mut found = Vec::new();
+                if !members.is_empty() {
+                    bottom_up(&[*item_i], &members, min_sup, &mut found);
+                }
+                found
+            }
+        })
+        .collect();
+    for found in ctx.inner.pool.run_all(tasks)? {
+        out.extend(found);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::Database;
+
+    fn ctx() -> ClusterContext {
+        ClusterContext::builder().cores(2).build()
+    }
+
+    fn oracle(db: &Database, min_sup: MinSup) -> Vec<Frequent> {
+        let mut v = SeqEclat::mine(db, min_sup);
+        sort_frequents(&mut v);
+        v
+    }
+
+    #[test]
+    fn tumbling_window_matches_oracle_per_emission() {
+        let cfg = StreamConfig::new(WindowSpec::tumbling(2), MinSup::count(2));
+        let mut miner = StreamingMiner::new(ctx(), cfg);
+        let batches = vec![
+            vec![vec![1, 2, 3], vec![1, 2]],
+            vec![vec![2, 3], vec![1, 2, 3, 4]],
+            vec![vec![1, 4], vec![4, 5]],
+            vec![vec![1, 4, 5], vec![1, 5]],
+        ];
+        let mut emissions = 0;
+        for b in batches {
+            if let Some(snap) = miner.push_batch(b).unwrap() {
+                emissions += 1;
+                let want = oracle(&miner.materialize_window(), MinSup::count(2));
+                assert_eq!(snap.frequents, want, "emission {emissions}");
+                assert_eq!(snap.window_batches, 2);
+            }
+        }
+        assert_eq!(emissions, 2);
+    }
+
+    #[test]
+    fn sliding_delta_path_reuses_clean_itemsets() {
+        // Window of 3 batches sliding by 1. Batches after the first touch
+        // only items {8, 9} (plus evictions), so itemsets over {1, 2}
+        // must be reused from the cache, never re-mined.
+        let cfg = StreamConfig {
+            churn_threshold: 1.0,
+            ..StreamConfig::new(WindowSpec::sliding(3, 1), MinSup::count(2))
+        };
+        let mut miner = StreamingMiner::new(ctx(), cfg);
+        let mut snaps = Vec::new();
+        for b in [
+            vec![vec![1, 2], vec![1, 2, 3]], // batch 0
+            vec![vec![8, 9]],                // batch 1
+            vec![vec![8, 9], vec![8, 9]],    // batch 2
+            vec![vec![1, 8]],                // batch 3: evicts batch 0
+        ] {
+            if let Some(s) = miner.push_batch(b).unwrap() {
+                let want = oracle(&miner.materialize_window(), MinSup::count(2));
+                assert_eq!(s.frequents, want, "plan {:?}", s.plan);
+                snaps.push(s);
+            }
+        }
+        assert_eq!(snaps.len(), 4);
+        assert_eq!(snaps[0].plan, MinePlan::FullRemine, "first emission is full");
+        // Emission 2: nothing frequent among the dirty {8, 9} yet — the
+        // whole result is reused ({1}, {2}, {1, 2}).
+        assert_eq!(snaps[1].plan, MinePlan::Delta { remined_atoms: 0, reused_itemsets: 3 });
+        // Emission 3: {8, 9} cross min_sup; their sub-lattice is mined
+        // fresh while the {1, 2} side is still reused.
+        assert_eq!(snaps[2].plan, MinePlan::Delta { remined_atoms: 2, reused_itemsets: 3 });
+        assert!(snaps[2].frequents.contains(&Frequent::new(vec![8, 9], 3)));
+        // Emission 4: batch 0 evicted — {1}, {2}, {1, 2} fall out (all
+        // dirty, no longer frequent), but itemsets containing the clean
+        // item 9 survive via the cache.
+        assert_eq!(snaps[3].plan, MinePlan::Delta { remined_atoms: 1, reused_itemsets: 2 });
+        assert_eq!(
+            snaps[3].frequents,
+            vec![
+                Frequent::new(vec![8], 4),
+                Frequent::new(vec![9], 3),
+                Frequent::new(vec![8, 9], 3),
+            ]
+        );
+    }
+
+    #[test]
+    fn from_scratch_mode_matches_incremental() {
+        let spec = WindowSpec::sliding(2, 1);
+        let mut inc =
+            StreamingMiner::new(ctx(), StreamConfig::new(spec, MinSup::fraction(0.4)));
+        let mut scratch = StreamingMiner::new(
+            ctx(),
+            StreamConfig::new(spec, MinSup::fraction(0.4)).mode(MineMode::FromScratch),
+        );
+        for b in [
+            vec![vec![1, 2], vec![2, 3], vec![1, 2, 3]],
+            vec![vec![1, 3], vec![2, 3]],
+            vec![vec![1, 2]],
+            vec![],
+        ] {
+            let a = inc.push_batch(b.clone()).unwrap();
+            let b = scratch.push_batch(b).unwrap();
+            match (a, b) {
+                (Some(x), Some(y)) => {
+                    assert_eq!(x.frequents, y.frequents);
+                    assert_eq!(x.min_sup_count, y.min_sup_count);
+                    assert_eq!(y.plan, MinePlan::Rebuild);
+                }
+                (None, None) => {}
+                other => panic!("emission cadence diverged: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn rules_snapshot_is_generated_and_capped() {
+        let mut cfg = StreamConfig::new(WindowSpec::tumbling(1), MinSup::count(2));
+        cfg.min_conf = 0.5;
+        cfg.max_rules = Some(3);
+        let mut miner = StreamingMiner::new(ctx(), cfg);
+        let snap = miner
+            .push_batch(vec![vec![1, 2], vec![1, 2], vec![1, 2, 3], vec![1, 3]])
+            .unwrap()
+            .expect("tumbling(1) emits every batch");
+        assert!(!snap.rules.is_empty());
+        assert!(snap.rules.len() <= 3);
+        assert!(snap.rules.iter().all(|r| r.confidence >= 0.5));
+        for w in snap.rules.windows(2) {
+            assert!(w[0].confidence >= w[1].confidence);
+        }
+        // JSON snapshot is well-formed-ish and carries both sections.
+        let json = snap.to_json();
+        assert!(json.contains("\"frequents\": ["));
+        assert!(json.contains("\"rules\": ["));
+        assert!(json.contains("\"plan\": \"full\""));
+        // Summary mentions the plan and the batch id.
+        assert!(snap.summary().contains("full"));
+    }
+
+    #[test]
+    fn empty_stream_and_empty_batches() {
+        let mut miner = StreamingMiner::new(
+            ctx(),
+            StreamConfig::new(WindowSpec::sliding(2, 1), MinSup::count(1)),
+        );
+        let s1 = miner.push_batch(vec![]).unwrap().unwrap();
+        assert!(s1.frequents.is_empty());
+        assert_eq!(s1.window_txns, 0);
+        let s2 = miner.push_batch(vec![vec![7]]).unwrap().unwrap();
+        assert_eq!(s2.frequents, vec![Frequent::new(vec![7], 1)]);
+        // Full eviction: two empty batches push the lone transaction out.
+        let s3 = miner.push_batch(vec![]).unwrap().unwrap();
+        assert_eq!(s3.window_txns, 1);
+        let s4 = miner.push_batch(vec![]).unwrap().unwrap();
+        assert!(s4.frequents.is_empty());
+        assert_eq!(s4.window_txns, 0);
+    }
+}

@@ -1,0 +1,51 @@
+//! Streaming micro-batch mining: sliding-window incremental RDD-Eclat.
+//!
+//! The paper motivates Spark because FIM is highly iterative and re-runs
+//! over fresh data; this subsystem makes that literal — a DStream-style
+//! execution mode where transactions arrive as micro-batches and every
+//! window emission publishes a live frequent-itemset + association-rule
+//! snapshot:
+//!
+//! * [`source`] — micro-batch producers: replay any [`crate::data::Database`],
+//!   or generate a (drifting) clickstream lazily, optionally paced in
+//!   wall time.
+//! * [`window`] — tumbling/sliding windows measured in batches, with
+//!   global tid-range bookkeeping per batch.
+//! * [`incremental`] — the maintained per-item vertical bitmap store:
+//!   append tids at the tail, mask evicted tid ranges, track dirty
+//!   items, compact when the dead prefix outgrows the window.
+//! * [`job`] — the per-batch driver: re-mines only the dirty
+//!   sub-lattice on the engine's executor pool (full-re-mine fallback
+//!   under churn), reuses every cached itemset containing a clean item,
+//!   and emits [`BatchSnapshot`]s.
+//!
+//! ```
+//! use rdd_eclat::engine::ClusterContext;
+//! use rdd_eclat::fim::MinSup;
+//! use rdd_eclat::stream::{StreamConfig, StreamingMiner, WindowSpec};
+//!
+//! let ctx = ClusterContext::builder().cores(2).build();
+//! let cfg = StreamConfig::new(WindowSpec::sliding(3, 1), MinSup::count(2));
+//! let mut miner = StreamingMiner::new(ctx, cfg);
+//! let mut last = None;
+//! for batch in [
+//!     vec![vec![1, 2, 3], vec![1, 2]],
+//!     vec![vec![2, 3], vec![1, 2]],
+//!     vec![vec![1, 2, 3]],
+//! ] {
+//!     if let Some(snapshot) = miner.push_batch(batch).unwrap() {
+//!         last = Some(snapshot);
+//!     }
+//! }
+//! assert!(last.unwrap().frequents.iter().any(|f| f.items == vec![1, 2]));
+//! ```
+
+pub mod incremental;
+pub mod job;
+pub mod source;
+pub mod window;
+
+pub use incremental::IncrementalVerticalDb;
+pub use job::{BatchSnapshot, MineMode, MinePlan, StreamConfig, StreamingMiner};
+pub use source::{BatchSource, ClickstreamSource, Paced, ReplaySource};
+pub use window::{Batch, PushResult, SlidingWindow, WindowSpec};

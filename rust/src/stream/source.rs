@@ -1,0 +1,181 @@
+//! Micro-batch sources: replay a static database, or generate a
+//! clickstream lazily — optionally paced in wall time, the way a
+//! DStream receiver would hand over one RDD per batch interval.
+
+use std::time::Duration;
+
+use crate::data::clickstream::{ClickGen, ClickParams};
+use crate::fim::{Database, Item};
+
+/// A producer of micro-batches.
+pub trait BatchSource {
+    /// The next micro-batch of transactions, or `None` when the stream
+    /// is exhausted.
+    fn next_batch(&mut self) -> Option<Vec<Vec<Item>>>;
+}
+
+impl<S: BatchSource + ?Sized> BatchSource for Box<S> {
+    fn next_batch(&mut self) -> Option<Vec<Vec<Item>>> {
+        (**self).next_batch()
+    }
+}
+
+/// Replay any [`Database`] as fixed-size micro-batches, in order — the
+/// standard way to turn the Table 2 benchmark datasets into streams.
+#[derive(Debug)]
+pub struct ReplaySource {
+    rows: Vec<Vec<Item>>,
+    batch_size: usize,
+    pos: usize,
+}
+
+impl ReplaySource {
+    /// Stream `db` in batches of `batch_size` transactions (the last
+    /// batch may be short).
+    pub fn new(db: Database, batch_size: usize) -> ReplaySource {
+        assert!(batch_size >= 1, "batch size must be at least 1");
+        ReplaySource { rows: db.into_rows(), batch_size, pos: 0 }
+    }
+
+    /// Transactions not yet emitted.
+    pub fn remaining(&self) -> usize {
+        self.rows.len() - self.pos
+    }
+}
+
+impl BatchSource for ReplaySource {
+    fn next_batch(&mut self) -> Option<Vec<Vec<Item>>> {
+        if self.pos >= self.rows.len() {
+            return None;
+        }
+        let end = (self.pos + self.batch_size).min(self.rows.len());
+        let batch = self.rows[self.pos..end].to_vec();
+        self.pos = end;
+        Some(batch)
+    }
+}
+
+/// Generate a (possibly drifting) clickstream lazily, one micro-batch at
+/// a time. Batches are produced by absolute transaction index, so the
+/// stream is identical to `clickstream::generate` with the same
+/// parameters and seed — just never materialized whole. The sampler
+/// tables ([`ClickGen`]) are built once and reused across batches.
+#[derive(Debug)]
+pub struct ClickstreamSource {
+    generator: ClickGen,
+    batch_size: usize,
+    pos: usize,
+    /// Stop after this many transactions (`params.sessions` by default).
+    limit: usize,
+}
+
+impl ClickstreamSource {
+    /// Stream `params.sessions` transactions from the generator.
+    pub fn new(params: ClickParams, seed: u64, batch_size: usize) -> ClickstreamSource {
+        assert!(batch_size >= 1, "batch size must be at least 1");
+        let limit = params.sessions;
+        ClickstreamSource { generator: ClickGen::new(params, seed), batch_size, pos: 0, limit }
+    }
+
+    /// Override the total transaction budget (e.g. cap a demo run).
+    pub fn with_limit(mut self, total_txns: usize) -> ClickstreamSource {
+        self.limit = total_txns;
+        self
+    }
+}
+
+impl BatchSource for ClickstreamSource {
+    fn next_batch(&mut self) -> Option<Vec<Vec<Item>>> {
+        if self.pos >= self.limit {
+            return None;
+        }
+        let n = self.batch_size.min(self.limit - self.pos);
+        let batch = self.generator.range(self.pos, n);
+        self.pos += n;
+        Some(batch)
+    }
+}
+
+/// Wrap a source with a fixed inter-batch interval: `next_batch` sleeps
+/// so batches arrive at most once per `interval` — live-traffic pacing
+/// for the demos (tests and benches use the sources unpaced).
+#[derive(Debug)]
+pub struct Paced<S> {
+    inner: S,
+    interval: Duration,
+    last: Option<std::time::Instant>,
+}
+
+impl<S: BatchSource> Paced<S> {
+    /// Pace `inner` to one batch per `interval`.
+    pub fn new(inner: S, interval: Duration) -> Paced<S> {
+        Paced { inner, interval, last: None }
+    }
+}
+
+impl<S: BatchSource> BatchSource for Paced<S> {
+    fn next_batch(&mut self) -> Option<Vec<Vec<Item>>> {
+        if let Some(last) = self.last {
+            let elapsed = last.elapsed();
+            if elapsed < self.interval {
+                std::thread::sleep(self.interval - elapsed);
+            }
+        }
+        self.last = Some(std::time::Instant::now());
+        self.inner.next_batch()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::clickstream;
+
+    #[test]
+    fn replay_chunks_in_order_with_short_tail() {
+        let db = Database::from_rows((0..7).map(|i| vec![i]).collect());
+        let mut src = ReplaySource::new(db, 3);
+        assert_eq!(src.remaining(), 7);
+        assert_eq!(src.next_batch().unwrap().len(), 3);
+        assert_eq!(src.next_batch().unwrap().len(), 3);
+        let tail = src.next_batch().unwrap();
+        assert_eq!(tail, vec![vec![6]]);
+        assert!(src.next_batch().is_none());
+        assert_eq!(src.remaining(), 0);
+    }
+
+    #[test]
+    fn clickstream_source_equals_generate() {
+        let params = ClickParams { sessions: 500, ..ClickParams::drift() };
+        let full = clickstream::generate(&params, 9);
+        let mut src = ClickstreamSource::new(params, 9, 128);
+        let mut rows = Vec::new();
+        let mut batches = 0;
+        while let Some(b) = src.next_batch() {
+            rows.extend(b);
+            batches += 1;
+        }
+        assert_eq!(batches, 4, "500 txns in batches of 128");
+        assert_eq!(Database::from_rows(rows), full);
+    }
+
+    #[test]
+    fn clickstream_limit_caps_the_stream() {
+        let params = ClickParams { sessions: 10_000, ..ClickParams::drift() };
+        let mut src = ClickstreamSource::new(params, 1, 64).with_limit(100);
+        let mut total = 0;
+        while let Some(b) = src.next_batch() {
+            total += b.len();
+        }
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn paced_source_passes_batches_through() {
+        let db = Database::from_rows(vec![vec![1], vec![2]]);
+        let mut src = Paced::new(ReplaySource::new(db, 1), Duration::from_millis(1));
+        assert_eq!(src.next_batch().unwrap(), vec![vec![1]]);
+        assert_eq!(src.next_batch().unwrap(), vec![vec![2]]);
+        assert!(src.next_batch().is_none());
+    }
+}

@@ -1,0 +1,257 @@
+//! Tumbling and sliding micro-batch windows with tid-range bookkeeping.
+//!
+//! The window is the unit of scoping for streaming FIM: every emitted
+//! result covers the transactions of the last `batches` micro-batches,
+//! re-evaluated every `slide` batches (Spark Streaming's
+//! `window(length, slideInterval)`, measured in batches instead of
+//! wall time). The window owns global transaction-id assignment — each
+//! ingested batch occupies a contiguous, monotonically increasing tid
+//! range, which is what lets the incremental vertical store evict whole
+//! batches with one bitmap range-mask per touched item.
+
+use std::collections::VecDeque;
+
+use crate::fim::{Database, Item, Tid};
+
+/// Window geometry, in batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowSpec {
+    /// Window length: how many of the most recent batches are in scope.
+    pub batches: usize,
+    /// Emission cadence: mine after every `slide` ingested batches.
+    /// `slide == batches` is a tumbling window; `slide < batches` a
+    /// sliding one; `slide > batches` leaves gaps (legal — batches pass
+    /// through the window between emissions).
+    pub slide: usize,
+}
+
+impl WindowSpec {
+    /// Non-overlapping windows: every transaction is mined exactly once.
+    pub fn tumbling(batches: usize) -> WindowSpec {
+        WindowSpec::sliding(batches, batches)
+    }
+
+    /// Overlapping windows re-evaluated every `slide` batches.
+    pub fn sliding(batches: usize, slide: usize) -> WindowSpec {
+        assert!(batches >= 1, "window must span at least one batch");
+        assert!(slide >= 1, "slide must be at least one batch");
+        WindowSpec { batches, slide }
+    }
+
+    /// True when windows do not overlap.
+    pub fn is_tumbling(&self) -> bool {
+        self.slide == self.batches
+    }
+}
+
+/// One ingested micro-batch held live by the window.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Batch {
+    /// Sequence number (0-based ingestion order).
+    pub id: u64,
+    /// First global tid of this batch.
+    pub tid_lo: Tid,
+    /// Transactions, each sorted and de-duplicated.
+    pub rows: Vec<Vec<Item>>,
+}
+
+impl Batch {
+    /// One past the last global tid of this batch.
+    pub fn tid_hi(&self) -> Tid {
+        self.tid_lo + self.rows.len() as Tid
+    }
+}
+
+/// Outcome of ingesting one batch.
+#[derive(Debug)]
+pub struct PushResult {
+    /// Sequence number assigned to the ingested batch.
+    pub batch_id: u64,
+    /// First global tid assigned to the ingested batch.
+    pub tid_lo: Tid,
+    /// Batches that fell out of the window, oldest first.
+    pub evicted: Vec<Batch>,
+    /// True when a window emission is due (every `slide` pushes).
+    pub emit: bool,
+}
+
+/// A sliding window over micro-batches.
+#[derive(Debug)]
+pub struct SlidingWindow {
+    spec: WindowSpec,
+    live: VecDeque<Batch>,
+    next_tid: Tid,
+    next_id: u64,
+    pushes_since_emit: usize,
+    txns: usize,
+}
+
+/// Canonicalize one transaction the way [`Database::from_rows`] does.
+pub fn normalize_row(mut row: Vec<Item>) -> Vec<Item> {
+    row.sort_unstable();
+    row.dedup();
+    row
+}
+
+impl SlidingWindow {
+    /// Empty window with the given geometry.
+    pub fn new(spec: WindowSpec) -> SlidingWindow {
+        SlidingWindow {
+            spec,
+            live: VecDeque::with_capacity(spec.batches + 1),
+            next_tid: 0,
+            next_id: 0,
+            pushes_since_emit: 0,
+            txns: 0,
+        }
+    }
+
+    /// The geometry.
+    pub fn spec(&self) -> WindowSpec {
+        self.spec
+    }
+
+    /// Ingest one batch (rows must already be normalized — see
+    /// [`normalize_row`]). Assigns its tid range, evicts batches that
+    /// fall out of scope, and reports whether an emission is due.
+    pub fn push(&mut self, rows: Vec<Vec<Item>>) -> PushResult {
+        debug_assert!(
+            rows.iter().all(|r| r.windows(2).all(|w| w[0] < w[1])),
+            "rows must be sorted and de-duplicated"
+        );
+        let batch = Batch { id: self.next_id, tid_lo: self.next_tid, rows };
+        self.next_id += 1;
+        self.next_tid = batch.tid_hi();
+        self.txns += batch.rows.len();
+        let (batch_id, tid_lo) = (batch.id, batch.tid_lo);
+        self.live.push_back(batch);
+        let mut evicted = Vec::new();
+        while self.live.len() > self.spec.batches {
+            let old = self.live.pop_front().expect("live is non-empty");
+            self.txns -= old.rows.len();
+            evicted.push(old);
+        }
+        self.pushes_since_emit += 1;
+        let emit = self.pushes_since_emit >= self.spec.slide;
+        if emit {
+            self.pushes_since_emit = 0;
+        }
+        PushResult { batch_id, tid_lo, evicted, emit }
+    }
+
+    /// Live transaction count.
+    pub fn txns(&self) -> usize {
+        self.txns
+    }
+
+    /// Number of live batches (≤ `spec.batches`).
+    pub fn len_batches(&self) -> usize {
+        self.live.len()
+    }
+
+    /// Global tid range `[lo, hi)` currently live. `lo == hi` when empty.
+    pub fn tid_range(&self) -> (Tid, Tid) {
+        match self.live.front() {
+            Some(b) => (b.tid_lo, self.next_tid),
+            None => (self.next_tid, self.next_tid),
+        }
+    }
+
+    /// Materialize the live window as a horizontal [`Database`] (oldest
+    /// transaction first) — the from-scratch mining path and the oracle
+    /// the parity tests compare against.
+    pub fn materialize(&self) -> Database {
+        let mut rows = Vec::with_capacity(self.txns);
+        for b in &self.live {
+            rows.extend(b.rows.iter().cloned());
+        }
+        Database::from_rows(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(n: usize, tag: u32) -> Vec<Vec<Item>> {
+        (0..n).map(|i| vec![tag, tag + 1 + i as u32]).collect()
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one batch")]
+    fn zero_length_window_rejected() {
+        WindowSpec::sliding(0, 1);
+    }
+
+    #[test]
+    fn tumbling_emits_every_window_length() {
+        let mut w = SlidingWindow::new(WindowSpec::tumbling(3));
+        assert!(WindowSpec::tumbling(3).is_tumbling());
+        let emits: Vec<bool> = (0..7).map(|i| w.push(rows(2, i)).emit).collect();
+        assert_eq!(emits, vec![false, false, true, false, false, true, false]);
+        assert_eq!(w.len_batches(), 3);
+        assert_eq!(w.txns(), 6);
+    }
+
+    #[test]
+    fn sliding_evicts_oldest_and_tracks_tids() {
+        let mut w = SlidingWindow::new(WindowSpec::sliding(2, 1));
+        let r0 = w.push(rows(3, 0));
+        assert_eq!((r0.batch_id, r0.tid_lo), (0, 0));
+        assert!(r0.emit && r0.evicted.is_empty());
+        let r1 = w.push(rows(2, 10));
+        assert_eq!(r1.tid_lo, 3);
+        assert!(r1.evicted.is_empty());
+        let r2 = w.push(rows(4, 20));
+        assert_eq!(r2.tid_lo, 5);
+        assert_eq!(r2.evicted.len(), 1);
+        assert_eq!(r2.evicted[0].id, 0);
+        assert_eq!((r2.evicted[0].tid_lo, r2.evicted[0].tid_hi()), (0, 3));
+        assert_eq!(w.tid_range(), (3, 9));
+        assert_eq!(w.txns(), 6);
+    }
+
+    #[test]
+    fn slide_larger_than_window_passes_batches_through() {
+        // Window of 1 batch, emission every 3: batches are evicted without
+        // ever being mined — the "gap" geometry.
+        let mut w = SlidingWindow::new(WindowSpec::sliding(1, 3));
+        assert!(!w.push(rows(1, 0)).emit);
+        let r = w.push(rows(1, 10));
+        assert!(!r.emit);
+        assert_eq!(r.evicted.len(), 1);
+        let r = w.push(rows(1, 20));
+        assert!(r.emit);
+        assert_eq!(w.txns(), 1);
+        assert_eq!(w.materialize().transactions()[0], vec![20, 21]);
+    }
+
+    #[test]
+    fn materialize_concatenates_live_batches_in_order() {
+        let mut w = SlidingWindow::new(WindowSpec::sliding(2, 2));
+        w.push(vec![vec![1, 2], vec![]]);
+        w.push(vec![vec![3]]);
+        let db = w.materialize();
+        assert_eq!(db.len(), 3);
+        assert_eq!(db.transactions()[0], vec![1, 2]);
+        assert!(db.transactions()[1].is_empty(), "empty transactions are kept");
+        assert_eq!(db.transactions()[2], vec![3]);
+    }
+
+    #[test]
+    fn empty_batches_are_legal() {
+        let mut w = SlidingWindow::new(WindowSpec::sliding(2, 1));
+        let r = w.push(Vec::new());
+        assert!(r.emit);
+        assert_eq!(w.txns(), 0);
+        assert_eq!(w.tid_range(), (0, 0));
+        w.push(rows(2, 5));
+        assert_eq!(w.tid_range(), (0, 2));
+    }
+
+    #[test]
+    fn normalize_row_sorts_and_dedups() {
+        assert_eq!(normalize_row(vec![5, 1, 5, 3]), vec![1, 3, 5]);
+        assert!(normalize_row(vec![]).is_empty());
+    }
+}

@@ -1,0 +1,53 @@
+//! Minimal JSON emission helpers (no `serde` offline). Shared by the
+//! bench reports and the rule/stream snapshot writers — flat schemas
+//! emitted by hand, with only string escaping needing care.
+
+/// Quote and escape a string as a JSON string literal (quotes,
+/// backslashes, control characters).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Format an `f64` for JSON: finite values as-is, non-finite as `null`
+/// (JSON has no NaN/Infinity).
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escapes_quotes_and_controls() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("x\ny\t\r"), "\"x\\ny\\t\\r\"");
+        assert_eq!(json_str("\u{01}"), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn f64_non_finite_is_null() {
+        assert_eq!(json_f64(1.5), "1.500000");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+    }
+}

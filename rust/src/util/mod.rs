@@ -4,6 +4,7 @@
 //! The offline crate set has neither `rand` nor `proptest`, so this module
 //! provides the pieces the rest of the crate needs, built from scratch.
 
+pub mod json;
 pub mod prng;
 pub mod prop;
 pub mod stats;

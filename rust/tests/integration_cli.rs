@@ -33,7 +33,8 @@ fn generate_then_run_on_file_path() {
         .output()
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
-    let file = format!("{dir}/chess.dat");
+    // Cache filenames carry the generator version (see DatasetSpec).
+    let file = format!("{dir}/chess.v2.dat");
     assert!(std::path::Path::new(&file).exists());
 
     // Mine the generated file by path.
@@ -101,6 +102,65 @@ fn rules_subcommand_prints_confident_rules() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("rules at min_conf"), "{text}");
     assert!(text.contains("=>"), "{text}");
+}
+
+#[test]
+fn rules_subcommand_writes_json() {
+    let dir = tmp_dir("rules_json");
+    let json_path = format!("{dir}/rules.json");
+    let out = repro()
+        .args([
+            "rules", "--dataset", "chess", "--min-sup", "0.9", "--min-conf", "0.9",
+            "--data-dir", &dir, "--top", "1", "--json", &json_path,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json.trim_start().starts_with('['), "{json}");
+    assert!(json.contains("\"antecedent\""), "{json}");
+    assert!(json.contains("\"confidence\""), "{json}");
+}
+
+#[test]
+fn stream_subcommand_replays_a_file_and_writes_snapshot() {
+    let dir = tmp_dir("stream");
+    // 12 transactions with a stable frequent pair {1, 2}.
+    let file = format!("{dir}/stream.dat");
+    let rows: String = (0..12)
+        .map(|i| if i % 3 == 2 { "1 3\n".to_string() } else { "1 2\n".to_string() })
+        .collect();
+    std::fs::write(&file, rows).unwrap();
+    let json_path = format!("{dir}/snapshot.json");
+    let out = repro()
+        .args([
+            "stream", "--dataset", &file, "--batch", "4", "--window", "2", "--slide", "1",
+            "--batches", "3", "--min-sup", "3", "--min-conf", "0.5", "--json", &json_path,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("emissions"), "{text}");
+    assert!(text.contains("batch"), "{text}");
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json.contains("\"window_txns\": 8"), "{json}");
+    assert!(json.contains("\"frequents\""), "{json}");
+    assert!(json.contains("\"rules\""), "{json}");
+
+    // From-scratch mode produces the same final itemset count.
+    let out = repro()
+        .args([
+            "stream", "--dataset", &file, "--batch", "4", "--window", "2", "--slide", "1",
+            "--batches", "3", "--min-sup", "3", "--mode", "from-scratch", "--quiet",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+
+    // Bad mode is a usage error.
+    let out = repro().args(["stream", "--mode", "telepathy"]).output().unwrap();
+    assert!(!out.status.success());
 }
 
 #[test]

@@ -1,0 +1,176 @@
+//! Streaming correctness: at every emission, incremental window mining
+//! must equal `SeqEclat` run from scratch on the materialized window
+//! contents — across seeds, window geometries, slide steps (including
+//! slides larger than the window, i.e. full eviction between emissions)
+//! and degenerate batches (empty batches, empty transactions).
+
+use rdd_eclat::algorithms::SeqEclat;
+use rdd_eclat::data::clickstream::{generate_range, ClickParams};
+use rdd_eclat::engine::ClusterContext;
+use rdd_eclat::fim::{sort_frequents, Database, Frequent, MinSup};
+use rdd_eclat::stream::{MineMode, MinePlan, StreamConfig, StreamingMiner, WindowSpec};
+use rdd_eclat::util::prng::Rng;
+use rdd_eclat::util::prop::{check, prop_assert_eq, Config};
+
+fn oracle(db: &Database, min_sup: MinSup) -> Vec<Frequent> {
+    let mut v = SeqEclat::mine(db, min_sup);
+    sort_frequents(&mut v);
+    v
+}
+
+fn random_batch(rng: &mut Rng, n_items: u32) -> Vec<Vec<u32>> {
+    let n_rows = rng.range(0, 9); // empty batches included
+    (0..n_rows)
+        .map(|_| {
+            // Occasionally an empty transaction.
+            let width = rng.range(0, 6);
+            (0..width).map(|_| rng.below(n_items as u64) as u32).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn incremental_equals_from_scratch_oracle_at_every_emission() {
+    let ctx = ClusterContext::builder().cores(2).build();
+    check(Config::default().cases(40).seed(0x57E0), |rng| {
+        let n_items = rng.range(3, 14) as u32;
+        let window = rng.range(1, 5);
+        let slide = rng.range(1, window + 3); // slide > window covered
+        let min_sup = if rng.chance(0.5) {
+            MinSup::count(rng.range(1, 5) as u32)
+        } else {
+            MinSup::fraction(0.05 + rng.f64() * 0.6)
+        };
+        // Low churn thresholds force the delta path; high ones the full
+        // re-mine path — both must agree with the oracle.
+        let churn_threshold = if rng.chance(0.5) { 1.0 } else { rng.f64() };
+        let cfg = StreamConfig {
+            churn_threshold,
+            ..StreamConfig::new(WindowSpec::sliding(window, slide), min_sup)
+        };
+        let mut miner = StreamingMiner::new(ctx.clone(), cfg);
+        let mut emissions = 0;
+        for _ in 0..rng.range(3, 20) {
+            let batch = random_batch(rng, n_items);
+            if let Some(snap) = miner.push_batch(batch).expect("push") {
+                emissions += 1;
+                let db = miner.materialize_window();
+                prop_assert_eq(snap.window_txns, db.len(), "window size")?;
+                let want = oracle(&db, min_sup);
+                if snap.frequents != want {
+                    return Err(format!(
+                        "emission {emissions} (plan {:?}, window {window} slide {slide}, \
+                         min_sup {min_sup:?}): got {:?} want {want:?}",
+                        snap.plan, snap.frequents
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn long_sliding_run_exercises_delta_reuse_and_compaction() {
+    // A drifting clickstream sliding far enough that (a) the delta path
+    // actually fires with reuse, and (b) the store's dead prefix exceeds
+    // the live span repeatedly (compaction). Parity is checked at every
+    // emission.
+    let ctx = ClusterContext::builder().cores(2).build();
+    let params = ClickParams {
+        sessions: 4000,
+        items: 120,
+        avg_len: 2.5,
+        skew: 0.9,
+        locality: 0.5,
+        radius: 8,
+        drift: 120.0 / 4000.0,
+    };
+    let min_sup = MinSup::count(4);
+    let cfg = StreamConfig {
+        // Never fall back to a full re-mine: this test wants the delta
+        // path (and its cache reuse) under real churn.
+        churn_threshold: 1.0,
+        ..StreamConfig::new(WindowSpec::sliding(8, 1), min_sup)
+    };
+    let mut miner = StreamingMiner::new(ctx, cfg);
+    let (batch_size, n_batches) = (50, 40);
+    let mut deltas_with_reuse = 0;
+    for b in 0..n_batches {
+        let rows = generate_range(&params, 31, b * batch_size, batch_size);
+        let snap = miner.push_batch(rows).expect("push").expect("slide 1 emits");
+        let want = oracle(&miner.materialize_window(), min_sup);
+        assert_eq!(snap.frequents, want, "batch {b}, plan {:?}", snap.plan);
+        if let MinePlan::Delta { reused_itemsets, .. } = snap.plan {
+            if reused_itemsets > 0 {
+                deltas_with_reuse += 1;
+            }
+        }
+    }
+    assert!(
+        deltas_with_reuse > 0,
+        "the delta path with cache reuse never fired over {n_batches} batches"
+    );
+}
+
+#[test]
+fn modes_agree_and_are_deterministic() {
+    let params = ClickParams { sessions: 1200, ..ClickParams::drift() };
+    let spec = WindowSpec::sliding(4, 2);
+    let min_sup = MinSup::fraction(0.02);
+    let run = |mode: MineMode| {
+        let ctx = ClusterContext::builder().cores(2).build();
+        let mut miner =
+            StreamingMiner::new(ctx, StreamConfig::new(spec, min_sup).mode(mode));
+        let mut out = Vec::new();
+        for b in 0..12 {
+            let rows = generate_range(&params, 5, b * 100, 100);
+            if let Some(snap) = miner.push_batch(rows).expect("push") {
+                out.push((snap.batch_id, snap.frequents, snap.rules.len()));
+            }
+        }
+        out
+    };
+    let inc = run(MineMode::Incremental);
+    let scratch = run(MineMode::FromScratch);
+    assert_eq!(inc.len(), 6, "12 pushes at slide 2");
+    assert_eq!(inc, scratch, "modes must agree emission by emission");
+    assert_eq!(inc, run(MineMode::Incremental), "runs are deterministic");
+}
+
+#[test]
+fn tumbling_full_eviction_between_emissions() {
+    // Tumbling geometry: every emission covers a disjoint set of batches;
+    // everything from the previous window is evicted in between.
+    let ctx = ClusterContext::builder().cores(2).build();
+    let min_sup = MinSup::count(2);
+    let mut miner = StreamingMiner::new(
+        ctx,
+        StreamConfig::new(WindowSpec::tumbling(2), min_sup),
+    );
+    let phases: [Vec<Vec<u32>>; 6] = [
+        vec![vec![1, 2], vec![1, 2]],
+        vec![vec![1, 2, 3]],
+        vec![vec![4, 5], vec![4, 5]], // disjoint vocabulary
+        vec![vec![4, 6]],
+        vec![],                       // empty batches
+        vec![],
+    ];
+    let mut snaps = Vec::new();
+    for batch in phases {
+        if let Some(s) = miner.push_batch(batch).expect("push") {
+            let want = oracle(&miner.materialize_window(), min_sup);
+            assert_eq!(s.frequents, want);
+            snaps.push(s);
+        }
+    }
+    assert_eq!(snaps.len(), 3);
+    assert!(snaps[0].frequents.contains(&Frequent::new(vec![1, 2], 3)));
+    assert!(snaps[1].frequents.contains(&Frequent::new(vec![4], 3)));
+    assert!(
+        !snaps[1].frequents.iter().any(|f| f.items.contains(&1)),
+        "fully evicted items must vanish"
+    );
+    assert!(snaps[2].frequents.is_empty(), "empty window mines empty");
+    assert_eq!(snaps[2].window_txns, 0);
+}
