@@ -1,7 +1,7 @@
 //! Micro-benchmarks of the FIM hot paths (criterion-style, own harness):
 //! tidset vs bitmap intersection, triangular-matrix updates, bottom-up
-//! recursion, candidate counting. These are the knobs the §Perf pass
-//! tunes.
+//! recursion (arena vs the pre-refactor cloning baseline), candidate
+//! counting. These are the knobs the §Perf pass tunes.
 //!
 //! Besides the CSV under `results/`, the run emits the perf-trajectory
 //! file `BENCH_fim.json` at the repository root (override the path with
@@ -9,19 +9,34 @@
 //!
 //! ```text
 //! cargo bench --bench fim_micro          # SCALE=paper for full samples
+//! cargo bench --bench fim_micro --features alloc-count -- --quick
 //! ```
+//!
+//! With `--features alloc-count` the binary installs a counting global
+//! allocator and each `bottomup/*` row carries the heap-allocation count
+//! of one invocation — the zero-allocation claim of the arena miner is
+//! measured, not asserted (the arena rows should show only the emitted
+//! `Frequent`s plus output-vector growth; the `*_cloning` rows add one
+//! allocation per candidate tidset and per recursion node on top).
 
-use rdd_eclat::bench::{black_box, Bench, Report};
+use rdd_eclat::bench::{alloc, black_box, Bench, Report};
 use rdd_eclat::fim::{
-    bottom_up, intersect, intersect_count, CandidateTrie, TidBitmap, Tidset, TriMatrix,
+    bottom_up_with, bottomup::reference, intersect, intersect_count, intersect_into,
+    CandidateTrie, Frequent, MineScratch, TidBitmap, Tidset, TriMatrix,
 };
 use rdd_eclat::util::prng::Rng;
+
+#[cfg(feature = "alloc-count")]
+#[global_allocator]
+static GLOBAL: alloc::CountingAllocator = alloc::CountingAllocator::new();
 
 fn random_tidset(rng: &mut Rng, universe: usize, density: f64) -> Tidset {
     (0..universe as u32).filter(|_| rng.chance(density)).collect()
 }
 
 fn main() {
+    #[cfg(feature = "alloc-count")]
+    alloc::mark_installed();
     let bench = Bench::from_env();
     let mut report = Report::new();
     let mut rng = Rng::new(2024);
@@ -37,6 +52,11 @@ fn main() {
         report.add(bench.run(format!("intersect/vec/d={density}"), || {
             black_box(intersect(&a, &b).len())
         }));
+        let mut into_buf = Tidset::new();
+        report.add(bench.run(format!("intersect/vec_into/d={density}"), || {
+            intersect_into(&a, &b, &mut into_buf);
+            black_box(into_buf.len())
+        }));
         report.add(bench.run(format!("intersect/vec_count/d={density}"), || {
             black_box(intersect_count(&a, &b))
         }));
@@ -45,6 +65,10 @@ fn main() {
         }));
         report.add(bench.run(format!("intersect/bitmap_and/d={density}"), || {
             black_box(ba.and(&bb).count())
+        }));
+        let mut bm_buf = TidBitmap::new(0);
+        report.add(bench.run(format!("intersect/bitmap_and_into/d={density}"), || {
+            black_box(ba.and_counted_into(&bb, &mut bm_buf))
         }));
     }
 
@@ -76,7 +100,13 @@ fn main() {
         }));
     }
 
-    // --- bottom-up recursion over a mid-sized class ---
+    // --- bottom-up recursion over a mid-sized class: arena vs cloning ---
+    //
+    // The arena rows reuse one MineScratch + output vector across
+    // samples (steady state: lanes and candidate buffers are recycled,
+    // intersections abort early); the `_cloning` rows run the pre-arena
+    // reference implementation. Under --features alloc-count each row
+    // also reports the heap allocations of one invocation.
     {
         let universe = 20_000;
         let members: Vec<(u32, Tidset)> = (0..24)
@@ -87,16 +117,77 @@ fn main() {
             .map(|(i, t)| (*i, TidBitmap::from_tids(universe, t.iter().copied())))
             .collect();
         let min_sup = (universe as f64 * 0.012) as u32;
-        report.add(bench.run("bottomup/tidset_24atoms", || {
-            let mut out = Vec::new();
-            bottom_up::<Tidset>(&[0], &members, min_sup, &mut out);
+        let mut out: Vec<Frequent> = Vec::new();
+
+        let mut tid_scratch = MineScratch::<Tidset>::new();
+        let m = bench.run("bottomup/tidset_24atoms", || {
+            out.clear();
+            bottom_up_with(&mut tid_scratch, &[100], &members, min_sup, &mut out);
             black_box(out.len())
-        }));
-        report.add(bench.run("bottomup/bitmap_24atoms", || {
+        });
+        let allocs = alloc::count_in(|| {
+            out.clear();
+            bottom_up_with(&mut tid_scratch, &[100], &members, min_sup, &mut out);
+        })
+        .1;
+        report.add(m.with_allocs(allocs));
+
+        let m = bench.run("bottomup/tidset_24atoms_cloning", || {
             let mut out = Vec::new();
-            bottom_up::<TidBitmap>(&[0], &bitmap_members, min_sup, &mut out);
+            reference::bottom_up::<Tidset>(&[100], &members, min_sup, &mut out);
             black_box(out.len())
-        }));
+        });
+        let allocs = alloc::count_in(|| {
+            let mut out = Vec::new();
+            reference::bottom_up::<Tidset>(&[100], &members, min_sup, &mut out);
+            black_box(out.len());
+        })
+        .1;
+        report.add(m.with_allocs(allocs));
+
+        let mut bm_scratch = MineScratch::<TidBitmap>::new();
+        let m = bench.run("bottomup/bitmap_24atoms", || {
+            out.clear();
+            bottom_up_with(&mut bm_scratch, &[100], &bitmap_members, min_sup, &mut out);
+            black_box(out.len())
+        });
+        let allocs = alloc::count_in(|| {
+            out.clear();
+            bottom_up_with(&mut bm_scratch, &[100], &bitmap_members, min_sup, &mut out);
+        })
+        .1;
+        report.add(m.with_allocs(allocs));
+
+        let m = bench.run("bottomup/bitmap_24atoms_cloning", || {
+            let mut out = Vec::new();
+            reference::bottom_up::<TidBitmap>(&[100], &bitmap_members, min_sup, &mut out);
+            black_box(out.len())
+        });
+        let allocs = alloc::count_in(|| {
+            let mut out = Vec::new();
+            reference::bottom_up::<TidBitmap>(&[100], &bitmap_members, min_sup, &mut out);
+            black_box(out.len());
+        })
+        .1;
+        report.add(m.with_allocs(allocs));
+
+        // The zero-allocation claim, made checkable: a warm-arena run's
+        // allocation count minus the emitted itemsets (each Frequent owns
+        // its items Vec — that's the output, not mining machinery) is the
+        // per-run machinery allocation figure, which should be ~0.
+        out.clear();
+        bottom_up_with(&mut tid_scratch, &[100], &members, min_sup, &mut out);
+        let emits = out.len() as u64;
+        if let (_, Some(arena_allocs)) = alloc::count_in(|| {
+            out.clear();
+            bottom_up_with(&mut tid_scratch, &[100], &members, min_sup, &mut out);
+        }) {
+            println!(
+                "bottomup/tidset_24atoms steady state: {arena_allocs} allocs for {emits} \
+                 emitted itemsets => {} machinery allocations",
+                arena_allocs.saturating_sub(emits)
+            );
+        }
     }
 
     // --- Apriori candidate subset counting ---
@@ -132,7 +223,7 @@ fn main() {
     let out = std::env::var("BENCH_FIM_OUT").unwrap_or_else(|_| {
         format!("{}/../BENCH_fim.json", env!("CARGO_MANIFEST_DIR"))
     });
-    let scale = std::env::var("SCALE").unwrap_or_else(|_| "paper".to_string());
-    report.write_json(&out, "fim_micro", &scale).expect("write BENCH_fim.json");
+    let scale = Bench::scale_from_env();
+    report.write_json(&out, "fim_micro", scale).expect("write BENCH_fim.json");
     println!("wrote {out}");
 }

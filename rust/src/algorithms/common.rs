@@ -10,7 +10,7 @@ use std::sync::Arc;
 use crate::engine::{ClusterContext, Partitioner, Rdd};
 use crate::error::Result;
 use crate::fim::{
-    construct_classes, Database, Frequent, Item, Tid, Tidset, TriMatrix, VerticalDb,
+    construct_classes, AutoScratch, Database, Frequent, Item, Tid, Tidset, TriMatrix, VerticalDb,
 };
 
 use super::{CoocStrategy, TriMatrixProvider};
@@ -254,10 +254,20 @@ pub fn mine_equivalence_classes(
         .collect();
 
     // Initial partition count is irrelevant: partitionBy immediately
-    // redistributes by class key (paper Algorithm 4 line 17–18).
+    // redistributes by class key (paper Algorithm 4 line 17–18). Each
+    // mining task owns one AutoScratch arena for its whole partition, so
+    // every class it mines reuses the same lane/remap buffers.
     let ecs = ctx.parallelize(keyed, 1).partition_by(partitioner).cache();
-    let frequents: Vec<Frequent> =
-        ecs.flat_map(move |(_, ec)| ec.mine_auto(min_sup, universe)).collect()?;
+    let frequents: Vec<Frequent> = ecs
+        .map_partitions_with_index(move |_idx, classes| {
+            let mut scratch = AutoScratch::new();
+            let mut out = Vec::new();
+            for (_, ec) in classes {
+                out.extend(ec.mine_auto_with(&mut scratch, min_sup, universe));
+            }
+            out
+        })
+        .collect()?;
     Ok(MinedClasses { frequents, loads })
 }
 

@@ -4,8 +4,8 @@
 use crate::engine::ClusterContext;
 use crate::error::Result;
 use crate::fim::{
-    apriori::apriori, bottomup::bottom_up_diffset, construct_classes, fpgrowth::fp_growth,
-    Database, Frequent, MinSup, VerticalDb,
+    apriori::apriori, bottom_up_diffset_with, construct_classes, fpgrowth::fp_growth, AutoScratch,
+    Database, Frequent, MineScratch, MinSup, VerticalDb,
 };
 use crate::util::Stopwatch;
 
@@ -31,7 +31,9 @@ impl SeqEclat {
     /// Run directly on a database (no context needed). Uses the
     /// triangular-matrix prune (Zaki's recommendation, §Perf iteration 4)
     /// to avoid intersecting infrequent item pairs during class
-    /// construction.
+    /// construction, and one [`AutoScratch`] arena shared across every
+    /// class so steady-state mining allocates nothing per candidate
+    /// (§Perf iteration 5).
     pub fn mine(db: &Database, min_sup: MinSup) -> Vec<Frequent> {
         let min_sup = min_sup.to_count(db.len());
         let vdb = VerticalDb::build(db, min_sup);
@@ -44,8 +46,9 @@ impl SeqEclat {
             .iter()
             .map(|(i, t)| Frequent::new(vec![*i], t.len() as u32))
             .collect();
+        let mut scratch = AutoScratch::new();
         for class in construct_classes(&vdb, min_sup, Some(&tri)) {
-            out.extend(class.mine_auto(min_sup, db.len()));
+            out.extend(class.mine_auto_with(&mut scratch, min_sup, db.len()));
         }
         out
     }
@@ -81,8 +84,10 @@ impl Algorithm for SeqEclatDiffset {
             .map(|(i, t)| Frequent::new(vec![*i], t.len() as u32))
             .collect();
         // One top-level class over all frequent items: the diffset driver
-        // handles the level-1 → level-2 conversion internally.
-        bottom_up_diffset(&[], &vdb.items, min_sup, &mut out);
+        // handles the level-1 → level-2 conversion internally, through
+        // the same reusable mining arena as the tidset path.
+        let mut scratch = MineScratch::new();
+        bottom_up_diffset_with(&mut scratch, &[], &vdb.items, min_sup, &mut out);
         // bottom_up_diffset re-emits the 1-itemsets; drop the duplicates.
         let mut seen = std::collections::HashSet::new();
         out.retain(|f| seen.insert(f.items.clone()));

@@ -1,0 +1,97 @@
+//! A counting global allocator, so "zero-allocation" claims are
+//! **measured, not asserted**.
+//!
+//! The type is always compiled; counting only happens when a bench
+//! binary *installs* it as the `#[global_allocator]` and calls
+//! [`mark_installed`] — gated behind the `alloc-count` cargo feature so
+//! ordinary builds keep the system allocator untouched:
+//!
+//! ```text
+//! cargo bench --bench fim_micro --features alloc-count -- --quick
+//! ```
+//!
+//! [`count_in`] then reports how many heap allocations a closure
+//! performed (`None` when no counting allocator is installed, so callers
+//! can't mistake "not measured" for "zero").
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// Pass-through allocator over [`System`] that counts every allocation
+/// (`alloc`, `alloc_zeroed`, and growth via `realloc`; frees are not
+/// counted — the metric is allocation pressure, not live bytes).
+#[derive(Debug, Default)]
+pub struct CountingAllocator;
+
+impl CountingAllocator {
+    /// Const constructor for `#[global_allocator]` statics.
+    pub const fn new() -> CountingAllocator {
+        CountingAllocator
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Record that a [`CountingAllocator`] is the process's global allocator.
+/// Call once from the bench binary's `main` (the library cannot know).
+pub fn mark_installed() {
+    INSTALLED.store(true, Ordering::Relaxed);
+}
+
+/// Whether allocation counts are meaningful in this process.
+pub fn installed() -> bool {
+    INSTALLED.load(Ordering::Relaxed)
+}
+
+/// Total allocations since process start (monotone counter).
+pub fn allocations() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Run `f`, returning its result plus the number of heap allocations it
+/// made — `None` when no counting allocator is installed. Counts are
+/// process-wide; run on a quiet process (benches are single-threaded).
+pub fn count_in<T>(f: impl FnOnce() -> T) -> (T, Option<u64>) {
+    if !installed() {
+        return (f(), None);
+    }
+    let before = allocations();
+    let value = f();
+    (value, Some(allocations() - before))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_in_is_none_without_installed_allocator() {
+        // The test binary does not install the counting allocator, so
+        // measurements must be explicit about being unavailable.
+        let (v, n) = count_in(|| vec![1u8; 128].len());
+        assert_eq!(v, 128);
+        assert_eq!(n, None);
+    }
+}

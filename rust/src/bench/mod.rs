@@ -6,6 +6,8 @@
 use crate::util::json::json_str;
 use crate::util::{Stopwatch, Summary};
 
+pub mod alloc;
+
 /// Harness configuration.
 #[derive(Debug, Clone)]
 pub struct Bench {
@@ -28,12 +30,22 @@ pub struct Measurement {
     pub name: String,
     /// Summary of per-sample wall times in seconds.
     pub secs: Summary,
+    /// Heap allocations of one invocation, when measured under the
+    /// counting allocator (see [`alloc`]); `None` = not measured.
+    pub allocs: Option<u64>,
 }
 
 impl Measurement {
     /// Mean seconds.
     pub fn mean(&self) -> f64 {
         self.secs.mean
+    }
+
+    /// Attach an allocation count (builder-style; used by benches that
+    /// measure one extra invocation under [`alloc::count_in`]).
+    pub fn with_allocs(mut self, allocs: Option<u64>) -> Measurement {
+        self.allocs = allocs;
+        self
     }
 }
 
@@ -43,7 +55,11 @@ impl std::fmt::Display for Measurement {
             f,
             "{:<44} {:>10.4}s ±{:>8.4} (n={}, min {:.4}, max {:.4})",
             self.name, self.secs.mean, self.secs.std_dev, self.secs.n, self.secs.min, self.secs.max
-        )
+        )?;
+        if let Some(a) = self.allocs {
+            write!(f, " [{a} allocs]")?;
+        }
+        Ok(())
     }
 }
 
@@ -53,12 +69,30 @@ impl Bench {
         Bench { warmup: 0, samples: 2 }
     }
 
-    /// From the `SCALE` env var: `paper` (default) vs `quick`.
+    /// From the environment: `SCALE=quick` or a `--quick` CLI argument
+    /// (cargo forwards arguments after `--` to the bench binary; the CI
+    /// perf-trajectory step runs `cargo bench --bench fim_micro -- --quick`).
     pub fn from_env() -> Bench {
-        match std::env::var("SCALE").as_deref() {
-            Ok("quick") => Bench::quick(),
-            _ => Bench::default(),
+        if Bench::quick_requested() {
+            Bench::quick()
+        } else {
+            Bench::default()
         }
+    }
+
+    /// The scale label matching [`Bench::from_env`]'s decision — the
+    /// single source of truth benches use to tag trajectory JSON.
+    pub fn scale_from_env() -> &'static str {
+        if Bench::quick_requested() {
+            "quick"
+        } else {
+            "paper"
+        }
+    }
+
+    fn quick_requested() -> bool {
+        std::env::var("SCALE").as_deref() == Ok("quick")
+            || std::env::args().any(|a| a == "--quick")
     }
 
     /// Measure a closure. The closure's return value is black-boxed so
@@ -73,7 +107,7 @@ impl Bench {
             black_box(f());
             samples.push(sw.secs());
         }
-        Measurement { name: name.into(), secs: Summary::of(&samples) }
+        Measurement { name: name.into(), secs: Summary::of(&samples), allocs: None }
     }
 
     /// Measure a fallible closure, propagating the first error.
@@ -91,7 +125,7 @@ impl Bench {
             black_box(f()?);
             samples.push(sw.secs());
         }
-        Ok(Measurement { name: name.into(), secs: Summary::of(&samples) })
+        Ok(Measurement { name: name.into(), secs: Summary::of(&samples), allocs: None })
     }
 }
 
@@ -123,13 +157,16 @@ impl Report {
         &self.rows
     }
 
-    /// Serialize as CSV (`name,mean_s,std_s,min_s,max_s,n`).
+    /// Serialize as CSV (`name,mean_s,std_s,min_s,max_s,n,allocs`; the
+    /// `allocs` cell is empty when the run was not measured under the
+    /// counting allocator).
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("name,mean_s,std_s,min_s,max_s,n\n");
+        let mut out = String::from("name,mean_s,std_s,min_s,max_s,n,allocs\n");
         for m in &self.rows {
+            let allocs = m.allocs.map(|a| a.to_string()).unwrap_or_default();
             out.push_str(&format!(
-                "{},{:.6},{:.6},{:.6},{:.6},{}\n",
-                m.name, m.secs.mean, m.secs.std_dev, m.secs.min, m.secs.max, m.secs.n
+                "{},{:.6},{:.6},{:.6},{:.6},{},{}\n",
+                m.name, m.secs.mean, m.secs.std_dev, m.secs.min, m.secs.max, m.secs.n, allocs
             ));
         }
         out
@@ -153,14 +190,19 @@ impl Report {
         out.push_str(&format!("  \"scale\": {},\n", json_str(scale)));
         out.push_str("  \"results\": [\n");
         for (i, m) in self.rows.iter().enumerate() {
+            let allocs = match m.allocs {
+                Some(a) => format!(", \"allocs\": {a}"),
+                None => String::new(),
+            };
             out.push_str(&format!(
-                "    {{\"name\": {}, \"mean_s\": {:.6}, \"std_s\": {:.6}, \"min_s\": {:.6}, \"max_s\": {:.6}, \"n\": {}}}{}\n",
+                "    {{\"name\": {}, \"mean_s\": {:.6}, \"std_s\": {:.6}, \"min_s\": {:.6}, \"max_s\": {:.6}, \"n\": {}{}}}{}\n",
                 json_str(&m.name),
                 m.secs.mean,
                 m.secs.std_dev,
                 m.secs.min,
                 m.secs.max,
                 m.secs.n,
+                allocs,
                 if i + 1 < self.rows.len() { "," } else { "" }
             ));
         }
@@ -205,24 +247,28 @@ mod tests {
     #[test]
     fn csv_shape() {
         let mut r = Report::new();
-        r.add(Measurement { name: "a/b".into(), secs: Summary::of(&[1.0, 2.0]) });
+        r.add(Measurement { name: "a/b".into(), secs: Summary::of(&[1.0, 2.0]), allocs: None });
         let csv = r.to_csv();
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 2);
         assert!(lines[0].starts_with("name,mean_s"));
+        assert!(lines[0].ends_with(",allocs"));
         assert!(lines[1].starts_with("a/b,1.5"));
+        assert!(lines[1].ends_with(','), "unmeasured allocs cell is empty");
     }
 
     #[test]
     fn json_shape_and_escaping() {
         let mut r = Report::new();
-        r.add(Measurement { name: "a\"b/c".into(), secs: Summary::of(&[1.0, 3.0]) });
-        r.add(Measurement { name: "plain".into(), secs: Summary::of(&[2.0]) });
+        r.add(Measurement { name: "a\"b/c".into(), secs: Summary::of(&[1.0, 3.0]), allocs: None });
+        r.add(Measurement { name: "plain".into(), secs: Summary::of(&[2.0]), allocs: Some(7) });
         let json = r.to_json("fim_micro", "quick");
         assert!(json.contains("\"bench\": \"fim_micro\""), "{json}");
         assert!(json.contains("\"scale\": \"quick\""), "{json}");
         assert!(json.contains("\"a\\\"b/c\""), "escaped name: {json}");
         assert!(json.contains("\"mean_s\": 2.000000"), "{json}");
+        assert!(json.contains("\"allocs\": 7"), "measured allocs emitted: {json}");
+        assert_eq!(json.matches("\"allocs\"").count(), 1, "unmeasured rows omit allocs: {json}");
         // Exactly one comma between the two result rows, none trailing.
         assert_eq!(json.matches("},\n").count(), 1, "{json}");
         assert!(!json.contains(",\n  ]"), "no trailing comma: {json}");
@@ -234,7 +280,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("BENCH_fim.json");
         let mut r = Report::new();
-        r.add(Measurement { name: "x".into(), secs: Summary::of(&[0.5]) });
+        r.add(Measurement { name: "x".into(), secs: Summary::of(&[0.5]), allocs: None });
         r.write_json(path.to_str().unwrap(), "fim_micro", "paper").unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.starts_with('{') && text.trim_end().ends_with('}'));

@@ -134,6 +134,7 @@ pub fn run_table2(fx: &FigureCtx) -> Result<Report> {
         report.add(Measurement {
             name: format!("table2/{}/generate", spec.name()),
             secs: Summary::of(&[sw.secs()]),
+            allocs: None,
         });
     }
     report.write_csv("table2.csv")?;
@@ -197,6 +198,7 @@ pub fn run_fig15(fx: &FigureCtx) -> Result<Report> {
                         r.cores
                     ),
                     secs: Summary::of(&[r.makespan.as_secs_f64()]),
+                    allocs: None,
                 });
             }
         }
@@ -243,6 +245,7 @@ pub fn run_a1(fx: &FigureCtx) -> Result<Report> {
         report.add(Measurement {
             name: format!("a1/T40I10D100K/sup={sup}/reduction_pct={:.2}", red * 100.0),
             secs: Summary::of(&[red]),
+            allocs: None,
         });
     }
     report.write_csv("a1_filtering.csv")?;
@@ -281,6 +284,7 @@ pub fn run_a2(fx: &FigureCtx) -> Result<Report> {
                 r.partition_loads.len()
             ),
             secs: Summary::of(&[imb]),
+            allocs: None,
         });
     }
     report.write_csv("a2_partitioners.csv")?;

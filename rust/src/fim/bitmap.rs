@@ -80,15 +80,86 @@ impl TidBitmap {
     /// [`TidBitmap::and_count`] / [`TidBitmap::andnot_count`]. The
     /// result covers the larger universe.
     pub fn and_counted(&self, other: &TidBitmap) -> (TidBitmap, u32) {
-        let common = self.words.len().min(other.words.len());
-        let mut words = vec![0u64; self.words.len().max(other.words.len())];
+        let mut out = TidBitmap::new(0);
+        let count = self.and_counted_into(other, &mut out);
+        (out, count)
+    }
+
+    /// [`TidBitmap::and_counted`] **into** a caller-owned bitmap, reusing
+    /// its word buffer — the arena-mining hot path. `out` is completely
+    /// overwritten (padded universe semantics as in `and_counted`).
+    pub fn and_counted_into(&self, other: &TidBitmap, out: &mut TidBitmap) -> u32 {
+        out.universe = self.universe.max(other.universe);
+        out.words.clear();
+        out.words.resize(self.words.len().max(other.words.len()), 0);
         let mut count = 0u32;
-        for (i, w) in words.iter_mut().enumerate().take(common) {
-            let v = self.words[i] & other.words[i];
+        for ((w, &x), &y) in out.words.iter_mut().zip(&self.words).zip(&other.words) {
+            let v = x & y;
             count += v.count_ones();
             *w = v;
         }
-        (TidBitmap { words, universe: self.universe.max(other.universe) }, count)
+        count
+    }
+
+    /// Bounded [`TidBitmap::and_counted_into`]: keep a running popcount
+    /// and abort mid-sweep as soon as `count + 64·(words left)` proves the
+    /// intersection cannot reach `min_sup` — candidates that cannot be
+    /// frequent stop without finishing the pass. `Some(n)` means `out`
+    /// holds the complete intersection and `n ≥ min_sup`; on `None` the
+    /// contents of `out` are unspecified.
+    pub fn and_bounded_into(
+        &self,
+        other: &TidBitmap,
+        min_sup: u32,
+        out: &mut TidBitmap,
+    ) -> Option<u32> {
+        out.universe = self.universe.max(other.universe);
+        out.words.clear();
+        out.words.resize(self.words.len().max(other.words.len()), 0);
+        let mut count = 0u32;
+        let mut words_left = self.words.len().min(other.words.len()) as u64;
+        for ((w, &x), &y) in out.words.iter_mut().zip(&self.words).zip(&other.words) {
+            if u64::from(count) + words_left * 64 < u64::from(min_sup) {
+                return None;
+            }
+            let v = x & y;
+            count += v.count_ones();
+            *w = v;
+            words_left -= 1;
+        }
+        if count >= min_sup {
+            Some(count)
+        } else {
+            None
+        }
+    }
+
+    /// `|self ∩ other| ≥ min_sup`, count-only, with **both** early exits:
+    /// success as soon as the running popcount reaches `min_sup`, abort as
+    /// soon as the remaining-words upper bound rules it out.
+    pub fn and_count_at_least(&self, other: &TidBitmap, min_sup: u32) -> bool {
+        let mut count = 0u32;
+        let mut words_left = self.words.len().min(other.words.len()) as u64;
+        for (&x, &y) in self.words.iter().zip(&other.words) {
+            if count >= min_sup {
+                return true;
+            }
+            if u64::from(count) + words_left * 64 < u64::from(min_sup) {
+                return false;
+            }
+            count += (x & y).count_ones();
+            words_left -= 1;
+        }
+        count >= min_sup
+    }
+
+    /// Reset to an empty bitmap over `universe`, reusing the word buffer
+    /// (the local-universe remap of `EqClass::mine_auto` recycles member
+    /// bitmaps across classes through this).
+    pub fn reset(&mut self, universe: usize) {
+        self.universe = universe;
+        self.words.clear();
+        self.words.resize(universe.div_ceil(64), 0);
     }
 
     /// Materialize `self ∩ other`. Mismatched universes pad the shorter
@@ -321,6 +392,69 @@ mod tests {
             want.sort_unstable();
             assert_eq!(bm.iter().collect::<Vec<_>>(), want);
         }
+    }
+
+    #[test]
+    fn counted_into_reuses_buffer_and_matches_allocating_path() {
+        let mut rng = Rng::new(5);
+        let mut out = TidBitmap::new(0);
+        for case in 0..60 {
+            // Mismatched universes on purpose: the into-path must honor
+            // the same pad-with-zero semantics as and_counted.
+            let (ua, ub) = (rng.range(1, 400), rng.range(1, 400));
+            let na = rng.range(0, ua);
+            let a = TidBitmap::from_tids(ua, (0..na).map(|_| rng.below(ua as u64) as u32));
+            let nb = rng.range(0, ub);
+            let b = TidBitmap::from_tids(ub, (0..nb).map(|_| rng.below(ub as u64) as u32));
+            let (want, want_n) = a.and_counted(&b);
+            let got_n = a.and_counted_into(&b, &mut out);
+            assert_eq!(got_n, want_n, "case {case}");
+            assert_eq!(out, want, "case {case}");
+            // Bounded path: reachable thresholds materialize the full
+            // result, unreachable ones abort.
+            for min_sup in [0, want_n / 2, want_n, want_n + 1] {
+                let bounded = a.and_bounded_into(&b, min_sup, &mut out);
+                if min_sup <= want_n {
+                    assert_eq!(bounded, Some(want_n), "case {case} min_sup={min_sup}");
+                    assert_eq!(out, want, "case {case} min_sup={min_sup}");
+                } else {
+                    assert_eq!(bounded, None, "case {case} min_sup={min_sup}");
+                }
+                assert_eq!(
+                    a.and_count_at_least(&b, min_sup),
+                    min_sup <= want_n,
+                    "case {case} at_least min_sup={min_sup}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_and_aborts_on_impossible_threshold() {
+        // 2 words of universe: upper bound is 128, so min_sup 129 must
+        // abort before touching any word; min_sup within reach must not.
+        let a = TidBitmap::from_tids(128, 0..128u32);
+        let b = TidBitmap::from_tids(128, 0..128u32);
+        let mut out = TidBitmap::new(0);
+        assert_eq!(a.and_bounded_into(&b, 129, &mut out), None);
+        assert_eq!(a.and_bounded_into(&b, 128, &mut out), Some(128));
+        assert!(!a.and_count_at_least(&b, 129));
+        assert!(a.and_count_at_least(&b, 128));
+        assert!(a.and_count_at_least(&b, 0), "trivial threshold");
+    }
+
+    #[test]
+    fn reset_reuses_buffer_and_clears_bits() {
+        let mut bm = TidBitmap::from_tids(200, [0u32, 63, 64, 199]);
+        bm.reset(70);
+        assert_eq!(bm.universe(), 70);
+        assert_eq!(bm.count(), 0);
+        assert_eq!(bm.words().len(), 2);
+        bm.insert(69);
+        assert!(bm.contains(69));
+        bm.reset(300);
+        assert_eq!(bm.count(), 0, "grown reset starts empty");
+        assert_eq!(bm.words().len(), 5);
     }
 
     #[test]

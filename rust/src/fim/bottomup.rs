@@ -1,26 +1,82 @@
 //! The bottom-up recursive search of Eclat (the paper's Algorithm 1,
-//! after Zaki).
+//! after Zaki), rebuilt around a zero-allocation arena.
 //!
 //! Generic over the tidset representation: the paper's sorted-vector
 //! tidsets ([`Tidset`]) or packed bitmaps ([`TidBitmap`]) — the
 //! performance ablation of DESIGN.md §9. A diffset (dEclat) variant is
 //! provided as the paper's "future directions" extension.
+//!
+//! ## The arena (§Perf iteration 5)
+//!
+//! The paper's headline claim is that tidset intersection is cheap and
+//! iterative — so the constant factors of this inner loop dominate FIM
+//! wall time (cf. the data-structure companion study, arXiv:1908.01338).
+//! The search therefore never allocates per candidate in steady state:
+//!
+//! * entry **borrows** the class members (`&[(Item, R)]`) instead of
+//!   cloning every tidset up front;
+//! * each recursion depth owns one [`MineScratch`] *lane* whose candidate
+//!   tidset buffers and child list are recycled across siblings
+//!   (pop/truncate instead of alloc/drop);
+//! * candidate intersections go through
+//!   [`TidRepr::intersect_bounded_into`], which writes into a recycled
+//!   buffer **and aborts mid-sweep** once the running count plus an
+//!   upper bound on the remainder proves the candidate cannot reach
+//!   `min_sup` (remaining-words × 64 for bitmaps, remaining-merge-input
+//!   for sorted vectors);
+//! * emitted itemsets come from an incrementally maintained **sorted
+//!   prefix stack** — one buffer copy per emit, no per-emit sort.
+//!
+//! The only steady-state allocations left are the emitted [`Frequent`]
+//! itemsets themselves (the output) and O(depth) arena growth on first
+//! descent — measured, not asserted, by the counting allocator in
+//! `benches/fim_micro.rs` (`--features alloc-count`). The pre-arena
+//! implementation is kept verbatim in [`reference`] as the parity oracle
+//! and the bench baseline.
 
 use super::bitmap::TidBitmap;
 use super::itemset::{Frequent, Item};
-use super::tidset::{difference, intersect, Tidset};
+use super::tidset::{
+    difference_bounded_into, intersect_bounded_into, intersect_into, Tidset,
+};
 
 /// A tidset representation usable by the bottom-up search.
 pub trait TidRepr: Clone + Send + Sync + 'static {
     /// Support = number of transactions represented.
     fn support(&self) -> u32;
-    /// Set intersection.
-    fn intersect_with(&self, other: &Self) -> Self;
-    /// Fused intersection + support count (§Perf iteration 3: one pass
-    /// instead of intersect-then-recount).
+
+    /// A fresh empty value — the recyclable scratch buffer the arena
+    /// hands to [`TidRepr::intersect_bounded_into`].
+    fn empty() -> Self;
+
+    /// Overwrite `out` with `self ∩ other`, reusing its allocation, and
+    /// return the intersection size.
+    fn intersect_counted_into(&self, other: &Self, out: &mut Self) -> u32;
+
+    /// Like [`TidRepr::intersect_counted_into`], but abort early as soon
+    /// as the intersection provably cannot reach `min_sup`. `Some(n)`
+    /// guarantees `out` holds the complete intersection and `n ≥
+    /// min_sup`; on `None` the contents of `out` are unspecified.
+    fn intersect_bounded_into(&self, other: &Self, min_sup: u32, out: &mut Self) -> Option<u32> {
+        let n = self.intersect_counted_into(other, out);
+        if n >= min_sup {
+            Some(n)
+        } else {
+            None
+        }
+    }
+
+    /// Allocating convenience: `self ∩ other`.
+    fn intersect_with(&self, other: &Self) -> Self {
+        let mut out = Self::empty();
+        self.intersect_counted_into(other, &mut out);
+        out
+    }
+
+    /// Allocating convenience: fused intersection + support count.
     fn intersect_counted(&self, other: &Self) -> (Self, u32) {
-        let out = self.intersect_with(other);
-        let n = out.support();
+        let mut out = Self::empty();
+        let n = self.intersect_counted_into(other, &mut out);
         (out, n)
     }
 }
@@ -29,13 +85,15 @@ impl TidRepr for Tidset {
     fn support(&self) -> u32 {
         self.len() as u32
     }
-    fn intersect_with(&self, other: &Self) -> Self {
-        intersect(self, other)
+    fn empty() -> Self {
+        Vec::new()
     }
-    fn intersect_counted(&self, other: &Self) -> (Self, u32) {
-        let out = intersect(self, other);
-        let n = out.len() as u32;
-        (out, n)
+    fn intersect_counted_into(&self, other: &Self, out: &mut Self) -> u32 {
+        intersect_into(self, other, out);
+        out.len() as u32
+    }
+    fn intersect_bounded_into(&self, other: &Self, min_sup: u32, out: &mut Self) -> Option<u32> {
+        intersect_bounded_into(self, other, min_sup, out)
     }
 }
 
@@ -43,20 +101,140 @@ impl TidRepr for TidBitmap {
     fn support(&self) -> u32 {
         self.count()
     }
-    fn intersect_with(&self, other: &Self) -> Self {
-        self.and(other)
+    fn empty() -> Self {
+        TidBitmap::new(0)
     }
-    fn intersect_counted(&self, other: &Self) -> (Self, u32) {
-        self.and_counted(other)
+    fn intersect_counted_into(&self, other: &Self, out: &mut Self) -> u32 {
+        self.and_counted_into(other, out)
+    }
+    fn intersect_bounded_into(&self, other: &Self, min_sup: u32, out: &mut Self) -> Option<u32> {
+        self.and_bounded_into(other, min_sup, out)
     }
 }
 
-fn emit(prefix: &[Item], item: Item, support: u32, out: &mut Vec<Frequent>) {
-    let mut items = Vec::with_capacity(prefix.len() + 1);
-    items.extend_from_slice(prefix);
-    items.push(item);
-    items.sort_unstable();
-    out.push(Frequent::new(items, support));
+/// One recursion depth's recyclable storage: the live candidate list plus
+/// a pool of spare tidset buffers reclaimed from pruned candidates and
+/// previous siblings at this depth.
+#[derive(Debug)]
+struct Lane<R> {
+    /// `(item, tidset, support)` of the class currently mined here.
+    entries: Vec<(Item, R, u32)>,
+    /// Spare buffers, recycled instead of dropped.
+    pool: Vec<R>,
+}
+
+impl<R> Default for Lane<R> {
+    fn default() -> Self {
+        Lane { entries: Vec::new(), pool: Vec::new() }
+    }
+}
+
+impl<R> Lane<R> {
+    /// Move every live entry's buffer back to the pool, emptying the
+    /// entry list for the next sibling's candidates.
+    fn recycle(&mut self) {
+        self.pool.extend(self.entries.drain(..).map(|(_, r, _)| r));
+    }
+}
+
+impl<R: TidRepr> Lane<R> {
+    /// A buffer to intersect into: pooled if available, fresh otherwise
+    /// (fresh only until the arena warms up to this class's fan-out).
+    fn grab(&mut self) -> R {
+        self.pool.pop().unwrap_or_else(R::empty)
+    }
+}
+
+/// The reusable mining arena: depth-indexed candidate lanes plus the
+/// incrementally sorted prefix stack. One `MineScratch` serves any number
+/// of [`bottom_up_with`] / [`bottom_up_diffset_with`] calls; buffers grow
+/// to the high-water mark of the classes mined through it and are then
+/// reused, so per-candidate steady-state allocations drop to zero.
+#[derive(Debug)]
+pub struct MineScratch<R> {
+    lanes: Vec<Lane<R>>,
+    /// The current prefix itemset, kept **sorted by item id** (mining
+    /// order is ascending support, so this is not insertion order).
+    prefix: Vec<Item>,
+}
+
+impl<R> Default for MineScratch<R> {
+    fn default() -> Self {
+        MineScratch { lanes: Vec::new(), prefix: Vec::new() }
+    }
+}
+
+impl<R> MineScratch<R> {
+    /// Fresh, empty arena.
+    pub fn new() -> MineScratch<R> {
+        MineScratch::default()
+    }
+
+    /// Detach the lane for `depth` so the caller can fill it while the
+    /// rest of the arena recurses deeper (returned via `put_lane`).
+    fn take_lane(&mut self, depth: usize) -> Lane<R> {
+        while self.lanes.len() <= depth {
+            self.lanes.push(Lane::default());
+        }
+        std::mem::take(&mut self.lanes[depth])
+    }
+
+    /// Re-attach a lane taken with `take_lane`, keeping its buffers.
+    fn put_lane(&mut self, depth: usize, lane: Lane<R>) {
+        self.lanes[depth] = lane;
+    }
+
+    /// Install the entry prefix (sorted once per class, not per emit).
+    fn begin_prefix(&mut self, prefix: &[Item]) {
+        self.prefix.clear();
+        self.prefix.extend_from_slice(prefix);
+        self.prefix.sort_unstable();
+        debug_assert!(self.prefix.windows(2).all(|w| w[0] < w[1]), "duplicate prefix items");
+    }
+
+    /// Descend: insert `item` at its sorted position (O(|prefix|) move,
+    /// and prefixes are short).
+    fn push_prefix(&mut self, item: Item) {
+        debug_assert!(!self.prefix.contains(&item), "item {item} already in prefix");
+        let pos = self.prefix.binary_search(&item).unwrap_or_else(|p| p);
+        self.prefix.insert(pos, item);
+    }
+
+    /// Return from a descent: remove the item pushed last for this node.
+    fn pop_prefix(&mut self, item: Item) {
+        let pos = self.prefix.binary_search(&item).expect("pushed item present");
+        self.prefix.remove(pos);
+    }
+
+    /// Emit `prefix ∪ {item}`: one merge-copy of the already-sorted
+    /// prefix, no sort. The output `Vec` is the only allocation.
+    fn emit(&self, item: Item, support: u32, out: &mut Vec<Frequent>) {
+        let pos = self.prefix.binary_search(&item).unwrap_or_else(|p| p);
+        let mut items = Vec::with_capacity(self.prefix.len() + 1);
+        items.extend_from_slice(&self.prefix[..pos]);
+        items.push(item);
+        items.extend_from_slice(&self.prefix[pos..]);
+        out.push(Frequent::new(items, support));
+    }
+}
+
+/// Fill `lane.entries` with the frequent children of `tids_i` × `rest`,
+/// recycling the lane's buffers; infrequent candidates abort mid-sweep
+/// and return their buffer to the pool.
+fn fill_children<'a, R: TidRepr>(
+    lane: &mut Lane<R>,
+    tids_i: &R,
+    rest: impl Iterator<Item = (Item, &'a R)>,
+    min_sup: u32,
+) {
+    lane.recycle();
+    for (item_j, tids_j) in rest {
+        let mut buf = lane.grab();
+        match tids_i.intersect_bounded_into(tids_j, min_sup, &mut buf) {
+            Some(n) => lane.entries.push((item_j, buf, n)),
+            None => lane.pool.push(buf),
+        }
+    }
 }
 
 /// Bottom-Up(EC) — Algorithm 1. `prefix` is the class prefix itemset,
@@ -64,47 +242,75 @@ fn emit(prefix: &[Item], item: Item, support: u32, out: &mut Vec<Frequent>) {
 /// already frequent. Emits every member itemset and recurses into the
 /// next-level classes. Members are processed in the order given (the
 /// ascending-support "total order" established in Phase-1).
+///
+/// Convenience entry that brings its own arena; loops mining many classes
+/// should hold a [`MineScratch`] and call [`bottom_up_with`] instead.
 pub fn bottom_up<R: TidRepr>(
     prefix: &[Item],
     members: &[(Item, R)],
     min_sup: u32,
     out: &mut Vec<Frequent>,
 ) {
-    // Count each atom once up front; the recursion below carries supports
-    // alongside tidsets so nothing is ever re-counted (§Perf iteration 3).
-    let counted: Vec<(Item, R, u32)> =
-        members.iter().map(|(i, t)| (*i, t.clone(), t.support())).collect();
-    bottom_up_counted(prefix, &counted, min_sup, out);
+    let mut scratch = MineScratch::new();
+    bottom_up_with(&mut scratch, prefix, members, min_sup, out);
 }
 
-fn bottom_up_counted<R: TidRepr>(
+/// [`bottom_up`] through a caller-owned arena. Members are borrowed for
+/// the whole search — nothing is cloned; each atom's support is counted
+/// exactly once here and carried alongside the recursion's candidate
+/// tidsets thereafter.
+pub fn bottom_up_with<R: TidRepr>(
+    scratch: &mut MineScratch<R>,
     prefix: &[Item],
+    members: &[(Item, R)],
+    min_sup: u32,
+    out: &mut Vec<Frequent>,
+) {
+    scratch.begin_prefix(prefix);
+    for (item, tids) in members {
+        scratch.emit(*item, tids.support(), out);
+    }
+    if members.len() < 2 {
+        return;
+    }
+    for i in 0..members.len() - 1 {
+        let (item_i, tids_i) = &members[i];
+        let mut lane = scratch.take_lane(0);
+        fill_children(&mut lane, tids_i, members[i + 1..].iter().map(|(j, t)| (*j, t)), min_sup);
+        if !lane.entries.is_empty() {
+            scratch.push_prefix(*item_i);
+            mine_level(scratch, 1, &lane.entries, min_sup, out);
+            scratch.pop_prefix(*item_i);
+        }
+        scratch.put_lane(0, lane);
+    }
+}
+
+/// The recursion below the entry level: members live in the parent's
+/// detached lane, children are built in this depth's lane.
+fn mine_level<R: TidRepr>(
+    scratch: &mut MineScratch<R>,
+    depth: usize,
     members: &[(Item, R, u32)],
     min_sup: u32,
     out: &mut Vec<Frequent>,
 ) {
     for (item, _, support) in members {
-        emit(prefix, *item, *support, out);
+        scratch.emit(*item, *support, out);
     }
     if members.len() < 2 {
         return;
     }
-    let mut child_prefix = Vec::with_capacity(prefix.len() + 1);
     for i in 0..members.len() - 1 {
         let (item_i, tids_i, _) = &members[i];
-        let mut next: Vec<(Item, R, u32)> = Vec::new();
-        for (item_j, tids_j, _) in &members[i + 1..] {
-            let (tids_ij, count) = tids_i.intersect_counted(tids_j);
-            if count >= min_sup {
-                next.push((*item_j, tids_ij, count));
-            }
+        let mut lane = scratch.take_lane(depth);
+        fill_children(&mut lane, tids_i, members[i + 1..].iter().map(|(j, t, _)| (*j, t)), min_sup);
+        if !lane.entries.is_empty() {
+            scratch.push_prefix(*item_i);
+            mine_level(scratch, depth + 1, &lane.entries, min_sup, out);
+            scratch.pop_prefix(*item_i);
         }
-        if !next.is_empty() {
-            child_prefix.clear();
-            child_prefix.extend_from_slice(prefix);
-            child_prefix.push(*item_i);
-            bottom_up_counted(&child_prefix, &next, min_sup, out);
-        }
+        scratch.put_lane(depth, lane);
     }
 }
 
@@ -113,14 +319,34 @@ fn bottom_up_counted<R: TidRepr>(
 /// ablation extension). Entry takes *tidsets*; the first join converts to
 /// diffsets (`d(ab) = t(a) − t(b)`, `σ(ab) = σ(a) − |d(ab)|`), deeper
 /// levels stay in diffset space (`d(Pab) = d(Pb) − d(Pa)`).
+///
+/// Convenience entry that brings its own arena; see
+/// [`bottom_up_diffset_with`].
 pub fn bottom_up_diffset(
     prefix: &[Item],
     members: &[(Item, Tidset)],
     min_sup: u32,
     out: &mut Vec<Frequent>,
 ) {
+    let mut scratch = MineScratch::new();
+    bottom_up_diffset_with(&mut scratch, prefix, members, min_sup, out);
+}
+
+/// [`bottom_up_diffset`] through a caller-owned arena. Diffsets get the
+/// same treatment as tidsets: borrowed entry members, recycled per-depth
+/// lanes, and bounded differences — a difference aborts once it exceeds
+/// `σ(parent) − min_sup` elements, the point at which the candidate's
+/// support `σ(parent) − |diffset|` can no longer reach `min_sup`.
+pub fn bottom_up_diffset_with(
+    scratch: &mut MineScratch<Tidset>,
+    prefix: &[Item],
+    members: &[(Item, Tidset)],
+    min_sup: u32,
+    out: &mut Vec<Frequent>,
+) {
+    scratch.begin_prefix(prefix);
     for (item, tids) in members {
-        emit(prefix, *item, tids.len() as u32, out);
+        scratch.emit(*item, tids.len() as u32, out);
     }
     if members.len() < 2 {
         return;
@@ -128,49 +354,182 @@ pub fn bottom_up_diffset(
     for i in 0..members.len() - 1 {
         let (item_i, tids_i) = &members[i];
         let sup_i = tids_i.len() as u32;
-        let mut next: Vec<(Item, Tidset, u32)> = Vec::new();
+        let budget = sup_i.saturating_sub(min_sup) as usize;
+        let mut lane = scratch.take_lane(0);
+        lane.recycle();
         for (item_j, tids_j) in &members[i + 1..] {
-            let diff = difference(tids_i, tids_j);
-            let support = sup_i - diff.len() as u32;
-            if support >= min_sup {
-                next.push((*item_j, diff, support));
+            let mut buf = lane.grab();
+            // d(ab) = t(a) − t(b); σ(ab) = σ(a) − |d(ab)|.
+            match difference_bounded_into(tids_i, tids_j, budget, &mut buf) {
+                Some(d) if sup_i - d >= min_sup => lane.entries.push((*item_j, buf, sup_i - d)),
+                _ => lane.pool.push(buf),
             }
         }
-        if !next.is_empty() {
-            let mut child_prefix = prefix.to_vec();
-            child_prefix.push(*item_i);
-            diffset_recurse(&child_prefix, &next, min_sup, out);
+        if !lane.entries.is_empty() {
+            scratch.push_prefix(*item_i);
+            diffset_level(scratch, 1, &lane.entries, min_sup, out);
+            scratch.pop_prefix(*item_i);
         }
+        scratch.put_lane(0, lane);
     }
 }
 
-fn diffset_recurse(
-    prefix: &[Item],
+fn diffset_level(
+    scratch: &mut MineScratch<Tidset>,
+    depth: usize,
     members: &[(Item, Tidset, u32)],
     min_sup: u32,
     out: &mut Vec<Frequent>,
 ) {
     for (item, _, support) in members {
-        emit(prefix, *item, *support, out);
+        scratch.emit(*item, *support, out);
     }
     if members.len() < 2 {
         return;
     }
     for i in 0..members.len() - 1 {
         let (item_i, diff_i, sup_i) = &members[i];
-        let mut next: Vec<(Item, Tidset, u32)> = Vec::new();
+        let budget = sup_i.saturating_sub(min_sup) as usize;
+        let mut lane = scratch.take_lane(depth);
+        lane.recycle();
         for (item_j, diff_j, _) in &members[i + 1..] {
+            let mut buf = lane.grab();
             // d(Pab) = d(Pb) − d(Pa); σ(Pab) = σ(Pa) − |d(Pab)|.
-            let diff = difference(diff_j, diff_i);
-            let support = sup_i - diff.len() as u32;
-            if support >= min_sup {
-                next.push((*item_j, diff, support));
+            match difference_bounded_into(diff_j, diff_i, budget, &mut buf) {
+                Some(d) if sup_i - d >= min_sup => lane.entries.push((*item_j, buf, sup_i - d)),
+                _ => lane.pool.push(buf),
             }
         }
-        if !next.is_empty() {
-            let mut child_prefix = prefix.to_vec();
-            child_prefix.push(*item_i);
-            diffset_recurse(&child_prefix, &next, min_sup, out);
+        if !lane.entries.is_empty() {
+            scratch.push_prefix(*item_i);
+            diffset_level(scratch, depth + 1, &lane.entries, min_sup, out);
+            scratch.pop_prefix(*item_i);
+        }
+        scratch.put_lane(depth, lane);
+    }
+}
+
+/// The pre-arena implementation, kept verbatim: clones every member on
+/// entry, heap-allocates each candidate tidset and child list, and sorts
+/// a fresh prefix `Vec` per emit. It exists as (a) the parity oracle the
+/// property tests pit the arena miner against and (b) the baseline side
+/// of the `bottomup/*_cloning` benches in `fim_micro` — do not "optimize"
+/// it.
+pub mod reference {
+    use super::super::tidset::difference;
+    use super::{Frequent, Item, TidRepr, Tidset};
+
+    fn emit(prefix: &[Item], item: Item, support: u32, out: &mut Vec<Frequent>) {
+        let mut items = Vec::with_capacity(prefix.len() + 1);
+        items.extend_from_slice(prefix);
+        items.push(item);
+        items.sort_unstable();
+        out.push(Frequent::new(items, support));
+    }
+
+    /// Cloning Bottom-Up(EC): the shape every RDD variant funneled into
+    /// before the arena refactor.
+    pub fn bottom_up<R: TidRepr>(
+        prefix: &[Item],
+        members: &[(Item, R)],
+        min_sup: u32,
+        out: &mut Vec<Frequent>,
+    ) {
+        let counted: Vec<(Item, R, u32)> =
+            members.iter().map(|(i, t)| (*i, t.clone(), t.support())).collect();
+        bottom_up_counted(prefix, &counted, min_sup, out);
+    }
+
+    fn bottom_up_counted<R: TidRepr>(
+        prefix: &[Item],
+        members: &[(Item, R, u32)],
+        min_sup: u32,
+        out: &mut Vec<Frequent>,
+    ) {
+        for (item, _, support) in members {
+            emit(prefix, *item, *support, out);
+        }
+        if members.len() < 2 {
+            return;
+        }
+        let mut child_prefix = Vec::with_capacity(prefix.len() + 1);
+        for i in 0..members.len() - 1 {
+            let (item_i, tids_i, _) = &members[i];
+            let mut next: Vec<(Item, R, u32)> = Vec::new();
+            for (item_j, tids_j, _) in &members[i + 1..] {
+                let (tids_ij, count) = tids_i.intersect_counted(tids_j);
+                if count >= min_sup {
+                    next.push((*item_j, tids_ij, count));
+                }
+            }
+            if !next.is_empty() {
+                child_prefix.clear();
+                child_prefix.extend_from_slice(prefix);
+                child_prefix.push(*item_i);
+                bottom_up_counted(&child_prefix, &next, min_sup, out);
+            }
+        }
+    }
+
+    /// Cloning dEclat.
+    pub fn bottom_up_diffset(
+        prefix: &[Item],
+        members: &[(Item, Tidset)],
+        min_sup: u32,
+        out: &mut Vec<Frequent>,
+    ) {
+        for (item, tids) in members {
+            emit(prefix, *item, tids.len() as u32, out);
+        }
+        if members.len() < 2 {
+            return;
+        }
+        for i in 0..members.len() - 1 {
+            let (item_i, tids_i) = &members[i];
+            let sup_i = tids_i.len() as u32;
+            let mut next: Vec<(Item, Tidset, u32)> = Vec::new();
+            for (item_j, tids_j) in &members[i + 1..] {
+                let diff = difference(tids_i, tids_j);
+                let support = sup_i - diff.len() as u32;
+                if support >= min_sup {
+                    next.push((*item_j, diff, support));
+                }
+            }
+            if !next.is_empty() {
+                let mut child_prefix = prefix.to_vec();
+                child_prefix.push(*item_i);
+                diffset_recurse(&child_prefix, &next, min_sup, out);
+            }
+        }
+    }
+
+    fn diffset_recurse(
+        prefix: &[Item],
+        members: &[(Item, Tidset, u32)],
+        min_sup: u32,
+        out: &mut Vec<Frequent>,
+    ) {
+        for (item, _, support) in members {
+            emit(prefix, *item, *support, out);
+        }
+        if members.len() < 2 {
+            return;
+        }
+        for i in 0..members.len() - 1 {
+            let (item_i, diff_i, sup_i) = &members[i];
+            let mut next: Vec<(Item, Tidset, u32)> = Vec::new();
+            for (item_j, diff_j, _) in &members[i + 1..] {
+                let diff = difference(diff_j, diff_i);
+                let support = sup_i - diff.len() as u32;
+                if support >= min_sup {
+                    next.push((*item_j, diff, support));
+                }
+            }
+            if !next.is_empty() {
+                let mut child_prefix = prefix.to_vec();
+                child_prefix.push(*item_i);
+                diffset_recurse(&child_prefix, &next, min_sup, out);
+            }
         }
     }
 }
@@ -255,11 +614,24 @@ mod tests {
 
     #[test]
     fn emit_sorts_itemsets_with_unsorted_mining_order() {
-        // Mining order by ascending support can put a larger item id first.
+        // Mining order by ascending support can put a larger item id first;
+        // the sorted prefix stack must still emit canonical itemsets.
         let members: Vec<(Item, Tidset)> = vec![(9, vec![0, 1]), (2, vec![0, 1, 2])];
         let mut out = Vec::new();
         bottom_up::<Tidset>(&[], &members, 2, &mut out);
         assert!(out.iter().any(|f| f.items == vec![2, 9] && f.support == 2));
+    }
+
+    #[test]
+    fn unsorted_entry_prefix_is_canonicalized() {
+        // Entry prefixes arrive in mining order too; begin_prefix sorts
+        // once so every emit stays a cheap merge.
+        let members: Vec<(Item, Tidset)> = vec![(3, vec![0, 1]), (1, vec![0, 1])];
+        let mut out = Vec::new();
+        bottom_up::<Tidset>(&[7, 5], &members, 2, &mut out);
+        let mut got: Vec<Vec<Item>> = out.into_iter().map(|f| f.items).collect();
+        got.sort();
+        assert_eq!(got, vec![vec![1, 3, 5, 7], vec![1, 5, 7], vec![3, 5, 7]]);
     }
 
     #[test]
@@ -270,5 +642,101 @@ mod tests {
         bottom_up::<Tidset>(&[5], &[(7, vec![0])], 1, &mut out);
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].items, vec![5, 7]);
+    }
+
+    #[test]
+    fn scratch_miner_matches_reference_on_random_databases() {
+        // The pre-refactor implementation (kept verbatim in `reference`)
+        // is the oracle: across random QUEST and clickstream databases,
+        // a min_sup sweep, and all three representations (sorted-vector
+        // tidsets, packed bitmaps, diffsets) — plus the auto-remap path —
+        // the arena miner must produce identical itemsets. All scratches
+        // are shared across every class/db/min_sup so recycled buffers
+        // get maximal opportunity to leak stale state.
+        use crate::data::clickstream::{self, ClickParams};
+        use crate::data::quest::{self, QuestParams};
+        use crate::fim::eqclass::{construct_classes, to_bitmap_class, AutoScratch};
+        use crate::fim::tidset::VerticalDb;
+
+        let click = ClickParams {
+            sessions: 250,
+            items: 60,
+            avg_len: 5.0,
+            skew: 1.1,
+            locality: 0.5,
+            radius: 6,
+            drift: 0.0,
+        };
+        let dbs = vec![
+            ("quest_dense", quest::generate(&QuestParams::tid(10.0, 4.0, 200, 25), 7)),
+            ("quest_sparse", quest::generate(&QuestParams::tid(6.0, 3.0, 300, 60), 11)),
+            ("clickstream", clickstream::generate(&click, 3)),
+        ];
+        let mut tid_scratch = MineScratch::<Tidset>::new();
+        let mut bm_scratch = MineScratch::<TidBitmap>::new();
+        let mut diff_scratch = MineScratch::<Tidset>::new();
+        let mut auto_scratch = AutoScratch::new();
+        for (tag, db) in &dbs {
+            for min_sup in [2u32, 3, 5, 8, 13] {
+                let vdb = VerticalDb::build(db, min_sup);
+                // Diffset driver over the whole level-1 class.
+                let mut want = Vec::new();
+                reference::bottom_up_diffset(&[], &vdb.items, min_sup, &mut want);
+                let mut got = Vec::new();
+                bottom_up_diffset_with(&mut diff_scratch, &[], &vdb.items, min_sup, &mut got);
+                sort_frequents(&mut want);
+                sort_frequents(&mut got);
+                assert_eq!(got, want, "{tag} diffset min_sup={min_sup}");
+                // Per-class: tidset, bitmap, and auto-remap arenas.
+                for class in construct_classes(&vdb, min_sup, None) {
+                    let mut want = Vec::new();
+                    reference::bottom_up::<Tidset>(
+                        &[class.prefix],
+                        &class.members,
+                        min_sup,
+                        &mut want,
+                    );
+                    sort_frequents(&mut want);
+
+                    let mut got = class.mine_with(&mut tid_scratch, min_sup);
+                    sort_frequents(&mut got);
+                    assert_eq!(got, want, "{tag} tidset prefix={} min_sup={min_sup}", class.prefix);
+
+                    let bm_class = to_bitmap_class(&class, db.len());
+                    let mut got = bm_class.mine_with(&mut bm_scratch, min_sup);
+                    sort_frequents(&mut got);
+                    assert_eq!(got, want, "{tag} bitmap prefix={} min_sup={min_sup}", class.prefix);
+
+                    let mut got = class.mine_auto_with(&mut auto_scratch, min_sup, db.len());
+                    sort_frequents(&mut got);
+                    assert_eq!(got, want, "{tag} auto prefix={} min_sup={min_sup}", class.prefix);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_classes_is_clean() {
+        // One arena mines many different classes back to back; recycled
+        // buffers must never leak stale tids between classes.
+        let mut scratch = MineScratch::new();
+        let classes: Vec<Vec<(Item, Tidset)>> = vec![
+            example_members(),
+            vec![(4, vec![0, 1, 2, 3]), (6, vec![1, 3]), (5, vec![0, 1, 3])],
+            vec![(8, vec![2])],
+            vec![],
+            example_members(),
+        ];
+        for (k, members) in classes.iter().enumerate() {
+            for min_sup in 1..=4 {
+                let mut want = Vec::new();
+                reference::bottom_up::<Tidset>(&[], members, min_sup, &mut want);
+                let mut got = Vec::new();
+                bottom_up_with(&mut scratch, &[], members, min_sup, &mut got);
+                sort_frequents(&mut want);
+                sort_frequents(&mut got);
+                assert_eq!(got, want, "class {k} min_sup={min_sup}");
+            }
+        }
     }
 }

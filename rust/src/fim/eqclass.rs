@@ -7,8 +7,9 @@
 //! order), intersect `tidset(i)` with every later item's tidset, skipping
 //! pairs the triangular matrix already proves infrequent.
 
-use super::bottomup::{bottom_up, TidRepr};
-use super::itemset::{Frequent, Item};
+use super::bitmap::TidBitmap;
+use super::bottomup::{bottom_up_with, MineScratch, TidRepr};
+use super::itemset::{Frequent, Item, Tid};
 use super::tidset::{Tidset, VerticalDb};
 use super::trimatrix::TriMatrix;
 
@@ -24,10 +25,18 @@ pub struct EqClass<R = Tidset> {
 
 impl<R: TidRepr> EqClass<R> {
     /// Mine this class with the bottom-up recursion, returning all
-    /// frequent itemsets of length ≥ 2 under this prefix.
+    /// frequent itemsets of length ≥ 2 under this prefix. Convenience
+    /// wrapper over [`EqClass::mine_with`] with a throwaway arena.
     pub fn mine(&self, min_sup: u32) -> Vec<Frequent> {
+        self.mine_with(&mut MineScratch::new(), min_sup)
+    }
+
+    /// Mine through a caller-owned arena — the class members are
+    /// borrowed, never cloned, and the arena's lane buffers are recycled
+    /// across every class mined through it.
+    pub fn mine_with(&self, scratch: &mut MineScratch<R>, min_sup: u32) -> Vec<Frequent> {
         let mut out = Vec::new();
-        bottom_up(&[self.prefix], &self.members, min_sup, &mut out);
+        bottom_up_with(scratch, &[self.prefix], &self.members, min_sup, &mut out);
         out
     }
 
@@ -39,51 +48,129 @@ impl<R: TidRepr> EqClass<R> {
     }
 }
 
+/// Reusable buffers for [`EqClass::mine_auto_with`]: one mining arena per
+/// representation plus the local-universe remap scratch (union bitmap,
+/// rank directory, recycled remapped-member bitmaps). One `AutoScratch`
+/// serves any number of classes; steady-state remap + mining allocates
+/// nothing per candidate.
+#[derive(Debug)]
+pub struct AutoScratch {
+    tidset: MineScratch<Tidset>,
+    bitmap: MineScratch<TidBitmap>,
+    /// Union of member tids over the class span (word buffer reused).
+    union: TidBitmap,
+    /// Exclusive per-word prefix popcounts of `union` — the rank
+    /// directory that makes each tid→local-position lookup O(1).
+    ranks: Vec<u32>,
+    /// Remapped members of the class currently mined (bitmaps recycled
+    /// through `pool` between classes).
+    members: Vec<(Item, TidBitmap)>,
+    /// Spare member bitmaps from previous classes.
+    pool: Vec<TidBitmap>,
+}
+
+impl Default for AutoScratch {
+    fn default() -> Self {
+        AutoScratch {
+            tidset: MineScratch::new(),
+            bitmap: MineScratch::new(),
+            union: TidBitmap::new(0),
+            ranks: Vec::new(),
+            members: Vec::new(),
+            pool: Vec::new(),
+        }
+    }
+}
+
+impl AutoScratch {
+    /// Fresh, empty scratch.
+    pub fn new() -> AutoScratch {
+        AutoScratch::default()
+    }
+}
+
 impl EqClass<Tidset> {
     /// Mine with an automatically chosen representation (§Perf iterations
-    /// 1–2). Every member tidset is a subset of the class prefix's
-    /// tidset, so the class is first **remapped onto its local tid
-    /// universe** (the union of member tidsets): bitmaps then span
+    /// 1–2); convenience wrapper over [`EqClass::mine_auto_with`] with a
+    /// throwaway scratch.
+    pub fn mine_auto(&self, min_sup: u32, universe: usize) -> Vec<Frequent> {
+        self.mine_auto_with(&mut AutoScratch::new(), min_sup, universe)
+    }
+
+    /// Mine with an automatically chosen representation through a
+    /// caller-owned scratch. Every member tidset is a subset of the class
+    /// prefix's tidset, so the class is first **remapped onto its local
+    /// tid universe** (the union of member tidsets): bitmaps then span
     /// `|union|` bits instead of the full database, collapsing the
     /// AND+popcount sweep from `universe/64` words to `|union|/64`.
     /// Sorted-vector mining remains for classes whose members are nearly
     /// disjoint (many members, tiny tidsets — the sparse BMS regime),
     /// where the merge walk beats even the local bitmap.
-    pub fn mine_auto(&self, min_sup: u32, _universe: usize) -> Vec<Frequent> {
-        // Local universe = sorted union of member tids.
-        let mut union: Tidset = Vec::new();
-        for (_, t) in &self.members {
-            union.extend_from_slice(t);
-        }
-        union.sort_unstable();
-        union.dedup();
-        let words = union.len().div_ceil(64);
+    ///
+    /// The union + remap is O(total tids): member tids are marked in a
+    /// reused span bitmap, a per-word rank directory is built in one
+    /// sweep, and each tid's local position is its rank (`prefix popcount
+    /// + popcount below the bit`) — replacing the old
+    /// concatenate/sort/dedup union and its per-tid binary searches.
+    pub fn mine_auto_with(
+        &self,
+        scratch: &mut AutoScratch,
+        min_sup: u32,
+        _universe: usize,
+    ) -> Vec<Frequent> {
         let total: usize = self.members.iter().map(|(_, t)| t.len()).sum();
-        let avg = total / self.members.len().max(1);
-        if 2 * avg > words {
-            // Remap tids to positions in the union, then mine on bitmaps.
-            let remapped = EqClass {
-                prefix: self.prefix,
-                members: self
-                    .members
-                    .iter()
-                    .map(|(item, tids)| {
-                        let mut bm = super::bitmap::TidBitmap::new(union.len());
-                        for t in tids {
-                            // Position lookup: tids and union are sorted,
-                            // but member tidsets interleave — binary
-                            // search keeps this O(n log u).
-                            let pos = union.binary_search(t).expect("tid in union");
-                            bm.insert(pos as super::itemset::Tid);
-                        }
-                        (*item, bm)
-                    })
-                    .collect(),
-            };
-            remapped.mine(min_sup)
-        } else {
-            self.mine(min_sup)
+        let mut out = Vec::new();
+        if total == 0 {
+            bottom_up_with(&mut scratch.tidset, &[self.prefix], &self.members, min_sup, &mut out);
+            return out;
         }
+        // Class tid span [lo, hi): member tidsets are sorted, so the
+        // span ends come from first/last elements only.
+        let (mut lo, mut hi) = (Tid::MAX, 0);
+        for (_, t) in &self.members {
+            if let (Some(&first), Some(&last)) = (t.first(), t.last()) {
+                lo = lo.min(first);
+                hi = hi.max(last + 1);
+            }
+        }
+        scratch.union.reset((hi - lo) as usize);
+        for (_, t) in &self.members {
+            for &tid in t {
+                scratch.union.insert(tid - lo);
+            }
+        }
+        let union_len = scratch.union.count() as usize;
+        let words = union_len.div_ceil(64);
+        let avg = total / self.members.len();
+        if 2 * avg > words {
+            // Rank directory: ranks[w] = set bits strictly before word w.
+            let union_words = scratch.union.words();
+            scratch.ranks.clear();
+            scratch.ranks.reserve(union_words.len());
+            let mut acc = 0u32;
+            for &w in union_words {
+                scratch.ranks.push(acc);
+                acc += w.count_ones();
+            }
+            // Remap each member onto union ranks, recycling bitmaps.
+            for (item, tids) in &self.members {
+                let mut bm = scratch.pool.pop().unwrap_or_else(|| TidBitmap::new(0));
+                bm.reset(union_len);
+                for &tid in tids {
+                    let local = (tid - lo) as usize;
+                    let (word, bit) = (local >> 6, local & 63);
+                    let below = (union_words[word] & ((1u64 << bit) - 1)).count_ones();
+                    bm.insert(scratch.ranks[word] + below);
+                }
+                scratch.members.push((*item, bm));
+            }
+            let prefix = [self.prefix];
+            bottom_up_with(&mut scratch.bitmap, &prefix, &scratch.members, min_sup, &mut out);
+            scratch.pool.extend(scratch.members.drain(..).map(|(_, bm)| bm));
+        } else {
+            bottom_up_with(&mut scratch.tidset, &[self.prefix], &self.members, min_sup, &mut out);
+        }
+        out
     }
 }
 
@@ -216,6 +303,24 @@ mod tests {
             sort_frequents(&mut a);
             sort_frequents(&mut b);
             assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn auto_scratch_shared_across_classes_matches_fresh_mining() {
+        // One AutoScratch mines every class at every threshold; recycled
+        // remap/lane buffers must not leak state between classes.
+        let db = demo_db();
+        let vdb = VerticalDb::build(&db, 1);
+        let mut scratch = AutoScratch::new();
+        for min_sup in 1..=4 {
+            for c in &construct_classes(&vdb, min_sup, None) {
+                let mut want = c.mine(min_sup);
+                let mut got = c.mine_auto_with(&mut scratch, min_sup, db.len());
+                sort_frequents(&mut want);
+                sort_frequents(&mut got);
+                assert_eq!(got, want, "prefix {} min_sup {min_sup}", c.prefix);
+            }
         }
     }
 

@@ -14,13 +14,17 @@ pub mod trie;
 pub mod trimatrix;
 
 pub use bitmap::TidBitmap;
-pub use bottomup::{bottom_up, bottom_up_diffset, TidRepr};
-pub use eqclass::{construct_classes, to_bitmap_class, EqClass};
+pub use bottomup::{
+    bottom_up, bottom_up_diffset, bottom_up_diffset_with, bottom_up_with, MineScratch, TidRepr,
+};
+pub use eqclass::{construct_classes, to_bitmap_class, AutoScratch, EqClass};
 pub use itemset::{
     is_subset, prefix_join, sort_frequents, Frequent, Item, ItemSet, MinSup, Tid,
 };
 pub use rules::{generate_rules, rules_to_json, Rule};
-pub use tidset::{difference, intersect, intersect_count, Tidset, VerticalDb};
+pub use tidset::{
+    difference, difference_into, intersect, intersect_count, intersect_into, Tidset, VerticalDb,
+};
 pub use transaction::{Database, DbStats};
 pub use trie::{CandidateTrie, ItemFilter};
 pub use trimatrix::TriMatrix;

@@ -18,14 +18,25 @@ pub type Tidset = Vec<Tid>;
 /// Intersect two sorted tidsets (linear merge; switches to galloping when
 /// sizes are very skewed).
 pub fn intersect(a: &[Tid], b: &[Tid]) -> Tidset {
+    let mut out = Vec::new();
+    intersect_into(a, b, &mut out);
+    out
+}
+
+/// Intersect two sorted tidsets **into** a caller-owned buffer, reusing
+/// its allocation (the arena-mining hot path: `out` is a recycled scratch
+/// lane, so steady-state intersections allocate nothing). Switches to
+/// galloping when sizes are very skewed, like [`intersect`].
+pub fn intersect_into(a: &[Tid], b: &[Tid], out: &mut Tidset) {
+    out.clear();
     // Galloping pays when one side is ≥ ~8x smaller.
     if a.len() * 8 < b.len() {
-        return gallop_intersect(a, b);
+        return gallop_intersect_into(a, b, out);
     }
     if b.len() * 8 < a.len() {
-        return gallop_intersect(b, a);
+        return gallop_intersect_into(b, a, out);
     }
-    let mut out = Vec::with_capacity(a.len().min(b.len()));
+    out.reserve(a.len().min(b.len()));
     let (mut i, mut j) = (0, 0);
     while i < a.len() && j < b.len() {
         match a[i].cmp(&b[j]) {
@@ -38,12 +49,54 @@ pub fn intersect(a: &[Tid], b: &[Tid]) -> Tidset {
             }
         }
     }
-    out
+}
+
+/// Bounded intersection into a reused buffer: abort as soon as the
+/// running count plus the remaining input can no longer reach `min_sup`
+/// (Eclat candidates that cannot become frequent stop mid-merge).
+/// `Some(n)` means `out` holds the complete intersection and `n ≥
+/// min_sup`; on `None` the contents of `out` are unspecified.
+pub fn intersect_bounded_into(
+    a: &[Tid],
+    b: &[Tid],
+    min_sup: u32,
+    out: &mut Tidset,
+) -> Option<u32> {
+    out.clear();
+    if a.len() * 8 < b.len() {
+        return gallop_bounded_into(a, b, min_sup, out);
+    }
+    if b.len() * 8 < a.len() {
+        return gallop_bounded_into(b, a, min_sup, out);
+    }
+    let need = min_sup as usize;
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() && j < b.len() {
+        // Upper bound on the final size: matches so far + whatever the
+        // shorter remaining side could still contribute.
+        if out.len() + (a.len() - i).min(b.len() - j) < need {
+            return None;
+        }
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(a[i]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    if out.len() >= need {
+        Some(out.len() as u32)
+    } else {
+        None
+    }
 }
 
 /// Intersection via binary search of the smaller side into the larger.
-fn gallop_intersect(small: &[Tid], large: &[Tid]) -> Tidset {
-    let mut out = Vec::with_capacity(small.len());
+fn gallop_intersect_into(small: &[Tid], large: &[Tid], out: &mut Tidset) {
+    out.reserve(small.len());
     let mut lo = 0usize;
     for &t in small {
         match large[lo..].binary_search(&t) {
@@ -59,7 +112,41 @@ fn gallop_intersect(small: &[Tid], large: &[Tid]) -> Tidset {
             break;
         }
     }
-    out
+}
+
+/// Galloping intersection with the same early exit as
+/// [`intersect_bounded_into`]: the bound here is matches so far + small
+/// elements not yet probed.
+fn gallop_bounded_into(
+    small: &[Tid],
+    large: &[Tid],
+    min_sup: u32,
+    out: &mut Tidset,
+) -> Option<u32> {
+    let need = min_sup as usize;
+    let mut lo = 0usize;
+    for (idx, &t) in small.iter().enumerate() {
+        if out.len() + (small.len() - idx) < need {
+            return None;
+        }
+        if lo >= large.len() {
+            break;
+        }
+        match large[lo..].binary_search(&t) {
+            Ok(pos) => {
+                out.push(t);
+                lo += pos + 1;
+            }
+            Err(pos) => {
+                lo += pos;
+            }
+        }
+    }
+    if out.len() >= need {
+        Some(out.len() as u32)
+    } else {
+        None
+    }
 }
 
 /// Count-only galloping intersection: binary-search the smaller side
@@ -112,7 +199,30 @@ pub fn intersect_count(a: &[Tid], b: &[Tid]) -> u32 {
 /// Set difference `a \ b` of sorted tidsets — the diffset representation
 /// (Zaki's dEclat), an optional optimization ablated in the benches.
 pub fn difference(a: &[Tid], b: &[Tid]) -> Tidset {
-    let mut out = Vec::with_capacity(a.len());
+    let mut out = Vec::new();
+    difference_into(a, b, &mut out);
+    out
+}
+
+/// Set difference into a reused buffer. When `b` dwarfs `a`, each `a`
+/// element is binary-searched in `b` (galloping) instead of walking `b`
+/// linearly — the same skew cutoff as [`intersect_into`].
+pub fn difference_into(a: &[Tid], b: &[Tid], out: &mut Tidset) {
+    out.clear();
+    out.reserve(a.len());
+    if a.len() * 8 < b.len() {
+        let mut lo = 0usize;
+        for &t in a {
+            match b[lo..].binary_search(&t) {
+                Ok(pos) => lo += pos + 1,
+                Err(pos) => {
+                    out.push(t);
+                    lo += pos;
+                }
+            }
+        }
+        return;
+    }
     let (mut i, mut j) = (0, 0);
     while i < a.len() {
         if j >= b.len() || a[i] < b[j] {
@@ -125,7 +235,55 @@ pub fn difference(a: &[Tid], b: &[Tid]) -> Tidset {
             j += 1;
         }
     }
-    out
+}
+
+/// Bounded difference into a reused buffer: abort once the difference
+/// would exceed `max_len` elements. In dEclat a candidate's support is
+/// `σ(parent) − |diffset|`, so with `max_len = σ(parent) − min_sup` the
+/// abort fires exactly when the candidate can no longer be frequent.
+/// `Some(|a \ b|)` when the full difference fits; on `None` the contents
+/// of `out` are unspecified.
+pub fn difference_bounded_into(
+    a: &[Tid],
+    b: &[Tid],
+    max_len: usize,
+    out: &mut Tidset,
+) -> Option<u32> {
+    out.clear();
+    // Same skew cutoff as `difference_into`: probe each `a` element into
+    // the larger `b` instead of walking `b` linearly.
+    if a.len() * 8 < b.len() {
+        let mut lo = 0usize;
+        for &t in a {
+            match b[lo..].binary_search(&t) {
+                Ok(pos) => lo += pos + 1,
+                Err(pos) => {
+                    if out.len() == max_len {
+                        return None;
+                    }
+                    out.push(t);
+                    lo += pos;
+                }
+            }
+        }
+        return Some(out.len() as u32);
+    }
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() {
+        if j >= b.len() || a[i] < b[j] {
+            if out.len() == max_len {
+                return None;
+            }
+            out.push(a[i]);
+            i += 1;
+        } else if a[i] > b[j] {
+            j += 1;
+        } else {
+            i += 1;
+            j += 1;
+        }
+    }
+    Some(out.len() as u32)
 }
 
 /// The vertical database: frequent items with their tidsets, in a chosen
@@ -206,9 +364,13 @@ mod tests {
     #[test]
     fn random_against_hashsets() {
         // Case 0..99: similar sizes (linear path); 100..199: heavily
-        // skewed sizes so both galloping paths (materializing and
-        // count-only) are exercised and must agree with the linear walk.
+        // skewed sizes so every galloping path (materializing, into,
+        // bounded, count-only, difference) is exercised and must agree
+        // with the linear walk. The into-buffers are reused across cases
+        // to catch stale-content bugs in the recycled-scratch paths.
         let mut rng = Rng::new(9);
+        let mut buf = Tidset::new();
+        let mut bounded_buf = Tidset::new();
         for case in 0..200 {
             let skewed = case >= 100;
             let (n_a, n_b, universe) = if skewed {
@@ -231,9 +393,43 @@ mod tests {
             // Count-only path (galloping when skewed) == linear walk.
             assert_eq!(intersect_count(&a, &b) as usize, want.len(), "case {case}");
             assert_eq!(intersect_count(&b, &a) as usize, want.len(), "case {case} swapped");
+            // Reused-buffer path == allocating path, both directions.
+            intersect_into(&a, &b, &mut buf);
+            assert_eq!(buf, want, "case {case} into");
+            intersect_into(&b, &a, &mut buf);
+            assert_eq!(buf, want, "case {case} into swapped");
+            // Bounded path: below/at the true size it must materialize
+            // the full result; above it, abort with None.
+            for min_sup in [0, want.len() / 2, want.len(), want.len() + 1] {
+                let got = intersect_bounded_into(&a, &b, min_sup as u32, &mut bounded_buf);
+                if min_sup <= want.len() {
+                    assert_eq!(got, Some(want.len() as u32), "case {case} min_sup={min_sup}");
+                    assert_eq!(bounded_buf, want, "case {case} min_sup={min_sup}");
+                } else {
+                    assert_eq!(got, None, "case {case} min_sup={min_sup}");
+                }
+            }
             let mut want_diff: Vec<u32> = sa.difference(&sb).copied().collect();
             want_diff.sort_unstable();
             assert_eq!(difference(&a, &b), want_diff, "case {case}");
+            assert_eq!(difference(&b, &a).len(), sb.difference(&sa).count(), "case {case}");
+            difference_into(&a, &b, &mut buf);
+            assert_eq!(buf, want_diff, "case {case} diff into");
+            // Bounded difference: budget at the true size keeps the full
+            // diff; one below aborts.
+            assert_eq!(
+                difference_bounded_into(&a, &b, want_diff.len(), &mut bounded_buf),
+                Some(want_diff.len() as u32),
+                "case {case} diff budget"
+            );
+            assert_eq!(bounded_buf, want_diff, "case {case} diff bounded content");
+            if !want_diff.is_empty() {
+                assert_eq!(
+                    difference_bounded_into(&a, &b, want_diff.len() - 1, &mut bounded_buf),
+                    None,
+                    "case {case} diff abort"
+                );
+            }
         }
     }
 

@@ -77,21 +77,28 @@ impl IncrementalVerticalDb {
         self.txns += rows.len();
     }
 
-    /// Evict the oldest `rows.len()` transactions, whose contents must be
-    /// `rows` (the window evicts whole batches FIFO, so the caller always
-    /// has them). Clears each touched item's tid range once, updates the
-    /// running supports from the cleared-bit counts, and adds every
-    /// occurring item to `dirty`. Compacts when the dead prefix outgrows
-    /// the live span.
+    /// Evict the oldest `rows.len()` transactions, whose contents are
+    /// `rows`. Thin wrapper that derives the touched-item hint from the
+    /// rows and delegates to [`IncrementalVerticalDb::evict_touched`].
     pub fn evict(&mut self, rows: &[Vec<Item>], dirty: &mut HashSet<Item>) {
-        let k = rows.len() as Tid;
-        debug_assert!(self.txns >= rows.len(), "evicting more transactions than live");
-        let (lo, hi) = (self.live_lo, self.live_lo + k);
-        let mut touched: HashSet<Item> = HashSet::new();
-        for row in rows {
-            touched.extend(row.iter().copied());
-        }
-        for &item in &touched {
+        let mut touched: Vec<Item> = rows.iter().flatten().copied().collect();
+        touched.sort_unstable();
+        touched.dedup();
+        self.evict_touched(rows.len(), &touched, dirty);
+    }
+
+    /// Evict the oldest `txns` transactions given the distinct items they
+    /// contain (`touched` — the window's per-batch item hint, orders of
+    /// magnitude smaller than the rows themselves): clears each touched
+    /// item's tid range once — O(touched items), not O(all live items) —
+    /// updates the running supports from the cleared-bit counts, adds
+    /// every touched item to `dirty`, and removes items whose support
+    /// drops to zero. Compacts when the dead prefix outgrows the live
+    /// span.
+    pub fn evict_touched(&mut self, txns: usize, touched: &[Item], dirty: &mut HashSet<Item>) {
+        debug_assert!(self.txns >= txns, "evicting more transactions than live");
+        let (lo, hi) = (self.live_lo, self.live_lo + txns as Tid);
+        for &item in touched {
             dirty.insert(item);
             let Some(bm) = self.bitmaps.get_mut(&item) else { continue };
             let cleared = bm.clear_range(lo, hi);
@@ -103,8 +110,67 @@ impl IncrementalVerticalDb {
             }
         }
         self.live_lo = hi;
-        self.txns -= rows.len();
+        self.txns -= txns;
         self.maybe_compact();
+    }
+
+    /// Hint-free eviction of the oldest `txns` transactions: clears the
+    /// tid range from **every** item's bitmap — the store itself knows
+    /// which items the evicted transactions contained (an item occurred
+    /// in them iff its bitmap had bits in the range), so no horizontal
+    /// copy of the evicted rows is needed at all. O(all live items) per
+    /// call; the streaming job prefers [`IncrementalVerticalDb::evict_touched`]
+    /// with the window's per-batch item hint, and the parity tests use
+    /// this as the hint-free oracle.
+    pub fn evict_range(&mut self, txns: usize, dirty: &mut HashSet<Item>) {
+        debug_assert!(self.txns >= txns, "evicting more transactions than live");
+        let (lo, hi) = (self.live_lo, self.live_lo + txns as Tid);
+        let supports = &mut self.supports;
+        self.bitmaps.retain(|&item, bm| {
+            let cleared = bm.clear_range(lo, hi);
+            if cleared == 0 {
+                return true;
+            }
+            dirty.insert(item);
+            let remaining = {
+                let s = supports.entry(item).or_insert(0);
+                *s = s.saturating_sub(cleared);
+                *s
+            };
+            if remaining == 0 {
+                supports.remove(&item);
+                false
+            } else {
+                true
+            }
+        });
+        self.live_lo = hi;
+        self.txns -= txns;
+        self.maybe_compact();
+    }
+
+    /// Reconstruct the live window horizontally, oldest transaction
+    /// first: row `t` = the sorted items whose bitmaps contain tid `t`.
+    /// This is the row-free streaming driver's materialization/parity
+    /// path — the vertical store is the single copy of the window, and
+    /// empty transactions come back as empty rows.
+    pub fn live_rows(&self) -> Vec<Vec<Item>> {
+        let mut rows = vec![Vec::new(); self.txns];
+        for (&item, bm) in &self.bitmaps {
+            for t in bm.iter() {
+                debug_assert!(
+                    t >= self.live_lo && t < self.next,
+                    "live bitmap bit {t} outside window [{}, {})",
+                    self.live_lo,
+                    self.next
+                );
+                rows[(t - self.live_lo) as usize].push(item);
+            }
+        }
+        for row in &mut rows {
+            row.sort_unstable();
+        }
+        rows
     }
 
     /// Rebase every bitmap onto tid origin 0 once the evicted prefix
@@ -236,6 +302,54 @@ mod tests {
         assert_eq!(filtered.iter().map(|(i, _, _)| *i).collect::<Vec<_>>(), vec![1, 3]);
         assert_eq!(db.frequent_count_where(1, |i| i != 2), 2);
         assert_eq!(db.frequent_count_where(2, |_| true), db.frequent_count(2));
+    }
+
+    #[test]
+    fn hinted_and_hint_free_eviction_agree() {
+        // Three identical stores: evicted with the batch rows in hand,
+        // with only the distinct-item hint, and purely by count (the
+        // scan-all oracle). All must stay indistinguishable.
+        let batches =
+            vec![vec![vec![1, 2], vec![3]], vec![vec![2, 3], vec![]], vec![vec![1, 4]]];
+        let mut a = IncrementalVerticalDb::new();
+        let mut b = IncrementalVerticalDb::new();
+        let mut c = IncrementalVerticalDb::new();
+        let (mut da, mut db_dirty, mut dc) = (dirty(), dirty(), dirty());
+        for batch in &batches {
+            a.append(batch, &mut da);
+            b.append(batch, &mut db_dirty);
+            c.append(batch, &mut dc);
+        }
+        da.clear();
+        db_dirty.clear();
+        dc.clear();
+        a.evict(&batches[0], &mut da);
+        b.evict_touched(batches[0].len(), &[1, 2, 3], &mut db_dirty);
+        c.evict_range(batches[0].len(), &mut dc);
+        assert_eq!(da, db_dirty, "row-based vs hinted dirty sets");
+        assert_eq!(da, dc, "row-based vs scan-all dirty sets");
+        assert_eq!(a.txns(), b.txns());
+        assert_eq!(a.live_rows(), b.live_rows());
+        assert_eq!(a.live_rows(), c.live_rows());
+        assert_eq!(a.atoms(1, |_| true).len(), b.atoms(1, |_| true).len());
+        assert_eq!(a.atoms(1, |_| true).len(), c.atoms(1, |_| true).len());
+    }
+
+    #[test]
+    fn live_rows_reconstructs_window_in_tid_order() {
+        let mut db = IncrementalVerticalDb::new();
+        let mut d = dirty();
+        db.append(&[vec![2, 5], vec![], vec![1, 2]], &mut d);
+        db.append(&[vec![7]], &mut d);
+        assert_eq!(
+            db.live_rows(),
+            vec![vec![2, 5], vec![], vec![1, 2], vec![7]],
+            "rows come back sorted, in ingestion order, empties preserved"
+        );
+        db.evict_range(2, &mut d);
+        assert_eq!(db.live_rows(), vec![vec![1, 2], vec![7]]);
+        db.evict_range(2, &mut d);
+        assert!(db.live_rows().is_empty());
     }
 
     #[test]

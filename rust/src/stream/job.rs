@@ -27,8 +27,8 @@ use crate::algorithms::SeqEclat;
 use crate::engine::ClusterContext;
 use crate::error::Result;
 use crate::fim::{
-    bottom_up, generate_rules, rules_to_json, sort_frequents, Frequent, Item, MinSup, Rule,
-    TidBitmap,
+    bottom_up_with, generate_rules, rules_to_json, sort_frequents, Frequent, Item, MineScratch,
+    MinSup, Rule, TidBitmap,
 };
 use crate::util::json::json_str;
 use crate::util::Stopwatch;
@@ -208,8 +208,16 @@ pub struct StreamingMiner {
 impl StreamingMiner {
     /// New job over an existing cluster context (jobs share executors
     /// with everything else running on the context, like one Spark app).
+    ///
+    /// Incremental mode keeps every live transaction in the vertical
+    /// store, so its window is **row-free** — only batch geometry is
+    /// tracked and each transaction is held once, not twice. FromScratch
+    /// mode retains rows (it re-materializes the window every emission).
     pub fn new(ctx: ClusterContext, cfg: StreamConfig) -> StreamingMiner {
-        let window = SlidingWindow::new(cfg.window);
+        let window = match cfg.mode {
+            MineMode::Incremental => SlidingWindow::row_free(cfg.window),
+            MineMode::FromScratch => SlidingWindow::new(cfg.window),
+        };
         StreamingMiner {
             ctx,
             cfg,
@@ -231,8 +239,14 @@ impl StreamingMiner {
     }
 
     /// Materialize the live window (parity testing / debugging).
+    /// Incremental mode reconstructs it from the vertical store — the
+    /// single copy of the window's transactions; FromScratch reads the
+    /// retained rows.
     pub fn materialize_window(&self) -> crate::fim::Database {
-        self.window.materialize()
+        match self.cfg.mode {
+            MineMode::Incremental => crate::fim::Database::from_rows(self.store.live_rows()),
+            MineMode::FromScratch => self.window.materialize(),
+        }
     }
 
     /// Ingest one micro-batch. Returns a snapshot when the window's
@@ -246,7 +260,10 @@ impl StreamingMiner {
         let res = self.window.push(rows);
         if self.cfg.mode == MineMode::Incremental {
             for b in &res.evicted {
-                self.store.evict(&b.rows, &mut self.dirty);
+                // The row-free window carries no row contents — only the
+                // per-batch distinct-item hint, so the store clears the
+                // evicted tid range from exactly the touched bitmaps.
+                self.store.evict_touched(b.txns, &b.items, &mut self.dirty);
             }
         }
         if !res.emit {
@@ -348,7 +365,9 @@ impl std::fmt::Debug for StreamingMiner {
 /// Mine the full sub-lattice over `atoms` (already support-ordered):
 /// singletons plus one equivalence class per prefix atom, classes mined
 /// in parallel on the context's executor pool — the same scatter/gather
-/// the batch Eclat variants use for Phase 3.
+/// the batch Eclat variants use for Phase 3. Each task builds its class
+/// members with bounded intersections (infrequent candidates abort
+/// mid-sweep and allocate nothing) and mines through its own arena.
 fn mine_atoms(
     ctx: &ClusterContext,
     atoms: Vec<(Item, TidBitmap, u32)>,
@@ -366,15 +385,16 @@ fn mine_atoms(
             move || {
                 let (item_i, bm_i, _) = &atoms[i];
                 let mut members: Vec<(Item, TidBitmap)> = Vec::new();
+                let mut buf = TidBitmap::new(0);
                 for (item_j, bm_j, _) in &atoms[i + 1..] {
-                    let (bm_ij, count) = bm_i.and_counted(bm_j);
-                    if count >= min_sup {
-                        members.push((*item_j, bm_ij));
+                    if bm_i.and_bounded_into(bm_j, min_sup, &mut buf).is_some() {
+                        members.push((*item_j, std::mem::replace(&mut buf, TidBitmap::new(0))));
                     }
                 }
                 let mut found = Vec::new();
                 if !members.is_empty() {
-                    bottom_up(&[*item_i], &members, min_sup, &mut found);
+                    let mut scratch = MineScratch::new();
+                    bottom_up_with(&mut scratch, &[*item_i], &members, min_sup, &mut found);
                 }
                 found
             }
@@ -521,6 +541,27 @@ mod tests {
         assert!(json.contains("\"plan\": \"full\""));
         // Summary mentions the plan and the batch id.
         assert!(snap.summary().contains("full"));
+    }
+
+    #[test]
+    fn incremental_window_is_row_free_but_materializes_via_store() {
+        // Incremental mode holds each live transaction once (vertically);
+        // the window keeps geometry only, yet materialization still
+        // reconstructs the exact horizontal contents.
+        let mut miner = StreamingMiner::new(
+            ctx(),
+            StreamConfig::new(WindowSpec::sliding(2, 1), MinSup::count(1)),
+        );
+        miner.push_batch(vec![vec![3, 1], vec![2]]).unwrap();
+        miner.push_batch(vec![vec![1, 2], vec![]]).unwrap();
+        miner.push_batch(vec![vec![5]]).unwrap(); // evicts batch 0
+        let db = miner.materialize_window();
+        assert_eq!(
+            db.transactions(),
+            &[vec![1, 2], vec![], vec![5]],
+            "store-backed reconstruction, normalized rows, empties kept"
+        );
+        assert_eq!(miner.window_txns(), 3);
     }
 
     #[test]

@@ -51,14 +51,27 @@ pub struct Batch {
     pub id: u64,
     /// First global tid of this batch.
     pub tid_lo: Tid,
-    /// Transactions, each sorted and de-duplicated.
+    /// Transaction count — authoritative even without retained rows.
+    pub txns: usize,
+    /// Distinct items occurring in the batch, sorted ascending — the
+    /// eviction hint: it lets the vertical store clear only the touched
+    /// bitmaps (O(items in batch), not O(all live items)) while the
+    /// window stays row-free. Orders of magnitude smaller than `rows`.
+    pub items: Vec<Item>,
+    /// Transactions, each sorted and de-duplicated. **Empty when the
+    /// window runs row-free** ([`SlidingWindow::row_free`]): the
+    /// streaming job's incremental mode keeps every live transaction in
+    /// the vertical store already, so retaining them here horizontally
+    /// would double window memory — evictions are handled by tid range
+    /// plus the `items` hint, and window contents are reconstructed from
+    /// the store on demand.
     pub rows: Vec<Vec<Item>>,
 }
 
 impl Batch {
     /// One past the last global tid of this batch.
     pub fn tid_hi(&self) -> Tid {
-        self.tid_lo + self.rows.len() as Tid
+        self.tid_lo + self.txns as Tid
     }
 }
 
@@ -84,6 +97,10 @@ pub struct SlidingWindow {
     next_id: u64,
     pushes_since_emit: usize,
     txns: usize,
+    /// When false, ingested rows are dropped after counting — only batch
+    /// geometry (id, tid range, size) is tracked. See
+    /// [`SlidingWindow::row_free`].
+    retain_rows: bool,
 }
 
 /// Canonicalize one transaction the way [`Database::from_rows`] does.
@@ -94,8 +111,22 @@ pub fn normalize_row(mut row: Vec<Item>) -> Vec<Item> {
 }
 
 impl SlidingWindow {
-    /// Empty window with the given geometry.
+    /// Empty window with the given geometry, retaining row contents (the
+    /// from-scratch mining path needs [`SlidingWindow::materialize`]).
     pub fn new(spec: WindowSpec) -> SlidingWindow {
+        SlidingWindow::build(spec, true)
+    }
+
+    /// Empty window that tracks only batch geometry — no row contents.
+    /// For drivers that already hold every live transaction elsewhere
+    /// (the incremental vertical store), so window memory is not paid
+    /// twice. [`SlidingWindow::materialize`] is unavailable in this mode;
+    /// evicted [`Batch`]es carry their size and tid range only.
+    pub fn row_free(spec: WindowSpec) -> SlidingWindow {
+        SlidingWindow::build(spec, false)
+    }
+
+    fn build(spec: WindowSpec, retain_rows: bool) -> SlidingWindow {
         SlidingWindow {
             spec,
             live: VecDeque::with_capacity(spec.batches + 1),
@@ -103,12 +134,18 @@ impl SlidingWindow {
             next_id: 0,
             pushes_since_emit: 0,
             txns: 0,
+            retain_rows,
         }
     }
 
     /// The geometry.
     pub fn spec(&self) -> WindowSpec {
         self.spec
+    }
+
+    /// True when row contents are retained (see [`SlidingWindow::row_free`]).
+    pub fn retains_rows(&self) -> bool {
+        self.retain_rows
     }
 
     /// Ingest one batch (rows must already be normalized — see
@@ -119,16 +156,26 @@ impl SlidingWindow {
             rows.iter().all(|r| r.windows(2).all(|w| w[0] < w[1])),
             "rows must be sorted and de-duplicated"
         );
-        let batch = Batch { id: self.next_id, tid_lo: self.next_tid, rows };
+        let txns = rows.len();
+        let mut items: Vec<Item> = rows.iter().flatten().copied().collect();
+        items.sort_unstable();
+        items.dedup();
+        let batch = Batch {
+            id: self.next_id,
+            tid_lo: self.next_tid,
+            txns,
+            items,
+            rows: if self.retain_rows { rows } else { Vec::new() },
+        };
         self.next_id += 1;
         self.next_tid = batch.tid_hi();
-        self.txns += batch.rows.len();
+        self.txns += txns;
         let (batch_id, tid_lo) = (batch.id, batch.tid_lo);
         self.live.push_back(batch);
         let mut evicted = Vec::new();
         while self.live.len() > self.spec.batches {
             let old = self.live.pop_front().expect("live is non-empty");
-            self.txns -= old.rows.len();
+            self.txns -= old.txns;
             evicted.push(old);
         }
         self.pushes_since_emit += 1;
@@ -159,8 +206,11 @@ impl SlidingWindow {
 
     /// Materialize the live window as a horizontal [`Database`] (oldest
     /// transaction first) — the from-scratch mining path and the oracle
-    /// the parity tests compare against.
+    /// the parity tests compare against. Requires a row-retaining window;
+    /// row-free drivers reconstruct from their vertical store instead
+    /// (`IncrementalVerticalDb::live_rows`).
     pub fn materialize(&self) -> Database {
+        assert!(self.retain_rows, "materialize() needs a row-retaining window");
         let mut rows = Vec::with_capacity(self.txns);
         for b in &self.live {
             rows.extend(b.rows.iter().cloned());
@@ -236,6 +286,32 @@ mod tests {
         assert_eq!(db.transactions()[0], vec![1, 2]);
         assert!(db.transactions()[1].is_empty(), "empty transactions are kept");
         assert_eq!(db.transactions()[2], vec![3]);
+    }
+
+    #[test]
+    fn row_free_window_tracks_geometry_without_rows() {
+        let mut w = SlidingWindow::row_free(WindowSpec::sliding(2, 1));
+        assert!(!w.retains_rows());
+        w.push(rows(3, 0));
+        w.push(rows(2, 10));
+        let r = w.push(rows(4, 20));
+        // Same geometry as the retaining window…
+        assert_eq!(w.txns(), 6);
+        assert_eq!(w.tid_range(), (3, 9));
+        assert_eq!(r.evicted.len(), 1);
+        assert_eq!(r.evicted[0].txns, 3);
+        assert_eq!((r.evicted[0].tid_lo, r.evicted[0].tid_hi()), (0, 3));
+        // …but no row contents anywhere — only the distinct-item hint.
+        assert!(r.evicted[0].rows.is_empty());
+        assert_eq!(r.evicted[0].items, vec![0, 1, 2, 3], "sorted distinct items");
+    }
+
+    #[test]
+    #[should_panic(expected = "row-retaining")]
+    fn row_free_window_rejects_materialize() {
+        let mut w = SlidingWindow::row_free(WindowSpec::tumbling(1));
+        w.push(rows(1, 0));
+        let _ = w.materialize();
     }
 
     #[test]
