@@ -1,0 +1,122 @@
+//! The streaming subsystem as a *service*: one producer thread feeds a
+//! drifting clickstream into the async [`StreamService`], the mining
+//! loop publishes every emission through the double-buffered snapshot
+//! handle, and N query threads read the live rules concurrently — no
+//! reader ever waits on the miner, no batch is ever dropped, and under
+//! backpressure emissions coalesce skip-to-latest.
+//!
+//! ```text
+//! cargo run --release --example streaming_serve
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use rdd_eclat::data::clickstream::ClickParams;
+use rdd_eclat::engine::ClusterContext;
+use rdd_eclat::fim::MinSup;
+use rdd_eclat::stream::{
+    BatchSource, ClickstreamSource, Ingest, IngestConfig, StreamConfig, StreamService,
+    StreamingMiner, WindowSpec,
+};
+
+const BATCH: usize = 250;
+const WINDOW: usize = 12;
+const BATCHES: usize = 48;
+const QUERY_THREADS: usize = 3;
+
+fn main() -> rdd_eclat::error::Result<()> {
+    println!(
+        "async serving demo: {BATCHES} batches x {BATCH} sessions, window {WINDOW} slide 1, \
+         {QUERY_THREADS} query threads\n"
+    );
+
+    let ctx = ClusterContext::builder().build();
+    let cfg = StreamConfig::new(WindowSpec::sliding(WINDOW, 1), MinSup::fraction(0.01))
+        .min_conf(0.6);
+    // A small queue cap plus a per-emission throttle makes backpressure
+    // visible in a demo-sized run: the producer outpaces the throttled
+    // miner, emissions coalesce, and the handle always serves the
+    // freshest window.
+    let service = StreamService::spawn(
+        StreamingMiner::new(ctx, cfg),
+        IngestConfig::new(4).throttle(Duration::from_millis(10)),
+    );
+
+    // N concurrent readers over the lock-free handle.
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..QUERY_THREADS)
+        .map(|r| {
+            let handle = service.handle();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let (mut queries, mut last) = (0u64, u64::MAX);
+                while !stop.load(Ordering::SeqCst) {
+                    if let Some(snap) = handle.latest() {
+                        queries += 1;
+                        if snap.batch_id != last {
+                            last = snap.batch_id;
+                            let probe = snap
+                                .rules
+                                .first()
+                                .map(|rule| snap.rules_for(&rule.antecedent).len())
+                                .unwrap_or(0);
+                            println!(
+                                "  [reader {r}] live batch {:>3}: {:>4} itemsets, {:>3} rules \
+                                 ({} for the strongest antecedent)",
+                                snap.batch_id,
+                                snap.frequents.len(),
+                                snap.rules.len(),
+                                probe,
+                            );
+                        }
+                    }
+                    std::thread::sleep(Duration::from_millis(40));
+                }
+                queries
+            })
+        })
+        .collect();
+
+    // One producer: generate and push; pushes return immediately.
+    let params = ClickParams { sessions: BATCHES * BATCH, ..ClickParams::drift() };
+    let mut source = ClickstreamSource::new(params, 7, BATCH);
+    let mut backpressured = 0usize;
+    let producer_wall = std::time::Instant::now();
+    while let Some(batch) = source.next_batch() {
+        if let Ingest::Backpressure { .. } = service.push_batch(batch)? {
+            backpressured += 1;
+        }
+    }
+    let producer_wall = producer_wall.elapsed();
+
+    // Lifecycle: drain (catch up to the latest window), then shut down
+    // and take the miner back.
+    let final_snap = service.drain()?.expect("slide 1 emits");
+    stop.store(true, Ordering::SeqCst);
+    let queries: u64 = readers.into_iter().map(|r| r.join().unwrap_or(0)).sum();
+    let stats = service.stats();
+    let miner = service.shutdown()?;
+
+    println!(
+        "\nproducer pushed {BATCHES} batches in {producer_wall:?} \
+         ({backpressured} pushes saw backpressure)"
+    );
+    println!(
+        "mining loop: {} emissions published, {} skipped (coalesced skip-to-latest)",
+        stats.emissions, stats.skipped
+    );
+    println!("readers answered {queries} live queries while mining ran");
+    println!(
+        "final window (batch {}): {} txns, {} itemsets, {} rules; strongest:",
+        final_snap.batch_id,
+        miner.window_txns(),
+        final_snap.frequents.len(),
+        final_snap.rules.len()
+    );
+    for r in final_snap.rules.iter().take(5) {
+        println!("  {r}");
+    }
+    Ok(())
+}

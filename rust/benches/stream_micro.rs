@@ -4,9 +4,13 @@
 //! Both modes consume the same pre-generated drifting clickstream. The
 //! window is filled outside measurement; each sample then ingests one
 //! micro-batch (slide 1), so the measured unit is exactly "one window
-//! emission". Besides the CSV under `results/`, the run emits the
-//! perf-trajectory file `BENCH_stream.json` at the repository root
-//! (override with `BENCH_STREAM_OUT`). Reproduce with:
+//! emission". The `stream/ingest/{sync,async}_push` rows additionally
+//! compare the producer-visible per-batch cost of the synchronous
+//! `push_batch` (mines inline) against the async `StreamService`
+//! (enqueue-and-return; mining overlaps on the service thread). Besides
+//! the CSV under `results/`, the run emits the perf-trajectory file
+//! `BENCH_stream.json` at the repository root (override with
+//! `BENCH_STREAM_OUT`). Reproduce with:
 //!
 //! ```text
 //! cargo bench --bench stream_micro       # SCALE=quick for a fast pass
@@ -16,7 +20,9 @@ use rdd_eclat::bench::{black_box, Bench, Report};
 use rdd_eclat::data::clickstream::{generate_range, ClickParams};
 use rdd_eclat::engine::ClusterContext;
 use rdd_eclat::fim::MinSup;
-use rdd_eclat::stream::{MineMode, StreamConfig, StreamingMiner, WindowSpec};
+use rdd_eclat::stream::{
+    IngestConfig, MineMode, StreamConfig, StreamService, StreamingMiner, WindowSpec,
+};
 
 struct Workload {
     batch: usize,
@@ -82,6 +88,59 @@ fn main() {
     );
     let speedup = report.rows()[1].mean() / report.rows()[0].mean().max(1e-12);
     println!("\nincremental speedup over from-scratch: {speedup:.2}x per batch");
+
+    // Async vs sync ingest: the producer-visible per-batch cost. The
+    // sync path mines inline inside push_batch; the async service
+    // enqueues and returns immediately, mining on its own thread (with
+    // skip-to-latest coalescing under backpressure), so the producer
+    // pays queue handoff only.
+    let ingest_cfg =
+        StreamConfig::new(WindowSpec::sliding(w.window, 1), MinSup::count(w.min_sup));
+    {
+        let mut miner =
+            StreamingMiner::new(ClusterContext::builder().build(), ingest_cfg.clone());
+        let mut feed = batches.iter().cloned();
+        for _ in 0..w.window {
+            let _ = miner.push_batch(feed.next().expect("fill batches")).expect("push");
+        }
+        report.add(bench.run("stream/ingest/sync_push", || {
+            let batch = feed.next().expect("measured batches pre-generated");
+            black_box(miner.push_batch(batch).expect("push").is_some())
+        }));
+    }
+    let async_final = {
+        let service = StreamService::spawn(
+            StreamingMiner::new(ClusterContext::builder().build(), ingest_cfg),
+            IngestConfig::new(4),
+        );
+        let mut feed = batches.iter().cloned();
+        for _ in 0..w.window {
+            service.push_batch(feed.next().expect("fill batches")).expect("push");
+        }
+        service.drain().expect("drain window fill");
+        report.add(bench.run("stream/ingest/async_push", || {
+            let batch = feed.next().expect("measured batches pre-generated");
+            black_box(service.push_batch(batch).expect("push"))
+        }));
+        // Settle the queue: the served snapshot must cover the final
+        // window exactly even if emissions coalesced mid-measurement.
+        let snap = service.drain().expect("drain").expect("slide 1 emitted");
+        let stats = service.stats();
+        let miner = service.shutdown().expect("shutdown");
+        assert_eq!(
+            snap.window_txns,
+            miner.window_txns(),
+            "served snapshot does not cover the final window"
+        );
+        println!(
+            "async service: {} emissions, {} skipped under backpressure",
+            stats.emissions, stats.skipped
+        );
+        snap.window_txns
+    };
+    assert_eq!(async_final, final_counts[0].1, "async window diverged from sync modes");
+    let ingest_speedup = report.rows()[2].mean() / report.rows()[3].mean().max(1e-12);
+    println!("async ingest producer-side speedup over sync: {ingest_speedup:.0}x per push\n");
 
     report.write_csv("bench_stream_micro.csv").expect("write csv");
     println!("wrote results/bench_stream_micro.csv");

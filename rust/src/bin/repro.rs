@@ -20,8 +20,8 @@ use rdd_eclat::engine::ClusterContext;
 use rdd_eclat::error::{Error, Result};
 use rdd_eclat::fim::{generate_rules, rules_to_json, sort_frequents};
 use rdd_eclat::stream::{
-    BatchSource, ClickstreamSource, MineMode, Paced, ReplaySource, StreamConfig, StreamingMiner,
-    WindowSpec,
+    BatchSource, ClickstreamSource, IngestConfig, MineMode, Paced, ReplaySource, StreamConfig,
+    StreamService, StreamingMiner, WindowSpec,
 };
 use rdd_eclat::util::time::fmt_duration;
 
@@ -70,6 +70,13 @@ fn app() -> App {
                 .opt("interval", "inter-batch pacing in milliseconds (default 0)")
                 .opt("json", "write the final snapshot (itemsets + rules) as JSON")
                 .opt("data-dir", "dataset cache dir")
+                .opt("queue-cap", "--serve: backpressure threshold in queued batches (default 8)")
+                .opt("readers", "--serve: concurrent query threads (default 2)")
+                .flag(
+                    "serve",
+                    "async ingest + live snapshot serving: mining runs on a service \
+                     thread while query threads read the double-buffered handle",
+                )
                 .flag("quiet", "suppress the per-emission progress lines"),
         )
 }
@@ -325,12 +332,15 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
     let stream_cfg = StreamConfig::new(WindowSpec::sliding(window, slide), cfg.min_sup_typed()?)
         .mode(mode)
         .min_conf(cfg.min_conf);
-    let mut miner = StreamingMiner::new(ctx, stream_cfg);
     println!(
         "streaming {} txns/batch, window {window} batches slide {slide}, min_sup {} \
          min_conf {} ({mode:?}, {cores} cores)",
         batch, cfg.min_sup, cfg.min_conf
     );
+    if args.flag("serve") {
+        return cmd_stream_serve(args, source, StreamingMiner::new(ctx, stream_cfg), batches);
+    }
+    let mut miner = StreamingMiner::new(ctx, stream_cfg);
 
     let mut last = None;
     let mut emissions = 0usize;
@@ -359,6 +369,107 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
     }
     if snap.rules.len() > 10 {
         println!("  ... ({} more rules)", snap.rules.len() - 10);
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, snap.to_json())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `repro stream --serve`: async ingest through a [`StreamService`],
+/// with query threads reading the live double-buffered handle while the
+/// mining loop publishes.
+fn cmd_stream_serve(
+    args: &rdd_eclat::cli::Args,
+    mut source: Box<dyn BatchSource>,
+    miner: StreamingMiner,
+    batches: usize,
+) -> Result<()> {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let queue_cap: usize = args.get_parse("queue-cap", 8usize)?;
+    let readers: usize = args.get_parse("readers", 2usize)?;
+    if queue_cap == 0 {
+        return Err(Error::Usage("--queue-cap must be >= 1".into()));
+    }
+    let quiet = args.flag("quiet");
+    let service = StreamService::spawn(miner, IngestConfig::new(queue_cap));
+    println!("serving: queue cap {queue_cap}, {readers} query threads\n");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let query_threads: Vec<_> = (0..readers)
+        .map(|r| {
+            let handle = service.handle();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut last_seen = u64::MAX;
+                let mut queries = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    if let Some(snap) = handle.latest() {
+                        queries += 1;
+                        if !quiet && snap.batch_id != last_seen {
+                            // Demonstrate the antecedent index on the
+                            // strongest rule of the live snapshot.
+                            let probe = snap.rules.first().map(|rule| {
+                                (rule.antecedent.clone(), snap.rules_for(&rule.antecedent).len())
+                            });
+                            match probe {
+                                Some((ante, n)) => println!(
+                                    "  [reader {r}] batch {:>4}: {} itemsets, {} rules; \
+                                     rules_for({ante:?}) -> {n}",
+                                    snap.batch_id,
+                                    snap.frequents.len(),
+                                    snap.rules.len(),
+                                ),
+                                None => println!(
+                                    "  [reader {r}] batch {:>4}: {} itemsets, no rules yet",
+                                    snap.batch_id,
+                                    snap.frequents.len(),
+                                ),
+                            }
+                        }
+                        last_seen = snap.batch_id;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(100));
+                }
+                queries
+            })
+        })
+        .collect();
+
+    for _ in 0..batches {
+        let Some(rows) = source.next_batch() else { break };
+        service.push_batch(rows)?;
+    }
+    let last = service.drain()?;
+    stop.store(true, Ordering::SeqCst);
+    let mut total_queries = 0u64;
+    for t in query_threads {
+        total_queries += t.join().unwrap_or(0);
+    }
+    let stats = service.stats();
+    service.shutdown()?;
+
+    let Some(snap) = last else {
+        println!("stream ended before the first emission");
+        return Ok(());
+    };
+    println!(
+        "\n{} batches in, {} emissions published, {} skipped under backpressure, \
+         {total_queries} live queries answered",
+        stats.batches, stats.emissions, stats.skipped
+    );
+    println!(
+        "final window: {} txns, {} frequent itemsets, {} rules ({} distinct antecedents)",
+        snap.window_txns,
+        snap.frequents.len(),
+        snap.rules.len(),
+        snap.antecedents()
+    );
+    for r in snap.rules.iter().take(10) {
+        println!("  {r}");
     }
     if let Some(path) = args.get("json") {
         std::fs::write(path, snap.to_json())?;

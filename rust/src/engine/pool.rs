@@ -7,10 +7,17 @@
 //! primitive used by the stage scheduler: submit one closure per partition,
 //! block until all complete, and return results in partition order.
 //! Panics inside tasks are caught and surfaced as [`Error::Engine`] so a
-//! bad task cannot wedge the driver.
+//! bad task cannot wedge the driver, and submission never panics:
+//! [`ThreadPool::execute`] returns `Err` (not a panic) once the pool has
+//! shut down, so long-lived drivers — the streaming ingest loop in
+//! particular — can race shutdown against in-flight work safely.
+//!
+//! Shutdown is graceful: [`ThreadPool::shutdown`] (also run on drop)
+//! closes the submission side, lets the workers drain every job already
+//! queued, and joins them.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
@@ -18,24 +25,22 @@ use crate::error::{Error, Result};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
-enum Message {
-    Run(Job),
-    Shutdown,
-}
-
 /// Fixed-size worker pool. The number of workers models the number of
 /// executor cores of the simulated cluster.
 pub struct ThreadPool {
-    sender: Sender<Message>,
-    // The shared receiver the workers pull from.
-    _recv_keepalive: Arc<Mutex<Receiver<Message>>>,
+    /// `None` once the pool has been shut down; dropping the sender is
+    /// what tells the workers (after draining the queue) to exit.
+    sender: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
 }
 
 impl std::fmt::Debug for ThreadPool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("ThreadPool").field("size", &self.size).finish()
+        f.debug_struct("ThreadPool")
+            .field("size", &self.size)
+            .field("shut_down", &self.sender.is_none())
+            .finish()
     }
 }
 
@@ -43,7 +48,7 @@ impl ThreadPool {
     /// Spawn a pool with `size` workers (`size >= 1`).
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
-        let (tx, rx) = channel::<Message>();
+        let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
         let mut workers = Vec::with_capacity(size);
         for i in 0..size {
@@ -52,17 +57,29 @@ impl ThreadPool {
                 std::thread::Builder::new()
                     .name(format!("executor-{i}"))
                     .spawn(move || loop {
-                        // Hold the lock only while receiving.
-                        let msg = { rx.lock().unwrap().recv() };
-                        match msg {
-                            Ok(Message::Run(job)) => job(),
-                            Ok(Message::Shutdown) | Err(_) => break,
-                        }
+                        let job = {
+                            // Hold the lock only while receiving. A
+                            // poisoned mutex means a sibling worker died
+                            // mid-receive; exit cleanly instead of
+                            // cascading the panic.
+                            let Ok(guard) = rx.lock() else { break };
+                            // A closed channel (pool shut down) still
+                            // yields every queued job before Err, so
+                            // pending work drains.
+                            match guard.recv() {
+                                Ok(job) => job,
+                                Err(_) => break,
+                            }
+                        };
+                        // A panicking fire-and-forget job must not take
+                        // the worker down with it (run_all additionally
+                        // reports the panic to the driver).
+                        let _ = catch_unwind(AssertUnwindSafe(job));
                     })
                     .expect("spawn executor thread"),
             );
         }
-        ThreadPool { sender: tx, _recv_keepalive: rx, workers, size }
+        ThreadPool { sender: Some(tx), workers, size }
     }
 
     /// Number of worker threads.
@@ -70,18 +87,24 @@ impl ThreadPool {
         self.size
     }
 
-    /// Submit a fire-and-forget job.
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.sender
-            .send(Message::Run(Box::new(f)))
-            .expect("thread pool has shut down");
+    /// Submit a fire-and-forget job. Errors (instead of panicking) when
+    /// the pool has been shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<()> {
+        let sender = self
+            .sender
+            .as_ref()
+            .ok_or_else(|| Error::engine("thread pool has shut down"))?;
+        sender
+            .send(Box::new(f))
+            .map_err(|_| Error::engine("thread pool has shut down"))
     }
 
     /// Run every task and gather results **in task order**. Tasks run
     /// concurrently across the pool's workers; the calling thread blocks
     /// until all tasks finish. A panicking task yields `Error::Engine`
     /// carrying the panic payload (all other tasks still run to
-    /// completion).
+    /// completion); submitting against a shut-down pool yields
+    /// `Error::Engine` immediately.
     pub fn run_all<T, F>(&self, tasks: Vec<F>) -> Result<Vec<T>>
     where
         T: Send + 'static,
@@ -98,7 +121,7 @@ impl ThreadPool {
                 let r = catch_unwind(AssertUnwindSafe(task));
                 // Receiver may be gone if the driver already failed; ignore.
                 let _ = tx.send((i, r));
-            });
+            })?;
         }
         drop(tx);
         let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
@@ -121,6 +144,21 @@ impl ThreadPool {
         }
         Ok(slots.into_iter().map(|s| s.expect("all tasks reported")).collect())
     }
+
+    /// Graceful shutdown: stop accepting jobs, let the workers drain
+    /// everything already queued, and join them. Idempotent; also run on
+    /// drop. After shutdown, [`ThreadPool::execute`] and
+    /// [`ThreadPool::run_all`] return `Error::Engine` instead of
+    /// panicking.
+    pub fn shutdown(&mut self) {
+        // Dropping the only sender closes the channel; recv() keeps
+        // returning queued jobs until the queue is empty, then errors —
+        // exactly the drain-then-stop we want.
+        self.sender.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
 }
 
 fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
@@ -135,12 +173,7 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.workers {
-            let _ = self.sender.send(Message::Shutdown);
-        }
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -148,6 +181,7 @@ impl Drop for ThreadPool {
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicU64, Ordering};
+    use std::time::Duration;
 
     #[test]
     fn run_all_preserves_order() {
@@ -202,9 +236,64 @@ mod tests {
     }
 
     #[test]
+    fn pool_survives_panicking_fire_and_forget_job() {
+        let pool = ThreadPool::new(1);
+        pool.execute(|| panic!("raw job panic")).unwrap();
+        // The single worker must still be alive to run this.
+        let out = pool.run_all(vec![|| 5]).unwrap();
+        assert_eq!(out, vec![5]);
+    }
+
+    #[test]
     fn size_clamped_to_one() {
         let pool = ThreadPool::new(0);
         assert_eq!(pool.size(), 1);
         assert_eq!(pool.run_all(vec![|| 42]).unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn drop_drains_pending_tasks() {
+        // More slow tasks than workers: at drop time most are still
+        // queued. Shutdown must run them all, not abandon them.
+        let counter = Arc::new(AtomicU64::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..8 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    std::thread::sleep(Duration::from_millis(5));
+                    c.fetch_add(1, Ordering::SeqCst);
+                })
+                .unwrap();
+            }
+        } // drop == shutdown
+        assert_eq!(counter.load(Ordering::SeqCst), 8, "queued tasks drained on drop");
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors_instead_of_panicking() {
+        let mut pool = ThreadPool::new(2);
+        pool.shutdown();
+        pool.shutdown(); // idempotent
+        let err = pool.execute(|| {}).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+        let err = pool.run_all(vec![|| 1]).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+    }
+
+    #[test]
+    fn shutdown_waits_for_in_flight_work() {
+        let counter = Arc::new(AtomicU64::new(0));
+        let mut pool = ThreadPool::new(1);
+        for _ in 0..3 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                std::thread::sleep(Duration::from_millis(3));
+                c.fetch_add(1, Ordering::SeqCst);
+            })
+            .unwrap();
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 3);
     }
 }

@@ -30,7 +30,8 @@
 //! every table and figure of the paper's evaluation), and [`stream`]
 //! (DStream-style micro-batch mining: sliding windows over an
 //! incrementally maintained vertical store, with per-batch frequent
-//! itemset and association-rule snapshots).
+//! itemset and association-rule snapshots, an async ingest service, and
+//! a lock-free-read snapshot serving layer).
 //!
 //! ## Quickstart
 //!
@@ -75,6 +76,7 @@ pub mod prelude {
     pub use crate::error::{Error, Result};
     pub use crate::fim::{generate_rules, sort_frequents, Frequent, Item, ItemSet, MinSup, Tid};
     pub use crate::stream::{
-        BatchSnapshot, BatchSource, MineMode, StreamConfig, StreamingMiner, WindowSpec,
+        BatchSnapshot, BatchSource, IngestConfig, MineMode, ServingSnapshot, SnapshotHandle,
+        StreamConfig, StreamService, StreamingMiner, WindowSpec,
     };
 }

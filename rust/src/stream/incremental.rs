@@ -185,12 +185,27 @@ impl IncrementalVerticalDb {
         }
         let delta = self.live_lo;
         let universe = span as usize;
-        for bm in self.bitmaps.values_mut() {
-            let shifted =
-                TidBitmap::from_tids(universe, bm.iter().filter(|&t| t >= delta).map(|t| t - delta));
+        let supports = &mut self.supports;
+        self.bitmaps.retain(|&item, bm| {
+            let shifted = TidBitmap::from_tids(
+                universe,
+                bm.iter().filter(|&t| t >= delta).map(|t| t - delta),
+            );
             debug_assert_eq!(shifted.count(), bm.count(), "compaction dropped live bits");
-            *bm = shifted;
-        }
+            if shifted.count() == 0 {
+                // Hygiene backstop: both eviction paths already prune
+                // zero-support entries, but compaction re-walks every
+                // column anyway, so a dead item can never outlive a
+                // compaction point — under keyspace drift the store's
+                // footprint tracks the live window, not the stream's
+                // item history.
+                supports.remove(&item);
+                false
+            } else {
+                *bm = shifted;
+                true
+            }
+        });
         self.live_lo = 0;
         self.next = span;
     }
@@ -350,6 +365,45 @@ mod tests {
         assert_eq!(db.live_rows(), vec![vec![1, 2], vec![7]]);
         db.evict_range(2, &mut d);
         assert!(db.live_rows().is_empty());
+    }
+
+    #[test]
+    fn keyspace_drift_does_not_leak_dead_items() {
+        // Regression: sliding a window across a drifting keyspace — each
+        // epoch draws from a fresh, disjoint item range, so every item
+        // eventually dies. The store must forget dead items (supports
+        // AND bitmaps in lockstep), keeping `distinct_items()` equal to
+        // the live window's true distinct count instead of growing with
+        // the stream's item history.
+        let mut db = IncrementalVerticalDb::new();
+        let mut d = dirty();
+        let mut pending: std::collections::VecDeque<Vec<Vec<Item>>> =
+            std::collections::VecDeque::new();
+        for step in 0..300u32 {
+            let base = (step / 10) * 100; // keyspace shifts every 10 batches
+            let batch = vec![vec![base, base + 1], vec![base + 1, base + 2]];
+            db.append(&batch, &mut d);
+            pending.push_back(batch);
+            if pending.len() > 4 {
+                db.evict(&pending.pop_front().unwrap(), &mut d);
+            }
+            let mut live: HashSet<Item> = HashSet::new();
+            for b in &pending {
+                for row in b {
+                    live.extend(row.iter().copied());
+                }
+            }
+            assert_eq!(db.distinct_items(), live.len(), "step {step}: dead items leaked");
+            assert_eq!(
+                db.bitmaps.len(),
+                db.supports.len(),
+                "step {step}: columns and supports out of lockstep"
+            );
+            for (&item, bm) in &db.bitmaps {
+                assert!(bm.count() > 0, "step {step}: zero-support column {item} retained");
+            }
+        }
+        assert!(db.distinct_items() <= 6, "window spans at most two 3-item epochs");
     }
 
     #[test]

@@ -1,0 +1,512 @@
+//! Async ingestion: decouple `push_batch` from mining.
+//!
+//! [`StreamService`] wraps a [`StreamingMiner`] in a
+//! producer/miner/reader pipeline with an explicit lifecycle
+//! (spawn → push/query → drain → shutdown):
+//!
+//! * **Producer side** — [`StreamService::push_batch`] appends the
+//!   batch to a queue and returns immediately; it never blocks on
+//!   mining and never drops rows.
+//! * **Mining loop** — a dedicated thread pops batches, runs the
+//!   window/store bookkeeping ([`StreamingMiner::ingest`]) for every
+//!   batch in arrival order (results stay window-exact), and mines at
+//!   emission points — with the class tasks scattered onto the engine's
+//!   executor [`ThreadPool`](crate::engine::pool::ThreadPool), exactly
+//!   like the synchronous path.
+//! * **Backpressure** — the queue is bounded by
+//!   [`IngestConfig::queue_cap`] in the Spark-Streaming sense: it
+//!   bounds *mining lag*, not ingestion. When an emission point arrives
+//!   while more than `queue_cap` batches are still queued, the emission
+//!   is **skipped** (coalesced); bookkeeping keeps advancing, and the
+//!   next un-skipped emission — or the catch-up emission the loop runs
+//!   as soon as the queue empties — publishes the *latest* window
+//!   state. Skip-to-latest trades per-slide snapshots for freshness
+//!   under load while keeping every published snapshot exact for the
+//!   window it covers.
+//! * **Reader side** — every emission is published through the
+//!   double-buffered [`SnapshotHandle`](super::serve::SnapshotHandle),
+//!   so queries run lock-free while the next window is mined.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::fim::Item;
+
+use super::job::StreamingMiner;
+use super::serve::{snapshot_pipe, ServingSnapshot, SnapshotHandle, SnapshotPublisher};
+
+/// Configuration of the async ingest service.
+#[derive(Debug, Clone)]
+pub struct IngestConfig {
+    /// Backpressure threshold: an emission point is skipped
+    /// (coalesced skip-to-latest) when more than this many batches are
+    /// queued behind it. Bounds mining lag — ingestion itself never
+    /// blocks and no batch is ever dropped. Must be ≥ 1.
+    pub queue_cap: usize,
+    /// Minimum wall time per emission. Zero (the default) for
+    /// production; demos and tests use it to pace the mining loop
+    /// deterministically.
+    pub emission_throttle: Duration,
+}
+
+impl Default for IngestConfig {
+    fn default() -> IngestConfig {
+        IngestConfig { queue_cap: 8, emission_throttle: Duration::ZERO }
+    }
+}
+
+impl IngestConfig {
+    /// Config with the given backpressure threshold (`queue_cap >= 1`).
+    pub fn new(queue_cap: usize) -> IngestConfig {
+        assert!(queue_cap >= 1, "queue_cap must be at least 1");
+        IngestConfig { queue_cap, ..IngestConfig::default() }
+    }
+
+    /// Set the per-emission throttle (builder style).
+    pub fn throttle(mut self, d: Duration) -> IngestConfig {
+        self.emission_throttle = d;
+        self
+    }
+}
+
+/// Outcome of one [`StreamService::push_batch`] call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ingest {
+    /// Enqueued; the miner is keeping up.
+    Accepted {
+        /// Batches queued (including this one) after the push.
+        pending: usize,
+    },
+    /// Enqueued, but the queue is over `queue_cap`: the miner is behind
+    /// and emissions will coalesce skip-to-latest until it catches up.
+    Backpressure {
+        /// Batches queued (including this one) after the push.
+        pending: usize,
+    },
+}
+
+/// Lifetime counters of one service.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IngestStats {
+    /// Batches accepted by `push_batch`.
+    pub batches: u64,
+    /// Snapshots actually mined and published.
+    pub emissions: u64,
+    /// Emission points skipped under backpressure (each later covered
+    /// by a catch-up or subsequent emission).
+    pub skipped: u64,
+}
+
+/// Queue state shared between producers, the mining loop, and `drain`.
+struct QueueState {
+    queue: VecDeque<Vec<Vec<Item>>>,
+    /// Producer-side close signal; the loop drains, catches up, then exits.
+    closing: bool,
+    /// The loop is between popping work and finishing it.
+    busy: bool,
+    /// ≥ 1 emission point has passed without mining since the last
+    /// publish — the loop owes a catch-up emission.
+    unmined: bool,
+    /// Terminal mining-loop error, surfaced to producers and `drain`.
+    dead: Option<String>,
+}
+
+struct Shared {
+    q: Mutex<QueueState>,
+    /// Wakes the mining loop (new batch / close).
+    work_cv: Condvar,
+    /// Wakes `drain` (loop went idle / died).
+    idle_cv: Condvar,
+    cap: usize,
+    batches: AtomicU64,
+    emissions: AtomicU64,
+    skipped: AtomicU64,
+}
+
+impl Shared {
+    fn lock(&self) -> Result<MutexGuard<'_, QueueState>> {
+        self.q.lock().map_err(|_| Error::engine("ingest queue poisoned"))
+    }
+}
+
+/// The async streaming service: owns the mining loop thread, hands out
+/// [`SnapshotHandle`]s, and gives the [`StreamingMiner`] back on
+/// [`StreamService::shutdown`].
+pub struct StreamService {
+    shared: Arc<Shared>,
+    handle: SnapshotHandle,
+    worker: Option<JoinHandle<(StreamingMiner, Result<()>)>>,
+}
+
+impl StreamService {
+    /// Start the service: spawns the mining-loop thread and returns
+    /// immediately. The miner's emissions run their class tasks on the
+    /// engine pool of the `ClusterContext` the miner was built over.
+    pub fn spawn(miner: StreamingMiner, cfg: IngestConfig) -> StreamService {
+        assert!(cfg.queue_cap >= 1, "queue_cap must be at least 1");
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState {
+                queue: VecDeque::new(),
+                closing: false,
+                busy: false,
+                unmined: false,
+                dead: None,
+            }),
+            work_cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+            cap: cfg.queue_cap,
+            batches: AtomicU64::new(0),
+            emissions: AtomicU64::new(0),
+            skipped: AtomicU64::new(0),
+        });
+        let (publisher, handle) = snapshot_pipe();
+        let worker = {
+            let shared = Arc::clone(&shared);
+            let throttle = cfg.emission_throttle;
+            std::thread::Builder::new()
+                .name("stream-miner".to_string())
+                .spawn(move || mining_loop(miner, shared, publisher, throttle))
+                .expect("spawn stream-miner thread")
+        };
+        StreamService { shared, handle, worker: Some(worker) }
+    }
+
+    /// A reader handle onto the live snapshot (cheap clone; hand one to
+    /// every query thread).
+    pub fn handle(&self) -> SnapshotHandle {
+        self.handle.clone()
+    }
+
+    /// Enqueue one micro-batch and return immediately — mining happens
+    /// on the service thread. Never drops rows; reports
+    /// [`Ingest::Backpressure`] when the miner has fallen more than
+    /// `queue_cap` batches behind (emissions are coalescing). Errors if
+    /// the mining loop has died or the service is shutting down.
+    pub fn push_batch(&self, rows: Vec<Vec<Item>>) -> Result<Ingest> {
+        let mut st = self.shared.lock()?;
+        if let Some(msg) = &st.dead {
+            return Err(Error::engine(format!("stream service mining loop died: {msg}")));
+        }
+        if st.closing {
+            return Err(Error::engine("stream service is shutting down"));
+        }
+        st.queue.push_back(rows);
+        let pending = st.queue.len();
+        drop(st);
+        self.shared.batches.fetch_add(1, Ordering::SeqCst);
+        self.shared.work_cv.notify_one();
+        if pending > self.shared.cap {
+            Ok(Ingest::Backpressure { pending })
+        } else {
+            Ok(Ingest::Accepted { pending })
+        }
+    }
+
+    /// Batches queued but not yet bookkept by the mining loop.
+    pub fn pending(&self) -> usize {
+        self.shared.lock().map(|st| st.queue.len()).unwrap_or(0)
+    }
+
+    /// Lifetime counters (batches in, emissions published, emissions
+    /// skipped under backpressure).
+    pub fn stats(&self) -> IngestStats {
+        IngestStats {
+            batches: self.shared.batches.load(Ordering::SeqCst),
+            emissions: self.shared.emissions.load(Ordering::SeqCst),
+            skipped: self.shared.skipped.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Block until every queued batch has been bookkept **and** any
+    /// skipped emission has been caught up, then return the latest
+    /// published snapshot (`None` if nothing was ever due). The service
+    /// stays usable afterwards.
+    pub fn drain(&self) -> Result<Option<Arc<ServingSnapshot>>> {
+        let mut st = self.shared.lock()?;
+        loop {
+            if let Some(msg) = &st.dead {
+                return Err(Error::engine(format!(
+                    "stream service mining loop died: {msg}"
+                )));
+            }
+            if st.queue.is_empty() && !st.busy && !st.unmined {
+                return Ok(self.handle.latest());
+            }
+            st = self
+                .shared
+                .idle_cv
+                .wait(st)
+                .map_err(|_| Error::engine("ingest queue poisoned"))?;
+        }
+    }
+
+    /// Graceful shutdown: drain the queue, run any owed catch-up
+    /// emission, stop the loop, and hand the [`StreamingMiner`] back
+    /// (e.g. to materialize the final window). Errors if the mining
+    /// loop died.
+    pub fn shutdown(mut self) -> Result<StreamingMiner> {
+        self.close();
+        let worker = self.worker.take().expect("shutdown runs once");
+        match worker.join() {
+            Ok((miner, Ok(()))) => Ok(miner),
+            Ok((_, Err(e))) => Err(e),
+            Err(_) => Err(Error::engine("stream-miner thread panicked")),
+        }
+    }
+
+    fn close(&self) {
+        if let Ok(mut st) = self.shared.lock() {
+            st.closing = true;
+        }
+        self.shared.work_cv.notify_all();
+    }
+}
+
+impl Drop for StreamService {
+    fn drop(&mut self) {
+        if let Some(worker) = self.worker.take() {
+            self.close();
+            let _ = worker.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for StreamService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StreamService")
+            .field("pending", &self.pending())
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+/// One unit of work for the loop: a batch to bookkeep, or a catch-up
+/// emission owed from a skipped emission point.
+enum Work {
+    Batch(Vec<Vec<Item>>),
+    CatchUp,
+}
+
+fn mining_loop(
+    mut miner: StreamingMiner,
+    shared: Arc<Shared>,
+    mut publisher: SnapshotPublisher,
+    throttle: Duration,
+) -> (StreamingMiner, Result<()>) {
+    loop {
+        // Pick up work (or exit). The lock is held only around queue
+        // bookkeeping, never across mining.
+        let work = {
+            let mut st = match shared.lock() {
+                Ok(st) => st,
+                Err(e) => return (miner, Err(e)),
+            };
+            st.busy = false;
+            loop {
+                if let Some(batch) = st.queue.pop_front() {
+                    st.busy = true;
+                    break Work::Batch(batch);
+                }
+                if st.unmined {
+                    st.busy = true;
+                    break Work::CatchUp;
+                }
+                if st.closing {
+                    shared.idle_cv.notify_all();
+                    return (miner, Ok(()));
+                }
+                shared.idle_cv.notify_all();
+                st = match shared.work_cv.wait(st) {
+                    Ok(st) => st,
+                    Err(_) => return (miner, Err(Error::engine("ingest queue poisoned"))),
+                };
+            }
+        };
+
+        let mine = match work {
+            Work::Batch(rows) => {
+                // A panic inside the miner must not wedge the service:
+                // unwinding past this loop would leave `busy` set and
+                // `dead` unset, hanging `drain()` forever while
+                // `push_batch` keeps queueing. Catch it and take the
+                // same clean death path a mining `Err` takes.
+                let due = match catch_unwind(AssertUnwindSafe(|| miner.ingest(rows))) {
+                    Ok(due) => due,
+                    Err(payload) => {
+                        let e = Error::engine(format!(
+                            "mining loop panicked: {}",
+                            panic_message(payload)
+                        ));
+                        return die(miner, &shared, e);
+                    }
+                };
+                if !due {
+                    false
+                } else {
+                    // Emission point. Skip it when the queue has fallen
+                    // behind the cap — bookkeeping already advanced, and
+                    // a later (or catch-up) emission publishes the
+                    // latest state instead.
+                    let mut st = match shared.lock() {
+                        Ok(st) => st,
+                        Err(e) => return (miner, Err(e)),
+                    };
+                    if st.queue.len() > shared.cap {
+                        st.unmined = true;
+                        drop(st);
+                        shared.skipped.fetch_add(1, Ordering::SeqCst);
+                        false
+                    } else {
+                        true
+                    }
+                }
+            }
+            Work::CatchUp => true,
+        };
+
+        if mine {
+            match catch_unwind(AssertUnwindSafe(|| miner.mine_now())) {
+                Ok(Ok(snap)) => {
+                    publisher.publish(snap);
+                    shared.emissions.fetch_add(1, Ordering::SeqCst);
+                    if let Ok(mut st) = shared.lock() {
+                        st.unmined = false;
+                    }
+                    if !throttle.is_zero() {
+                        std::thread::sleep(throttle);
+                    }
+                }
+                Ok(Err(e)) => return die(miner, &shared, e),
+                Err(payload) => {
+                    let e = Error::engine(format!(
+                        "mining loop panicked: {}",
+                        panic_message(payload)
+                    ));
+                    return die(miner, &shared, e);
+                }
+            }
+        }
+    }
+}
+
+/// Terminal error path of the mining loop: record the cause so
+/// `push_batch`/`drain` stop cleanly instead of hanging, wake any
+/// waiter, and hand the (possibly half-mutated — it is not reused)
+/// miner back with the error.
+fn die(miner: StreamingMiner, shared: &Shared, e: Error) -> (StreamingMiner, Result<()>) {
+    if let Ok(mut st) = shared.q.lock() {
+        st.dead = Some(e.to_string());
+        st.busy = false;
+    }
+    shared.idle_cv.notify_all();
+    (miner, Err(e))
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::SeqEclat;
+    use crate::engine::ClusterContext;
+    use crate::fim::{sort_frequents, MinSup};
+    use crate::stream::{StreamConfig, WindowSpec};
+
+    fn ctx() -> ClusterContext {
+        ClusterContext::builder().cores(2).build()
+    }
+
+    fn batches(n: usize) -> Vec<Vec<Vec<Item>>> {
+        (0..n as u32)
+            .map(|i| vec![vec![i % 5, 5 + (i % 3)], vec![i % 5, 10 + (i % 2)]])
+            .collect()
+    }
+
+    #[test]
+    fn async_path_matches_sync_miner() {
+        let spec = WindowSpec::sliding(3, 1);
+        let cfg = || StreamConfig::new(spec, MinSup::count(2));
+        let mut sync = StreamingMiner::new(ctx(), cfg());
+        let service =
+            StreamService::spawn(StreamingMiner::new(ctx(), cfg()), IngestConfig::default());
+        let mut last_sync = None;
+        for b in batches(12) {
+            last_sync = sync.push_batch(b.clone()).unwrap().or(last_sync);
+            service.push_batch(b).unwrap();
+        }
+        let final_snap = service.drain().unwrap().expect("slide 1 emitted");
+        let want = last_sync.expect("sync path emitted");
+        assert_eq!(final_snap.frequents, want.frequents);
+        assert_eq!(final_snap.batch_id, want.batch_id);
+        let stats = service.stats();
+        assert_eq!(stats.batches, 12);
+        assert!(stats.emissions >= 1);
+        // Window-exactness against the miner's own window.
+        let miner = service.shutdown().unwrap();
+        let mut oracle = SeqEclat::mine(&miner.materialize_window(), MinSup::count(2));
+        sort_frequents(&mut oracle);
+        assert_eq!(final_snap.frequents, oracle);
+    }
+
+    #[test]
+    fn drain_on_idle_service_is_a_noop() {
+        let cfg = StreamConfig::new(WindowSpec::tumbling(2), MinSup::count(1));
+        let service = StreamService::spawn(StreamingMiner::new(ctx(), cfg), IngestConfig::new(2));
+        assert!(service.drain().unwrap().is_none(), "nothing pushed, nothing published");
+        assert_eq!(service.pending(), 0);
+        // Drain twice; service stays usable in between.
+        service.push_batch(vec![vec![1, 2]]).unwrap();
+        service.push_batch(vec![vec![1, 2]]).unwrap();
+        let snap = service.drain().unwrap().expect("tumbling(2) emitted");
+        assert_eq!(snap.window_txns, 2);
+        let miner = service.shutdown().unwrap();
+        assert_eq!(miner.window_txns(), 2);
+    }
+
+    #[test]
+    fn push_after_shutdown_like_close_errors() {
+        let cfg = StreamConfig::new(WindowSpec::tumbling(1), MinSup::count(1));
+        let service =
+            StreamService::spawn(StreamingMiner::new(ctx(), cfg), IngestConfig::default());
+        service.close();
+        let err = service.push_batch(vec![vec![1]]).unwrap_err();
+        assert!(err.to_string().contains("shutting down"), "{err}");
+        // Shutdown still returns the miner cleanly.
+        let miner = service.shutdown().unwrap();
+        assert_eq!(miner.window_txns(), 0);
+    }
+
+    #[test]
+    fn handle_observes_snapshots_while_service_runs() {
+        let service = StreamService::spawn(
+            StreamingMiner::new(
+                ctx(),
+                StreamConfig::new(WindowSpec::sliding(2, 1), MinSup::count(1)),
+            ),
+            IngestConfig::default(),
+        );
+        let handle = service.handle();
+        for b in batches(4) {
+            service.push_batch(b).unwrap();
+        }
+        let snap = handle
+            .wait_for_batch(3, Duration::from_secs(30))
+            .expect("final emission published");
+        assert_eq!(snap.batch_id, 3);
+        assert!(snap.frequent(&[3]).is_some(), "batch 3's items are in the window");
+        service.shutdown().unwrap();
+    }
+}

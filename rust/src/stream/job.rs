@@ -34,7 +34,7 @@ use crate::util::json::json_str;
 use crate::util::Stopwatch;
 
 use super::incremental::IncrementalVerticalDb;
-use super::window::{normalize_row, PushResult, SlidingWindow, WindowSpec};
+use super::window::{normalize_row, SlidingWindow, WindowSpec};
 
 /// How each emission is mined.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -115,6 +115,25 @@ impl StreamConfig {
     /// Set the rule-confidence threshold.
     pub fn min_conf(mut self, c: f64) -> StreamConfig {
         self.min_conf = c;
+        self
+    }
+
+    /// Set the churn fallback threshold: the fraction of frequent atoms
+    /// dirty above which `Incremental` re-mines every class. Values are
+    /// clamped to `[0, 1]` (`0.0` = always fall back when anything
+    /// frequent is dirty, `1.0` = never fall back).
+    ///
+    /// # Panics
+    ///
+    /// Panics on NaN/infinite input — a non-finite threshold would make
+    /// the fallback comparison silently constant (NaN compares false
+    /// against everything), which is exactly the class of bug this
+    /// validation exists to catch. The same check runs in
+    /// [`StreamingMiner::new`] for configs built with struct-update
+    /// syntax.
+    pub fn churn_threshold(mut self, t: f64) -> StreamConfig {
+        assert!(t.is_finite(), "churn_threshold must be finite, got {t}");
+        self.churn_threshold = t.clamp(0.0, 1.0);
         self
     }
 }
@@ -203,6 +222,9 @@ pub struct StreamingMiner {
     store: IncrementalVerticalDb,
     dirty: HashSet<Item>,
     cache: Option<Cached>,
+    /// Sequence number of the newest ingested batch (0 before the first
+    /// push) — what a skip-to-latest emission is attributed to.
+    last_batch_id: u64,
 }
 
 impl StreamingMiner {
@@ -213,7 +235,19 @@ impl StreamingMiner {
     /// store, so its window is **row-free** — only batch geometry is
     /// tracked and each transaction is held once, not twice. FromScratch
     /// mode retains rows (it re-materializes the window every emission).
-    pub fn new(ctx: ClusterContext, cfg: StreamConfig) -> StreamingMiner {
+    ///
+    /// # Panics
+    ///
+    /// Panics when `cfg.churn_threshold` is NaN or infinite (see
+    /// [`StreamConfig::churn_threshold`]); out-of-range finite values
+    /// are clamped to `[0, 1]`.
+    pub fn new(ctx: ClusterContext, mut cfg: StreamConfig) -> StreamingMiner {
+        assert!(
+            cfg.churn_threshold.is_finite(),
+            "churn_threshold must be finite, got {}",
+            cfg.churn_threshold
+        );
+        cfg.churn_threshold = cfg.churn_threshold.clamp(0.0, 1.0);
         let window = match cfg.mode {
             MineMode::Incremental => SlidingWindow::row_free(cfg.window),
             MineMode::FromScratch => SlidingWindow::new(cfg.window),
@@ -225,6 +259,7 @@ impl StreamingMiner {
             store: IncrementalVerticalDb::new(),
             dirty: HashSet::new(),
             cache: None,
+            last_batch_id: 0,
         }
     }
 
@@ -251,8 +286,25 @@ impl StreamingMiner {
 
     /// Ingest one micro-batch. Returns a snapshot when the window's
     /// slide cadence makes this batch an emission point, `None`
-    /// otherwise.
+    /// otherwise. Synchronous: mining runs on the calling thread (the
+    /// class tasks still scatter onto the engine pool); the async
+    /// service in [`crate::stream::ingest`] decouples the two via
+    /// [`StreamingMiner::ingest`] + [`StreamingMiner::mine_now`].
     pub fn push_batch(&mut self, rows: Vec<Vec<Item>>) -> Result<Option<BatchSnapshot>> {
+        if self.ingest(rows) {
+            self.mine_now().map(Some)
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Window/store bookkeeping for one micro-batch — normalize, append
+    /// to the vertical store, advance the window, evict — **without**
+    /// mining. Returns `true` when the slide cadence makes this batch an
+    /// emission point. Cheap relative to an emission, which is what lets
+    /// the async ingest loop keep bookkeeping exact while emissions
+    /// coalesce skip-to-latest under backpressure.
+    pub fn ingest(&mut self, rows: Vec<Vec<Item>>) -> bool {
         let rows: Vec<Vec<Item>> = rows.into_iter().map(normalize_row).collect();
         if self.cfg.mode == MineMode::Incremental {
             self.store.append(&rows, &mut self.dirty);
@@ -266,13 +318,20 @@ impl StreamingMiner {
                 self.store.evict_touched(b.txns, &b.items, &mut self.dirty);
             }
         }
-        if !res.emit {
-            return Ok(None);
-        }
-        self.emit(&res).map(Some)
+        self.last_batch_id = res.batch_id;
+        res.emit
     }
 
-    fn emit(&mut self, res: &PushResult) -> Result<BatchSnapshot> {
+    /// Mine the window as it stands **now** and emit a snapshot,
+    /// regardless of the slide cadence. The snapshot is attributed to
+    /// the newest ingested batch — the skip-to-latest catch-up emission
+    /// of the async service, and the second half of
+    /// [`StreamingMiner::push_batch`].
+    pub fn mine_now(&mut self) -> Result<BatchSnapshot> {
+        self.emit()
+    }
+
+    fn emit(&mut self) -> Result<BatchSnapshot> {
         let sw = Stopwatch::start();
         let window_txns = self.window.txns();
         let min_sup_count = self.cfg.min_sup.to_count(window_txns);
@@ -297,7 +356,7 @@ impl StreamingMiner {
         }
         self.dirty.clear();
         Ok(BatchSnapshot {
-            batch_id: res.batch_id,
+            batch_id: self.last_batch_id,
             window_txns,
             window_batches: self.window.len_batches(),
             min_sup_count,
@@ -324,8 +383,18 @@ impl StreamingMiner {
         let full = match &self.cache {
             None => true,
             Some(c) => {
+                // The churn test is a ratio — with no frequent atoms
+                // there is no churn to measure, so the empty window
+                // takes the delta path explicitly. (Defensive: since
+                // dirty_frequent counts a subset of frequent_items, the
+                // `> threshold * 0` comparison below could not fire
+                // anyway for a clamped threshold; the guard keeps that
+                // from silently depending on the two counts staying
+                // subset-related.)
                 c.min_sup_count != min_sup_count
-                    || dirty_frequent as f64 > self.cfg.churn_threshold * frequent_items as f64
+                    || (frequent_items > 0
+                        && dirty_frequent as f64
+                            > self.cfg.churn_threshold * frequent_items as f64)
             }
         };
         if full {
@@ -581,5 +650,107 @@ mod tests {
         let s4 = miner.push_batch(vec![]).unwrap().unwrap();
         assert!(s4.frequents.is_empty());
         assert_eq!(s4.window_txns, 0);
+    }
+
+    #[test]
+    fn ingest_and_mine_now_compose_to_push_batch() {
+        // The split API used by the async service must agree with the
+        // one-shot path batch for batch.
+        let spec = WindowSpec::sliding(2, 1);
+        let mut one_shot =
+            StreamingMiner::new(ctx(), StreamConfig::new(spec, MinSup::count(2)));
+        let mut split = StreamingMiner::new(ctx(), StreamConfig::new(spec, MinSup::count(2)));
+        for b in [
+            vec![vec![1, 2], vec![2, 3]],
+            vec![vec![1, 2, 3]],
+            vec![vec![2, 3], vec![1, 2]],
+        ] {
+            let want = one_shot.push_batch(b.clone()).unwrap().expect("slide 1 emits");
+            assert!(split.ingest(b), "slide 1: every batch is an emission point");
+            let got = split.mine_now().unwrap();
+            assert_eq!(got.frequents, want.frequents);
+            assert_eq!(got.batch_id, want.batch_id);
+            assert_eq!(got.plan, want.plan);
+        }
+    }
+
+    #[test]
+    fn mine_now_between_emission_points_reflects_latest_window() {
+        // Skip-to-latest: bookkeeping advanced past the cadence point,
+        // then a catch-up emission mines the *current* window state and
+        // is attributed to the newest batch.
+        let mut miner = StreamingMiner::new(
+            ctx(),
+            StreamConfig::new(WindowSpec::sliding(4, 4), MinSup::count(1)),
+        );
+        assert!(!miner.ingest(vec![vec![1, 2]]));
+        assert!(!miner.ingest(vec![vec![2, 3]]));
+        let snap = miner.mine_now().unwrap();
+        assert_eq!(snap.batch_id, 1, "attributed to the newest batch");
+        assert_eq!(snap.window_txns, 2);
+        let want = oracle(&miner.materialize_window(), MinSup::count(1));
+        assert_eq!(snap.frequents, want);
+    }
+
+    #[test]
+    fn empty_window_short_circuits_churn_fallback() {
+        // churn_threshold 0.0 is the most trigger-happy fallback setting;
+        // even so, an emptied window (no frequent atoms) must not force a
+        // full re-mine — there is no churn ratio to measure.
+        let cfg = StreamConfig {
+            churn_threshold: 0.0,
+            ..StreamConfig::new(WindowSpec::sliding(2, 1), MinSup::count(2))
+        };
+        let mut miner = StreamingMiner::new(ctx(), cfg);
+        let s1 = miner.push_batch(vec![vec![1, 2], vec![1, 2]]).unwrap().unwrap();
+        assert_eq!(s1.plan, MinePlan::FullRemine, "first emission is always full");
+        // Two empty batches evict everything frequent.
+        let s2 = miner.push_batch(vec![]).unwrap().unwrap();
+        let s3 = miner.push_batch(vec![]).unwrap().unwrap();
+        assert_eq!(s3.window_txns, 0);
+        assert!(s3.frequents.is_empty());
+        for s in [&s2, &s3] {
+            assert!(
+                matches!(s.plan, MinePlan::Delta { .. }),
+                "empty-window emission must not full-re-mine, got {:?}",
+                s.plan
+            );
+        }
+    }
+
+    #[test]
+    fn negative_churn_threshold_clamps_to_always_full() {
+        // Clamped to 0.0: any dirty frequent atom tips the ratio, so
+        // every emission after the first falls back to a full re-mine —
+        // loudly-defined behavior instead of a silent sign bug.
+        let cfg = StreamConfig::new(WindowSpec::sliding(3, 1), MinSup::count(2))
+            .churn_threshold(-7.5);
+        assert_eq!(cfg.churn_threshold, 0.0);
+        let mut miner = StreamingMiner::new(ctx(), cfg);
+        miner.push_batch(vec![vec![1, 2], vec![1, 2]]).unwrap().unwrap();
+        let s = miner.push_batch(vec![vec![1, 2]]).unwrap().unwrap();
+        assert_eq!(s.plan, MinePlan::FullRemine);
+        let over = StreamConfig::new(WindowSpec::tumbling(1), MinSup::count(1))
+            .churn_threshold(3.0);
+        assert_eq!(over.churn_threshold, 1.0, "clamped from above too");
+    }
+
+    #[test]
+    #[should_panic(expected = "churn_threshold must be finite")]
+    fn nan_churn_threshold_rejected_by_setter() {
+        let _ = StreamConfig::new(WindowSpec::tumbling(1), MinSup::count(1))
+            .churn_threshold(f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "churn_threshold must be finite")]
+    fn nan_churn_threshold_rejected_by_miner() {
+        // Struct-update construction bypasses the setter; the miner's
+        // constructor is the backstop.
+        let cfg = StreamConfig {
+            churn_threshold: f64::NAN,
+            ..StreamConfig::new(WindowSpec::tumbling(1), MinSup::count(1))
+        };
+        let _ = StreamingMiner::new(ctx(), cfg);
     }
 }

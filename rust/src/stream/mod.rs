@@ -18,6 +18,13 @@
 //!   sub-lattice on the engine's executor pool (full-re-mine fallback
 //!   under churn), reuses every cached itemset containing a clean item,
 //!   and emits [`BatchSnapshot`]s.
+//! * [`ingest`] — the async service: [`StreamService::push_batch`]
+//!   enqueues and returns immediately, a dedicated mining loop keeps
+//!   bookkeeping window-exact, and under backpressure emissions
+//!   coalesce skip-to-latest.
+//! * [`serve`] — snapshot serving: each emission is published through a
+//!   double-buffered [`SnapshotHandle`] (lock-free reads) with prebuilt
+//!   support and antecedent→rules indices ([`ServingSnapshot`]).
 //!
 //! ```
 //! use rdd_eclat::engine::ClusterContext;
@@ -41,11 +48,15 @@
 //! ```
 
 pub mod incremental;
+pub mod ingest;
 pub mod job;
+pub mod serve;
 pub mod source;
 pub mod window;
 
 pub use incremental::IncrementalVerticalDb;
+pub use ingest::{Ingest, IngestConfig, IngestStats, StreamService};
 pub use job::{BatchSnapshot, MineMode, MinePlan, StreamConfig, StreamingMiner};
+pub use serve::{snapshot_pipe, ServingSnapshot, SnapshotHandle, SnapshotPublisher};
 pub use source::{BatchSource, ClickstreamSource, Paced, ReplaySource};
 pub use window::{Batch, PushResult, SlidingWindow, WindowSpec};

@@ -1,0 +1,478 @@
+//! Snapshot serving: publish each [`BatchSnapshot`] to concurrent
+//! readers without making them wait on the miner (or each other).
+//!
+//! The serving layer is what turns the streaming job from a
+//! call-and-return library into something that can answer queries while
+//! the next window is being mined — the related RDD-Apriori work
+//! (arXiv:1908.01338) argues that at scale the data-structure/serving
+//! side, not the mining kernel, dominates end-to-end behavior. Three
+//! pieces:
+//!
+//! * [`ServingSnapshot`] — a [`BatchSnapshot`] plus the prebuilt query
+//!   indices: itemset → support ([`ServingSnapshot::frequent`]) and
+//!   antecedent → rules ([`ServingSnapshot::rules_for`]). Built once at
+//!   publish time, immutable afterwards, shared by `Arc`.
+//! * [`SnapshotPublisher`] — the single writer (the mining loop).
+//! * [`SnapshotHandle`] — cloneable reader handle.
+//!
+//! Publication is an `ArcSwap`-style **double buffer**: two slots each
+//! holding an `Arc<ServingSnapshot>`, an atomic index naming the active
+//! one. [`SnapshotHandle::latest`] takes **no locks**: it pins the
+//! active slot with a reader count, clones the `Arc`, and unpins — a
+//! handful of atomic operations regardless of snapshot size. The
+//! publisher writes only the *inactive* slot, and only after the slot's
+//! reader count drains to zero, then flips the index; a reader that
+//! raced the flip notices the index moved and retries on the other
+//! slot. Readers therefore never observe a torn snapshot and are never
+//! blocked by a publish; the publisher waits only for readers that are
+//! mid-`Arc`-clone (nanoseconds), never for readers *using* a snapshot
+//! they already fetched.
+
+use std::cell::UnsafeCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::fim::{Item, ItemSet, Rule};
+
+use super::job::BatchSnapshot;
+use super::window::normalize_row;
+
+/// A published snapshot with its query indices prebuilt — what readers
+/// get from [`SnapshotHandle::latest`]. Dereferences to the underlying
+/// [`BatchSnapshot`] for the raw stats/itemsets/rules.
+#[derive(Debug)]
+pub struct ServingSnapshot {
+    snap: BatchSnapshot,
+    /// Itemset → support, over every frequent itemset of the snapshot.
+    frequent: HashMap<ItemSet, u32>,
+    /// Antecedent → indices into `snap.rules`. Rules are sorted by
+    /// confidence descending, and the index preserves that order within
+    /// each antecedent.
+    by_antecedent: HashMap<ItemSet, Vec<u32>>,
+}
+
+impl ServingSnapshot {
+    /// Index a snapshot for serving. O(itemsets + rules), run once by
+    /// the publisher so every reader query is a hash lookup.
+    pub fn new(snap: BatchSnapshot) -> ServingSnapshot {
+        let frequent: HashMap<ItemSet, u32> =
+            snap.frequents.iter().map(|f| (f.items.clone(), f.support)).collect();
+        let mut by_antecedent: HashMap<ItemSet, Vec<u32>> = HashMap::new();
+        for (i, r) in snap.rules.iter().enumerate() {
+            by_antecedent.entry(r.antecedent.clone()).or_default().push(i as u32);
+        }
+        ServingSnapshot { snap, frequent, by_antecedent }
+    }
+
+    /// The raw snapshot (also reachable through `Deref`).
+    pub fn snapshot(&self) -> &BatchSnapshot {
+        &self.snap
+    }
+
+    /// Support of `itemset` over the snapshot's window, `None` when it
+    /// was not frequent. The query is normalized (sorted, de-duplicated)
+    /// before lookup.
+    pub fn frequent(&self, itemset: &[Item]) -> Option<u32> {
+        let key = normalize_row(itemset.to_vec());
+        self.frequent.get(key.as_slice()).copied()
+    }
+
+    /// Every rule whose antecedent is exactly `antecedent`, strongest
+    /// confidence first. Empty when no such rule cleared `min_conf`.
+    pub fn rules_for(&self, antecedent: &[Item]) -> Vec<&Rule> {
+        let key = normalize_row(antecedent.to_vec());
+        match self.by_antecedent.get(key.as_slice()) {
+            Some(ix) => ix.iter().map(|&i| &self.snap.rules[i as usize]).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Number of distinct rule antecedents in the index.
+    pub fn antecedents(&self) -> usize {
+        self.by_antecedent.len()
+    }
+}
+
+impl std::ops::Deref for ServingSnapshot {
+    type Target = BatchSnapshot;
+
+    fn deref(&self) -> &BatchSnapshot {
+        &self.snap
+    }
+}
+
+/// One buffer of the double-buffered cell.
+struct Slot {
+    /// Readers currently pinning this slot (mid-clone). The publisher
+    /// mutates a slot only while it is inactive **and** unpinned.
+    readers: AtomicUsize,
+    /// The published snapshot. `None` only before the first publish.
+    snap: UnsafeCell<Option<Arc<ServingSnapshot>>>,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot { readers: AtomicUsize::new(0), snap: UnsafeCell::new(None) }
+    }
+}
+
+/// Shared state behind publisher and handles.
+struct SnapshotCell {
+    slots: [Slot; 2],
+    /// Which slot readers should use.
+    active: AtomicUsize,
+    /// Publishes so far (the "sequence number" of the serving layer).
+    version: AtomicU64,
+    /// Blocking-wait support ([`SnapshotHandle::wait_for_batch`]); not
+    /// on the `latest()` path.
+    wait_lock: Mutex<()>,
+    wait_cv: Condvar,
+}
+
+// SAFETY: the `UnsafeCell`s are governed by the double-buffer protocol
+// (single writer, which touches only the inactive slot after its reader
+// count drains; readers pin a slot before touching it and re-validate
+// the active index after pinning — see `latest`/`publish`). The
+// contained `Arc<ServingSnapshot>` is itself Send + Sync.
+unsafe impl Sync for SnapshotCell {}
+unsafe impl Send for SnapshotCell {}
+
+impl SnapshotCell {
+    fn new() -> Arc<SnapshotCell> {
+        Arc::new(SnapshotCell {
+            slots: [Slot::empty(), Slot::empty()],
+            active: AtomicUsize::new(0),
+            version: AtomicU64::new(0),
+            wait_lock: Mutex::new(()),
+            wait_cv: Condvar::new(),
+        })
+    }
+
+    /// Lock-free read of the latest snapshot (see module docs for the
+    /// protocol). `None` before the first publish.
+    fn latest(&self) -> Option<Arc<ServingSnapshot>> {
+        loop {
+            let i = self.active.load(Ordering::SeqCst);
+            let slot = &self.slots[i];
+            slot.readers.fetch_add(1, Ordering::SeqCst);
+            // Re-validate after pinning: if `i` is still the active
+            // slot, the publisher cannot be writing it (it writes only
+            // the inactive slot) and cannot start until our pin drops.
+            if self.active.load(Ordering::SeqCst) == i {
+                // SAFETY: slot `i` is pinned and validated active, so
+                // the single publisher will neither be mid-write here
+                // (writes finish before a slot becomes active) nor
+                // start one (it waits for `readers == 0` first).
+                let out = unsafe { (*slot.snap.get()).clone() };
+                slot.readers.fetch_sub(1, Ordering::SeqCst);
+                return out;
+            }
+            // Raced a publish that flipped the index; unpin and retry.
+            slot.readers.fetch_sub(1, Ordering::SeqCst);
+            std::hint::spin_loop();
+        }
+    }
+
+    /// Publish a new snapshot. Single writer only — enforced by
+    /// [`SnapshotPublisher`] being the sole caller and not `Clone`.
+    fn publish(&self, snap: Arc<ServingSnapshot>) {
+        let idx = 1 - self.active.load(Ordering::SeqCst);
+        let slot = &self.slots[idx];
+        // Wait out readers still pinning the slot from before the last
+        // flip. Pins last for the duration of an `Arc` clone, so this
+        // spin is nanoseconds, not "until the reader finishes with the
+        // snapshot".
+        while slot.readers.load(Ordering::SeqCst) != 0 {
+            std::hint::spin_loop();
+        }
+        // SAFETY: `idx` is the inactive slot (readers validate against
+        // `active` after pinning, so none can be reading it) and its
+        // transient pins have drained; we are the only writer.
+        unsafe {
+            *slot.snap.get() = Some(snap);
+        }
+        self.active.store(idx, Ordering::SeqCst);
+        self.version.fetch_add(1, Ordering::SeqCst);
+        let _guard = self.wait_lock.lock().unwrap_or_else(|e| e.into_inner());
+        self.wait_cv.notify_all();
+    }
+}
+
+/// The single-writer side of a snapshot pipe — owned by the mining
+/// loop. Deliberately not `Clone`: one publisher per cell is what makes
+/// the lock-free read protocol sound.
+pub struct SnapshotPublisher {
+    cell: Arc<SnapshotCell>,
+}
+
+impl SnapshotPublisher {
+    /// Index `snap` and publish it, returning the shared form (so the
+    /// publisher can inspect what it just made visible).
+    pub fn publish(&mut self, snap: BatchSnapshot) -> Arc<ServingSnapshot> {
+        let served = Arc::new(ServingSnapshot::new(snap));
+        self.cell.publish(Arc::clone(&served));
+        served
+    }
+
+    /// Publishes so far.
+    pub fn version(&self) -> u64 {
+        self.cell.version.load(Ordering::SeqCst)
+    }
+
+    /// A reader handle for this publisher's cell.
+    pub fn subscribe(&self) -> SnapshotHandle {
+        SnapshotHandle { cell: Arc::clone(&self.cell) }
+    }
+}
+
+impl std::fmt::Debug for SnapshotPublisher {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SnapshotPublisher").field("version", &self.version()).finish()
+    }
+}
+
+/// Cloneable reader handle onto the live snapshot. Cheap to clone and
+/// `Send`, so every query thread can own one.
+#[derive(Clone)]
+pub struct SnapshotHandle {
+    cell: Arc<SnapshotCell>,
+}
+
+impl SnapshotHandle {
+    /// The latest published snapshot, without taking any lock (see the
+    /// module docs). `None` until the first publish.
+    pub fn latest(&self) -> Option<Arc<ServingSnapshot>> {
+        self.cell.latest()
+    }
+
+    /// Publishes so far. Monotonically non-decreasing; `latest()` never
+    /// goes backwards across publishes either (each publish replaces the
+    /// snapshot with a newer `batch_id`).
+    pub fn version(&self) -> u64 {
+        self.cell.version.load(Ordering::SeqCst)
+    }
+
+    /// Block (on a condvar — not the lock-free read path) until a
+    /// snapshot with `batch_id >= min_batch_id` is published, or the
+    /// timeout expires. Returns the qualifying snapshot, or `None` on
+    /// timeout.
+    pub fn wait_for_batch(
+        &self,
+        min_batch_id: u64,
+        timeout: Duration,
+    ) -> Option<Arc<ServingSnapshot>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            if let Some(s) = self.latest() {
+                if s.batch_id >= min_batch_id {
+                    return Some(s);
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let guard = self.cell.wait_lock.lock().unwrap_or_else(|e| e.into_inner());
+            // Re-check under the wait lock so a publish between our
+            // `latest()` and this wait cannot be missed.
+            if let Some(s) = self.cell.latest() {
+                if s.batch_id >= min_batch_id {
+                    return Some(s);
+                }
+            }
+            let (_guard, _timeout) = self
+                .cell
+                .wait_cv
+                .wait_timeout(guard, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+    }
+}
+
+impl std::fmt::Debug for SnapshotHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SnapshotHandle").field("version", &self.version()).finish()
+    }
+}
+
+/// A fresh publisher/reader pair over one double-buffered cell.
+pub fn snapshot_pipe() -> (SnapshotPublisher, SnapshotHandle) {
+    let cell = SnapshotCell::new();
+    (SnapshotPublisher { cell: Arc::clone(&cell) }, SnapshotHandle { cell })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fim::Frequent;
+    use crate::stream::MinePlan;
+
+    /// A self-consistent synthetic snapshot: every derived field is a
+    /// function of `k`, so readers can detect tearing.
+    fn snap(k: u64) -> BatchSnapshot {
+        BatchSnapshot {
+            batch_id: k,
+            window_txns: (k as usize) * 3 + 1,
+            window_batches: 1,
+            min_sup_count: 1,
+            frequent_items: 1,
+            dirty_frequent_items: 0,
+            plan: MinePlan::Rebuild,
+            frequents: vec![Frequent::new(vec![k as u32], k as u32 + 1)],
+            rules: Vec::new(),
+            wall: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn latest_none_before_first_publish() {
+        let (publisher, handle) = snapshot_pipe();
+        assert!(handle.latest().is_none());
+        assert_eq!(handle.version(), 0);
+        assert_eq!(publisher.version(), 0);
+    }
+
+    #[test]
+    fn publish_then_read_roundtrip() {
+        let (mut publisher, handle) = snapshot_pipe();
+        publisher.publish(snap(0));
+        publisher.publish(snap(1));
+        let s = handle.latest().expect("published");
+        assert_eq!(s.batch_id, 1);
+        assert_eq!(s.window_txns, 4);
+        assert_eq!(handle.version(), 2);
+        // Old Arcs stay valid after further publishes (readers are never
+        // invalidated, only superseded).
+        let old = handle.latest().unwrap();
+        publisher.publish(snap(2));
+        publisher.publish(snap(3));
+        assert_eq!(old.batch_id, 1, "held snapshot is immutable");
+        assert_eq!(handle.latest().unwrap().batch_id, 3);
+    }
+
+    #[test]
+    fn indices_answer_frequent_and_rule_queries() {
+        let mut s = snap(5);
+        s.frequents = vec![
+            Frequent::new(vec![1], 4),
+            Frequent::new(vec![2], 3),
+            Frequent::new(vec![1, 2], 3),
+        ];
+        s.rules = vec![
+            Rule {
+                antecedent: vec![2],
+                consequent: vec![1],
+                support: 3,
+                confidence: 1.0,
+                lift: None,
+            },
+            Rule {
+                antecedent: vec![1],
+                consequent: vec![2],
+                support: 3,
+                confidence: 0.75,
+                lift: None,
+            },
+        ];
+        let served = ServingSnapshot::new(s);
+        assert_eq!(served.frequent(&[1, 2]), Some(3));
+        assert_eq!(served.frequent(&[2, 1]), Some(3), "query is normalized");
+        assert_eq!(served.frequent(&[2, 2, 1]), Some(3), "dedup too");
+        assert_eq!(served.frequent(&[9]), None);
+        let rules = served.rules_for(&[2]);
+        assert_eq!(rules.len(), 1);
+        assert_eq!(rules[0].consequent, vec![1]);
+        assert!(served.rules_for(&[7]).is_empty());
+        assert_eq!(served.antecedents(), 2);
+        // Deref reaches the raw snapshot.
+        assert_eq!(served.batch_id, 5);
+        assert_eq!(served.snapshot().frequents.len(), 3);
+    }
+
+    #[test]
+    fn rules_for_preserves_confidence_order() {
+        let mut s = snap(0);
+        s.rules = (0..4)
+            .map(|i| Rule {
+                antecedent: vec![1],
+                consequent: vec![10 + i],
+                support: 2,
+                confidence: 1.0 - 0.1 * i as f64,
+                lift: None,
+            })
+            .collect();
+        let served = ServingSnapshot::new(s);
+        let rules = served.rules_for(&[1]);
+        assert_eq!(rules.len(), 4);
+        for w in rules.windows(2) {
+            assert!(w[0].confidence >= w[1].confidence);
+        }
+    }
+
+    #[test]
+    fn wait_for_batch_times_out_and_succeeds() {
+        let (mut publisher, handle) = snapshot_pipe();
+        assert!(handle.wait_for_batch(0, Duration::from_millis(10)).is_none());
+        publisher.publish(snap(3));
+        let s = handle.wait_for_batch(2, Duration::from_millis(10)).expect("already there");
+        assert_eq!(s.batch_id, 3);
+        // A publish from another thread wakes a blocked waiter.
+        let waiter = {
+            let h = handle.clone();
+            std::thread::spawn(move || h.wait_for_batch(7, Duration::from_secs(10)))
+        };
+        std::thread::sleep(Duration::from_millis(5));
+        publisher.publish(snap(7));
+        let got = waiter.join().unwrap().expect("woken by publish");
+        assert_eq!(got.batch_id, 7);
+    }
+
+    #[test]
+    fn hammered_readers_never_see_torn_or_regressing_snapshots() {
+        // The satellite concurrency test at the cell level: one writer
+        // publishing N self-consistent snapshots, M readers spinning on
+        // `latest()`. Every observation must be internally consistent
+        // (no tearing), per-reader monotone (no regression), and every
+        // reader must eventually observe the final snapshot (no
+        // stale-forever).
+        const N: u64 = 500;
+        const READERS: usize = 4;
+        let (mut publisher, handle) = snapshot_pipe();
+        let barrier = Arc::new(std::sync::Barrier::new(READERS + 1));
+        let readers: Vec<_> = (0..READERS)
+            .map(|_| {
+                let h = handle.clone();
+                let b = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    b.wait();
+                    let mut last = 0u64;
+                    let mut seen = 0u64;
+                    loop {
+                        let Some(s) = h.latest() else { continue };
+                        // Torn-snapshot check: all fields derive from k.
+                        assert_eq!(s.window_txns, (s.batch_id as usize) * 3 + 1);
+                        assert_eq!(s.frequents[0].items, vec![s.batch_id as u32]);
+                        assert_eq!(s.frequent(&[s.batch_id as u32]), Some(s.batch_id as u32 + 1));
+                        assert!(s.batch_id >= last, "regressed {last} -> {}", s.batch_id);
+                        last = s.batch_id;
+                        seen += 1;
+                        if s.batch_id == N - 1 {
+                            return seen;
+                        }
+                    }
+                })
+            })
+            .collect();
+        barrier.wait();
+        for k in 0..N {
+            publisher.publish(snap(k));
+        }
+        for r in readers {
+            let seen = r.join().expect("reader panicked == invariant violated");
+            assert!(seen > 0);
+        }
+        assert_eq!(handle.version(), N);
+    }
+}

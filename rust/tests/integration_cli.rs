@@ -164,6 +164,43 @@ fn stream_subcommand_replays_a_file_and_writes_snapshot() {
 }
 
 #[test]
+fn stream_serve_mode_runs_async_and_writes_snapshot() {
+    // `--serve` routes the same replayed stream through the async
+    // service + query threads; the drained final snapshot must cover
+    // the same window as the synchronous path.
+    let dir = tmp_dir("stream_serve");
+    let file = format!("{dir}/stream.dat");
+    let rows: String = (0..12)
+        .map(|i| if i % 3 == 2 { "1 3\n".to_string() } else { "1 2\n".to_string() })
+        .collect();
+    std::fs::write(&file, rows).unwrap();
+    let json_path = format!("{dir}/snapshot.json");
+    let out = repro()
+        .args([
+            "stream", "--serve", "--dataset", &file, "--batch", "4", "--window", "2",
+            "--slide", "1", "--min-sup", "3", "--min-conf", "0.5", "--queue-cap", "2",
+            "--readers", "1", "--quiet", "--json", &json_path,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("serving: queue cap 2"), "{text}");
+    assert!(text.contains("emissions published"), "{text}");
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json.contains("\"window_txns\": 8"), "{json}");
+    assert!(json.contains("\"frequents\""), "{json}");
+    assert!(json.contains("\"rules\""), "{json}");
+
+    // --queue-cap must be positive.
+    let out = repro()
+        .args(["stream", "--serve", "--batches", "1", "--queue-cap", "0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
 fn bad_usage_exits_nonzero_with_help() {
     let out = repro().args(["run", "--algo", "not-an-algo"]).output().unwrap();
     assert!(!out.status.success());

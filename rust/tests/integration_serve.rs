@@ -1,0 +1,198 @@
+//! Concurrency coverage for the async streaming service layer:
+//! non-blocking ingest, skip-to-latest coalescing under backpressure,
+//! and torn/stale-free snapshot serving — all checked against the
+//! `SeqEclat` oracle on the materialized window.
+
+use std::time::{Duration, Instant};
+
+use rdd_eclat::algorithms::SeqEclat;
+use rdd_eclat::data::clickstream::{generate_range, ClickParams};
+use rdd_eclat::engine::ClusterContext;
+use rdd_eclat::fim::{sort_frequents, Database, Frequent, MinSup};
+use rdd_eclat::stream::{
+    Ingest, IngestConfig, StreamConfig, StreamService, StreamingMiner, WindowSpec,
+};
+
+fn ctx() -> ClusterContext {
+    ClusterContext::builder().cores(2).build()
+}
+
+fn oracle(db: &Database, min_sup: MinSup) -> Vec<Frequent> {
+    let mut v = SeqEclat::mine(db, min_sup);
+    sort_frequents(&mut v);
+    v
+}
+
+fn click_batches(n: usize, size: usize, seed: u64) -> Vec<Vec<Vec<u32>>> {
+    let params = ClickParams { sessions: n * size, ..ClickParams::drift() };
+    (0..n).map(|b| generate_range(&params, seed, b * size, size)).collect()
+}
+
+/// Acceptance: a slow emission must not stall a fast producer — the
+/// async `push_batch` returns without blocking on mining.
+#[test]
+fn slow_emissions_do_not_stall_the_producer() {
+    const BATCHES: usize = 20;
+    const THROTTLE: Duration = Duration::from_millis(25);
+    let min_sup = MinSup::count(2);
+    let miner = StreamingMiner::new(ctx(), StreamConfig::new(WindowSpec::sliding(4, 1), min_sup));
+    let service = StreamService::spawn(miner, IngestConfig::new(2).throttle(THROTTLE));
+    let batches = click_batches(BATCHES, 40, 11);
+
+    let push_wall = {
+        let start = Instant::now();
+        for b in batches {
+            service.push_batch(b).unwrap();
+        }
+        start.elapsed()
+    };
+    // Mining is throttled to >= 25ms per emission; the producer pushed
+    // 20 batches. Had push_batch blocked on mining, the loop would take
+    // >= 20 * 25ms = 500ms. Queue appends take microseconds; allow a
+    // huge margin for CI noise and still prove the decoupling.
+    assert!(
+        push_wall < Duration::from_millis(250),
+        "producer stalled on mining: pushed {BATCHES} batches in {push_wall:?}"
+    );
+
+    // The final snapshot is still window-exact.
+    let final_snap = service.drain().unwrap().expect("slide 1 emitted");
+    let stats = service.stats();
+    let miner = service.shutdown().unwrap();
+    assert_eq!(final_snap.batch_id, BATCHES as u64 - 1, "latest state served");
+    assert_eq!(final_snap.frequents, oracle(&miner.materialize_window(), min_sup));
+    assert_eq!(stats.batches, BATCHES as u64);
+    // Every slide-1 emission point was either mined or skipped (catch-up
+    // emissions can add to the mined side).
+    assert!(
+        stats.emissions + stats.skipped >= BATCHES as u64,
+        "emission accounting lost points: {stats:?}"
+    );
+}
+
+/// Backpressure: with a tiny queue cap and throttled mining, emission
+/// points must coalesce (some skipped) while bookkeeping stays exact —
+/// the drained snapshot equals the oracle on the materialized window.
+#[test]
+fn backpressure_coalesces_emissions_but_stays_window_exact() {
+    const BATCHES: usize = 30;
+    let min_sup = MinSup::count(3);
+    let miner = StreamingMiner::new(ctx(), StreamConfig::new(WindowSpec::sliding(6, 1), min_sup));
+    let service =
+        StreamService::spawn(miner, IngestConfig::new(1).throttle(Duration::from_millis(10)));
+    let mut saw_backpressure = false;
+    for b in click_batches(BATCHES, 50, 23) {
+        if let Ingest::Backpressure { pending } = service.push_batch(b).unwrap() {
+            assert!(pending > 1);
+            saw_backpressure = true;
+        }
+    }
+    assert!(saw_backpressure, "a 1-deep queue against 10ms emissions must back up");
+    let final_snap = service.drain().unwrap().expect("emitted");
+    let stats = service.stats();
+    assert!(stats.skipped > 0, "backpressure must skip emission points, stats {stats:?}");
+    assert!(
+        stats.emissions < BATCHES as u64,
+        "coalescing must publish fewer snapshots than batches, stats {stats:?}"
+    );
+    let miner = service.shutdown().unwrap();
+    assert_eq!(final_snap.batch_id, BATCHES as u64 - 1);
+    assert_eq!(
+        final_snap.frequents,
+        oracle(&miner.materialize_window(), min_sup),
+        "skip-to-latest coalescing broke window-exactness"
+    );
+}
+
+/// Acceptance + satellite: concurrent readers holding a
+/// `SnapshotHandle` observe a monotonically advancing, never-torn
+/// snapshot sequence while the miner publishes, and end on the final
+/// state (no stale-forever).
+#[test]
+fn readers_observe_monotone_consistent_snapshots_while_mining() {
+    const BATCHES: usize = 25;
+    const READERS: usize = 3;
+    let min_sup = MinSup::count(2);
+    let spec = WindowSpec::sliding(5, 1);
+    let miner = StreamingMiner::new(ctx(), StreamConfig::new(spec, min_sup));
+    let service =
+        StreamService::spawn(miner, IngestConfig::new(4).throttle(Duration::from_millis(2)));
+    let readers: Vec<_> = (0..READERS)
+        .map(|_| {
+            let handle = service.handle();
+            // Each reader spins on latest() until it observes the final
+            // batch — a reader stuck on a stale snapshot hangs the test
+            // (bounded by the harness timeout) instead of passing.
+            std::thread::spawn(move || {
+                let mut last = 0u64;
+                let mut observations = 0u64;
+                loop {
+                    let Some(s) = handle.latest() else { continue };
+                    assert!(
+                        s.batch_id >= last,
+                        "snapshot sequence regressed: {last} -> {}",
+                        s.batch_id
+                    );
+                    last = s.batch_id;
+                    observations += 1;
+                    // Torn-snapshot checks: the serving indices must
+                    // agree with the snapshot they were built from.
+                    assert!(s.window_batches <= 5);
+                    for f in s.frequents.iter().take(3) {
+                        assert_eq!(s.frequent(&f.items), Some(f.support));
+                    }
+                    if let Some(r) = s.rules.first() {
+                        let looked_up = s.rules_for(&r.antecedent);
+                        assert!(!looked_up.is_empty());
+                        assert!(looked_up.iter().all(|x| x.antecedent == r.antecedent));
+                    }
+                    if last == BATCHES as u64 - 1 {
+                        return observations;
+                    }
+                }
+            })
+        })
+        .collect();
+
+    for b in click_batches(BATCHES, 40, 5) {
+        service.push_batch(b).unwrap();
+    }
+    let final_snap = service.drain().unwrap().expect("emitted");
+    assert_eq!(final_snap.batch_id, BATCHES as u64 - 1);
+    for r in readers {
+        let observations = r.join().expect("reader panicked == invariant violated");
+        assert!(observations > 0, "reader never saw a snapshot");
+    }
+    let miner = service.shutdown().unwrap();
+    assert_eq!(final_snap.frequents, oracle(&miner.materialize_window(), min_sup));
+}
+
+/// The sync and async paths must agree batch for batch when the async
+/// service is never pressured (cap larger than the stream).
+#[test]
+fn unpressured_async_service_matches_sync_emission_sequence() {
+    let min_sup = MinSup::fraction(0.05);
+    let spec = WindowSpec::sliding(3, 2);
+    let mut sync = StreamingMiner::new(ctx(), StreamConfig::new(spec, min_sup));
+    let service = StreamService::spawn(
+        StreamingMiner::new(ctx(), StreamConfig::new(spec, min_sup)),
+        IngestConfig::new(64),
+    );
+    let handle = service.handle();
+    let mut sync_last = None;
+    for b in click_batches(14, 30, 77) {
+        sync_last = sync.push_batch(b.clone()).unwrap().or(sync_last);
+        service.push_batch(b).unwrap();
+    }
+    service.drain().unwrap();
+    let want = sync_last.expect("slide 2 over 14 batches emits");
+    let got = handle
+        .wait_for_batch(want.batch_id, Duration::from_secs(30))
+        .expect("async published the same final emission");
+    assert_eq!(got.batch_id, want.batch_id);
+    assert_eq!(got.frequents, want.frequents);
+    assert_eq!(got.rules.len(), want.rules.len());
+    assert_eq!(got.min_sup_count, want.min_sup_count);
+    let miner = service.shutdown().unwrap();
+    assert_eq!(miner.window_txns(), sync.window_txns());
+}
