@@ -10,7 +10,7 @@
 //! cargo run --release --example clickstream
 //! ```
 
-use rdd_eclat::algorithms::{Algorithm, EclatOptions, EclatV2, EclatV5};
+use rdd_eclat::algorithms::{EclatOptions, MiningSession, Variant};
 use rdd_eclat::data::clickstream::{generate, ClickParams};
 use rdd_eclat::engine::ClusterContext;
 use rdd_eclat::fim::{Database, MinSup};
@@ -35,8 +35,8 @@ fn main() -> rdd_eclat::error::Result<()> {
     // too large for the triangular matrix to pay off).
     let bms_opts = EclatOptions { tri_matrix: false, ..Default::default() };
 
-    let v2 = EclatV2::with_options(bms_opts.clone());
-    let r = v2.run_on(&ctx, &db, min_sup)?;
+    let session = MiningSession::on(&ctx).db(&db).min_sup(min_sup).options(bms_opts);
+    let r = session.run(Variant::V2)?;
     println!(
         "\neclatV2 (tri off): {} itemsets in {}; filtering shrank volume by {:.1}%",
         r.len(),
@@ -44,8 +44,7 @@ fn main() -> rdd_eclat::error::Result<()> {
         r.filtered_reduction.unwrap_or(0.0) * 100.0
     );
 
-    let v5 = EclatV5::with_options(bms_opts);
-    let r5 = v5.run_on(&ctx, &db, min_sup)?;
+    let r5 = session.run(Variant::V5)?;
     println!(
         "eclatV5 (reverse-hash, p=10): {} itemsets in {}; partition loads {:?}",
         r5.len(),
@@ -84,8 +83,7 @@ fn xla_demo(
         cooc: CoocStrategy::Provider(Arc::new(rdd_eclat::runtime::XlaCooc::new(svc))),
         ..Default::default()
     };
-    let vx = EclatV5::with_options(opts);
-    let rx = vx.run_on(ctx, db, min_sup)?;
+    let rx = MiningSession::on(ctx).db(db).min_sup(min_sup).options(opts).run(Variant::V5)?;
     println!(
         "eclatV5 (XLA cooc backend): {} itemsets in {}",
         rx.len(),

@@ -10,9 +10,7 @@
 //! cargo run --release --example market_basket
 //! ```
 
-use rdd_eclat::algorithms::{
-    Algorithm, EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, RddApriori,
-};
+use rdd_eclat::algorithms::{Algorithm, EclatOptions, Variant};
 use rdd_eclat::data::quest::{generate, QuestParams};
 use rdd_eclat::engine::ClusterContext;
 use rdd_eclat::fim::{generate_rules, sort_frequents, MinSup};
@@ -30,14 +28,10 @@ fn main() -> rdd_eclat::error::Result<()> {
     let ctx = ClusterContext::builder().build();
     let min_sup = MinSup::fraction(0.01);
 
-    let algos: Vec<Box<dyn Algorithm>> = vec![
-        Box::new(EclatV1::default()),
-        Box::new(EclatV2::default()),
-        Box::new(EclatV3::default()),
-        Box::new(EclatV4::default()),
-        Box::new(EclatV5::default()),
-        Box::new(RddApriori),
-    ];
+    // The six comparison algorithms, built through the Variant registry.
+    let opts = EclatOptions::default();
+    let algos: Vec<Box<dyn Algorithm>> =
+        Variant::STANDARD.iter().map(|v| v.build(&opts)).collect();
 
     let mut reference: Option<Vec<rdd_eclat::fim::Frequent>> = None;
     let mut apriori_time = 0.0;

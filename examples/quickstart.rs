@@ -5,7 +5,7 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use rdd_eclat::algorithms::{Algorithm, EclatV4};
+use rdd_eclat::algorithms::{MiningSession, Variant};
 use rdd_eclat::data::Database;
 use rdd_eclat::engine::ClusterContext;
 use rdd_eclat::fim::{generate_rules, sort_frequents, MinSup};
@@ -27,8 +27,11 @@ fn main() -> rdd_eclat::error::Result<()> {
     let ctx = ClusterContext::builder().cores(2).build();
 
     // EclatV4: the paper's best-performing variant (hash-partitioned
-    // equivalence classes).
-    let result = EclatV4::default().run_on(&ctx, &db, MinSup::count(3))?;
+    // equivalence classes), dispatched through the miner façade.
+    let result = MiningSession::on(&ctx)
+        .db(&db)
+        .min_sup(MinSup::count(3))
+        .run(Variant::V4)?;
 
     let mut frequents = result.frequents.clone();
     sort_frequents(&mut frequents);

@@ -8,9 +8,7 @@
 //! cargo run --release --example scaling_study
 //! ```
 
-use rdd_eclat::algorithms::{
-    Algorithm, EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, RddApriori, SeqEclat,
-};
+use rdd_eclat::algorithms::{Algorithm, EclatOptions, SeqEclat, Variant};
 use rdd_eclat::data::DatasetSpec;
 use rdd_eclat::engine::{simcluster, ClusterContext};
 use rdd_eclat::fim::{sort_frequents, MinSup};
@@ -34,14 +32,10 @@ fn main() -> rdd_eclat::error::Result<()> {
     sort_frequents(&mut want);
     println!("oracle: {} frequent itemsets (seq-eclat)", want.len());
 
-    let algos: Vec<Box<dyn Algorithm>> = vec![
-        Box::new(EclatV1::default()),
-        Box::new(EclatV2::default()),
-        Box::new(EclatV3::default()),
-        Box::new(EclatV4::default()),
-        Box::new(EclatV5::default()),
-        Box::new(RddApriori),
-    ];
+    // The six comparison algorithms, built through the Variant registry.
+    let opts = EclatOptions::default();
+    let algos: Vec<Box<dyn Algorithm>> =
+        Variant::STANDARD.iter().map(|v| v.build(&opts)).collect();
 
     let ctx = ClusterContext::builder().build();
     let mut apriori_secs = 0.0;

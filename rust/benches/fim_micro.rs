@@ -22,7 +22,7 @@
 use rdd_eclat::bench::{alloc, black_box, Bench, Report};
 use rdd_eclat::fim::{
     bottom_up_with, bottomup::reference, intersect, intersect_count, intersect_into,
-    CandidateTrie, Frequent, MineScratch, TidBitmap, Tidset, TriMatrix,
+    CandidateTrie, Frequent, MineScratch, PooledSink, TidBitmap, Tidset, TriMatrix,
 };
 use rdd_eclat::util::prng::Rng;
 
@@ -186,6 +186,66 @@ fn main() {
                 "bottomup/tidset_24atoms steady state: {arena_allocs} allocs for {emits} \
                  emitted itemsets => {} machinery allocations",
                 arena_allocs.saturating_sub(emits)
+            );
+        }
+
+        // --- adaptive early-abort order: members handed over in
+        // descending-support (worst-case) order. The arena miner
+        // re-sorts rarest-first internally, so its row should track the
+        // ascending-order row above; the cloning reference processes
+        // members as given and pays the difference.
+        let mut desc = members.clone();
+        desc.sort_by(|a, b| b.1.len().cmp(&a.1.len()));
+        let m = bench.run("bottomup/tidset_24atoms_descorder", || {
+            out.clear();
+            bottom_up_with(&mut tid_scratch, &[100], &desc, min_sup, &mut out);
+            black_box(out.len())
+        });
+        report.add(m);
+        let m = bench.run("bottomup/tidset_24atoms_descorder_cloning", || {
+            let mut out = Vec::new();
+            reference::bottom_up::<Tidset>(&[100], &desc, min_sup, &mut out);
+            black_box(out.len())
+        });
+        report.add(m);
+
+        // --- emission path: pooled (flat arena) vs collect (one owned
+        // Frequent per emission). Both run the same warm mining arena;
+        // the difference is purely what an emission costs. With
+        // --features alloc-count the pooled row is the zero-allocation
+        // claim for the full mining loop: warm scratch + warm pool =>
+        // 0 steady-state heap allocations.
+        let mut pooled = PooledSink::new();
+        bottom_up_with(&mut tid_scratch, &[100], &members, min_sup, &mut pooled); // warm the pool
+        let m = bench.run("emission/pooled_vs_collect/pooled_24atoms", || {
+            pooled.clear();
+            bottom_up_with(&mut tid_scratch, &[100], &members, min_sup, &mut pooled);
+            black_box(pooled.len())
+        });
+        let pooled_allocs = alloc::count_in(|| {
+            pooled.clear();
+            bottom_up_with(&mut tid_scratch, &[100], &members, min_sup, &mut pooled);
+        })
+        .1;
+        report.add(m.with_allocs(pooled_allocs));
+
+        let m = bench.run("emission/pooled_vs_collect/collect_24atoms", || {
+            out.clear();
+            bottom_up_with(&mut tid_scratch, &[100], &members, min_sup, &mut out);
+            black_box(out.len())
+        });
+        let collect_allocs = alloc::count_in(|| {
+            out.clear();
+            bottom_up_with(&mut tid_scratch, &[100], &members, min_sup, &mut out);
+        })
+        .1;
+        report.add(m.with_allocs(collect_allocs));
+
+        if let (Some(p), Some(c)) = (pooled_allocs, collect_allocs) {
+            println!(
+                "emission steady state: PooledSink {p} allocations (target 0) vs \
+                 CollectSink {c} for {} itemsets",
+                pooled.len()
             );
         }
     }

@@ -12,10 +12,9 @@ use crate::engine::ClusterContext;
 use crate::error::Result;
 use crate::fim::apriori::candidate_gen;
 use crate::fim::{CandidateTrie, Database, Frequent, ItemSet, MinSup};
-use crate::util::Stopwatch;
 
 use super::common::transactions_rdd;
-use super::{Algorithm, FimResult, Phase};
+use super::{Algorithm, FimResult};
 
 /// The YAFIM-style RDD-Apriori baseline.
 #[derive(Debug, Clone, Default)]
@@ -28,8 +27,7 @@ impl Algorithm for RddApriori {
 
     fn run_on(&self, ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
         let min_sup = min_sup.to_count(db.len());
-        let mut sw = Stopwatch::start();
-        let mut phases = Vec::new();
+        let mut run = FimResult::builder(self.name());
         let par = ctx.default_parallelism();
 
         let transactions = transactions_rdd(ctx, db, par).cache();
@@ -44,7 +42,7 @@ impl Algorithm for RddApriori {
         freq_items.sort_unstable();
         let mut out: Vec<Frequent> =
             freq_items.iter().map(|&(i, c)| Frequent::new(vec![i], c)).collect();
-        phases.push(Phase { name: "phase1".into(), wall: sw.lap() });
+        run.phase("phase1");
 
         // Phase-2: levels k >= 2.
         let mut level: Vec<ItemSet> = freq_items.iter().map(|&(i, _)| vec![i]).collect();
@@ -88,18 +86,11 @@ impl Algorithm for RddApriori {
             }
             next.sort();
             level = next;
-            phases.push(Phase { name: format!("level{k}"), wall: sw.lap() });
+            run.phase(&format!("level{k}"));
             k += 1;
         }
 
-        Ok(FimResult {
-            algorithm: self.name().into(),
-            frequents: out,
-            wall: sw.elapsed(),
-            phases,
-            partition_loads: Vec::new(),
-            filtered_reduction: None,
-        })
+        Ok(run.finish(out))
     }
 }
 

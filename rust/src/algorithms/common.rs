@@ -10,7 +10,8 @@ use std::sync::Arc;
 use crate::engine::{ClusterContext, Partitioner, Rdd};
 use crate::error::Result;
 use crate::fim::{
-    construct_classes, AutoScratch, Database, Frequent, Item, Tid, Tidset, TriMatrix, VerticalDb,
+    construct_classes, AutoScratch, Database, FrequentSink, Item, PooledSink, Tid, Tidset,
+    TriMatrix, VerticalDb,
 };
 
 use super::{CoocStrategy, TriMatrixProvider};
@@ -214,28 +215,27 @@ pub fn phase3_vertical_accumulated(
     Ok(vertical)
 }
 
-/// Output of the final phase: mined itemsets plus the per-partition
-/// equivalence-class load (the §4.5 workload measure).
-pub struct MinedClasses {
-    /// Frequent itemsets of length ≥ 2.
-    pub frequents: Vec<Frequent>,
-    /// Class members routed to each partition.
-    pub loads: Vec<usize>,
-}
-
 /// Phase-3 of EclatV1 / Phase-4 of V2–V5 (Algorithm 4/9): build the
 /// 1-prefix equivalence classes from the vertical list (with optional
 /// triangular-matrix pruning), key each class by its dense prefix index
 /// `v`, `partitionBy` the given partitioner, cache, and mine every class
-/// with the bottom-up recursion.
-pub fn mine_equivalence_classes(
+/// with the bottom-up recursion, emitting into `out`.
+///
+/// Each mining task owns one [`AutoScratch`] arena *and* one
+/// [`PooledSink`] for its whole partition: within a task, mining
+/// allocates nothing per candidate or per emission in steady state —
+/// the partition ships a single flat pool back, and the pools are
+/// replayed into the caller's sink driver-side. Returns the class
+/// members routed to each partition (the §4.5 workload measure).
+pub fn mine_equivalence_classes<S: FrequentSink + ?Sized>(
     ctx: &ClusterContext,
     vertical: Vec<(Item, Tidset)>,
     universe: usize,
     min_sup: u32,
     tri: Option<&TriMatrix>,
     partitioner: Arc<dyn Partitioner<usize>>,
-) -> Result<MinedClasses> {
+    out: &mut S,
+) -> Result<Vec<usize>> {
     let vdb = VerticalDb { items: vertical, universe };
     let index_of: HashMap<Item, usize> =
         vdb.items.iter().enumerate().map(|(i, (item, _))| (*item, i)).collect();
@@ -254,37 +254,22 @@ pub fn mine_equivalence_classes(
         .collect();
 
     // Initial partition count is irrelevant: partitionBy immediately
-    // redistributes by class key (paper Algorithm 4 line 17–18). Each
-    // mining task owns one AutoScratch arena for its whole partition, so
-    // every class it mines reuses the same lane/remap buffers.
+    // redistributes by class key (paper Algorithm 4 line 17–18).
     let ecs = ctx.parallelize(keyed, 1).partition_by(partitioner).cache();
-    let frequents: Vec<Frequent> = ecs
+    let pools: Vec<PooledSink> = ecs
         .map_partitions_with_index(move |_idx, classes| {
             let mut scratch = AutoScratch::new();
-            let mut out = Vec::new();
+            let mut pool = PooledSink::new();
             for (_, ec) in classes {
-                out.extend(ec.mine_auto_with(&mut scratch, min_sup, universe));
+                ec.mine_auto_into(&mut scratch, min_sup, universe, &mut pool);
             }
-            out
+            vec![pool]
         })
         .collect()?;
-    Ok(MinedClasses { frequents, loads })
-}
-
-/// Assemble a [`super::FimResult`]: 1-itemsets from the vertical list +
-/// mined k-itemsets (k ≥ 2).
-pub fn assemble(
-    algorithm: &str,
-    vertical_supports: impl IntoIterator<Item = (Item, u32)>,
-    mined: Vec<Frequent>,
-) -> Vec<Frequent> {
-    let mut out: Vec<Frequent> = vertical_supports
-        .into_iter()
-        .map(|(item, sup)| Frequent::new(vec![item], sup))
-        .collect();
-    out.extend(mined);
-    let _ = algorithm;
-    out
+    for pool in &pools {
+        pool.replay(out);
+    }
+    Ok(loads)
 }
 
 #[cfg(test)]
@@ -373,16 +358,17 @@ mod tests {
         let db = demo_db();
         let vertical = phase1_group_by_key(&ctx, &db, 3).unwrap();
         let n = vertical.len();
-        let mined = mine_equivalence_classes(
+        let mut got: Vec<crate::fim::Frequent> = Vec::new();
+        let loads = mine_equivalence_classes(
             &ctx,
             vertical,
             db.len(),
             3,
             None,
             Arc::new(DefaultClassPartitioner::for_items(n)),
+            &mut got,
         )
         .unwrap();
-        let mut got = mined.frequents;
         sort_frequents(&mut got);
         let pairs: Vec<(Vec<Item>, u32)> =
             got.into_iter().map(|f| (f.items, f.support)).collect();
@@ -397,6 +383,38 @@ mod tests {
             ]
         );
         // Class members: [1]->{3}, [2]->{3,5}, [3]->{5} = 4 atoms.
-        assert_eq!(mined.loads.iter().sum::<usize>(), 4);
+        assert_eq!(loads.iter().sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn mine_classes_pooled_emission_matches_collect_sink() {
+        // The per-partition PooledSink path must agree with mining the
+        // same classes straight into a collect sink.
+        let ctx = ctx();
+        let db = demo_db();
+        for min_sup in 2..=4 {
+            let vertical = phase1_group_by_key(&ctx, &db, min_sup).unwrap();
+            let n = vertical.len();
+            let mut via_rdd: Vec<crate::fim::Frequent> = Vec::new();
+            mine_equivalence_classes(
+                &ctx,
+                vertical.clone(),
+                db.len(),
+                min_sup,
+                None,
+                Arc::new(DefaultClassPartitioner::for_items(n)),
+                &mut via_rdd,
+            )
+            .unwrap();
+            let vdb = VerticalDb { items: vertical, universe: db.len() };
+            let mut direct: Vec<crate::fim::Frequent> = Vec::new();
+            let mut scratch = AutoScratch::new();
+            for class in construct_classes(&vdb, min_sup, None) {
+                class.mine_auto_into(&mut scratch, min_sup, db.len(), &mut direct);
+            }
+            sort_frequents(&mut via_rdd);
+            sort_frequents(&mut direct);
+            assert_eq!(via_rdd, direct, "min_sup={min_sup}");
+        }
     }
 }

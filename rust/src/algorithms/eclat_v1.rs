@@ -16,14 +16,13 @@ use std::sync::Arc;
 
 use crate::engine::ClusterContext;
 use crate::error::Result;
-use crate::fim::{Database, MinSup};
-use crate::util::Stopwatch;
+use crate::fim::{Database, Frequent, MinSup};
 
 use super::common::{
-    assemble, mine_equivalence_classes, phase1_group_by_key, phase2_trimatrix, transactions_rdd,
+    mine_equivalence_classes, phase1_group_by_key, phase2_trimatrix, transactions_rdd,
 };
 use super::partitioners::DefaultClassPartitioner;
-use super::{Algorithm, EclatOptions, FimResult, Phase};
+use super::{Algorithm, EclatOptions, FimResult};
 
 /// EclatV1 (see module docs).
 #[derive(Debug, Clone, Default)]
@@ -47,12 +46,11 @@ impl Algorithm for EclatV1 {
 
     fn run_on(&self, ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
         let min_sup = min_sup.to_count(db.len());
-        let mut sw = Stopwatch::start();
-        let mut phases = Vec::new();
+        let mut run = FimResult::builder(self.name());
 
         // Phase-1 (Algorithm 2).
         let vertical = phase1_group_by_key(ctx, db, min_sup)?;
-        phases.push(Phase { name: "phase1".into(), wall: sw.lap() });
+        run.phase("phase1");
 
         // Phase-2 (Algorithm 3) — on the *raw* transactions.
         let tri = if self.options.tri_matrix {
@@ -62,30 +60,26 @@ impl Algorithm for EclatV1 {
         } else {
             None
         };
-        phases.push(Phase { name: "phase2".into(), wall: sw.lap() });
+        run.phase("phase2");
 
-        // Phase-3 (Algorithm 4).
-        let item_supports: Vec<(u32, u32)> =
-            vertical.iter().map(|(i, t)| (*i, t.len() as u32)).collect();
+        // Phase-3 (Algorithm 4): 1-itemsets from the vertical list, then
+        // the mined k-itemsets emitted behind them.
+        let mut frequents: Vec<Frequent> =
+            vertical.iter().map(|(i, t)| Frequent::new(vec![*i], t.len() as u32)).collect();
         let n = vertical.len();
-        let mined = mine_equivalence_classes(
+        let loads = mine_equivalence_classes(
             ctx,
             vertical,
             db.len(),
             min_sup,
             tri.as_ref(),
             Arc::new(DefaultClassPartitioner::for_items(n)),
+            &mut frequents,
         )?;
-        phases.push(Phase { name: "phase3".into(), wall: sw.lap() });
+        run.phase("phase3");
+        run.partition_loads(loads);
 
-        Ok(FimResult {
-            algorithm: self.name().into(),
-            frequents: assemble(self.name(), item_supports, mined.frequents),
-            wall: sw.elapsed(),
-            phases,
-            partition_loads: mined.loads,
-            filtered_reduction: None,
-        })
+        Ok(run.finish(frequents))
     }
 }
 

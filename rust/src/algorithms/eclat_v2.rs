@@ -15,15 +15,14 @@ use std::sync::Arc;
 
 use crate::engine::ClusterContext;
 use crate::error::Result;
-use crate::fim::{Database, ItemFilter, MinSup};
-use crate::util::Stopwatch;
+use crate::fim::{Database, Frequent, ItemFilter, MinSup};
 
 use super::common::{
-    assemble, mine_equivalence_classes, phase1_wordcount, phase2_trimatrix,
-    phase3_vertical_grouped, transactions_rdd,
+    mine_equivalence_classes, phase1_wordcount, phase2_trimatrix, phase3_vertical_grouped,
+    transactions_rdd,
 };
 use super::partitioners::DefaultClassPartitioner;
-use super::{Algorithm, EclatOptions, FimResult, Phase};
+use super::{Algorithm, EclatOptions, FimResult};
 
 /// EclatV2 (see module docs).
 #[derive(Debug, Clone, Default)]
@@ -46,14 +45,13 @@ impl Algorithm for EclatV2 {
 
     fn run_on(&self, ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
         let min_sup = min_sup.to_count(db.len());
-        let mut sw = Stopwatch::start();
-        let mut phases = Vec::new();
+        let mut run = FimResult::builder(self.name());
 
         let transactions = transactions_rdd(ctx, db, ctx.default_parallelism());
 
         // Phase-1 (Algorithm 5).
         let freq_items = phase1_wordcount(ctx, &transactions, min_sup)?;
-        phases.push(Phase { name: "phase1".into(), wall: sw.lap() });
+        run.phase("phase1");
 
         // Phase-2 (Algorithm 6): broadcast trie, filter, triangular matrix.
         let trie = ctx.broadcast(ItemFilter::new(freq_items.iter().map(|(i, _)| *i)));
@@ -86,36 +84,32 @@ impl Algorithm for EclatV2 {
         } else {
             None
         };
-        phases.push(Phase { name: "phase2".into(), wall: sw.lap() });
+        run.phase("phase2");
 
         // Phase-3 (Algorithm 7).
         let vertical = phase3_vertical_grouped(ctx, &filtered)?;
-        phases.push(Phase { name: "phase3".into(), wall: sw.lap() });
+        run.phase("phase3");
 
         // Phase-4 (= Algorithm 4). Universe is the filtered transaction
         // count (tids were re-assigned over filtered data).
         let universe = filtered_count as usize;
-        let item_supports: Vec<(u32, u32)> =
-            vertical.iter().map(|(i, t)| (*i, t.len() as u32)).collect();
+        let mut frequents: Vec<Frequent> =
+            vertical.iter().map(|(i, t)| Frequent::new(vec![*i], t.len() as u32)).collect();
         let n = vertical.len();
-        let mined = mine_equivalence_classes(
+        let loads = mine_equivalence_classes(
             ctx,
             vertical,
             universe,
             min_sup,
             tri.as_ref(),
             Arc::new(DefaultClassPartitioner::for_items(n)),
+            &mut frequents,
         )?;
-        phases.push(Phase { name: "phase4".into(), wall: sw.lap() });
+        run.phase("phase4");
+        run.partition_loads(loads);
+        run.filtered_reduction(reduction);
 
-        Ok(FimResult {
-            algorithm: self.name().into(),
-            frequents: assemble(self.name(), item_supports, mined.frequents),
-            wall: sw.elapsed(),
-            phases,
-            partition_loads: mined.loads,
-            filtered_reduction: Some(reduction),
-        })
+        Ok(run.finish(frequents))
     }
 }
 

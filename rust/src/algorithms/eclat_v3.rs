@@ -8,15 +8,14 @@ use std::sync::Arc;
 
 use crate::engine::ClusterContext;
 use crate::error::Result;
-use crate::fim::{Database, ItemFilter, MinSup};
-use crate::util::Stopwatch;
+use crate::fim::{Database, Frequent, ItemFilter, MinSup};
 
 use super::common::{
-    assemble, mine_equivalence_classes, phase1_wordcount, phase2_trimatrix,
-    phase3_vertical_accumulated, transactions_rdd,
+    mine_equivalence_classes, phase1_wordcount, phase2_trimatrix, phase3_vertical_accumulated,
+    transactions_rdd,
 };
 use super::partitioners::DefaultClassPartitioner;
-use super::{Algorithm, EclatOptions, FimResult, Phase};
+use super::{Algorithm, EclatOptions, FimResult};
 
 /// EclatV3 (see module docs).
 #[derive(Debug, Clone, Default)]
@@ -43,14 +42,13 @@ pub(crate) fn run_v3_pipeline(
     make_partitioner: impl FnOnce(usize) -> Arc<dyn crate::engine::Partitioner<usize>>,
 ) -> Result<FimResult> {
     let min_sup = min_sup.to_count(db.len());
-    let mut sw = Stopwatch::start();
-    let mut phases = Vec::new();
+    let mut run = FimResult::builder(name);
 
     let transactions = transactions_rdd(ctx, db, ctx.default_parallelism());
 
     // Phase-1 (Algorithm 5).
     let freq_items = phase1_wordcount(ctx, &transactions, min_sup)?;
-    phases.push(Phase { name: "phase1".into(), wall: sw.lap() });
+    run.phase("phase1");
 
     // Phase-2 (Algorithm 6).
     let trie = ctx.broadcast(ItemFilter::new(freq_items.iter().map(|(i, _)| *i)));
@@ -82,35 +80,31 @@ pub(crate) fn run_v3_pipeline(
     } else {
         None
     };
-    phases.push(Phase { name: "phase2".into(), wall: sw.lap() });
+    run.phase("phase2");
 
     // Phase-3 (Algorithm 8): accumulated vertical dataset.
     let vertical = phase3_vertical_accumulated(ctx, &filtered)?;
-    phases.push(Phase { name: "phase3".into(), wall: sw.lap() });
+    run.phase("phase3");
 
     // Phase-4 (Algorithm 9).
     let universe = filtered_count as usize;
-    let item_supports: Vec<(u32, u32)> =
-        vertical.iter().map(|(i, t)| (*i, t.len() as u32)).collect();
+    let mut frequents: Vec<Frequent> =
+        vertical.iter().map(|(i, t)| Frequent::new(vec![*i], t.len() as u32)).collect();
     let n = vertical.len();
-    let mined = mine_equivalence_classes(
+    let loads = mine_equivalence_classes(
         ctx,
         vertical,
         universe,
         min_sup,
         tri.as_ref(),
         make_partitioner(n),
+        &mut frequents,
     )?;
-    phases.push(Phase { name: "phase4".into(), wall: sw.lap() });
+    run.phase("phase4");
+    run.partition_loads(loads);
+    run.filtered_reduction(reduction);
 
-    Ok(FimResult {
-        algorithm: name.into(),
-        frequents: assemble(name, item_supports, mined.frequents),
-        wall: sw.elapsed(),
-        phases,
-        partition_loads: mined.loads,
-        filtered_reduction: Some(reduction),
-    })
+    Ok(run.finish(frequents))
 }
 
 impl Algorithm for EclatV3 {

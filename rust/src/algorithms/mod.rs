@@ -10,6 +10,11 @@
 //! | `EclatV4` | EclatV3 + hash partitioner `v % p` |
 //! | `EclatV5` | EclatV3 + reverse-hash partitioner |
 //! | `RddApriori` | YAFIM: per-level candidate broadcast + subset-count `reduceByKey` |
+//!
+//! Public dispatch goes through the [`variant`] façade: [`Variant`] is
+//! the name→constructor registry and [`MiningSession`] the run builder;
+//! the concrete types below remain available as the low-level escape
+//! hatch (and the [`Algorithm`] trait as the extension point).
 
 pub mod apriori_rdd;
 pub mod common;
@@ -19,13 +24,15 @@ pub mod eclat_v3;
 pub mod eclat_v45;
 pub mod partitioners;
 pub mod seq;
+pub mod variant;
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use crate::engine::ClusterContext;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::fim::{Database, Frequent, Item, MinSup, TriMatrix};
+use crate::util::Stopwatch;
 
 pub use apriori_rdd::RddApriori;
 pub use eclat_v1::EclatV1;
@@ -33,6 +40,7 @@ pub use eclat_v2::EclatV2;
 pub use eclat_v3::EclatV3;
 pub use eclat_v45::{EclatV4, EclatV5};
 pub use seq::{SeqApriori, SeqEclat, SeqEclatDiffset, SeqFpGrowth};
+pub use variant::{MiningSession, Variant};
 
 /// One timed phase of an algorithm run.
 #[derive(Debug, Clone)]
@@ -65,9 +73,40 @@ pub struct FimResult {
 }
 
 impl FimResult {
-    /// Does the result contain `items` with exactly `support`?
+    /// Start assembling a result through the shared [`FimResultBuilder`]
+    /// — the one place run metadata (wall clock, phase laps, partition
+    /// loads, filtering reduction) is turned into a `FimResult`, used by
+    /// every algorithm in the crate.
+    pub fn builder(algorithm: &str) -> FimResultBuilder {
+        FimResultBuilder {
+            algorithm: algorithm.to_string(),
+            sw: Stopwatch::start(),
+            phases: Vec::new(),
+            partition_loads: Vec::new(),
+            filtered_reduction: None,
+        }
+    }
+
+    /// Does the result contain `items` with exactly `support`? Both
+    /// sides are compared in canonical (sorted) order, so a permuted
+    /// query like `&[3, 1]` finds the stored `[1, 3]`.
     pub fn contains(&self, items: &[Item], support: u32) -> bool {
-        self.frequents.iter().any(|f| f.items == items && f.support == support)
+        let mut want = items.to_vec();
+        want.sort_unstable();
+        self.frequents.iter().any(|f| {
+            if f.support != support || f.items.len() != want.len() {
+                return false;
+            }
+            if f.items.windows(2).all(|w| w[0] < w[1]) {
+                f.items == want
+            } else {
+                // Defensive: stored itemsets are canonical by
+                // construction, but only debug builds assert it.
+                let mut have = f.items.clone();
+                have.sort_unstable();
+                have == want
+            }
+        })
     }
 
     /// Number of frequent itemsets found.
@@ -78,6 +117,51 @@ impl FimResult {
     /// True when nothing is frequent.
     pub fn is_empty(&self) -> bool {
         self.frequents.is_empty()
+    }
+}
+
+/// Builder for [`FimResult`]: starts its stopwatch at construction,
+/// records phase laps with [`FimResultBuilder::phase`], and stamps the
+/// total wall time at [`FimResultBuilder::finish`]. Having every
+/// algorithm route through this one assembly point is what keeps
+/// cross-variant metadata (phase timing, load capture) consistent for
+/// the experiment harness and the [`MiningSession`] façade.
+#[derive(Debug)]
+pub struct FimResultBuilder {
+    algorithm: String,
+    sw: Stopwatch,
+    phases: Vec<Phase>,
+    partition_loads: Vec<usize>,
+    filtered_reduction: Option<f64>,
+}
+
+impl FimResultBuilder {
+    /// Close the current phase: records the lap since the previous
+    /// `phase` call (or since construction) under `name`.
+    pub fn phase(&mut self, name: &str) {
+        self.phases.push(Phase { name: name.to_string(), wall: self.sw.lap() });
+    }
+
+    /// Record the per-partition equivalence-class loads (§4.5 measure).
+    pub fn partition_loads(&mut self, loads: Vec<usize>) {
+        self.partition_loads = loads;
+    }
+
+    /// Record the transaction-filtering reduction (EclatV2+).
+    pub fn filtered_reduction(&mut self, reduction: f64) {
+        self.filtered_reduction = Some(reduction);
+    }
+
+    /// Stamp the total wall time and produce the result.
+    pub fn finish(self, frequents: Vec<Frequent>) -> FimResult {
+        FimResult {
+            algorithm: self.algorithm,
+            frequents,
+            wall: self.sw.elapsed(),
+            phases: self.phases,
+            partition_loads: self.partition_loads,
+            filtered_reduction: self.filtered_reduction,
+        }
     }
 }
 
@@ -132,8 +216,72 @@ pub struct EclatOptions {
     pub cooc: CoocStrategy,
 }
 
+impl EclatOptions {
+    /// Cross-variant sanity checks, run once by [`MiningSession`]
+    /// before any algorithm is constructed (direct construction skips
+    /// them, preserving the low-level escape hatch).
+    pub fn validate(&self) -> Result<()> {
+        if self.partitions == 0 {
+            return Err(Error::Config(
+                "EclatOptions: partitions must be >= 1 (the paper uses p = 10)".into(),
+            ));
+        }
+        Ok(())
+    }
+}
+
 impl Default for EclatOptions {
     fn default() -> Self {
         EclatOptions { tri_matrix: true, partitions: 10, cooc: CoocStrategy::Accumulator }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contains_canonicalizes_the_query_side() {
+        let r = FimResult {
+            algorithm: "test".into(),
+            frequents: vec![Frequent::new(vec![1, 3, 7], 4), Frequent::new(vec![2], 9)],
+            wall: Duration::ZERO,
+            phases: Vec::new(),
+            partition_loads: Vec::new(),
+            filtered_reduction: None,
+        };
+        // Regression: permuted-but-equal itemsets used to be missed.
+        assert!(r.contains(&[1, 3, 7], 4));
+        assert!(r.contains(&[7, 1, 3], 4));
+        assert!(r.contains(&[3, 7, 1], 4));
+        assert!(r.contains(&[2], 9));
+        assert!(!r.contains(&[1, 3, 7], 5), "support must match");
+        assert!(!r.contains(&[1, 3], 4), "length must match");
+        assert!(!r.contains(&[1, 3, 8], 4));
+    }
+
+    #[test]
+    fn builder_records_phases_and_metadata() {
+        let mut b = FimResult::builder("x");
+        b.phase("phase1");
+        b.phase("phase2");
+        b.partition_loads(vec![3, 1]);
+        b.filtered_reduction(0.25);
+        let r = b.finish(vec![Frequent::new(vec![1], 2)]);
+        assert_eq!(r.algorithm, "x");
+        let names: Vec<&str> = r.phases.iter().map(|p| p.name.as_str()).collect();
+        assert_eq!(names, vec!["phase1", "phase2"]);
+        let phase_total: Duration = r.phases.iter().map(|p| p.wall).sum();
+        assert!(r.wall >= phase_total);
+        assert_eq!(r.partition_loads, vec![3, 1]);
+        assert_eq!(r.filtered_reduction, Some(0.25));
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn options_validation_rejects_zero_partitions() {
+        assert!(EclatOptions::default().validate().is_ok());
+        let bad = EclatOptions { partitions: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
     }
 }

@@ -5,22 +5,10 @@ use crate::engine::ClusterContext;
 use crate::error::Result;
 use crate::fim::{
     apriori::apriori, bottom_up_diffset_with, construct_classes, fpgrowth::fp_growth, AutoScratch,
-    Database, Frequent, MineScratch, MinSup, VerticalDb,
+    Database, Frequent, FrequentSink, MineScratch, MinSup, VerticalDb,
 };
-use crate::util::Stopwatch;
 
-use super::{Algorithm, FimResult};
-
-fn wrap(name: &str, frequents: Vec<Frequent>, sw: Stopwatch) -> FimResult {
-    FimResult {
-        algorithm: name.into(),
-        frequents,
-        wall: sw.elapsed(),
-        phases: Vec::new(),
-        partition_loads: Vec::new(),
-        filtered_reduction: None,
-    }
-}
+use super::{Algorithm, EclatOptions, FimResult, Variant};
 
 /// Sequential Eclat: vertical DB + equivalence classes + bottom-up, no
 /// engine involvement.
@@ -35,22 +23,29 @@ impl SeqEclat {
     /// class so steady-state mining allocates nothing per candidate
     /// (§Perf iteration 5).
     pub fn mine(db: &Database, min_sup: MinSup) -> Vec<Frequent> {
+        let mut out = Vec::new();
+        Self::mine_into(db, min_sup, &mut out);
+        out
+    }
+
+    /// [`SeqEclat::mine`] emitting into an arbitrary [`FrequentSink`] —
+    /// with a [`crate::fim::PooledSink`] or
+    /// [`crate::fim::TopKSink`] the whole run materializes nothing it
+    /// does not have to.
+    pub fn mine_into<S: FrequentSink + ?Sized>(db: &Database, min_sup: MinSup, out: &mut S) {
         let min_sup = min_sup.to_count(db.len());
         let vdb = VerticalDb::build(db, min_sup);
         let mut tri = crate::fim::TriMatrix::new(db.stats().max_item);
         for t in db.transactions() {
             tri.update_transaction(t);
         }
-        let mut out: Vec<Frequent> = vdb
-            .items
-            .iter()
-            .map(|(i, t)| Frequent::new(vec![*i], t.len() as u32))
-            .collect();
+        for (i, t) in &vdb.items {
+            out.emit(std::slice::from_ref(i), t.len() as u32);
+        }
         let mut scratch = AutoScratch::new();
         for class in construct_classes(&vdb, min_sup, Some(&tri)) {
-            out.extend(class.mine_auto_with(&mut scratch, min_sup, db.len()));
+            class.mine_auto_into(&mut scratch, min_sup, db.len(), out);
         }
-        out
     }
 }
 
@@ -60,8 +55,8 @@ impl Algorithm for SeqEclat {
     }
 
     fn run_on(&self, _ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
-        let sw = Stopwatch::start();
-        Ok(wrap(self.name(), Self::mine(db, min_sup), sw))
+        let run = FimResult::builder(self.name());
+        Ok(run.finish(Self::mine(db, min_sup)))
     }
 }
 
@@ -69,29 +64,35 @@ impl Algorithm for SeqEclat {
 #[derive(Debug, Clone, Default)]
 pub struct SeqEclatDiffset;
 
+impl SeqEclatDiffset {
+    /// Run directly on a database (no context needed).
+    pub fn mine(db: &Database, min_sup: MinSup) -> Vec<Frequent> {
+        let mut out = Vec::new();
+        Self::mine_into(db, min_sup, &mut out);
+        out
+    }
+
+    /// [`SeqEclatDiffset::mine`] through an arbitrary [`FrequentSink`].
+    /// One top-level class over all frequent items: the diffset driver
+    /// handles the level-1 → level-2 conversion internally (and emits
+    /// the 1-itemsets itself), through the same reusable mining arena as
+    /// the tidset path.
+    pub fn mine_into<S: FrequentSink + ?Sized>(db: &Database, min_sup: MinSup, out: &mut S) {
+        let min_sup = min_sup.to_count(db.len());
+        let vdb = VerticalDb::build(db, min_sup);
+        let mut scratch = MineScratch::new();
+        bottom_up_diffset_with(&mut scratch, &[], &vdb.items, min_sup, out);
+    }
+}
+
 impl Algorithm for SeqEclatDiffset {
     fn name(&self) -> &'static str {
         "seq-declat"
     }
 
     fn run_on(&self, _ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
-        let sw = Stopwatch::start();
-        let min_sup = min_sup.to_count(db.len());
-        let vdb = VerticalDb::build(db, min_sup);
-        let mut out: Vec<Frequent> = vdb
-            .items
-            .iter()
-            .map(|(i, t)| Frequent::new(vec![*i], t.len() as u32))
-            .collect();
-        // One top-level class over all frequent items: the diffset driver
-        // handles the level-1 → level-2 conversion internally, through
-        // the same reusable mining arena as the tidset path.
-        let mut scratch = MineScratch::new();
-        bottom_up_diffset_with(&mut scratch, &[], &vdb.items, min_sup, &mut out);
-        // bottom_up_diffset re-emits the 1-itemsets; drop the duplicates.
-        let mut seen = std::collections::HashSet::new();
-        out.retain(|f| seen.insert(f.items.clone()));
-        Ok(wrap(self.name(), out, sw))
+        let run = FimResult::builder(self.name());
+        Ok(run.finish(Self::mine(db, min_sup)))
     }
 }
 
@@ -105,9 +106,9 @@ impl Algorithm for SeqApriori {
     }
 
     fn run_on(&self, _ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
-        let sw = Stopwatch::start();
+        let run = FimResult::builder(self.name());
         let min_sup = min_sup.to_count(db.len());
-        Ok(wrap(self.name(), apriori(db, min_sup), sw))
+        Ok(run.finish(apriori(db, min_sup)))
     }
 }
 
@@ -121,28 +122,16 @@ impl Algorithm for SeqFpGrowth {
     }
 
     fn run_on(&self, _ctx: &ClusterContext, db: &Database, min_sup: MinSup) -> Result<FimResult> {
-        let sw = Stopwatch::start();
+        let run = FimResult::builder(self.name());
         let min_sup = min_sup.to_count(db.len());
-        Ok(wrap(self.name(), fp_growth(db, min_sup), sw))
+        Ok(run.finish(fp_growth(db, min_sup)))
     }
 }
 
-/// Look up an algorithm by CLI name.
+/// Look up an algorithm by CLI name — a thin compatibility shim over the
+/// [`Variant`] registry (which is also where the accepted aliases live).
 pub fn by_name(name: &str) -> Option<Box<dyn Algorithm>> {
-    use super::{EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, RddApriori};
-    match name.to_ascii_lowercase().as_str() {
-        "eclatv1" | "v1" => Some(Box::new(EclatV1::default())),
-        "eclatv2" | "v2" => Some(Box::new(EclatV2::default())),
-        "eclatv3" | "v3" => Some(Box::new(EclatV3::default())),
-        "eclatv4" | "v4" => Some(Box::new(EclatV4::default())),
-        "eclatv5" | "v5" => Some(Box::new(EclatV5::default())),
-        "apriori" | "rdd-apriori" | "yafim" => Some(Box::new(RddApriori)),
-        "seq-eclat" => Some(Box::new(SeqEclat)),
-        "seq-declat" => Some(Box::new(SeqEclatDiffset)),
-        "seq-apriori" => Some(Box::new(SeqApriori)),
-        "seq-fpgrowth" | "fpgrowth" => Some(Box::new(SeqFpGrowth)),
-        _ => None,
-    }
+    name.parse::<Variant>().ok().map(|v| v.build(&EclatOptions::default()))
 }
 
 #[cfg(test)]

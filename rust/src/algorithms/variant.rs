@@ -1,0 +1,372 @@
+//! The unified miner façade: the [`Variant`] registry and the
+//! [`MiningSession`] builder.
+//!
+//! The paper's contribution is a *family* of interchangeable algorithms
+//! (five RDD-Eclat variants against Apriori/FP-Growth baselines), so the
+//! public API treats algorithm choice as data: [`Variant`] is the single
+//! registry mapping names to constructors (replacing the string matches
+//! that used to live in `bin/repro.rs`, `figures/`, and the benches),
+//! and [`MiningSession`] owns the cross-variant run concerns — input
+//! wiring, options validation, and the single [`FimResult`] assembly
+//! path (see [`super::FimResultBuilder`]).
+//!
+//! ```
+//! use rdd_eclat::prelude::*;
+//!
+//! let db = Database::from_rows(vec![vec![1, 2], vec![1, 2, 3], vec![2, 3]]);
+//! let ctx = ClusterContext::builder().cores(2).build();
+//! let result = MiningSession::on(&ctx)
+//!     .db(&db)
+//!     .min_sup(MinSup::count(2))
+//!     .run(Variant::V5)
+//!     .unwrap();
+//! assert!(result.contains(&[1, 2], 2));
+//! ```
+
+use std::str::FromStr;
+
+use crate::engine::ClusterContext;
+use crate::error::{Error, Result};
+use crate::fim::{Database, MinSup};
+
+use super::{
+    Algorithm, CoocStrategy, EclatOptions, EclatV1, EclatV2, EclatV3, EclatV4, EclatV5,
+    FimResult, RddApriori, SeqApriori, SeqEclat, SeqEclatDiffset, SeqFpGrowth,
+};
+
+/// Every algorithm the crate can run, as a value. The registry behind
+/// CLI dispatch (`--algo`, via [`FromStr`]), the figure drivers, and the
+/// benches; [`Variant::build`] is the only place a concrete algorithm
+/// type is named.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Variant {
+    /// EclatV1: `groupByKey` vertical DB, default `(n−1)` partitioner.
+    V1,
+    /// EclatV2: V1 + Borgelt transaction filtering.
+    V2,
+    /// EclatV3: V2 with the vertical DB accumulated, not shuffled.
+    V3,
+    /// EclatV4: V3 + hash partitioner `v % p`.
+    V4,
+    /// EclatV5: V3 + reverse-hash partitioner.
+    V5,
+    /// The YAFIM-style RDD-Apriori baseline.
+    Apriori,
+    /// Sequential Eclat (tidsets; the correctness oracle).
+    Seq,
+    /// Sequential dEclat (diffsets).
+    SeqDiffset,
+    /// Sequential Apriori (Agrawal–Srikant).
+    SeqApriori,
+    /// Sequential FP-Growth (Han et al.).
+    FpGrowth,
+}
+
+impl Variant {
+    /// Every registered variant, distributed first.
+    pub const ALL: [Variant; 10] = [
+        Variant::V1,
+        Variant::V2,
+        Variant::V3,
+        Variant::V4,
+        Variant::V5,
+        Variant::Apriori,
+        Variant::Seq,
+        Variant::SeqDiffset,
+        Variant::SeqApriori,
+        Variant::FpGrowth,
+    ];
+
+    /// The six algorithms of the paper's Figs 8–14 comparison panels.
+    pub const STANDARD: [Variant; 6] = [
+        Variant::V1,
+        Variant::V2,
+        Variant::V3,
+        Variant::V4,
+        Variant::V5,
+        Variant::Apriori,
+    ];
+
+    /// The five RDD-Eclat variants (the paper's contribution).
+    pub const RDD_ECLAT: [Variant; 5] =
+        [Variant::V1, Variant::V2, Variant::V3, Variant::V4, Variant::V5];
+
+    /// Every registered variant, as a slice.
+    pub fn all() -> &'static [Variant] {
+        &Self::ALL
+    }
+
+    /// Canonical name — matches what [`Algorithm::name`] reports for the
+    /// built algorithm.
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::V1 => "eclatV1",
+            Variant::V2 => "eclatV2",
+            Variant::V3 => "eclatV3",
+            Variant::V4 => "eclatV4",
+            Variant::V5 => "eclatV5",
+            Variant::Apriori => "apriori",
+            Variant::Seq => "seq-eclat",
+            Variant::SeqDiffset => "seq-declat",
+            Variant::SeqApriori => "seq-apriori",
+            Variant::FpGrowth => "seq-fpgrowth",
+        }
+    }
+
+    /// One-line description for `--list-algos` style listings.
+    pub fn describe(self) -> &'static str {
+        match self {
+            Variant::V1 => "vertical DB via groupByKey, default (n-1) class partitioner (§4.1)",
+            Variant::V2 => "V1 + Borgelt transaction filtering (§4.2)",
+            Variant::V3 => "V2 with the vertical DB accumulated instead of shuffled (§4.3)",
+            Variant::V4 => "V3 + hash class partitioner v % p (§4.4)",
+            Variant::V5 => "V3 + reverse-hash class partitioner (§4.4)",
+            Variant::Apriori => "YAFIM-style RDD-Apriori baseline (broadcast candidate trie)",
+            Variant::Seq => "sequential Eclat oracle (tidsets, arena miner)",
+            Variant::SeqDiffset => "sequential dEclat (diffsets)",
+            Variant::SeqApriori => "sequential Apriori (Agrawal-Srikant)",
+            Variant::FpGrowth => "sequential FP-Growth (Han et al.)",
+        }
+    }
+
+    /// Construct the algorithm. `options` applies to the RDD-Eclat
+    /// variants; the baselines and sequential oracles take no options
+    /// and ignore it.
+    pub fn build(self, options: &EclatOptions) -> Box<dyn Algorithm> {
+        match self {
+            Variant::V1 => Box::new(EclatV1::with_options(options.clone())),
+            Variant::V2 => Box::new(EclatV2::with_options(options.clone())),
+            Variant::V3 => Box::new(EclatV3::with_options(options.clone())),
+            Variant::V4 => Box::new(EclatV4::with_options(options.clone())),
+            Variant::V5 => Box::new(EclatV5::with_options(options.clone())),
+            Variant::Apriori => Box::new(RddApriori),
+            Variant::Seq => Box::new(SeqEclat),
+            Variant::SeqDiffset => Box::new(SeqEclatDiffset),
+            Variant::SeqApriori => Box::new(SeqApriori),
+            Variant::FpGrowth => Box::new(SeqFpGrowth),
+        }
+    }
+
+    /// The `valid names: …` suffix used in parse errors and usage text.
+    fn valid_names() -> String {
+        Variant::ALL.iter().map(|v| v.name()).collect::<Vec<_>>().join(", ")
+    }
+}
+
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Variant {
+    type Err = Error;
+
+    /// Case-insensitive; accepts the canonical names plus the historical
+    /// CLI aliases (`v4`, `yafim`, `fpgrowth`, …). Unknown names error
+    /// with the full list of valid names.
+    fn from_str(s: &str) -> Result<Variant> {
+        match s.to_ascii_lowercase().as_str() {
+            "eclatv1" | "v1" => Ok(Variant::V1),
+            "eclatv2" | "v2" => Ok(Variant::V2),
+            "eclatv3" | "v3" => Ok(Variant::V3),
+            "eclatv4" | "v4" => Ok(Variant::V4),
+            "eclatv5" | "v5" => Ok(Variant::V5),
+            "apriori" | "rdd-apriori" | "yafim" => Ok(Variant::Apriori),
+            "seq-eclat" | "seq" | "eclat" => Ok(Variant::Seq),
+            "seq-declat" | "declat" | "diffset" => Ok(Variant::SeqDiffset),
+            "seq-apriori" => Ok(Variant::SeqApriori),
+            "seq-fpgrowth" | "fpgrowth" | "fp-growth" => Ok(Variant::FpGrowth),
+            other => Err(Error::Usage(format!(
+                "unknown algorithm {other:?}; valid names: {}",
+                Variant::valid_names()
+            ))),
+        }
+    }
+}
+
+/// Builder for one mining run: wires a database and support threshold to
+/// a cluster context, validates the shared [`EclatOptions`] once, and
+/// dispatches any [`Variant`] (or a custom [`Algorithm`]) through the
+/// single result-assembly path.
+///
+/// A session borrows its inputs and can run several variants back to
+/// back — the pattern the figure drivers use for the paper's comparison
+/// panels:
+///
+/// ```
+/// use rdd_eclat::prelude::*;
+///
+/// let db = Database::from_rows(vec![vec![1, 2], vec![1, 2, 3], vec![2, 3]]);
+/// let ctx = ClusterContext::builder().cores(2).build();
+/// let session = MiningSession::on(&ctx).db(&db).min_sup(MinSup::count(2)).partitions(4);
+/// let v4 = session.run(Variant::V4).unwrap();
+/// let v5 = session.run(Variant::V5).unwrap();
+/// assert_eq!(v4.len(), v5.len());
+/// ```
+#[derive(Debug, Clone)]
+pub struct MiningSession<'a> {
+    ctx: &'a ClusterContext,
+    db: Option<&'a Database>,
+    min_sup: Option<MinSup>,
+    options: EclatOptions,
+}
+
+impl<'a> MiningSession<'a> {
+    /// Start a session on a cluster context.
+    pub fn on(ctx: &'a ClusterContext) -> MiningSession<'a> {
+        MiningSession { ctx, db: None, min_sup: None, options: EclatOptions::default() }
+    }
+
+    /// The database to mine (required).
+    pub fn db(mut self, db: &'a Database) -> Self {
+        self.db = Some(db);
+        self
+    }
+
+    /// The support threshold (required).
+    pub fn min_sup(mut self, min_sup: MinSup) -> Self {
+        self.min_sup = Some(min_sup);
+        self
+    }
+
+    /// Replace the full option set.
+    pub fn options(mut self, options: EclatOptions) -> Self {
+        self.options = options;
+        self
+    }
+
+    /// Toggle the triangular-matrix optimization (`triMatrixMode`).
+    pub fn tri_matrix(mut self, on: bool) -> Self {
+        self.options.tri_matrix = on;
+        self
+    }
+
+    /// Equivalence-class partition count `p` (V4/V5).
+    pub fn partitions(mut self, p: usize) -> Self {
+        self.options.partitions = p;
+        self
+    }
+
+    /// Phase-2 co-occurrence strategy (accumulator vs provider).
+    pub fn cooc(mut self, strategy: CoocStrategy) -> Self {
+        self.options.cooc = strategy;
+        self
+    }
+
+    /// The session's current options (what [`MiningSession::run`] will
+    /// hand to [`Variant::build`]).
+    pub fn current_options(&self) -> &EclatOptions {
+        &self.options
+    }
+
+    /// Validate and run one variant. Options are validated *before* the
+    /// algorithm is constructed (the [`EclatOptions::validate`]
+    /// contract), so no variant is ever built from bad options.
+    pub fn run(&self, variant: Variant) -> Result<FimResult> {
+        self.options.validate()?;
+        let (db, min_sup) = self.inputs()?;
+        variant.build(&self.options).run_on(self.ctx, db, min_sup)
+    }
+
+    /// Validate and run a custom [`Algorithm`] (the extension point for
+    /// algorithms outside the registry).
+    pub fn run_algorithm(&self, algo: &dyn Algorithm) -> Result<FimResult> {
+        self.options.validate()?;
+        let (db, min_sup) = self.inputs()?;
+        algo.run_on(self.ctx, db, min_sup)
+    }
+
+    /// The required inputs, or a config error naming the missing call.
+    fn inputs(&self) -> Result<(&'a Database, MinSup)> {
+        let db = self.db.ok_or_else(|| {
+            Error::Config("MiningSession: no database — call .db(&db) before .run(..)".into())
+        })?;
+        let min_sup = self.min_sup.ok_or_else(|| {
+            Error::Config(
+                "MiningSession: no support threshold — call .min_sup(..) before .run(..)".into(),
+            )
+        })?;
+        Ok((db, min_sup))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_db() -> Database {
+        Database::from_rows(vec![
+            vec![1, 3, 4],
+            vec![2, 3, 5],
+            vec![1, 2, 3, 5],
+            vec![2, 5],
+            vec![1, 3, 5],
+            vec![2, 3, 5],
+        ])
+    }
+
+    #[test]
+    fn names_round_trip_through_fromstr_and_display() {
+        for &v in Variant::all() {
+            assert_eq!(v.name().parse::<Variant>().unwrap(), v);
+            assert_eq!(v.to_string(), v.name());
+            assert_eq!(v.build(&EclatOptions::default()).name(), v.name());
+            assert!(!v.describe().is_empty());
+        }
+    }
+
+    #[test]
+    fn historical_aliases_still_parse() {
+        for (alias, want) in [
+            ("eclatV1", Variant::V1),
+            ("v2", Variant::V2),
+            ("EclatV3", Variant::V3),
+            ("V4", Variant::V4),
+            ("eclatv5", Variant::V5),
+            ("yafim", Variant::Apriori),
+            ("rdd-apriori", Variant::Apriori),
+            ("seq", Variant::Seq),
+            ("declat", Variant::SeqDiffset),
+            ("fpgrowth", Variant::FpGrowth),
+            ("seq-apriori", Variant::SeqApriori),
+        ] {
+            assert_eq!(alias.parse::<Variant>().unwrap(), want, "{alias}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_error_enumerates_valid_names() {
+        let err = "telepathy".parse::<Variant>().unwrap_err().to_string();
+        assert!(err.contains("telepathy"), "{err}");
+        for &v in Variant::all() {
+            assert!(err.contains(v.name()), "{} missing from: {err}", v.name());
+        }
+    }
+
+    #[test]
+    fn session_requires_db_and_min_sup_and_valid_options() {
+        let ctx = ClusterContext::builder().cores(1).build();
+        let db = demo_db();
+        let no_db = MiningSession::on(&ctx).min_sup(MinSup::count(2));
+        assert!(no_db.run(Variant::Seq).unwrap_err().to_string().contains("no database"));
+        let no_sup = MiningSession::on(&ctx).db(&db);
+        assert!(no_sup.run(Variant::Seq).unwrap_err().to_string().contains("no support"));
+        let bad_opts = MiningSession::on(&ctx).db(&db).min_sup(MinSup::count(2)).partitions(0);
+        assert!(bad_opts.run(Variant::V4).unwrap_err().to_string().contains("partitions"));
+    }
+
+    #[test]
+    fn session_threads_options_through_to_the_variant() {
+        let ctx = ClusterContext::builder().cores(2).build();
+        let db = demo_db();
+        let r = MiningSession::on(&ctx)
+            .db(&db)
+            .min_sup(MinSup::count(2))
+            .partitions(3)
+            .run(Variant::V4)
+            .unwrap();
+        assert_eq!(r.partition_loads.len(), 3, "p reached the partitioner");
+        assert_eq!(r.algorithm, "eclatV4");
+    }
+}

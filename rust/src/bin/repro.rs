@@ -11,7 +11,7 @@
 //! repro stream   --batch 500 --window 20 --slide 1 --min-sup 0.01
 //! ```
 
-use rdd_eclat::algorithms::{seq::by_name, CoocStrategy, EclatOptions};
+use rdd_eclat::algorithms::{CoocStrategy, EclatOptions, MiningSession, Variant};
 use rdd_eclat::cli::{App, Command};
 use rdd_eclat::conf::EclatConfig;
 use rdd_eclat::data::clickstream::ClickParams;
@@ -30,7 +30,8 @@ fn app() -> App {
         .command(
             Command::new("run", "mine frequent itemsets")
                 .opt("config", "TOML config file (flags override)")
-                .opt("algo", "eclatV1..V5 | apriori | seq-eclat | seq-apriori | fpgrowth")
+                .opt("algo", "algorithm name (see --list-algos)")
+                .flag("list-algos", "list the registered algorithms and exit")
                 .opt("dataset", "Table 2 name or FIMI file path")
                 .opt("min-sup", "fraction (0,1] or absolute count (>1)")
                 .opt("cores", "executor cores (default: all)")
@@ -160,9 +161,9 @@ fn xla_cooc_strategy() -> Result<CoocStrategy> {
     ))
 }
 
-/// Build the algorithm named in the config, applying options.
-fn build_algorithm(cfg: &EclatConfig) -> Result<Box<dyn rdd_eclat::algorithms::Algorithm>> {
-    use rdd_eclat::algorithms::{EclatV1, EclatV2, EclatV3, EclatV4, EclatV5};
+/// The shared variant options from a config: per-dataset `triMatrixMode`
+/// default, `p`, and the Phase-2 backend.
+fn eclat_options(cfg: &EclatConfig) -> Result<EclatOptions> {
     // Per-dataset default for triMatrixMode (the paper disables it on BMS).
     let tri_default = DatasetSpec::parse(&cfg.dataset).map(|s| s.tri_matrix_mode()).unwrap_or(true);
     let cooc = if cfg.backend == "xla" {
@@ -170,40 +171,41 @@ fn build_algorithm(cfg: &EclatConfig) -> Result<Box<dyn rdd_eclat::algorithms::A
     } else {
         CoocStrategy::Accumulator
     };
-    let opts = EclatOptions {
+    Ok(EclatOptions {
         tri_matrix: cfg.tri_matrix.unwrap_or(tri_default),
         partitions: cfg.partitions,
         cooc,
-    };
-    let algo: Box<dyn rdd_eclat::algorithms::Algorithm> = match cfg
-        .algorithm
-        .to_ascii_lowercase()
-        .as_str()
-    {
-        "eclatv1" | "v1" => Box::new(EclatV1::with_options(opts)),
-        "eclatv2" | "v2" => Box::new(EclatV2::with_options(opts)),
-        "eclatv3" | "v3" => Box::new(EclatV3::with_options(opts)),
-        "eclatv4" | "v4" => Box::new(EclatV4::with_options(opts)),
-        "eclatv5" | "v5" => Box::new(EclatV5::with_options(opts)),
-        other => by_name(other)
-            .ok_or_else(|| Error::Usage(format!("unknown algorithm {other:?}")))?,
-    };
-    Ok(algo)
+    })
+}
+
+fn print_algo_listing() {
+    println!("registered algorithms (--algo accepts these and their aliases):");
+    for v in Variant::all() {
+        println!("  {:<14} {}", v.name(), v.describe());
+    }
 }
 
 fn cmd_run(args: &rdd_eclat::cli::Args) -> Result<()> {
+    if args.flag("list-algos") {
+        print_algo_listing();
+        return Ok(());
+    }
     let cfg = config_from_args(args)?;
+    let variant: Variant = cfg.algorithm.parse()?;
     let db = data::resolve(&cfg.dataset, &cfg.data_dir)?;
     let stats = db.stats();
     let cores = cfg.effective_cores();
     let ctx = ClusterContext::builder().cores(cores).build();
-    let algo = build_algorithm(&cfg)?;
     println!(
         "mining {} ({} txns, {} items, avg width {:.1}) with {} @ min_sup {} on {cores} cores",
         cfg.dataset, stats.transactions, stats.distinct_items, stats.avg_width,
-        algo.name(), cfg.min_sup
+        variant, cfg.min_sup
     );
-    let result = algo.run_on(&ctx, &db, cfg.min_sup_typed()?)?;
+    let result = MiningSession::on(&ctx)
+        .db(&db)
+        .min_sup(cfg.min_sup_typed()?)
+        .options(eclat_options(&cfg)?)
+        .run(variant)?;
     println!(
         "found {} frequent itemsets in {}",
         result.len(),
@@ -271,8 +273,13 @@ fn cmd_rules(args: &rdd_eclat::cli::Args) -> Result<()> {
     let top: usize = args.get_parse("top", 20usize)?;
     let db = data::resolve(&cfg.dataset, &cfg.data_dir)?;
     let ctx = ClusterContext::builder().build();
-    let algo = build_algorithm(&EclatConfig { algorithm: "eclatV4".into(), ..cfg.clone() })?;
-    let result = algo.run_on(&ctx, &db, cfg.min_sup_typed()?)?;
+    // Itemset mining feeding the ARM step always uses the paper's
+    // best-performing variant.
+    let result = MiningSession::on(&ctx)
+        .db(&db)
+        .min_sup(cfg.min_sup_typed()?)
+        .options(eclat_options(&cfg)?)
+        .run(Variant::V4)?;
     let rules = generate_rules(&result.frequents, cfg.min_conf, Some(db.len()));
     println!(
         "{} frequent itemsets -> {} rules at min_conf {}",

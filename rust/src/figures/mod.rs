@@ -5,9 +5,7 @@
 //! Scale control: `SCALE=quick` (fast sanity sweep on truncated datasets,
 //! used by `cargo bench` defaults) vs `SCALE=paper` (full Table 2 sizes).
 
-use crate::algorithms::{
-    Algorithm, EclatOptions, EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, RddApriori,
-};
+use crate::algorithms::{Algorithm, EclatOptions, MiningSession, Variant};
 use crate::bench::{Bench, Measurement, Report};
 use crate::data::{Database, DatasetSpec, TABLE2};
 use crate::engine::{simcluster, ClusterContext};
@@ -90,20 +88,14 @@ impl FigureCtx {
     }
 
     /// The six algorithms of Figs 8–14(a) with the paper's settings for
-    /// `spec` (`triMatrixMode` off for BMS1/2, `p = 10`).
+    /// `spec` (`triMatrixMode` off for BMS1/2, `p = 10`) — built through
+    /// the [`Variant`] registry, the same dispatch path as the CLI.
     pub fn standard_algos(&self, spec: DatasetSpec) -> Vec<Box<dyn Algorithm>> {
         let opts = EclatOptions {
             tri_matrix: spec.tri_matrix_mode(),
             ..Default::default()
         };
-        vec![
-            Box::new(EclatV1::with_options(opts.clone())),
-            Box::new(EclatV2::with_options(opts.clone())),
-            Box::new(EclatV3::with_options(opts.clone())),
-            Box::new(EclatV4::with_options(opts.clone())),
-            Box::new(EclatV5::with_options(opts)),
-            Box::new(RddApriori),
-        ]
+        Variant::STANDARD.iter().map(|v| v.build(&opts)).collect()
     }
 }
 
@@ -237,9 +229,10 @@ pub fn run_a1(fx: &FigureCtx) -> Result<Report> {
     let mut report = Report::new();
     println!("\n== A1: transaction-filtering shrinkage on T40I10D100K ==");
     println!("paper quotes: sup 0.01→3.2%, 0.02→8.4%, 0.03→16.1%, 0.04→25.8%");
+    let v2 = Variant::V2.build(&EclatOptions::default());
     for sup in [0.01, 0.02, 0.03, 0.04] {
         let ctx = fx.cluster();
-        let r = EclatV2::default().run_on(&ctx, &db, MinSup::fraction(sup))?;
+        let r = v2.run_on(&ctx, &db, MinSup::fraction(sup))?;
         let red = r.filtered_reduction.unwrap_or(0.0);
         println!("  sup={sup}: filtered size reduced by {:.1}%", red * 100.0);
         report.add(Measurement {
@@ -260,11 +253,11 @@ pub fn run_a2(fx: &FigureCtx) -> Result<Report> {
     let sup = if fx.quick { 0.02 } else { 0.01 };
     let mut report = Report::new();
     println!("\n== A2: partitioner workload balance on {} (sup={sup}) ==", spec.name());
-    let algos: Vec<Box<dyn Algorithm>> = vec![
-        Box::new(EclatV3::default()), // default (n-1) partitioner
-        Box::new(EclatV4::default()), // hash %p
-        Box::new(EclatV5::default()), // reverse hash
-    ];
+    // V3 = default (n-1) partitioner, V4 = hash %p, V5 = reverse hash.
+    let algos: Vec<Box<dyn Algorithm>> = [Variant::V3, Variant::V4, Variant::V5]
+        .iter()
+        .map(|v| v.build(&EclatOptions::default()))
+        .collect();
     for algo in algos {
         let ctx = fx.cluster();
         let r = algo.run_on(&ctx, &db, MinSup::fraction(sup))?;
@@ -291,19 +284,22 @@ pub fn run_a2(fx: &FigureCtx) -> Result<Report> {
     Ok(report)
 }
 
-/// A3: triangular-matrix on/off ablation.
+/// A3: triangular-matrix on/off ablation, driven through the
+/// [`MiningSession`] façade (one session per setting, re-run per sample).
 pub fn run_a3(fx: &FigureCtx) -> Result<Report> {
     let mut report = Report::new();
     println!("\n== A3: triMatrixMode on/off ==");
     for (spec, sup) in [(DatasetSpec::C20d10k, 0.1), (DatasetSpec::T10i4d100k, 0.01)] {
         let db = fx.dataset(spec)?;
         for tri in [true, false] {
-            let opts = EclatOptions { tri_matrix: tri, ..Default::default() };
-            let algo = EclatV4::with_options(opts);
             let ctx = fx.cluster();
+            let session = MiningSession::on(&ctx)
+                .db(&db)
+                .min_sup(MinSup::fraction(sup))
+                .tri_matrix(tri);
             let m = fx.bench.try_run(
                 format!("a3/{}/sup={sup}/tri={tri}", spec.name()),
-                || algo.run_on(&ctx, &db, MinSup::fraction(sup)),
+                || session.run(Variant::V4),
             )?;
             report.add(m);
         }

@@ -27,15 +27,29 @@
 //! * emitted itemsets come from an incrementally maintained **sorted
 //!   prefix stack** — one buffer copy per emit, no per-emit sort.
 //!
-//! The only steady-state allocations left are the emitted [`Frequent`]
-//! itemsets themselves (the output) and O(depth) arena growth on first
-//! descent — measured, not asserted, by the counting allocator in
-//! `benches/fim_micro.rs` (`--features alloc-count`). The pre-arena
-//! implementation is kept verbatim in [`reference`] as the parity oracle
-//! and the bench baseline.
+//! ## Sinks and ordering (§API redesign)
+//!
+//! Emission goes through the [`FrequentSink`] trait rather than a
+//! hard-wired `Vec<Frequent>`: the itemset is merged into a reusable
+//! buffer and handed to the sink as a borrowed slice, so the *sink*
+//! decides whether an emission allocates. `Vec<Frequent>` itself
+//! implements the trait (the compatibility default); a
+//! [`super::sink::PooledSink`] takes the search to literally zero
+//! steady-state allocations — measured, not asserted, by the counting
+//! allocator in `benches/fim_micro.rs` (`--features alloc-count`).
+//!
+//! Candidates are processed **rarest-first** at every level (ascending
+//! support, item-id tie-break): the smaller `tids_i` is, the earlier the
+//! `count + 64·words_left` / merge-remainder bounds prove a candidate
+//! infrequent, and the smaller every child class's tidsets start out.
+//! The enumerated itemset *set* is order-invariant; only the emission
+//! sequence changes. The pre-arena implementation is kept verbatim in
+//! [`reference`] as the parity oracle and the bench baseline — it
+//! processes members in the order given.
 
 use super::bitmap::TidBitmap;
 use super::itemset::{Frequent, Item};
+use super::sink::FrequentSink;
 use super::tidset::{
     difference_bounded_into, intersect_bounded_into, intersect_into, Tidset,
 };
@@ -135,6 +149,13 @@ impl<R> Lane<R> {
     fn recycle(&mut self) {
         self.pool.extend(self.entries.drain(..).map(|(_, r, _)| r));
     }
+
+    /// Rarest-first mining order for the filled entries: ascending
+    /// support, item-id tie-break — the single definition every path
+    /// (tidset, bitmap, diffset) sorts by.
+    fn sort_rarest_first(&mut self) {
+        self.entries.sort_unstable_by(|x, y| (x.2, x.0).cmp(&(y.2, y.0)));
+    }
 }
 
 impl<R: TidRepr> Lane<R> {
@@ -156,11 +177,22 @@ pub struct MineScratch<R> {
     /// The current prefix itemset, kept **sorted by item id** (mining
     /// order is ascending support, so this is not insertion order).
     prefix: Vec<Item>,
+    /// Reused merge buffer for emitted itemsets (prefix ∪ {item}); the
+    /// sink copies it out if it keeps emissions.
+    emit_buf: Vec<Item>,
+    /// Entry-level mining order: `(support, member index)` sorted
+    /// ascending so the rarest atom is expanded first.
+    order: Vec<(u32, u32)>,
 }
 
 impl<R> Default for MineScratch<R> {
     fn default() -> Self {
-        MineScratch { lanes: Vec::new(), prefix: Vec::new() }
+        MineScratch {
+            lanes: Vec::new(),
+            prefix: Vec::new(),
+            emit_buf: Vec::new(),
+            order: Vec::new(),
+        }
     }
 }
 
@@ -207,20 +239,23 @@ impl<R> MineScratch<R> {
     }
 
     /// Emit `prefix ∪ {item}`: one merge-copy of the already-sorted
-    /// prefix, no sort. The output `Vec` is the only allocation.
-    fn emit(&self, item: Item, support: u32, out: &mut Vec<Frequent>) {
+    /// prefix into the reused emission buffer, no sort, no allocation —
+    /// whether the emission allocates is the sink's decision.
+    fn emit<S: FrequentSink + ?Sized>(&mut self, item: Item, support: u32, out: &mut S) {
         let pos = self.prefix.binary_search(&item).unwrap_or_else(|p| p);
-        let mut items = Vec::with_capacity(self.prefix.len() + 1);
-        items.extend_from_slice(&self.prefix[..pos]);
-        items.push(item);
-        items.extend_from_slice(&self.prefix[pos..]);
-        out.push(Frequent::new(items, support));
+        self.emit_buf.clear();
+        self.emit_buf.extend_from_slice(&self.prefix[..pos]);
+        self.emit_buf.push(item);
+        self.emit_buf.extend_from_slice(&self.prefix[pos..]);
+        out.emit(&self.emit_buf, support);
     }
 }
 
 /// Fill `lane.entries` with the frequent children of `tids_i` × `rest`,
 /// recycling the lane's buffers; infrequent candidates abort mid-sweep
-/// and return their buffer to the pool.
+/// and return their buffer to the pool. Survivors are sorted
+/// rarest-first (ascending support, item-id tie-break) so the next
+/// level's bounded intersections face the tightest min_sup gap first.
 fn fill_children<'a, R: TidRepr>(
     lane: &mut Lane<R>,
     tids_i: &R,
@@ -235,21 +270,21 @@ fn fill_children<'a, R: TidRepr>(
             None => lane.pool.push(buf),
         }
     }
+    lane.sort_rarest_first();
 }
 
 /// Bottom-Up(EC) — Algorithm 1. `prefix` is the class prefix itemset,
 /// `members` the class atoms: `(last item, tidset(prefix ∪ item))`, each
-/// already frequent. Emits every member itemset and recurses into the
-/// next-level classes. Members are processed in the order given (the
-/// ascending-support "total order" established in Phase-1).
+/// already frequent. Emits every member itemset into `out` and recurses
+/// into the next-level classes, expanding members rarest-first.
 ///
 /// Convenience entry that brings its own arena; loops mining many classes
 /// should hold a [`MineScratch`] and call [`bottom_up_with`] instead.
-pub fn bottom_up<R: TidRepr>(
+pub fn bottom_up<R: TidRepr, S: FrequentSink + ?Sized>(
     prefix: &[Item],
     members: &[(Item, R)],
     min_sup: u32,
-    out: &mut Vec<Frequent>,
+    out: &mut S,
 ) {
     let mut scratch = MineScratch::new();
     bottom_up_with(&mut scratch, prefix, members, min_sup, out);
@@ -258,25 +293,35 @@ pub fn bottom_up<R: TidRepr>(
 /// [`bottom_up`] through a caller-owned arena. Members are borrowed for
 /// the whole search — nothing is cloned; each atom's support is counted
 /// exactly once here and carried alongside the recursion's candidate
-/// tidsets thereafter.
-pub fn bottom_up_with<R: TidRepr>(
+/// tidsets thereafter. Entry members are visited through a sorted index
+/// permutation (rarest-first), not moved.
+pub fn bottom_up_with<R: TidRepr, S: FrequentSink + ?Sized>(
     scratch: &mut MineScratch<R>,
     prefix: &[Item],
     members: &[(Item, R)],
     min_sup: u32,
-    out: &mut Vec<Frequent>,
+    out: &mut S,
 ) {
     scratch.begin_prefix(prefix);
-    for (item, tids) in members {
-        scratch.emit(*item, tids.support(), out);
+    scratch.order.clear();
+    for (idx, (item, tids)) in members.iter().enumerate() {
+        let support = tids.support();
+        scratch.emit(*item, support, out);
+        scratch.order.push((support, idx as u32));
     }
     if members.len() < 2 {
         return;
     }
-    for i in 0..members.len() - 1 {
-        let (item_i, tids_i) = &members[i];
+    let mut order = std::mem::take(&mut scratch.order);
+    order.sort_unstable_by_key(|&(support, idx)| (support, members[idx as usize].0));
+    for a in 0..order.len() - 1 {
+        let (item_i, tids_i) = &members[order[a].1 as usize];
         let mut lane = scratch.take_lane(0);
-        fill_children(&mut lane, tids_i, members[i + 1..].iter().map(|(j, t)| (*j, t)), min_sup);
+        let rest = order[a + 1..].iter().map(|&(_, j)| {
+            let (item_j, tids_j) = &members[j as usize];
+            (*item_j, tids_j)
+        });
+        fill_children(&mut lane, tids_i, rest, min_sup);
         if !lane.entries.is_empty() {
             scratch.push_prefix(*item_i);
             mine_level(scratch, 1, &lane.entries, min_sup, out);
@@ -284,16 +329,18 @@ pub fn bottom_up_with<R: TidRepr>(
         }
         scratch.put_lane(0, lane);
     }
+    scratch.order = order;
 }
 
 /// The recursion below the entry level: members live in the parent's
-/// detached lane, children are built in this depth's lane.
-fn mine_level<R: TidRepr>(
+/// detached lane (already sorted rarest-first by [`fill_children`]),
+/// children are built in this depth's lane.
+fn mine_level<R: TidRepr, S: FrequentSink + ?Sized>(
     scratch: &mut MineScratch<R>,
     depth: usize,
     members: &[(Item, R, u32)],
     min_sup: u32,
-    out: &mut Vec<Frequent>,
+    out: &mut S,
 ) {
     for (item, _, support) in members {
         scratch.emit(*item, *support, out);
@@ -322,11 +369,11 @@ fn mine_level<R: TidRepr>(
 ///
 /// Convenience entry that brings its own arena; see
 /// [`bottom_up_diffset_with`].
-pub fn bottom_up_diffset(
+pub fn bottom_up_diffset<S: FrequentSink + ?Sized>(
     prefix: &[Item],
     members: &[(Item, Tidset)],
     min_sup: u32,
-    out: &mut Vec<Frequent>,
+    out: &mut S,
 ) {
     let mut scratch = MineScratch::new();
     bottom_up_diffset_with(&mut scratch, prefix, members, min_sup, out);
@@ -334,30 +381,40 @@ pub fn bottom_up_diffset(
 
 /// [`bottom_up_diffset`] through a caller-owned arena. Diffsets get the
 /// same treatment as tidsets: borrowed entry members, recycled per-depth
-/// lanes, and bounded differences — a difference aborts once it exceeds
-/// `σ(parent) − min_sup` elements, the point at which the candidate's
-/// support `σ(parent) − |diffset|` can no longer reach `min_sup`.
-pub fn bottom_up_diffset_with(
+/// lanes, rarest-first expansion (a rarer parent has the smaller abort
+/// budget, so bounded differences give up sooner), and bounded
+/// differences — a difference aborts once it exceeds `σ(parent) −
+/// min_sup` elements, the point at which the candidate's support
+/// `σ(parent) − |diffset|` can no longer reach `min_sup`. The identities
+/// `d(ab) = t(a) − t(b)` and `d(Pab) = d(Pb) − d(Pa)` hold for *any*
+/// pairing order, so the reordering is lossless here too.
+pub fn bottom_up_diffset_with<S: FrequentSink + ?Sized>(
     scratch: &mut MineScratch<Tidset>,
     prefix: &[Item],
     members: &[(Item, Tidset)],
     min_sup: u32,
-    out: &mut Vec<Frequent>,
+    out: &mut S,
 ) {
     scratch.begin_prefix(prefix);
-    for (item, tids) in members {
-        scratch.emit(*item, tids.len() as u32, out);
+    scratch.order.clear();
+    for (idx, (item, tids)) in members.iter().enumerate() {
+        let support = tids.len() as u32;
+        scratch.emit(*item, support, out);
+        scratch.order.push((support, idx as u32));
     }
     if members.len() < 2 {
         return;
     }
-    for i in 0..members.len() - 1 {
-        let (item_i, tids_i) = &members[i];
-        let sup_i = tids_i.len() as u32;
+    let mut order = std::mem::take(&mut scratch.order);
+    order.sort_unstable_by_key(|&(support, idx)| (support, members[idx as usize].0));
+    for a in 0..order.len() - 1 {
+        let (sup_i, idx_i) = order[a];
+        let (item_i, tids_i) = &members[idx_i as usize];
         let budget = sup_i.saturating_sub(min_sup) as usize;
         let mut lane = scratch.take_lane(0);
         lane.recycle();
-        for (item_j, tids_j) in &members[i + 1..] {
+        for &(_, j) in &order[a + 1..] {
+            let (item_j, tids_j) = &members[j as usize];
             let mut buf = lane.grab();
             // d(ab) = t(a) − t(b); σ(ab) = σ(a) − |d(ab)|.
             match difference_bounded_into(tids_i, tids_j, budget, &mut buf) {
@@ -365,6 +422,7 @@ pub fn bottom_up_diffset_with(
                 _ => lane.pool.push(buf),
             }
         }
+        lane.sort_rarest_first();
         if !lane.entries.is_empty() {
             scratch.push_prefix(*item_i);
             diffset_level(scratch, 1, &lane.entries, min_sup, out);
@@ -372,14 +430,15 @@ pub fn bottom_up_diffset_with(
         }
         scratch.put_lane(0, lane);
     }
+    scratch.order = order;
 }
 
-fn diffset_level(
+fn diffset_level<S: FrequentSink + ?Sized>(
     scratch: &mut MineScratch<Tidset>,
     depth: usize,
     members: &[(Item, Tidset, u32)],
     min_sup: u32,
-    out: &mut Vec<Frequent>,
+    out: &mut S,
 ) {
     for (item, _, support) in members {
         scratch.emit(*item, *support, out);
@@ -400,6 +459,7 @@ fn diffset_level(
                 _ => lane.pool.push(buf),
             }
         }
+        lane.sort_rarest_first();
         if !lane.entries.is_empty() {
             scratch.push_prefix(*item_i);
             diffset_level(scratch, depth + 1, &lane.entries, min_sup, out);
@@ -552,7 +612,7 @@ mod tests {
     #[test]
     fn bottom_up_enumerates_class() {
         let mut out = Vec::new();
-        bottom_up::<Tidset>(&[], &example_members(), 2, &mut out);
+        bottom_up::<Tidset, _>(&[], &example_members(), 2, &mut out);
         sort_frequents(&mut out);
         let got: Vec<(Vec<Item>, u32)> =
             out.into_iter().map(|f| (f.items, f.support)).collect();
@@ -573,7 +633,7 @@ mod tests {
     #[test]
     fn min_sup_prunes_recursion() {
         let mut out = Vec::new();
-        bottom_up::<Tidset>(&[], &example_members(), 3, &mut out);
+        bottom_up::<Tidset, _>(&[], &example_members(), 3, &mut out);
         assert!(out.iter().all(|f| f.support >= 3));
         assert!(!out.iter().any(|f| f.items == vec![1, 2]));
         assert!(!out.iter().any(|f| f.items == vec![1, 2, 3]));
@@ -589,9 +649,9 @@ mod tests {
             .collect();
         for min_sup in 1..=6 {
             let mut a = Vec::new();
-            bottom_up::<Tidset>(&[], &members, min_sup, &mut a);
+            bottom_up::<Tidset, _>(&[], &members, min_sup, &mut a);
             let mut b = Vec::new();
-            bottom_up::<TidBitmap>(&[], &bitmap_members, min_sup, &mut b);
+            bottom_up::<TidBitmap, _>(&[], &bitmap_members, min_sup, &mut b);
             sort_frequents(&mut a);
             sort_frequents(&mut b);
             assert_eq!(a, b, "min_sup={min_sup}");
@@ -603,7 +663,7 @@ mod tests {
         let members = example_members();
         for min_sup in 1..=6 {
             let mut a = Vec::new();
-            bottom_up::<Tidset>(&[], &members, min_sup, &mut a);
+            bottom_up::<Tidset, _>(&[], &members, min_sup, &mut a);
             let mut b = Vec::new();
             bottom_up_diffset(&[], &members, min_sup, &mut b);
             sort_frequents(&mut a);
@@ -618,7 +678,7 @@ mod tests {
         // the sorted prefix stack must still emit canonical itemsets.
         let members: Vec<(Item, Tidset)> = vec![(9, vec![0, 1]), (2, vec![0, 1, 2])];
         let mut out = Vec::new();
-        bottom_up::<Tidset>(&[], &members, 2, &mut out);
+        bottom_up::<Tidset, _>(&[], &members, 2, &mut out);
         assert!(out.iter().any(|f| f.items == vec![2, 9] && f.support == 2));
     }
 
@@ -628,7 +688,7 @@ mod tests {
         // once so every emit stays a cheap merge.
         let members: Vec<(Item, Tidset)> = vec![(3, vec![0, 1]), (1, vec![0, 1])];
         let mut out = Vec::new();
-        bottom_up::<Tidset>(&[7, 5], &members, 2, &mut out);
+        bottom_up::<Tidset, _>(&[7, 5], &members, 2, &mut out);
         let mut got: Vec<Vec<Item>> = out.into_iter().map(|f| f.items).collect();
         got.sort();
         assert_eq!(got, vec![vec![1, 3, 5, 7], vec![1, 5, 7], vec![3, 5, 7]]);
@@ -637,9 +697,9 @@ mod tests {
     #[test]
     fn empty_and_singleton_members() {
         let mut out = Vec::new();
-        bottom_up::<Tidset>(&[], &[], 1, &mut out);
+        bottom_up::<Tidset, _>(&[], &[], 1, &mut out);
         assert!(out.is_empty());
-        bottom_up::<Tidset>(&[5], &[(7, vec![0])], 1, &mut out);
+        bottom_up::<Tidset, _>(&[5], &[(7, vec![0])], 1, &mut out);
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].items, vec![5, 7]);
     }
@@ -712,6 +772,82 @@ mod tests {
                     assert_eq!(got, want, "{tag} auto prefix={} min_sup={min_sup}", class.prefix);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn rarest_first_reorder_matches_unordered_reference() {
+        // Members handed over in descending-support (worst-case) and
+        // shuffled orders: the arena miner re-sorts rarest-first
+        // internally, the reference processes as given — the emitted
+        // *sets* must be identical for tidsets, bitmaps and diffsets.
+        use crate::data::quest::{self, QuestParams};
+        use crate::fim::tidset::VerticalDb;
+
+        let db = quest::generate(&QuestParams::tid(8.0, 4.0, 150, 30), 5);
+        for min_sup in [2u32, 4, 7] {
+            let vdb = VerticalDb::build(&db, min_sup);
+            let mut orders: Vec<Vec<(Item, Tidset)>> = Vec::new();
+            let mut desc = vdb.items.clone();
+            desc.sort_by(|a, b| b.1.len().cmp(&a.1.len()));
+            orders.push(desc);
+            let mut shuffled = vdb.items.clone();
+            if shuffled.len() > 2 {
+                shuffled.swap(0, shuffled.len() / 2);
+                shuffled.reverse();
+            }
+            orders.push(shuffled);
+            for members in &orders {
+                let mut want = Vec::new();
+                reference::bottom_up::<Tidset>(&[], members, min_sup, &mut want);
+                sort_frequents(&mut want);
+
+                let mut got = Vec::new();
+                bottom_up::<Tidset, _>(&[], members, min_sup, &mut got);
+                sort_frequents(&mut got);
+                assert_eq!(got, want, "tidset min_sup={min_sup}");
+
+                let bitmap_members: Vec<(Item, TidBitmap)> = members
+                    .iter()
+                    .map(|(i, t)| (*i, TidBitmap::from_tids(db.len(), t.iter().copied())))
+                    .collect();
+                let mut got = Vec::new();
+                bottom_up::<TidBitmap, _>(&[], &bitmap_members, min_sup, &mut got);
+                sort_frequents(&mut got);
+                assert_eq!(got, want, "bitmap min_sup={min_sup}");
+
+                let mut got = Vec::new();
+                bottom_up_diffset(&[], members, min_sup, &mut got);
+                sort_frequents(&mut got);
+                assert_eq!(got, want, "diffset min_sup={min_sup}");
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_and_topk_sinks_agree_with_vec_sink() {
+        use crate::fim::sink::{CountSink, PooledSink, TopKSink};
+
+        let members = example_members();
+        let mut scratch = MineScratch::<Tidset>::new();
+        for min_sup in 1..=4 {
+            let mut collected: Vec<Frequent> = Vec::new();
+            bottom_up_with(&mut scratch, &[], &members, min_sup, &mut collected);
+
+            let mut pooled = PooledSink::new();
+            bottom_up_with(&mut scratch, &[], &members, min_sup, &mut pooled);
+            assert_eq!(pooled.decode(), collected, "min_sup={min_sup}");
+
+            let mut count = CountSink::new();
+            bottom_up_with(&mut scratch, &[], &members, min_sup, &mut count);
+            assert_eq!(count.count as usize, collected.len());
+
+            let mut topk = TopKSink::new(3);
+            bottom_up_with(&mut scratch, &[], &members, min_sup, &mut topk);
+            let kept = topk.into_sorted();
+            assert_eq!(kept.len(), collected.len().min(3));
+            let max_sup = collected.iter().map(|f| f.support).max().unwrap();
+            assert_eq!(kept.first().map(|f| f.support), Some(max_sup));
         }
     }
 

@@ -10,6 +10,7 @@
 use super::bitmap::TidBitmap;
 use super::bottomup::{bottom_up_with, MineScratch, TidRepr};
 use super::itemset::{Frequent, Item, Tid};
+use super::sink::FrequentSink;
 use super::tidset::{Tidset, VerticalDb};
 use super::trimatrix::TriMatrix;
 
@@ -36,8 +37,21 @@ impl<R: TidRepr> EqClass<R> {
     /// across every class mined through it.
     pub fn mine_with(&self, scratch: &mut MineScratch<R>, min_sup: u32) -> Vec<Frequent> {
         let mut out = Vec::new();
-        bottom_up_with(scratch, &[self.prefix], &self.members, min_sup, &mut out);
+        self.mine_into(scratch, min_sup, &mut out);
         out
+    }
+
+    /// [`EqClass::mine_with`], emitting into an arbitrary
+    /// [`FrequentSink`] instead of materializing a `Vec` — with a
+    /// [`super::sink::PooledSink`] the whole class mines without a
+    /// single steady-state heap allocation.
+    pub fn mine_into<S: FrequentSink + ?Sized>(
+        &self,
+        scratch: &mut MineScratch<R>,
+        min_sup: u32,
+        out: &mut S,
+    ) {
+        bottom_up_with(scratch, &[self.prefix], &self.members, min_sup, out);
     }
 
     /// Workload proxy used by the partitioner ablation (§4.5): number of
@@ -116,13 +130,27 @@ impl EqClass<Tidset> {
         &self,
         scratch: &mut AutoScratch,
         min_sup: u32,
-        _universe: usize,
+        universe: usize,
     ) -> Vec<Frequent> {
-        let total: usize = self.members.iter().map(|(_, t)| t.len()).sum();
         let mut out = Vec::new();
+        self.mine_auto_into(scratch, min_sup, universe, &mut out);
+        out
+    }
+
+    /// [`EqClass::mine_auto_with`], emitting into an arbitrary
+    /// [`FrequentSink`] — the representation choice and local-universe
+    /// remap are unchanged; only the emission path is pluggable.
+    pub fn mine_auto_into<S: FrequentSink + ?Sized>(
+        &self,
+        scratch: &mut AutoScratch,
+        min_sup: u32,
+        _universe: usize,
+        out: &mut S,
+    ) {
+        let total: usize = self.members.iter().map(|(_, t)| t.len()).sum();
         if total == 0 {
-            bottom_up_with(&mut scratch.tidset, &[self.prefix], &self.members, min_sup, &mut out);
-            return out;
+            bottom_up_with(&mut scratch.tidset, &[self.prefix], &self.members, min_sup, out);
+            return;
         }
         // Class tid span [lo, hi): member tidsets are sorted, so the
         // span ends come from first/last elements only.
@@ -165,12 +193,11 @@ impl EqClass<Tidset> {
                 scratch.members.push((*item, bm));
             }
             let prefix = [self.prefix];
-            bottom_up_with(&mut scratch.bitmap, &prefix, &scratch.members, min_sup, &mut out);
+            bottom_up_with(&mut scratch.bitmap, &prefix, &scratch.members, min_sup, out);
             scratch.pool.extend(scratch.members.drain(..).map(|(_, bm)| bm));
         } else {
-            bottom_up_with(&mut scratch.tidset, &[self.prefix], &self.members, min_sup, &mut out);
+            bottom_up_with(&mut scratch.tidset, &[self.prefix], &self.members, min_sup, out);
         }
-        out
     }
 }
 

@@ -8,6 +8,7 @@ pub mod eqclass;
 pub mod fpgrowth;
 pub mod itemset;
 pub mod rules;
+pub mod sink;
 pub mod tidset;
 pub mod transaction;
 pub mod trie;
@@ -22,6 +23,7 @@ pub use itemset::{
     is_subset, prefix_join, sort_frequents, Frequent, Item, ItemSet, MinSup, Tid,
 };
 pub use rules::{generate_rules, rules_to_json, Rule};
+pub use sink::{CollectSink, CountSink, FrequentSink, PooledSink, TopKSink};
 pub use tidset::{
     difference, difference_into, intersect, intersect_count, intersect_into, Tidset, VerticalDb,
 };

@@ -1,0 +1,373 @@
+//! Output sinks for the mining emission path.
+//!
+//! Every miner in the crate (the arena bottom-up search, the equivalence
+//! classes, the sequential oracles, the RDD variants' Phase-3 tasks, the
+//! streaming delta re-mine) emits frequent itemsets through one trait,
+//! [`FrequentSink`], instead of pushing into a hard-wired
+//! `Vec<Frequent>`. The sink decides what an emission costs:
+//!
+//! * [`CollectSink`] / `Vec<Frequent>` — materialize every itemset (the
+//!   pre-redesign behavior and the compatibility default; one heap
+//!   allocation per emitted itemset).
+//! * [`PooledSink`] — a flat arena: one shared items buffer plus
+//!   `(offset, len, support)` records. Zero allocations per emission in
+//!   steady state (buffers grow to the high-water mark and are reused
+//!   across [`PooledSink::clear`]), summable across partitions with
+//!   [`PooledSink::absorb`], and decodable back to [`Frequent`]s.
+//! * [`TopKSink`] — a bounded min-heap keeping only the `k` strongest
+//!   patterns (the serving workload: "top rules now", without
+//!   materializing the full result).
+//! * [`CountSink`] — cardinality only; nothing is stored.
+//!
+//! The `items` slice passed to [`FrequentSink::emit`] is only valid for
+//! the duration of the call (miners reuse the buffer), so sinks that
+//! keep itemsets must copy it out.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::itemset::{Frequent, Item};
+
+/// Receiver for mined frequent itemsets.
+///
+/// `items` is sorted ascending and borrowed from the miner's reusable
+/// emission buffer — copy it if the sink outlives the call.
+pub trait FrequentSink {
+    /// Record one frequent itemset with its support count.
+    fn emit(&mut self, items: &[Item], support: u32);
+}
+
+/// The compatibility default: every emission becomes an owned
+/// [`Frequent`]. Existing APIs that return `Vec<Frequent>` are thin
+/// wrappers over this impl.
+impl FrequentSink for Vec<Frequent> {
+    fn emit(&mut self, items: &[Item], support: u32) {
+        self.push(Frequent::new(items.to_vec(), support));
+    }
+}
+
+/// Named wrapper over the `Vec<Frequent>` sink, for call sites that want
+/// the sink spelled out (`CollectSink::new()` … `into_vec()`).
+#[derive(Debug, Clone, Default)]
+pub struct CollectSink {
+    /// The collected itemsets, in emission order.
+    pub frequents: Vec<Frequent>,
+}
+
+impl CollectSink {
+    /// Empty sink.
+    pub fn new() -> CollectSink {
+        CollectSink::default()
+    }
+
+    /// Unwrap the collected itemsets.
+    pub fn into_vec(self) -> Vec<Frequent> {
+        self.frequents
+    }
+}
+
+impl FrequentSink for CollectSink {
+    fn emit(&mut self, items: &[Item], support: u32) {
+        self.frequents.emit(items, support);
+    }
+}
+
+/// Flat-arena sink: one shared items buffer plus `(offset, len,
+/// support)` records — the ROADMAP "emit pooling" representation.
+///
+/// In steady state (after [`PooledSink::clear`], with capacity from a
+/// previous run) an emission is two `extend`s into warm buffers: **zero
+/// heap allocations**, measured by the `emission/pooled_vs_collect`
+/// rows of `benches/fim_micro.rs` under `--features alloc-count`.
+///
+/// Per-partition pools are summed with [`PooledSink::absorb`] and
+/// decoded driver-side with [`PooledSink::decode`] or replayed into
+/// another sink with [`PooledSink::replay`].
+#[derive(Debug, Clone, Default)]
+pub struct PooledSink {
+    /// All emitted itemsets, concatenated.
+    items: Vec<Item>,
+    /// One `(offset, len, support)` record per emission.
+    records: Vec<(usize, u32, u32)>,
+}
+
+impl PooledSink {
+    /// Empty pool.
+    pub fn new() -> PooledSink {
+        PooledSink::default()
+    }
+
+    /// Number of emitted itemsets.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True when nothing has been emitted.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Total items held in the arena (diagnostics / sizing).
+    pub fn arena_len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Forget all emissions but keep the buffers — the steady-state
+    /// reuse entry point.
+    pub fn clear(&mut self) {
+        self.items.clear();
+        self.records.clear();
+    }
+
+    /// The `i`-th emission as `(items, support)`.
+    pub fn get(&self, i: usize) -> (&[Item], u32) {
+        let (off, len, support) = self.records[i];
+        (&self.items[off..off + len as usize], support)
+    }
+
+    /// Iterate emissions in order as `(items, support)`.
+    pub fn iter(&self) -> impl Iterator<Item = (&[Item], u32)> {
+        self.records.iter().map(|&(off, len, support)| {
+            (&self.items[off..off + len as usize], support)
+        })
+    }
+
+    /// Append every emission of `other` (per-partition summation; the
+    /// records are re-based onto this pool's arena).
+    pub fn absorb(&mut self, other: &PooledSink) {
+        for (items, support) in other.iter() {
+            self.emit(items, support);
+        }
+    }
+
+    /// Re-emit every record into another sink (e.g. decode a shipped
+    /// per-partition pool into the driver's output).
+    pub fn replay<S: FrequentSink + ?Sized>(&self, out: &mut S) {
+        for (items, support) in self.iter() {
+            out.emit(items, support);
+        }
+    }
+
+    /// Materialize owned [`Frequent`]s (the boundary where the
+    /// allocation-free representation ends by design).
+    pub fn decode(&self) -> Vec<Frequent> {
+        self.iter().map(|(items, support)| Frequent::new(items.to_vec(), support)).collect()
+    }
+}
+
+impl FrequentSink for PooledSink {
+    fn emit(&mut self, items: &[Item], support: u32) {
+        let off = self.items.len();
+        self.items.extend_from_slice(items);
+        self.records.push((off, items.len() as u32, support));
+    }
+}
+
+/// Strength order used by [`TopKSink`] and its sort-then-truncate
+/// oracle: higher support first, then shorter itemsets, then
+/// lexicographically smaller items. Returns `Greater` when `a` is the
+/// stronger pattern.
+fn strength(a_items: &[Item], a_support: u32, b_items: &[Item], b_support: u32) -> Ordering {
+    a_support
+        .cmp(&b_support)
+        .then_with(|| b_items.len().cmp(&a_items.len()))
+        .then_with(|| b_items.cmp(a_items))
+}
+
+/// Heap entry ordered by [`strength`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Ranked(Frequent);
+
+impl Ord for Ranked {
+    fn cmp(&self, other: &Self) -> Ordering {
+        strength(&self.0.items, self.0.support, &other.0.items, other.0.support)
+    }
+}
+
+impl PartialOrd for Ranked {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Bounded sink keeping only the `k` strongest patterns (by support,
+/// ties broken toward shorter then lexicographically smaller itemsets —
+/// a total order, so the result is deterministic and equals the
+/// sort-then-truncate oracle).
+///
+/// A weak emission costs one comparison against the current weakest
+/// kept pattern and nothing else; only emissions that enter the top-k
+/// allocate.
+#[derive(Debug, Clone)]
+pub struct TopKSink {
+    k: usize,
+    /// Min-heap over strength: the root is the weakest kept pattern.
+    heap: BinaryHeap<std::cmp::Reverse<Ranked>>,
+}
+
+impl TopKSink {
+    /// Keep the `k` strongest emissions.
+    pub fn new(k: usize) -> TopKSink {
+        TopKSink { k, heap: BinaryHeap::with_capacity(k.min(1024)) }
+    }
+
+    /// Configured bound.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Patterns currently held (≤ `k`).
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// True when nothing has been kept.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// The kept patterns, strongest first.
+    pub fn into_sorted(self) -> Vec<Frequent> {
+        self.heap.into_sorted_vec().into_iter().map(|std::cmp::Reverse(r)| r.0).collect()
+    }
+}
+
+impl FrequentSink for TopKSink {
+    fn emit(&mut self, items: &[Item], support: u32) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(std::cmp::Reverse(Ranked(Frequent::new(items.to_vec(), support))));
+            return;
+        }
+        let weakest = &self.heap.peek().expect("non-empty at capacity").0 .0;
+        if strength(items, support, &weakest.items, weakest.support) == Ordering::Greater {
+            self.heap.pop();
+            self.heap.push(std::cmp::Reverse(Ranked(Frequent::new(items.to_vec(), support))));
+        }
+    }
+}
+
+/// Counts emissions without storing anything — pattern-count probes
+/// (e.g. threshold calibration) at zero memory.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CountSink {
+    /// Number of itemsets emitted.
+    pub count: u64,
+    /// Length of the longest emitted itemset.
+    pub max_len: usize,
+}
+
+impl CountSink {
+    /// Zeroed counter.
+    pub fn new() -> CountSink {
+        CountSink::default()
+    }
+}
+
+impl FrequentSink for CountSink {
+    fn emit(&mut self, items: &[Item], _support: u32) {
+        self.count += 1;
+        self.max_len = self.max_len.max(items.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(sink: &mut impl FrequentSink) {
+        sink.emit(&[1], 5);
+        sink.emit(&[2], 4);
+        sink.emit(&[1, 2], 4);
+        sink.emit(&[3], 2);
+        sink.emit(&[1, 2, 3], 2);
+    }
+
+    #[test]
+    fn vec_and_collect_sinks_agree() {
+        let mut v: Vec<Frequent> = Vec::new();
+        let mut c = CollectSink::new();
+        feed(&mut v);
+        feed(&mut c);
+        assert_eq!(v, c.into_vec());
+        assert_eq!(v[0], Frequent::new(vec![1], 5));
+    }
+
+    #[test]
+    fn pooled_round_trips_and_reuses_capacity() {
+        let mut p = PooledSink::new();
+        let mut v: Vec<Frequent> = Vec::new();
+        feed(&mut p);
+        feed(&mut v);
+        assert_eq!(p.len(), v.len());
+        assert_eq!(p.decode(), v);
+        assert_eq!(p.get(2), (&[1u32, 2][..], 4));
+        // clear() keeps capacity; refilling identical content must not grow.
+        let (ic, rc) = (p.items.capacity(), p.records.capacity());
+        p.clear();
+        assert!(p.is_empty());
+        feed(&mut p);
+        assert_eq!(p.items.capacity(), ic);
+        assert_eq!(p.records.capacity(), rc);
+        assert_eq!(p.decode(), v);
+    }
+
+    #[test]
+    fn pooled_absorb_and_replay_preserve_all_records() {
+        let mut a = PooledSink::new();
+        a.emit(&[7], 3);
+        let mut b = PooledSink::new();
+        b.emit(&[8, 9], 2);
+        b.emit(&[9], 6);
+        a.absorb(&b);
+        assert_eq!(a.len(), 3);
+        let mut out: Vec<Frequent> = Vec::new();
+        a.replay(&mut out);
+        assert_eq!(
+            out,
+            vec![
+                Frequent::new(vec![7], 3),
+                Frequent::new(vec![8, 9], 2),
+                Frequent::new(vec![9], 6),
+            ]
+        );
+    }
+
+    #[test]
+    fn topk_matches_sort_then_truncate_oracle() {
+        let mut all: Vec<Frequent> = Vec::new();
+        feed(&mut all);
+        for k in 0..=6 {
+            let mut sink = TopKSink::new(k);
+            feed(&mut sink);
+            let mut want = all.clone();
+            want.sort_by(|a, b| strength(&b.items, b.support, &a.items, a.support));
+            want.truncate(k);
+            assert_eq!(sink.into_sorted(), want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn topk_tie_break_is_deterministic() {
+        // All supports equal: shorter itemsets win, then lex order.
+        let mut sink = TopKSink::new(2);
+        sink.emit(&[5, 6], 3);
+        sink.emit(&[9], 3);
+        sink.emit(&[2], 3);
+        sink.emit(&[1, 2, 3], 3);
+        assert_eq!(
+            sink.into_sorted(),
+            vec![Frequent::new(vec![2], 3), Frequent::new(vec![9], 3)]
+        );
+    }
+
+    #[test]
+    fn count_sink_counts() {
+        let mut c = CountSink::new();
+        feed(&mut c);
+        assert_eq!(c.count, 5);
+        assert_eq!(c.max_len, 3);
+    }
+}

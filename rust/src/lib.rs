@@ -35,6 +35,9 @@
 //!
 //! ## Quickstart
 //!
+//! Mining goes through the unified façade: pick a [`algorithms::Variant`]
+//! from the registry and run it in a [`algorithms::MiningSession`]:
+//!
 //! ```
 //! use rdd_eclat::prelude::*;
 //!
@@ -46,9 +49,28 @@
 //!     vec![1, 2, 3, 4],
 //! ]);
 //! let ctx = ClusterContext::builder().cores(2).build();
-//! let result = EclatV4::default().run_on(&ctx, &db, MinSup::count(2)).unwrap();
+//! let result = MiningSession::on(&ctx)
+//!     .db(&db)
+//!     .min_sup(MinSup::count(2))
+//!     .run(Variant::V4)
+//!     .unwrap();
 //! assert!(result.contains(&[1, 2], 3));
 //! assert!(result.contains(&[1, 2, 3], 2));
+//! ```
+//!
+//! Mining paths emit through pluggable [`fim::FrequentSink`]s — collect
+//! to a `Vec<Frequent>` (the default), pool into a flat zero-allocation
+//! arena ([`fim::PooledSink`]), keep only the strongest patterns
+//! ([`fim::TopKSink`]), or just count ([`fim::CountSink`]):
+//!
+//! ```
+//! use rdd_eclat::prelude::*;
+//!
+//! let db = Database::from_rows(vec![vec![1, 2], vec![1, 2, 3], vec![2, 3]]);
+//! let mut top = TopKSink::new(2);
+//! SeqEclat::mine_into(&db, MinSup::count(2), &mut top);
+//! let strongest = top.into_sorted();
+//! assert_eq!(strongest[0], Frequent::new(vec![2], 3));
 //! ```
 
 pub mod algorithms;
@@ -68,13 +90,16 @@ pub mod util;
 pub mod prelude {
     pub use crate::algorithms::{
         Algorithm, EclatOptions, EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, FimResult,
-        RddApriori, SeqApriori, SeqEclat,
+        MiningSession, RddApriori, SeqApriori, SeqEclat, SeqEclatDiffset, SeqFpGrowth, Variant,
     };
     pub use crate::conf::EclatConfig;
     pub use crate::data::{Database, DatasetSpec};
     pub use crate::engine::{ClusterContext, Rdd};
     pub use crate::error::{Error, Result};
-    pub use crate::fim::{generate_rules, sort_frequents, Frequent, Item, ItemSet, MinSup, Tid};
+    pub use crate::fim::{
+        generate_rules, sort_frequents, CollectSink, CountSink, Frequent, FrequentSink, Item,
+        ItemSet, MinSup, PooledSink, Tid, TopKSink,
+    };
     pub use crate::stream::{
         BatchSnapshot, BatchSource, IngestConfig, MineMode, ServingSnapshot, SnapshotHandle,
         StreamConfig, StreamService, StreamingMiner, WindowSpec,

@@ -28,7 +28,7 @@ use crate::engine::ClusterContext;
 use crate::error::Result;
 use crate::fim::{
     bottom_up_with, generate_rules, rules_to_json, sort_frequents, Frequent, Item, MineScratch,
-    MinSup, Rule, TidBitmap,
+    MinSup, PooledSink, Rule, TidBitmap,
 };
 use crate::util::json::json_str;
 use crate::util::Stopwatch;
@@ -436,7 +436,9 @@ impl std::fmt::Debug for StreamingMiner {
 /// in parallel on the context's executor pool — the same scatter/gather
 /// the batch Eclat variants use for Phase 3. Each task builds its class
 /// members with bounded intersections (infrequent candidates abort
-/// mid-sweep and allocate nothing) and mines through its own arena.
+/// mid-sweep and allocate nothing), mines through its own arena, and
+/// emits into a flat [`PooledSink`] (one arena per task instead of one
+/// `Vec` per itemset), decoded on the driver.
 fn mine_atoms(
     ctx: &ClusterContext,
     atoms: Vec<(Item, TidBitmap, u32)>,
@@ -460,7 +462,7 @@ fn mine_atoms(
                         members.push((*item_j, std::mem::replace(&mut buf, TidBitmap::new(0))));
                     }
                 }
-                let mut found = Vec::new();
+                let mut found = PooledSink::new();
                 if !members.is_empty() {
                     let mut scratch = MineScratch::new();
                     bottom_up_with(&mut scratch, &[*item_i], &members, min_sup, &mut found);
@@ -470,7 +472,7 @@ fn mine_atoms(
         })
         .collect();
     for found in ctx.inner.pool.run_all(tasks)? {
-        out.extend(found);
+        found.replay(&mut out);
     }
     Ok(out)
 }

@@ -201,6 +201,31 @@ fn stream_serve_mode_runs_async_and_writes_snapshot() {
 }
 
 #[test]
+fn list_algos_prints_the_registry() {
+    let out = repro().args(["run", "--list-algos"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for name in [
+        "eclatV1", "eclatV2", "eclatV3", "eclatV4", "eclatV5", "apriori", "seq-eclat",
+        "seq-declat", "seq-apriori", "seq-fpgrowth",
+    ] {
+        assert!(text.contains(name), "{name} missing:\n{text}");
+    }
+    // One-line descriptions ride along.
+    assert!(text.contains("reverse-hash"), "{text}");
+}
+
+#[test]
+fn unknown_algo_error_enumerates_valid_names() {
+    let out = repro().args(["run", "--algo", "telepathy"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("telepathy"), "{err}");
+    assert!(err.contains("valid names"), "{err}");
+    assert!(err.contains("eclatV4") && err.contains("seq-fpgrowth"), "{err}");
+}
+
+#[test]
 fn bad_usage_exits_nonzero_with_help() {
     let out = repro().args(["run", "--algo", "not-an-algo"]).output().unwrap();
     assert!(!out.status.success());

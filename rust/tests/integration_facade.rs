@@ -1,0 +1,195 @@
+//! Façade integration: the `Variant` registry, the `MiningSession`
+//! builder, and sink parity — every public mining path must agree with
+//! the pre-redesign oracles regardless of how emissions are routed.
+
+use rdd_eclat::algorithms::{EclatV1, EclatV2, EclatV3, EclatV4, EclatV5};
+use rdd_eclat::data::clickstream::{self, ClickParams};
+use rdd_eclat::data::quest::{self, QuestParams};
+use rdd_eclat::fim::bottomup::reference;
+use rdd_eclat::fim::{construct_classes, MineScratch, Tidset, VerticalDb};
+use rdd_eclat::prelude::*;
+
+fn ctx() -> ClusterContext {
+    ClusterContext::builder().cores(2).build()
+}
+
+fn small_dbs() -> Vec<(&'static str, Database)> {
+    let click = ClickParams {
+        sessions: 200,
+        items: 50,
+        avg_len: 5.0,
+        skew: 1.1,
+        locality: 0.5,
+        radius: 6,
+        drift: 0.0,
+    };
+    vec![
+        ("quest_dense", quest::generate(&QuestParams::tid(10.0, 4.0, 150, 20), 13)),
+        ("quest_sparse", quest::generate(&QuestParams::tid(6.0, 3.0, 250, 50), 29)),
+        ("clickstream", clickstream::generate(&click, 7)),
+    ]
+}
+
+/// Strength order of `TopKSink` (support desc, shorter first, then lex)
+/// — duplicated here as the independent oracle.
+fn sort_by_strength(v: &mut [Frequent]) {
+    v.sort_by(|a, b| {
+        b.support
+            .cmp(&a.support)
+            .then_with(|| a.items.len().cmp(&b.items.len()))
+            .then_with(|| a.items.cmp(&b.items))
+    });
+}
+
+#[test]
+fn every_variant_runs_through_the_facade_and_all_agree() {
+    // All ten registry entries are exact miners, so their itemset sets
+    // must be identical — exercised through MiningSession, not concrete
+    // types.
+    let db = Database::from_rows(vec![
+        vec![1, 3, 4],
+        vec![2, 3, 5],
+        vec![1, 2, 3, 5],
+        vec![2, 5],
+        vec![1, 3, 5],
+        vec![2, 3, 5],
+    ]);
+    let ctx = ctx();
+    let session = MiningSession::on(&ctx).db(&db).min_sup(MinSup::count(2));
+    let mut oracle: Option<Vec<Frequent>> = None;
+    for &v in Variant::all() {
+        let result = session.run(v).unwrap_or_else(|e| panic!("{v}: {e}"));
+        assert_eq!(result.algorithm, v.name());
+        let mut got = result.frequents;
+        sort_frequents(&mut got);
+        match &oracle {
+            None => oracle = Some(got),
+            Some(want) => assert_eq!(&got, want, "{v}"),
+        }
+    }
+}
+
+#[test]
+fn session_matches_direct_construction_for_all_rdd_variants() {
+    // Bypassing the façade (concrete types, explicit options) must give
+    // byte-identical results and the same partition-load capture.
+    let db = quest::generate(&QuestParams::tid(8.0, 4.0, 120, 18), 3);
+    let ctx = ctx();
+    let opts = EclatOptions { tri_matrix: true, partitions: 4, ..Default::default() };
+    let session =
+        MiningSession::on(&ctx).db(&db).min_sup(MinSup::fraction(0.05)).options(opts.clone());
+    let direct: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(EclatV1::with_options(opts.clone())),
+        Box::new(EclatV2::with_options(opts.clone())),
+        Box::new(EclatV3::with_options(opts.clone())),
+        Box::new(EclatV4::with_options(opts.clone())),
+        Box::new(EclatV5::with_options(opts)),
+    ];
+    for (v, algo) in Variant::RDD_ECLAT.iter().zip(&direct) {
+        let via_session = session.run(*v).unwrap();
+        let via_direct = algo.run_on(&ctx, &db, MinSup::fraction(0.05)).unwrap();
+        let (mut a, mut b) = (via_session.frequents, via_direct.frequents);
+        sort_frequents(&mut a);
+        sort_frequents(&mut b);
+        assert_eq!(a, b, "{v}");
+        assert_eq!(
+            via_session.partition_loads.len(),
+            via_direct.partition_loads.len(),
+            "{v} load capture"
+        );
+    }
+}
+
+#[test]
+fn sink_parity_across_classes_seeds_and_thresholds() {
+    // CollectSink == decoded PooledSink == the pre-refactor reference,
+    // per class, across datasets and a min_sup sweep; shared scratches
+    // and a shared pool give recycled buffers every chance to leak.
+    let mut scratch = MineScratch::<Tidset>::new();
+    let mut pool = PooledSink::new();
+    for (tag, db) in &small_dbs() {
+        for min_sup in [2u32, 3, 5, 8] {
+            let vdb = VerticalDb::build(db, min_sup);
+            for class in construct_classes(&vdb, min_sup, None) {
+                let mut want = Vec::new();
+                reference::bottom_up::<Tidset>(&[class.prefix], &class.members, min_sup, &mut want);
+                sort_frequents(&mut want);
+
+                let mut collected: Vec<Frequent> = Vec::new();
+                class.mine_into(&mut scratch, min_sup, &mut collected);
+                sort_frequents(&mut collected);
+                assert_eq!(collected, want, "{tag} collect prefix={} sup={min_sup}", class.prefix);
+
+                pool.clear();
+                class.mine_into(&mut scratch, min_sup, &mut pool);
+                let mut decoded = pool.decode();
+                sort_frequents(&mut decoded);
+                assert_eq!(decoded, want, "{tag} pooled prefix={} sup={min_sup}", class.prefix);
+
+                let mut count = CountSink::new();
+                class.mine_into(&mut scratch, min_sup, &mut count);
+                assert_eq!(count.count as usize, want.len(), "{tag} count sink");
+            }
+        }
+    }
+}
+
+#[test]
+fn whole_db_pooled_mining_matches_collect_mining() {
+    for (tag, db) in &small_dbs() {
+        for min_sup in [2u32, 5, 9] {
+            let mut want = SeqEclat::mine(db, MinSup::count(min_sup));
+            sort_frequents(&mut want);
+            let mut pool = PooledSink::new();
+            SeqEclat::mine_into(db, MinSup::count(min_sup), &mut pool);
+            let mut got = pool.decode();
+            sort_frequents(&mut got);
+            assert_eq!(got, want, "{tag} sup={min_sup}");
+
+            // Diffset path through a pool as well.
+            let mut want_d = SeqEclatDiffset::mine(db, MinSup::count(min_sup));
+            sort_frequents(&mut want_d);
+            assert_eq!(want_d, want, "{tag} diffset parity sup={min_sup}");
+        }
+    }
+}
+
+#[test]
+fn topk_sink_matches_sort_then_truncate_oracle() {
+    for (tag, db) in &small_dbs() {
+        for min_sup in [3u32, 6] {
+            let mut all = SeqEclat::mine(db, MinSup::count(min_sup));
+            sort_by_strength(&mut all);
+            for k in [0usize, 1, 7, 50, 10_000] {
+                let mut sink = TopKSink::new(k);
+                SeqEclat::mine_into(db, MinSup::count(min_sup), &mut sink);
+                let got = sink.into_sorted();
+                let mut want = all.clone();
+                want.truncate(k);
+                assert_eq!(got, want, "{tag} sup={min_sup} k={k}");
+            }
+        }
+    }
+}
+
+#[test]
+fn facade_fimresult_contains_accepts_permuted_queries() {
+    let db = Database::from_rows(vec![vec![1, 2, 3], vec![1, 2, 3], vec![2, 3]]);
+    let ctx = ctx();
+    let r = MiningSession::on(&ctx).db(&db).min_sup(MinSup::count(2)).run(Variant::V5).unwrap();
+    assert!(r.contains(&[1, 2, 3], 2));
+    assert!(r.contains(&[3, 2, 1], 2), "permuted query must match");
+    assert!(r.contains(&[3, 2], 3));
+}
+
+#[test]
+fn list_registry_is_complete_and_parseable() {
+    assert_eq!(Variant::all().len(), 10);
+    for &v in Variant::all() {
+        let parsed: Variant = v.name().parse().unwrap();
+        assert_eq!(parsed, v);
+        assert!(!v.describe().is_empty());
+    }
+    let err = "bogus".parse::<Variant>().unwrap_err().to_string();
+    assert!(err.contains("eclatV1") && err.contains("seq-fpgrowth"), "{err}");
+}
