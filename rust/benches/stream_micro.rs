@@ -142,6 +142,41 @@ fn main() {
     let ingest_speedup = report.rows()[2].mean() / report.rows()[3].mean().max(1e-12);
     println!("async ingest producer-side speedup over sync: {ingest_speedup:.0}x per push\n");
 
+    // Sharded store sweep: per-emission cost of the same steady-state
+    // workload with the store/mining sharded 1..8 ways. 1 shard is the
+    // classic path; the others scatter-gather over the engine pool.
+    let sharded_base = report.rows().len();
+    let mut sharded_finals = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let cfg = StreamConfig::new(WindowSpec::sliding(w.window, 1), MinSup::count(w.min_sup))
+            .shards(shards);
+        let mut miner = StreamingMiner::new(ClusterContext::builder().build(), cfg);
+        let mut feed = batches.iter().cloned();
+        for _ in 0..w.window {
+            let _ = miner.push_batch(feed.next().expect("fill batches")).expect("push");
+        }
+        let mut last_len = 0usize;
+        report.add(bench.run(format!("stream/sharded/{shards}shard_emission"), || {
+            let batch = feed.next().expect("measured batches pre-generated");
+            let snap = miner.push_batch(batch).expect("push").expect("slide 1 emits every batch");
+            last_len = snap.frequents.len();
+            black_box(last_len)
+        }));
+        sharded_finals.push((shards, miner.window_txns(), last_len));
+    }
+    // Same stream prefix at every shard count: windows and final itemset
+    // counts must be shard-count invariant (and match the 1-shard row).
+    for &(shards, txns, itemsets) in &sharded_finals[1..] {
+        assert_eq!(txns, sharded_finals[0].1, "{shards}-shard window diverged");
+        assert_eq!(itemsets, sharded_finals[0].2, "{shards}-shard mining diverged");
+    }
+    let one_shard = report.rows()[sharded_base].mean().max(1e-12);
+    for (i, &(shards, ..)) in sharded_finals.iter().enumerate().skip(1) {
+        let ratio = one_shard / report.rows()[sharded_base + i].mean().max(1e-12);
+        println!("{shards}-shard emission speedup over 1-shard: {ratio:.2}x");
+    }
+    println!();
+
     report.write_csv("bench_stream_micro.csv").expect("write csv");
     println!("wrote results/bench_stream_micro.csv");
 

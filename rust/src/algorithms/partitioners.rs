@@ -75,6 +75,14 @@ impl ReverseHashClassPartitioner {
     pub fn new(p: usize) -> Self {
         ReverseHashClassPartitioner { p: p.max(1) }
     }
+
+    /// Route an *item* (rather than a dense class key) to a shard — the
+    /// sharded streaming store reuses the reverse-hash dealing to spread
+    /// item columns over store shards with the same anti-clustering
+    /// property the mining classes get.
+    pub fn shard_of_item(&self, item: crate::fim::Item) -> usize {
+        self.partition(&(item as ClassKey))
+    }
 }
 
 impl Partitioner<ClassKey> for ReverseHashClassPartitioner {
@@ -149,6 +157,18 @@ mod tests {
         // Both are far better than one-class-per-partition (default), whose
         // max/mean over used partitions is ~2x at this shape.
         assert!(ih < 1.25 && ir < 1.25, "hash {ih} rev {ir}");
+    }
+
+    #[test]
+    fn shard_of_item_matches_class_routing_and_stays_in_range() {
+        for p in [1usize, 2, 4, 7] {
+            let part = ReverseHashClassPartitioner::new(p);
+            for item in 0u32..300 {
+                let s = part.shard_of_item(item);
+                assert!(s < p);
+                assert_eq!(s, part.partition(&(item as ClassKey)), "item {item}, p {p}");
+            }
+        }
     }
 
     #[test]

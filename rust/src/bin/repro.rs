@@ -67,6 +67,7 @@ fn app() -> App {
                 .opt("min-sup", "fraction (0,1] or absolute count (>1)")
                 .opt("min-conf", "minimum rule confidence (default 0.8)")
                 .opt("cores", "executor cores (default: all)")
+                .opt("shards", "store shards mined in parallel per emission (default 1)")
                 .opt("mode", "incremental | from-scratch (default incremental)")
                 .opt("interval", "inter-batch pacing in milliseconds (default 0)")
                 .opt("json", "write the final snapshot (itemsets + rules) as JSON")
@@ -309,8 +310,12 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
         _ => args.get_parse("batches", 60usize)?,
     };
     let interval_ms: u64 = args.get_parse("interval", 0u64)?;
+    let shards: usize = args.get_parse("shards", 1usize)?;
     if batch == 0 || window == 0 || slide == 0 {
         return Err(Error::Usage("--batch, --window and --slide must be >= 1".into()));
+    }
+    if shards == 0 {
+        return Err(Error::Usage("--shards must be >= 1".into()));
     }
     let mode = match args.get("mode").unwrap_or("incremental") {
         "incremental" | "inc" => MineMode::Incremental,
@@ -338,10 +343,11 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
     let ctx = ClusterContext::builder().cores(cores).build();
     let stream_cfg = StreamConfig::new(WindowSpec::sliding(window, slide), cfg.min_sup_typed()?)
         .mode(mode)
-        .min_conf(cfg.min_conf);
+        .min_conf(cfg.min_conf)
+        .shards(shards);
     println!(
         "streaming {} txns/batch, window {window} batches slide {slide}, min_sup {} \
-         min_conf {} ({mode:?}, {cores} cores)",
+         min_conf {} ({mode:?}, {cores} cores, {shards} shards)",
         batch, cfg.min_sup, cfg.min_conf
     );
     if args.flag("serve") {
@@ -371,6 +377,9 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
         snap.frequents.len(),
         snap.rules.len()
     );
+    if shards > 1 {
+        print_shard_stats(&miner.shard_stats());
+    }
     for r in snap.rules.iter().take(10) {
         println!("  {r}");
     }
@@ -382,6 +391,21 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
         println!("wrote {path}");
     }
     Ok(())
+}
+
+/// Per-shard store/mining accounting, shared by the sync and `--serve`
+/// paths of `repro stream` when running with `--shards > 1`.
+fn print_shard_stats(shards: &[rdd_eclat::stream::ShardStats]) {
+    println!("per-shard accounting:");
+    for (s, st) in shards.iter().enumerate() {
+        println!(
+            "  shard {s}: {} live rows, {} postings, {} itemsets mined, last mine {}",
+            st.rows,
+            st.postings,
+            st.mined_itemsets,
+            fmt_duration(st.mine_wall)
+        );
+    }
 }
 
 /// `repro stream --serve`: async ingest through a [`StreamService`],
@@ -468,6 +492,9 @@ fn cmd_stream_serve(
          {total_queries} live queries answered",
         stats.batches, stats.emissions, stats.skipped
     );
+    if stats.shards.len() > 1 {
+        print_shard_stats(&stats.shards);
+    }
     println!(
         "final window: {} txns, {} frequent itemsets, {} rules ({} distinct antecedents)",
         snap.window_txns,

@@ -97,6 +97,18 @@ impl PooledSink {
         PooledSink::default()
     }
 
+    /// Empty pool with pre-sized buffers: `arena` items and `records`
+    /// emissions. For callers that know the scale of a run up front —
+    /// e.g. a sharded streaming mine task re-mining a class group whose
+    /// previous emission sizes are known — so the warm-up growth of
+    /// [`PooledSink::new`] is skipped entirely.
+    pub fn with_capacity(arena: usize, records: usize) -> PooledSink {
+        PooledSink {
+            items: Vec::with_capacity(arena),
+            records: Vec::with_capacity(records),
+        }
+    }
+
     /// Number of emitted itemsets.
     pub fn len(&self) -> usize {
         self.records.len()
@@ -312,6 +324,23 @@ mod tests {
         assert_eq!(p.items.capacity(), ic);
         assert_eq!(p.records.capacity(), rc);
         assert_eq!(p.decode(), v);
+    }
+
+    #[test]
+    fn pooled_with_capacity_presizes_and_behaves_identically() {
+        let mut p = PooledSink::with_capacity(16, 8);
+        assert!(p.is_empty());
+        assert!(p.items.capacity() >= 16);
+        assert!(p.records.capacity() >= 8);
+        let (ic, rc) = (p.items.capacity(), p.records.capacity());
+        feed(&mut p);
+        // feed() emits 9 items over 5 records — within the presized
+        // buffers, so no growth.
+        assert_eq!(p.items.capacity(), ic);
+        assert_eq!(p.records.capacity(), rc);
+        let mut fresh = PooledSink::new();
+        feed(&mut fresh);
+        assert_eq!(p.decode(), fresh.decode());
     }
 
     #[test]

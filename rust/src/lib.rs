@@ -101,7 +101,8 @@ pub mod prelude {
         ItemSet, MinSup, PooledSink, Tid, TopKSink,
     };
     pub use crate::stream::{
-        BatchSnapshot, BatchSource, IngestConfig, MineMode, ServingSnapshot, SnapshotHandle,
-        StreamConfig, StreamService, StreamingMiner, WindowSpec,
+        BatchSnapshot, BatchSource, IngestConfig, IngestStats, MineMode, ServingSnapshot,
+        ShardLoad, ShardStats, ShardedVerticalDb, SnapshotHandle, StreamConfig, StreamService,
+        StreamingMiner, WindowSpec,
     };
 }

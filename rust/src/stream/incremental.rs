@@ -173,6 +173,14 @@ impl IncrementalVerticalDb {
         rows
     }
 
+    /// Local tid bounds `(live_lo, next)` — the live window spans
+    /// `[live_lo, next)`. Used by the sharded store to assert that all
+    /// shards stay in the same tid space (identical append/evict/compact
+    /// schedules keep the bounds equal across shards).
+    pub(crate) fn tid_bounds(&self) -> (Tid, Tid) {
+        (self.live_lo, self.next)
+    }
+
     /// Rebase every bitmap onto tid origin 0 once the evicted prefix
     /// exceeds the live span: O(live bits), amortized O(1) per eviction.
     /// Pure renumbering — all pairwise intersection counts are shift

@@ -37,7 +37,7 @@ use std::time::Duration;
 use crate::error::{Error, Result};
 use crate::fim::Item;
 
-use super::job::StreamingMiner;
+use super::job::{ShardStats, StreamingMiner};
 use super::serve::{snapshot_pipe, ServingSnapshot, SnapshotHandle, SnapshotPublisher};
 
 /// Configuration of the async ingest service.
@@ -91,7 +91,7 @@ pub enum Ingest {
 }
 
 /// Lifetime counters of one service.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct IngestStats {
     /// Batches accepted by `push_batch`.
     pub batches: u64,
@@ -100,6 +100,11 @@ pub struct IngestStats {
     /// Emission points skipped under backpressure (each later covered
     /// by a catch-up or subsequent emission).
     pub skipped: u64,
+    /// Per-shard ingest + mining accounting (one entry per store shard;
+    /// a single entry for an unsharded miner). Refreshed by the mining
+    /// loop after every bookkept batch and every published emission, so
+    /// shard imbalance is observable while the service runs.
+    pub shards: Vec<ShardStats>,
 }
 
 /// Queue state shared between producers, the mining loop, and `drain`.
@@ -126,6 +131,9 @@ struct Shared {
     batches: AtomicU64,
     emissions: AtomicU64,
     skipped: AtomicU64,
+    /// Latest per-shard accounting, copied out of the miner by the
+    /// mining loop (the miner itself lives on the loop thread).
+    shard_stats: Mutex<Vec<ShardStats>>,
 }
 
 impl Shared {
@@ -163,6 +171,7 @@ impl StreamService {
             batches: AtomicU64::new(0),
             emissions: AtomicU64::new(0),
             skipped: AtomicU64::new(0),
+            shard_stats: Mutex::new(miner.shard_stats()),
         });
         let (publisher, handle) = snapshot_pipe();
         let worker = {
@@ -219,6 +228,7 @@ impl StreamService {
             batches: self.shared.batches.load(Ordering::SeqCst),
             emissions: self.shared.emissions.load(Ordering::SeqCst),
             skipped: self.shared.skipped.load(Ordering::SeqCst),
+            shards: self.shared.shard_stats.lock().map(|s| s.clone()).unwrap_or_default(),
         }
     }
 
@@ -336,7 +346,10 @@ fn mining_loop(
                 // `push_batch` keeps queueing. Catch it and take the
                 // same clean death path a mining `Err` takes.
                 let due = match catch_unwind(AssertUnwindSafe(|| miner.ingest(rows))) {
-                    Ok(due) => due,
+                    Ok(Ok(due)) => due,
+                    // A failed shard task poisons the store — same
+                    // terminal path as a panic.
+                    Ok(Err(e)) => return die(miner, &shared, e),
                     Err(payload) => {
                         let e = Error::engine(format!(
                             "mining loop panicked: {}",
@@ -345,6 +358,7 @@ fn mining_loop(
                         return die(miner, &shared, e);
                     }
                 };
+                refresh_shard_stats(&shared, &miner);
                 if !due {
                     false
                 } else {
@@ -374,6 +388,7 @@ fn mining_loop(
                 Ok(Ok(snap)) => {
                     publisher.publish(snap);
                     shared.emissions.fetch_add(1, Ordering::SeqCst);
+                    refresh_shard_stats(&shared, &miner);
                     if let Ok(mut st) = shared.lock() {
                         st.unmined = false;
                     }
@@ -391,6 +406,14 @@ fn mining_loop(
                 }
             }
         }
+    }
+}
+
+/// Copy the miner's per-shard accounting into the shared stats cell so
+/// `StreamService::stats` observes it from any thread.
+fn refresh_shard_stats(shared: &Shared, miner: &StreamingMiner) {
+    if let Ok(mut s) = shared.shard_stats.lock() {
+        *s = miner.shard_stats();
     }
 }
 
@@ -503,10 +526,36 @@ mod tests {
             service.push_batch(b).unwrap();
         }
         let snap = handle
-            .wait_for_batch(3, Duration::from_secs(30))
+            .wait_for_batch_timeout(3, Duration::from_secs(30))
             .expect("final emission published");
         assert_eq!(snap.batch_id, 3);
         assert!(snap.frequent(&[3]).is_some(), "batch 3's items are in the window");
+        service.shutdown().unwrap();
+    }
+
+    #[test]
+    fn stats_surface_per_shard_accounting() {
+        let service = StreamService::spawn(
+            StreamingMiner::new(
+                ctx(),
+                StreamConfig::new(WindowSpec::sliding(3, 1), MinSup::count(2)).shards(4),
+            ),
+            IngestConfig::new(64),
+        );
+        assert_eq!(service.stats().shards.len(), 4, "stats shaped before any push");
+        for b in batches(8) {
+            service.push_batch(b).unwrap();
+        }
+        service.drain().unwrap().expect("slide 1 emitted");
+        let stats = service.stats();
+        assert_eq!(stats.shards.len(), 4);
+        let postings: u64 = stats.shards.iter().map(|s| s.postings).sum();
+        // 8 batches × 2 rows × 2 items, every posting on exactly one shard.
+        assert_eq!(postings, 32);
+        assert!(
+            stats.shards.iter().any(|s| s.mined_itemsets > 0 || s.rows > 0),
+            "at least one shard did observable work: {stats:?}"
+        );
         service.shutdown().unwrap();
     }
 }

@@ -23,8 +23,9 @@ use std::collections::HashSet;
 use std::sync::Arc;
 use std::time::Duration;
 
+use crate::algorithms::partitioners::ReverseHashClassPartitioner;
 use crate::algorithms::SeqEclat;
-use crate::engine::ClusterContext;
+use crate::engine::{ClusterContext, Partitioner};
 use crate::error::Result;
 use crate::fim::{
     bottom_up_with, generate_rules, rules_to_json, sort_frequents, Frequent, Item, MineScratch,
@@ -33,7 +34,7 @@ use crate::fim::{
 use crate::util::json::json_str;
 use crate::util::Stopwatch;
 
-use super::incremental::IncrementalVerticalDb;
+use super::sharded::ShardedVerticalDb;
 use super::window::{normalize_row, SlidingWindow, WindowSpec};
 
 /// How each emission is mined.
@@ -90,6 +91,12 @@ pub struct StreamConfig {
     /// Keep at most this many rules per snapshot (they are sorted by
     /// confidence, so this keeps the strongest). `None` keeps all.
     pub max_rules: Option<usize>,
+    /// Number of store shards (≥ 1). With `1` the job runs the classic
+    /// single-store path; with more, item columns are spread across
+    /// shards by the EclatV5 reverse-hash partitioner and store
+    /// bookkeeping plus mining parallelize per shard. Results are
+    /// identical for every shard count.
+    pub shards: usize,
 }
 
 impl StreamConfig {
@@ -103,7 +110,19 @@ impl StreamConfig {
             mode: MineMode::Incremental,
             churn_threshold: 0.75,
             max_rules: None,
+            shards: 1,
         }
+    }
+
+    /// Set the store shard count (≥ 1; see [`StreamConfig::shards`]).
+    ///
+    /// # Panics
+    ///
+    /// Panics when `n` is zero.
+    pub fn shards(mut self, n: usize) -> StreamConfig {
+        assert!(n >= 1, "need at least one shard");
+        self.shards = n;
+        self
     }
 
     /// Switch the execution mode.
@@ -214,13 +233,38 @@ struct Cached {
     frequents: Vec<Frequent>,
 }
 
+/// Per-shard ingest + mining accounting — the shard-imbalance signal
+/// surfaced through `IngestStats::shards` and `repro stream --serve`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Rows routed to this shard that contained at least one owned item.
+    pub rows: u64,
+    /// Item occurrences (postings) appended to this shard.
+    pub postings: u64,
+    /// Itemsets this shard's mining tasks emitted, cumulative.
+    pub mined_itemsets: u64,
+    /// Wall time of this shard's most recent mining task.
+    pub mine_wall: Duration,
+}
+
+/// What one shard's mining task did during one emission.
+struct ShardRun {
+    shard: usize,
+    wall: Duration,
+    itemsets: u64,
+}
+
 /// The micro-batch mining driver.
 pub struct StreamingMiner {
     ctx: ClusterContext,
     cfg: StreamConfig,
     window: SlidingWindow,
-    store: IncrementalVerticalDb,
-    dirty: HashSet<Item>,
+    store: ShardedVerticalDb,
+    /// Dirty items since the previous emission, one set per shard (a
+    /// routed item's entry lives on its owning shard's set).
+    dirty: Vec<HashSet<Item>>,
+    /// Per-shard `(last mine wall, cumulative mined itemsets)`.
+    mine_stats: Vec<(Duration, u64)>,
     cache: Option<Cached>,
     /// Sequence number of the newest ingested batch (0 before the first
     /// push) — what a skip-to-latest emission is attributed to.
@@ -248,16 +292,18 @@ impl StreamingMiner {
             cfg.churn_threshold
         );
         cfg.churn_threshold = cfg.churn_threshold.clamp(0.0, 1.0);
+        assert!(cfg.shards >= 1, "need at least one shard");
         let window = match cfg.mode {
             MineMode::Incremental => SlidingWindow::row_free(cfg.window),
             MineMode::FromScratch => SlidingWindow::new(cfg.window),
         };
         StreamingMiner {
             ctx,
-            cfg,
+            cfg: cfg.clone(),
             window,
-            store: IncrementalVerticalDb::new(),
-            dirty: HashSet::new(),
+            store: ShardedVerticalDb::new(cfg.shards),
+            dirty: vec![HashSet::new(); cfg.shards],
+            mine_stats: vec![(Duration::ZERO, 0); cfg.shards],
             cache: None,
             last_batch_id: 0,
         }
@@ -284,6 +330,36 @@ impl StreamingMiner {
         }
     }
 
+    /// Per-shard ingest + mining accounting (length = `cfg.shards`).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.store
+            .loads()
+            .iter()
+            .zip(&self.mine_stats)
+            .map(|(load, &(mine_wall, mined_itemsets))| ShardStats {
+                rows: load.rows,
+                postings: load.postings,
+                mined_itemsets,
+                mine_wall,
+            })
+            .collect()
+    }
+
+    /// Whether `item` was touched since the previous emission (its entry
+    /// lives on the owning shard's dirty set).
+    fn is_dirty(&self, item: Item) -> bool {
+        self.dirty[self.store.route(item)].contains(&item)
+    }
+
+    /// Fold one emission's per-shard mining runs into the stats.
+    fn record_mine(&mut self, runs: Vec<ShardRun>) {
+        for run in runs {
+            let (wall, itemsets) = &mut self.mine_stats[run.shard];
+            *wall = run.wall;
+            *itemsets += run.itemsets;
+        }
+    }
+
     /// Ingest one micro-batch. Returns a snapshot when the window's
     /// slide cadence makes this batch an emission point, `None`
     /// otherwise. Synchronous: mining runs on the calling thread (the
@@ -291,7 +367,7 @@ impl StreamingMiner {
     /// service in [`crate::stream::ingest`] decouples the two via
     /// [`StreamingMiner::ingest`] + [`StreamingMiner::mine_now`].
     pub fn push_batch(&mut self, rows: Vec<Vec<Item>>) -> Result<Option<BatchSnapshot>> {
-        if self.ingest(rows) {
+        if self.ingest(rows)? {
             self.mine_now().map(Some)
         } else {
             Ok(None)
@@ -304,22 +380,30 @@ impl StreamingMiner {
     /// emission point. Cheap relative to an emission, which is what lets
     /// the async ingest loop keep bookkeeping exact while emissions
     /// coalesce skip-to-latest under backpressure.
-    pub fn ingest(&mut self, rows: Vec<Vec<Item>>) -> bool {
+    ///
+    /// With `shards > 1` the batch's item columns are scattered to the
+    /// store shards and each shard appends + evicts in one pool task;
+    /// evictions are previewed from the window *before* the push so the
+    /// whole batch is one fused parallel pass. Errors only if a shard
+    /// task dies on the pool — the store is then poisoned and the miner
+    /// must be discarded.
+    pub fn ingest(&mut self, rows: Vec<Vec<Item>>) -> Result<bool> {
         let rows: Vec<Vec<Item>> = rows.into_iter().map(normalize_row).collect();
         if self.cfg.mode == MineMode::Incremental {
-            self.store.append(&rows, &mut self.dirty);
+            // The row-free window carries no row contents — only the
+            // per-batch distinct-item hint, so the store clears each
+            // evicted tid range from exactly the touched bitmaps.
+            let evictions = self.window.pending_evictions();
+            self.store.apply_batch_on(&self.ctx.inner.pool, &rows, &evictions, &mut self.dirty)?;
+            let res = self.window.push(rows);
+            debug_assert_eq!(res.evicted.len(), evictions.len(), "eviction preview diverged");
+            self.last_batch_id = res.batch_id;
+            Ok(res.emit)
+        } else {
+            let res = self.window.push(rows);
+            self.last_batch_id = res.batch_id;
+            Ok(res.emit)
         }
-        let res = self.window.push(rows);
-        if self.cfg.mode == MineMode::Incremental {
-            for b in &res.evicted {
-                // The row-free window carries no row contents — only the
-                // per-batch distinct-item hint, so the store clears the
-                // evicted tid range from exactly the touched bitmaps.
-                self.store.evict_touched(b.txns, &b.items, &mut self.dirty);
-            }
-        }
-        self.last_batch_id = res.batch_id;
-        res.emit
     }
 
     /// Mine the window as it stands **now** and emit a snapshot,
@@ -354,7 +438,9 @@ impl StreamingMiner {
         if self.cfg.mode == MineMode::Incremental {
             self.cache = Some(Cached { min_sup_count, frequents: frequents.clone() });
         }
-        self.dirty.clear();
+        for d in &mut self.dirty {
+            d.clear();
+        }
         Ok(BatchSnapshot {
             batch_id: self.last_batch_id,
             window_txns,
@@ -379,7 +465,7 @@ impl StreamingMiner {
         // Count before cloning any bitmaps: the fallback path would
         // otherwise materialize the dirty atoms only to throw them away.
         let dirty_frequent =
-            self.store.frequent_count_where(min_sup_count, |i| self.dirty.contains(&i));
+            self.store.frequent_count_where(min_sup_count, |i| self.is_dirty(i));
         let full = match &self.cache {
             None => true,
             Some(c) => {
@@ -399,11 +485,13 @@ impl StreamingMiner {
         };
         if full {
             let atoms = self.store.atoms(min_sup_count, |_| true);
-            let frequents = mine_atoms(&self.ctx, atoms, min_sup_count)?;
+            let (frequents, runs) = mine_atoms(&self.ctx, atoms, min_sup_count, self.cfg.shards)?;
+            self.record_mine(runs);
             return Ok((frequents, MinePlan::FullRemine, dirty_frequent, frequent_items));
         }
-        let dirty_atoms = self.store.atoms(min_sup_count, |i| self.dirty.contains(&i));
-        let fresh = mine_atoms(&self.ctx, dirty_atoms, min_sup_count)?;
+        let dirty_atoms = self.store.atoms(min_sup_count, |i| self.is_dirty(i));
+        let (fresh, runs) = mine_atoms(&self.ctx, dirty_atoms, min_sup_count, self.cfg.shards)?;
+        self.record_mine(runs);
         let cache = self.cache.as_ref().expect("checked above");
         // Reuse every cached itemset with at least one clean item: its
         // window support cannot have changed (any entering/leaving
@@ -411,7 +499,7 @@ impl StreamingMiner {
         let mut merged: Vec<Frequent> = cache
             .frequents
             .iter()
-            .filter(|f| f.items.iter().any(|i| !self.dirty.contains(i)))
+            .filter(|f| f.items.iter().any(|&i| !self.is_dirty(i)))
             .cloned()
             .collect();
         let reused = merged.len();
@@ -432,49 +520,105 @@ impl std::fmt::Debug for StreamingMiner {
 }
 
 /// Mine the full sub-lattice over `atoms` (already support-ordered):
-/// singletons plus one equivalence class per prefix atom, classes mined
-/// in parallel on the context's executor pool — the same scatter/gather
+/// singletons plus one equivalence class per prefix atom, mined in
+/// parallel on the context's executor pool — the same scatter/gather
 /// the batch Eclat variants use for Phase 3. Each task builds its class
 /// members with bounded intersections (infrequent candidates abort
 /// mid-sweep and allocate nothing), mines through its own arena, and
 /// emits into a flat [`PooledSink`] (one arena per task instead of one
 /// `Vec` per itemset), decoded on the driver.
+///
+/// With `shards <= 1` this is one task per class — the classic path.
+/// With more, classes are dealt to `shards` groups by the EclatV5
+/// reverse-hash partitioner over the dense class key (low key = heavy
+/// class, so the dealing balances the triangular weight) and each
+/// non-empty group runs as **one** task mining all of its classes
+/// through a single scratch arena and sink. Returns the frequents plus
+/// one [`ShardRun`] per executed task group for the shard stats.
 fn mine_atoms(
     ctx: &ClusterContext,
     atoms: Vec<(Item, TidBitmap, u32)>,
     min_sup: u32,
-) -> Result<Vec<Frequent>> {
+    shards: usize,
+) -> Result<(Vec<Frequent>, Vec<ShardRun>)> {
     let mut out: Vec<Frequent> =
         atoms.iter().map(|(i, _, s)| Frequent::new(vec![*i], *s)).collect();
     if atoms.len() < 2 {
-        return Ok(out);
+        return Ok((out, Vec::new()));
     }
     let shared = Arc::new(atoms);
-    let tasks: Vec<_> = (0..shared.len() - 1)
-        .map(|i| {
-            let atoms = Arc::clone(&shared);
-            move || {
-                let (item_i, bm_i, _) = &atoms[i];
-                let mut members: Vec<(Item, TidBitmap)> = Vec::new();
-                let mut buf = TidBitmap::new(0);
-                for (item_j, bm_j, _) in &atoms[i + 1..] {
-                    if bm_i.and_bounded_into(bm_j, min_sup, &mut buf).is_some() {
-                        members.push((*item_j, std::mem::replace(&mut buf, TidBitmap::new(0))));
-                    }
-                }
-                let mut found = PooledSink::new();
-                if !members.is_empty() {
-                    let mut scratch = MineScratch::new();
-                    bottom_up_with(&mut scratch, &[*item_i], &members, min_sup, &mut found);
-                }
-                found
+    if shards <= 1 {
+        let sw = Stopwatch::start();
+        let tasks: Vec<_> = (0..shared.len() - 1)
+            .map(|i| {
+                let atoms = Arc::clone(&shared);
+                move || mine_class(&atoms, i, min_sup, PooledSink::new(), &mut MineScratch::new())
+            })
+            .collect();
+        let mut itemsets = 0u64;
+        for found in ctx.inner.pool.run_all(tasks)? {
+            itemsets += found.len() as u64;
+            found.replay(&mut out);
+        }
+        return Ok((out, vec![ShardRun { shard: 0, wall: sw.elapsed(), itemsets }]));
+    }
+    // Deal class prefixes to shard groups; skip empty groups entirely.
+    let part = ReverseHashClassPartitioner::new(shards);
+    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); shards];
+    for i in 0..shared.len() - 1 {
+        groups[part.partition(&i)].push(i);
+    }
+    let mut task_shards = Vec::with_capacity(shards);
+    let mut tasks = Vec::with_capacity(shards);
+    for (s, group) in groups.into_iter().enumerate() {
+        if group.is_empty() {
+            continue;
+        }
+        task_shards.push(s);
+        let atoms = Arc::clone(&shared);
+        tasks.push(move || {
+            let sw = Stopwatch::start();
+            // One sink + one scratch arena across the whole class group;
+            // presized so the first classes don't pay warm-up growth.
+            let mut found = PooledSink::with_capacity(group.len() * 8, group.len() * 4);
+            let mut scratch = MineScratch::new();
+            for i in group {
+                found = mine_class(&atoms, i, min_sup, found, &mut scratch);
             }
-        })
-        .collect();
-    for found in ctx.inner.pool.run_all(tasks)? {
+            (found, sw.elapsed())
+        });
+    }
+    let mut runs = Vec::with_capacity(task_shards.len());
+    for (s, (found, wall)) in task_shards.into_iter().zip(ctx.inner.pool.run_all(tasks)?) {
+        runs.push(ShardRun { shard: s, wall, itemsets: found.len() as u64 });
         found.replay(&mut out);
     }
-    Ok(out)
+    Ok((out, runs))
+}
+
+/// Mine the equivalence class of prefix atom `i` into `found` (returned
+/// so callers can thread one sink across several classes): bounded
+/// intersections build the members, then the arena-backed bottom-up
+/// search emits every frequent extension.
+fn mine_class(
+    atoms: &[(Item, TidBitmap, u32)],
+    i: usize,
+    min_sup: u32,
+    mut found: PooledSink,
+    scratch: &mut MineScratch,
+) -> PooledSink {
+    let (item_i, bm_i, _) = &atoms[i];
+    let mut members: Vec<(Item, TidBitmap)> = Vec::new();
+    let mut buf = TidBitmap::new(0);
+    for (item_j, bm_j, _) in &atoms[i + 1..] {
+        if bm_i.and_bounded_into(bm_j, min_sup, &mut buf).is_some() {
+            members.push((*item_j, std::mem::replace(&mut buf, TidBitmap::new(0))));
+        }
+    }
+    if !members.is_empty() {
+        bottom_up_with(scratch, &[*item_i], &members, min_sup, &mut found);
+    }
+    found
 }
 
 #[cfg(test)]
@@ -668,7 +812,7 @@ mod tests {
             vec![vec![2, 3], vec![1, 2]],
         ] {
             let want = one_shot.push_batch(b.clone()).unwrap().expect("slide 1 emits");
-            assert!(split.ingest(b), "slide 1: every batch is an emission point");
+            assert!(split.ingest(b).unwrap(), "slide 1: every batch is an emission point");
             let got = split.mine_now().unwrap();
             assert_eq!(got.frequents, want.frequents);
             assert_eq!(got.batch_id, want.batch_id);
@@ -685,8 +829,8 @@ mod tests {
             ctx(),
             StreamConfig::new(WindowSpec::sliding(4, 4), MinSup::count(1)),
         );
-        assert!(!miner.ingest(vec![vec![1, 2]]));
-        assert!(!miner.ingest(vec![vec![2, 3]]));
+        assert!(!miner.ingest(vec![vec![1, 2]]).unwrap());
+        assert!(!miner.ingest(vec![vec![2, 3]]).unwrap());
         let snap = miner.mine_now().unwrap();
         assert_eq!(snap.batch_id, 1, "attributed to the newest batch");
         assert_eq!(snap.window_txns, 2);
@@ -742,6 +886,71 @@ mod tests {
     fn nan_churn_threshold_rejected_by_setter() {
         let _ = StreamConfig::new(WindowSpec::tumbling(1), MinSup::count(1))
             .churn_threshold(f64::NAN);
+    }
+
+    #[test]
+    fn sharded_miner_matches_single_shard_snapshot_for_snapshot() {
+        let spec = WindowSpec::sliding(3, 1);
+        let min_sup = MinSup::count(2);
+        let batches = [
+            vec![vec![1, 2, 5], vec![2, 7], vec![1, 2]],
+            vec![vec![1, 5, 7], vec![3, 5]],
+            vec![],
+            vec![vec![2, 3, 5], vec![1, 2, 5]],
+            vec![vec![1, 2], vec![2, 5]],
+        ];
+        let mut one = StreamingMiner::new(ctx(), StreamConfig::new(spec, min_sup));
+        for shards in [2usize, 4, 7] {
+            let mut many =
+                StreamingMiner::new(ctx(), StreamConfig::new(spec, min_sup).shards(shards));
+            for b in &batches {
+                let a = one.push_batch(b.clone()).unwrap().expect("slide 1 emits");
+                let m = many.push_batch(b.clone()).unwrap().expect("slide 1 emits");
+                assert_eq!(m.frequents, a.frequents, "{shards} shards");
+                assert_eq!(m.plan, a.plan, "{shards} shards: plan diverged");
+                assert_eq!(m.min_sup_count, a.min_sup_count);
+                assert_eq!(m.window_txns, a.window_txns);
+                assert_eq!(m.rules.len(), a.rules.len());
+            }
+            // Reset the single-shard twin for the next shard count.
+            one = StreamingMiner::new(ctx(), StreamConfig::new(spec, min_sup));
+            let stats = many.shard_stats();
+            assert_eq!(stats.len(), shards);
+            let postings: u64 = stats.iter().map(|s| s.postings).sum();
+            assert_eq!(postings, 24, "every posting lands on exactly one shard");
+        }
+    }
+
+    #[test]
+    fn shard_stats_track_mining_on_the_single_shard_path() {
+        let mut miner = StreamingMiner::new(
+            ctx(),
+            StreamConfig::new(WindowSpec::tumbling(1), MinSup::count(2)),
+        );
+        let snap =
+            miner.push_batch(vec![vec![1, 2], vec![1, 2], vec![1, 2]]).unwrap().unwrap();
+        assert!(snap.frequents.contains(&Frequent::new(vec![1, 2], 3)));
+        let stats = miner.shard_stats();
+        assert_eq!(stats.len(), 1);
+        assert_eq!(stats[0].rows, 3);
+        assert_eq!(stats[0].postings, 6);
+        assert!(stats[0].mined_itemsets >= 1, "the {{1,2}} class was mined");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_rejected_by_builder() {
+        let _ = StreamConfig::new(WindowSpec::tumbling(1), MinSup::count(1)).shards(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_rejected_by_miner() {
+        let cfg = StreamConfig {
+            shards: 0,
+            ..StreamConfig::new(WindowSpec::tumbling(1), MinSup::count(1))
+        };
+        let _ = StreamingMiner::new(ctx(), cfg);
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! * [`incremental`] — the maintained per-item vertical bitmap store:
 //!   append tids at the tail, mask evicted tid ranges, track dirty
 //!   items, compact when the dead prefix outgrows the window.
+//! * [`sharded`] — the item-sharded wrapper over N incremental stores
+//!   in one tid space, routed by the EclatV5 reverse-hash partitioner;
+//!   append/evict/compact and mining parallelize per shard
+//!   (`StreamConfig::shards`, `repro stream --shards N`).
 //! * [`job`] — the per-batch driver: re-mines only the dirty
 //!   sub-lattice on the engine's executor pool (full-re-mine fallback
 //!   under churn), reuses every cached itemset containing a clean item,
@@ -51,12 +55,14 @@ pub mod incremental;
 pub mod ingest;
 pub mod job;
 pub mod serve;
+pub mod sharded;
 pub mod source;
 pub mod window;
 
 pub use incremental::IncrementalVerticalDb;
 pub use ingest::{Ingest, IngestConfig, IngestStats, StreamService};
-pub use job::{BatchSnapshot, MineMode, MinePlan, StreamConfig, StreamingMiner};
+pub use job::{BatchSnapshot, MineMode, MinePlan, ShardStats, StreamConfig, StreamingMiner};
 pub use serve::{snapshot_pipe, ServingSnapshot, SnapshotHandle, SnapshotPublisher};
+pub use sharded::{ShardLoad, ShardedVerticalDb};
 pub use source::{BatchSource, ClickstreamSource, Paced, ReplaySource};
 pub use window::{Batch, PushResult, SlidingWindow, WindowSpec};

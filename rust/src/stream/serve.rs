@@ -30,7 +30,7 @@
 
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -129,6 +129,10 @@ struct SnapshotCell {
     /// on the `latest()` path.
     wait_lock: Mutex<()>,
     wait_cv: Condvar,
+    /// Cleared when the [`SnapshotPublisher`] drops — a dead publisher
+    /// can never satisfy a waiter, so blocked waits return instead of
+    /// hanging forever.
+    publisher_alive: AtomicBool,
 }
 
 // SAFETY: the `UnsafeCell`s are governed by the double-buffer protocol
@@ -147,6 +151,7 @@ impl SnapshotCell {
             version: AtomicU64::new(0),
             wait_lock: Mutex::new(()),
             wait_cv: Condvar::new(),
+            publisher_alive: AtomicBool::new(true),
         })
     }
 
@@ -227,6 +232,20 @@ impl SnapshotPublisher {
     }
 }
 
+impl Drop for SnapshotPublisher {
+    /// Dead-publisher wakeup: mark the cell dead, then notify under the
+    /// wait lock. Waiters re-check liveness under the same lock before
+    /// parking, so none can park after the flag flips and miss the
+    /// notification — [`SnapshotHandle::wait_for_batch`] unblocks
+    /// instead of waiting forever on a publisher that will never
+    /// publish again.
+    fn drop(&mut self) {
+        self.cell.publisher_alive.store(false, Ordering::SeqCst);
+        let _guard = self.cell.wait_lock.lock().unwrap_or_else(|e| e.into_inner());
+        self.cell.wait_cv.notify_all();
+    }
+}
+
 impl std::fmt::Debug for SnapshotPublisher {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("SnapshotPublisher").field("version", &self.version()).finish()
@@ -254,11 +273,47 @@ impl SnapshotHandle {
         self.cell.version.load(Ordering::SeqCst)
     }
 
+    /// Whether the publisher side of the pipe is still alive. A dead
+    /// publisher can never publish again; `latest()` keeps serving the
+    /// final published snapshot.
+    pub fn publisher_alive(&self) -> bool {
+        self.cell.publisher_alive.load(Ordering::SeqCst)
+    }
+
     /// Block (on a condvar — not the lock-free read path) until a
-    /// snapshot with `batch_id >= min_batch_id` is published, or the
-    /// timeout expires. Returns the qualifying snapshot, or `None` on
-    /// timeout.
-    pub fn wait_for_batch(
+    /// snapshot with `batch_id >= min_batch_id` is published. Returns
+    /// the qualifying snapshot, or `None` if the publisher dropped
+    /// before publishing one — a dead publisher wakes every blocked
+    /// waiter instead of leaving it hanging forever. Prefer
+    /// [`SnapshotHandle::wait_for_batch_timeout`] when the caller also
+    /// needs a wall-clock bound.
+    pub fn wait_for_batch(&self, min_batch_id: u64) -> Option<Arc<ServingSnapshot>> {
+        loop {
+            if let Some(s) = self.latest() {
+                if s.batch_id >= min_batch_id {
+                    return Some(s);
+                }
+            }
+            let guard = self.cell.wait_lock.lock().unwrap_or_else(|e| e.into_inner());
+            // Re-check under the wait lock so a publish (or a publisher
+            // death) between our `latest()` and this wait cannot be
+            // missed.
+            if let Some(s) = self.cell.latest() {
+                if s.batch_id >= min_batch_id {
+                    return Some(s);
+                }
+            }
+            if !self.publisher_alive() {
+                return None;
+            }
+            let _guard = self.cell.wait_cv.wait(guard).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// [`SnapshotHandle::wait_for_batch`] with a wall-clock bound:
+    /// returns the qualifying snapshot, or `None` when the timeout
+    /// expires or the publisher dies first.
+    pub fn wait_for_batch_timeout(
         &self,
         min_batch_id: u64,
         timeout: Duration,
@@ -281,6 +336,9 @@ impl SnapshotHandle {
                 if s.batch_id >= min_batch_id {
                     return Some(s);
                 }
+            }
+            if !self.publisher_alive() {
+                return None;
             }
             let (_guard, _timeout) = self
                 .cell
@@ -414,19 +472,58 @@ mod tests {
     #[test]
     fn wait_for_batch_times_out_and_succeeds() {
         let (mut publisher, handle) = snapshot_pipe();
-        assert!(handle.wait_for_batch(0, Duration::from_millis(10)).is_none());
+        assert!(handle.wait_for_batch_timeout(0, Duration::from_millis(10)).is_none());
         publisher.publish(snap(3));
-        let s = handle.wait_for_batch(2, Duration::from_millis(10)).expect("already there");
+        let s = handle
+            .wait_for_batch_timeout(2, Duration::from_millis(10))
+            .expect("already there");
         assert_eq!(s.batch_id, 3);
-        // A publish from another thread wakes a blocked waiter.
-        let waiter = {
+        // A publish from another thread wakes a blocked waiter — both
+        // the blocking and the timed variant.
+        let blocking = {
             let h = handle.clone();
-            std::thread::spawn(move || h.wait_for_batch(7, Duration::from_secs(10)))
+            std::thread::spawn(move || h.wait_for_batch(7))
+        };
+        let timed = {
+            let h = handle.clone();
+            std::thread::spawn(move || h.wait_for_batch_timeout(7, Duration::from_secs(10)))
         };
         std::thread::sleep(Duration::from_millis(5));
         publisher.publish(snap(7));
-        let got = waiter.join().unwrap().expect("woken by publish");
-        assert_eq!(got.batch_id, 7);
+        assert_eq!(blocking.join().unwrap().expect("woken by publish").batch_id, 7);
+        assert_eq!(timed.join().unwrap().expect("woken by publish").batch_id, 7);
+    }
+
+    #[test]
+    fn dead_publisher_wakes_blocked_waiters() {
+        // Regression: a waiter whose target batch never arrives must not
+        // hang forever once the publisher is gone.
+        let (mut publisher, handle) = snapshot_pipe();
+        publisher.publish(snap(2));
+        assert!(handle.publisher_alive());
+        let blocking = {
+            let h = handle.clone();
+            std::thread::spawn(move || h.wait_for_batch(10))
+        };
+        let timed = {
+            let h = handle.clone();
+            std::thread::spawn(move || h.wait_for_batch_timeout(10, Duration::from_secs(3600)))
+        };
+        std::thread::sleep(Duration::from_millis(5));
+        let start = Instant::now();
+        drop(publisher);
+        assert!(blocking.join().unwrap().is_none(), "unsatisfiable wait must unblock");
+        assert!(timed.join().unwrap().is_none(), "timed wait must not run out its hour");
+        assert!(start.elapsed() < Duration::from_secs(10), "woken by drop, not timeout");
+        assert!(!handle.publisher_alive());
+        // Already-satisfied waits still succeed against a dead publisher…
+        assert_eq!(handle.wait_for_batch(2).expect("published before death").batch_id, 2);
+        assert_eq!(
+            handle.wait_for_batch_timeout(1, Duration::from_millis(10)).unwrap().batch_id,
+            2
+        );
+        // …and unsatisfiable ones return immediately.
+        assert!(handle.wait_for_batch(10).is_none());
     }
 
     #[test]

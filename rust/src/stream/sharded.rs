@@ -1,0 +1,474 @@
+//! Item-sharded vertical store: N [`IncrementalVerticalDb`] shards in
+//! one tid space.
+//!
+//! The paper's partitioned Eclat distributes equivalence classes across
+//! executors with a weight-balancing partitioner; this module applies
+//! the same idea one layer down, to the *store*: each item's tid column
+//! lives on exactly one shard, routed by the EclatV5 reverse-hash
+//! dealing ([`ReverseHashClassPartitioner::shard_of_item`]), so append,
+//! evict, compact, and the per-shard dirty bookkeeping all parallelize
+//! over the engine pool.
+//!
+//! The invariant that makes this sound is **tid-space alignment**: every
+//! shard sees every batch (rows filtered to its owned items, but the
+//! row *count* preserved — empty rows are legal) and every eviction
+//! (possibly with an empty touched-item hint), so `live_lo`/`next`/
+//! `txns` advance identically everywhere and compaction fires on every
+//! shard at the same push with the same rebase delta. Cross-shard
+//! bitmap intersections therefore remain valid without any coordination
+//! at mine time. Debug builds assert the alignment after every parallel
+//! apply.
+//!
+//! `shards = 1` is the plain single-store path: append/evict take a
+//! fast path that hands rows straight to shard 0 (no scatter copy), so
+//! the one-shard configuration is byte-for-byte the pre-sharding store
+//! and doubles as the parity oracle for every shard count.
+
+use std::collections::HashSet;
+
+use crate::algorithms::partitioners::ReverseHashClassPartitioner;
+use crate::engine::pool::ThreadPool;
+use crate::error::Result;
+use crate::fim::{Item, TidBitmap};
+use crate::stream::incremental::IncrementalVerticalDb;
+
+/// Cumulative ingest load observed by one shard — the shard-imbalance
+/// signal surfaced through `IngestStats` and `repro stream --serve`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ShardLoad {
+    /// Rows routed to this shard that still contained at least one owned
+    /// item after filtering.
+    pub rows: u64,
+    /// Item occurrences (postings) appended to this shard.
+    pub postings: u64,
+}
+
+/// N [`IncrementalVerticalDb`] shards sharing one tid space, with items
+/// routed to shards by the EclatV5 reverse-hash partitioner.
+///
+/// All read paths (`atoms`, `support`, `frequent_count*`, `live_rows`)
+/// gather across shards and return exactly what a single store holding
+/// every column would return — same contents, same total order.
+#[derive(Debug)]
+pub struct ShardedVerticalDb {
+    shards: Vec<IncrementalVerticalDb>,
+    router: ReverseHashClassPartitioner,
+    loads: Vec<ShardLoad>,
+}
+
+impl ShardedVerticalDb {
+    /// Empty store with `n >= 1` shards.
+    pub fn new(n: usize) -> ShardedVerticalDb {
+        assert!(n >= 1, "need at least one shard");
+        ShardedVerticalDb {
+            shards: (0..n).map(|_| IncrementalVerticalDb::new()).collect(),
+            router: ReverseHashClassPartitioner::new(n),
+            loads: vec![ShardLoad::default(); n],
+        }
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        // From `loads`, not `shards`: a failed parallel apply leaves the
+        // store poisoned (shards drained); the count must stay stable so
+        // error paths can still report it.
+        self.loads.len()
+    }
+
+    /// The shard owning `item`'s column.
+    pub fn route(&self, item: Item) -> usize {
+        self.router.shard_of_item(item)
+    }
+
+    /// Borrow one shard (tests and stats).
+    pub fn shard(&self, s: usize) -> &IncrementalVerticalDb {
+        &self.shards[s]
+    }
+
+    /// Per-shard cumulative ingest loads.
+    pub fn loads(&self) -> &[ShardLoad] {
+        &self.loads
+    }
+
+    /// Live transaction count (identical on every shard by alignment).
+    pub fn txns(&self) -> usize {
+        debug_assert!(self.aligned(), "shards out of tid-space alignment");
+        self.shards.first().map_or(0, |s| s.txns())
+    }
+
+    /// Number of distinct live items across all shards (disjoint by
+    /// routing, so the per-shard counts sum).
+    pub fn distinct_items(&self) -> usize {
+        self.shards.iter().map(|s| s.distinct_items()).sum()
+    }
+
+    /// Current support of `item` over the window.
+    pub fn support(&self, item: Item) -> u32 {
+        self.shards[self.route(item)].support(item)
+    }
+
+    /// Number of items with `support >= min_sup`.
+    pub fn frequent_count(&self, min_sup: u32) -> usize {
+        self.shards.iter().map(|s| s.frequent_count(min_sup)).sum()
+    }
+
+    /// Number of items with `support >= min_sup` satisfying `keep`.
+    pub fn frequent_count_where(&self, min_sup: u32, keep: impl Fn(Item) -> bool) -> usize {
+        self.shards.iter().map(|s| s.frequent_count_where(min_sup, &keep)).sum()
+    }
+
+    /// Frequent atoms gathered from every shard, in the paper's Phase-1
+    /// total order (ascending support, item id tie-break) — identical to
+    /// what one unsharded store would produce.
+    pub fn atoms(&self, min_sup: u32, keep: impl Fn(Item) -> bool) -> Vec<(Item, TidBitmap, u32)> {
+        if self.shards.len() == 1 {
+            return self.shards[0].atoms(min_sup, keep);
+        }
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(s.atoms(min_sup, &keep));
+        }
+        out.sort_by(|a, b| a.2.cmp(&b.2).then_with(|| a.0.cmp(&b.0)));
+        out
+    }
+
+    /// Reconstruct the live window horizontally, oldest transaction
+    /// first, merging each shard's partial rows (shards own disjoint
+    /// items in the same tid space, so per-tid union + sort is exact).
+    pub fn live_rows(&self) -> Vec<Vec<Item>> {
+        if self.shards.len() == 1 {
+            return self.shards[0].live_rows();
+        }
+        let mut rows = vec![Vec::new(); self.txns()];
+        for s in &self.shards {
+            for (t, partial) in s.live_rows().into_iter().enumerate() {
+                rows[t].extend(partial);
+            }
+        }
+        for row in &mut rows {
+            row.sort_unstable();
+        }
+        rows
+    }
+
+    /// Append one batch to every shard, sequentially. Rows must be
+    /// normalized. Each shard's touched items land in its slot of
+    /// `dirty` (`dirty.len() == shard_count()`).
+    pub fn append(&mut self, rows: &[Vec<Item>], dirty: &mut [HashSet<Item>]) {
+        debug_assert_eq!(dirty.len(), self.shards.len());
+        if self.shards.len() == 1 {
+            for row in rows {
+                if !row.is_empty() {
+                    self.loads[0].rows += 1;
+                    self.loads[0].postings += row.len() as u64;
+                }
+            }
+            self.shards[0].append(rows, &mut dirty[0]);
+            return;
+        }
+        let scattered = self.scatter_rows(rows);
+        for (s, shard_rows) in scattered.iter().enumerate() {
+            self.shards[s].append(shard_rows, &mut dirty[s]);
+        }
+    }
+
+    /// Evict the oldest `txns` transactions on every shard. `touched` is
+    /// the global distinct-item hint; each shard receives only its owned
+    /// items but **every** shard evicts (empty hint included) so tid
+    /// bounds stay aligned.
+    pub fn evict_touched(&mut self, txns: usize, touched: &[Item], dirty: &mut [HashSet<Item>]) {
+        debug_assert_eq!(dirty.len(), self.shards.len());
+        if self.shards.len() == 1 {
+            self.shards[0].evict_touched(txns, touched, &mut dirty[0]);
+            return;
+        }
+        let scattered = self.scatter_items(touched);
+        for (s, hint) in scattered.iter().enumerate() {
+            self.shards[s].evict_touched(txns, hint, &mut dirty[s]);
+        }
+    }
+
+    /// Fused append + evictions, sequentially: append `rows`, then evict
+    /// each `(txns, touched)` entry oldest-first. The sequential twin of
+    /// [`ShardedVerticalDb::apply_batch_on`], and the reference the
+    /// parallel path is tested against.
+    pub fn apply_batch(
+        &mut self,
+        rows: &[Vec<Item>],
+        evictions: &[(usize, Vec<Item>)],
+        dirty: &mut [HashSet<Item>],
+    ) {
+        self.append(rows, dirty);
+        for (txns, touched) in evictions {
+            self.evict_touched(*txns, touched, dirty);
+        }
+    }
+
+    /// Fused append + evictions with one pool task per shard: scatter
+    /// the batch's item columns, then each shard appends, evicts, and
+    /// (transparently) compacts independently. Bookkeeping order within
+    /// a shard is append-then-evict, matching the sequential path.
+    ///
+    /// On pool failure (a shard task panicked) the store is **poisoned**
+    /// — shards are lost and the error propagates; the streaming service
+    /// treats that as terminal.
+    pub fn apply_batch_on(
+        &mut self,
+        pool: &ThreadPool,
+        rows: &[Vec<Item>],
+        evictions: &[(usize, Vec<Item>)],
+        dirty: &mut [HashSet<Item>],
+    ) -> Result<()> {
+        debug_assert_eq!(dirty.len(), self.shards.len());
+        if self.shards.len() == 1 {
+            self.apply_batch(rows, evictions, dirty);
+            return Ok(());
+        }
+        let row_scatter = self.scatter_rows(rows);
+        let evict_scatter: Vec<Vec<(usize, Vec<Item>)>> = {
+            let mut per_shard: Vec<Vec<(usize, Vec<Item>)>> =
+                (0..self.shards.len()).map(|_| Vec::with_capacity(evictions.len())).collect();
+            for (txns, touched) in evictions {
+                for (s, hint) in self.scatter_items(touched).into_iter().enumerate() {
+                    per_shard[s].push((*txns, hint));
+                }
+            }
+            per_shard
+        };
+        // `run_all` needs 'static tasks: move each shard (and its dirty
+        // set) into its task and reassemble from the ordered results.
+        let shards = std::mem::take(&mut self.shards);
+        let mut tasks = Vec::with_capacity(shards.len());
+        for ((mut shard, shard_rows), (mut d, shard_evicts)) in shards
+            .into_iter()
+            .zip(row_scatter)
+            .zip(dirty.iter_mut().map(std::mem::take).zip(evict_scatter))
+        {
+            tasks.push(move || {
+                shard.append(&shard_rows, &mut d);
+                for (txns, hint) in &shard_evicts {
+                    shard.evict_touched(*txns, hint, &mut d);
+                }
+                (shard, d)
+            });
+        }
+        let results = pool.run_all(tasks)?;
+        for (s, (shard, d)) in results.into_iter().enumerate() {
+            self.shards.push(shard);
+            dirty[s] = d;
+        }
+        debug_assert!(self.aligned(), "parallel apply desynchronized shard tid spaces");
+        Ok(())
+    }
+
+    /// Scatter `rows` into per-shard copies: row counts preserved on
+    /// every shard (rows filtered to owned items; empty rows kept), so
+    /// tid assignment stays global. Tallies per-shard loads.
+    fn scatter_rows(&mut self, rows: &[Vec<Item>]) -> Vec<Vec<Vec<Item>>> {
+        let n = self.shards.len();
+        let mut out: Vec<Vec<Vec<Item>>> =
+            (0..n).map(|_| Vec::with_capacity(rows.len())).collect();
+        for row in rows {
+            for shard_rows in &mut out {
+                shard_rows.push(Vec::new());
+            }
+            for &item in row {
+                let s = self.route(item);
+                out[s].last_mut().expect("pushed above").push(item);
+            }
+        }
+        for (s, shard_rows) in out.iter().enumerate() {
+            for row in shard_rows {
+                if !row.is_empty() {
+                    self.loads[s].rows += 1;
+                    self.loads[s].postings += row.len() as u64;
+                }
+            }
+        }
+        out
+    }
+
+    /// Scatter a sorted distinct-item hint to per-shard hints (order
+    /// preserved within a shard).
+    fn scatter_items(&self, touched: &[Item]) -> Vec<Vec<Item>> {
+        let mut out: Vec<Vec<Item>> = vec![Vec::new(); self.shards.len()];
+        for &item in touched {
+            out[self.route(item)].push(item);
+        }
+        out
+    }
+
+    /// True when every shard agrees on `(live_lo, next)` and txns.
+    fn aligned(&self) -> bool {
+        let Some(first) = self.shards.first() else { return true };
+        let (bounds, txns) = (first.tid_bounds(), first.txns());
+        self.shards.iter().all(|s| s.tid_bounds() == bounds && s.txns() == txns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dirty(n: usize) -> Vec<HashSet<Item>> {
+        vec![HashSet::new(); n]
+    }
+
+    fn atoms_flat(db: &ShardedVerticalDb) -> Vec<(Item, Vec<crate::fim::Tid>, u32)> {
+        db.atoms(1, |_| true)
+            .into_iter()
+            .map(|(i, bm, s)| (i, bm.iter().collect(), s))
+            .collect()
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_rejected() {
+        ShardedVerticalDb::new(0);
+    }
+
+    #[test]
+    fn sharded_store_matches_single_store_in_lockstep() {
+        let mut single = IncrementalVerticalDb::new();
+        let mut sharded = ShardedVerticalDb::new(3);
+        let mut ds = HashSet::new();
+        let mut dm = dirty(3);
+        let batches = [
+            vec![vec![1, 2, 5], vec![2, 7], vec![]],
+            vec![vec![1, 5, 7], vec![3]],
+            vec![vec![2, 3, 5]],
+            vec![],
+        ];
+        let mut pending: Vec<&Vec<Vec<Item>>> = Vec::new();
+        for batch in &batches {
+            single.append(batch, &mut ds);
+            sharded.append(batch, &mut dm);
+            pending.push(batch);
+            if pending.len() > 2 {
+                let old = pending.remove(0);
+                let mut touched: Vec<Item> = old.iter().flatten().copied().collect();
+                touched.sort_unstable();
+                touched.dedup();
+                single.evict_touched(old.len(), &touched, &mut ds);
+                sharded.evict_touched(old.len(), &touched, &mut dm);
+            }
+            assert_eq!(sharded.txns(), single.txns());
+            assert_eq!(sharded.distinct_items(), single.distinct_items());
+            assert_eq!(sharded.live_rows(), single.live_rows());
+            let want: Vec<(Item, Vec<crate::fim::Tid>, u32)> = single
+                .atoms(1, |_| true)
+                .into_iter()
+                .map(|(i, bm, s)| (i, bm.iter().collect(), s))
+                .collect();
+            assert_eq!(atoms_flat(&sharded), want, "atoms diverged");
+            let merged: HashSet<Item> = dm.iter().flatten().copied().collect();
+            assert_eq!(merged, ds, "dirty sets diverged");
+        }
+        assert_eq!(sharded.frequent_count(2), single.frequent_count(2));
+        assert_eq!(
+            sharded.frequent_count_where(1, |i| i != 5),
+            single.frequent_count_where(1, |i| i != 5)
+        );
+        // Every routed item's dirty entry sits on the owning shard.
+        for (s, d) in dm.iter().enumerate() {
+            for &item in d {
+                assert_eq!(sharded.route(item), s, "dirty item {item} on wrong shard");
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_items_leaves_empty_shards_harmless() {
+        let mut db = ShardedVerticalDb::new(7);
+        let mut d = dirty(7);
+        db.append(&[vec![0, 1], vec![1, 2]], &mut d);
+        assert_eq!(db.txns(), 2);
+        assert_eq!(db.distinct_items(), 3);
+        let populated = (0..7).filter(|&s| db.shard(s).distinct_items() > 0).count();
+        assert!(populated <= 3);
+        assert_eq!(db.live_rows(), vec![vec![0, 1], vec![1, 2]]);
+        db.evict_touched(2, &[0, 1, 2], &mut d);
+        assert_eq!(db.txns(), 0);
+        assert_eq!(db.distinct_items(), 0);
+        db.append(&[vec![5]], &mut d);
+        assert_eq!(db.support(5), 1, "store usable after full eviction");
+    }
+
+    #[test]
+    fn parallel_apply_matches_sequential_apply() {
+        let pool = ThreadPool::new(3);
+        let mut seq = ShardedVerticalDb::new(4);
+        let mut par = ShardedVerticalDb::new(4);
+        let (mut ds, mut dp) = (dirty(4), dirty(4));
+        let mut held: Vec<Vec<Vec<Item>>> = Vec::new();
+        for step in 0..30u32 {
+            let batch: Vec<Vec<Item>> = (0..(step % 4) as usize)
+                .map(|r| {
+                    crate::stream::window::normalize_row(vec![step % 9, (step + 1 + r as u32) % 9])
+                })
+                .collect();
+            held.push(batch.clone());
+            let evictions: Vec<(usize, Vec<Item>)> = if held.len() > 3 {
+                let old = held.remove(0);
+                let mut touched: Vec<Item> = old.iter().flatten().copied().collect();
+                touched.sort_unstable();
+                touched.dedup();
+                vec![(old.len(), touched)]
+            } else {
+                Vec::new()
+            };
+            seq.apply_batch(&batch, &evictions, &mut ds);
+            par.apply_batch_on(&pool, &batch, &evictions, &mut dp).unwrap();
+            assert_eq!(par.txns(), seq.txns(), "step {step}");
+            assert_eq!(par.live_rows(), seq.live_rows(), "step {step}");
+            assert_eq!(dp, ds, "step {step}: per-shard dirty sets diverged");
+            assert_eq!(par.loads(), seq.loads(), "step {step}");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn compaction_stays_aligned_across_shards() {
+        // Slide far enough that the dead prefix repeatedly exceeds the
+        // live span — compaction must fire identically on every shard
+        // (including shards owning no items at all).
+        let mut db = ShardedVerticalDb::new(5);
+        let mut d = dirty(5);
+        let mut held: Vec<Vec<Vec<Item>>> = Vec::new();
+        for step in 0..200u32 {
+            let batch = vec![vec![step % 3, 3 + (step % 2)]];
+            held.push(batch.clone());
+            db.append(&batch, &mut d);
+            if held.len() > 2 {
+                let old = held.remove(0);
+                let mut touched: Vec<Item> = old.iter().flatten().copied().collect();
+                touched.sort_unstable();
+                touched.dedup();
+                db.evict_touched(old.len(), &touched, &mut d);
+            }
+        }
+        assert_eq!(db.txns(), 2);
+        let bounds = db.shard(0).tid_bounds();
+        for s in 0..5 {
+            assert_eq!(db.shard(s).tid_bounds(), bounds, "shard {s} bounds");
+        }
+        assert!(bounds.1 <= 128, "compaction bounded the tid space: {bounds:?}");
+        let rows = db.live_rows();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], crate::stream::window::normalize_row(vec![198 % 3, 3 + 198 % 2]));
+    }
+
+    #[test]
+    fn loads_track_routed_postings() {
+        let mut db = ShardedVerticalDb::new(2);
+        let mut d = dirty(2);
+        db.append(&[vec![0, 1], vec![0], vec![]], &mut d);
+        let total_postings: u64 = db.loads().iter().map(|l| l.postings).sum();
+        assert_eq!(total_postings, 3, "one posting per item occurrence");
+        let total_rows: u64 = db.loads().iter().map(|l| l.rows).sum();
+        // Row {0,1} lands on both shards (0→shard0, 1→shard1), row {0}
+        // only on shard 0, the empty row on none.
+        assert_eq!(total_rows, 3);
+        assert_eq!(db.loads()[db.route(0)].postings, 2);
+    }
+}

@@ -204,6 +204,19 @@ impl SlidingWindow {
         }
     }
 
+    /// Preview the evictions the **next** [`SlidingWindow::push`] will
+    /// perform, oldest first, as `(txns, distinct-item hint)` pairs. The
+    /// incoming batch always survives its own push (`spec.batches >= 1`),
+    /// so the preview depends only on current state: the
+    /// `(live.len() + 1) - spec.batches` oldest live batches fall out.
+    /// Lets a caller that bookkeeps eviction *before* handing rows to
+    /// `push` (the sharded store fuses append + evict into one parallel
+    /// pass per shard) know the evictions without consuming the result.
+    pub fn pending_evictions(&self) -> Vec<(usize, Vec<Item>)> {
+        let n = (self.live.len() + 1).saturating_sub(self.spec.batches);
+        self.live.iter().take(n).map(|b| (b.txns, b.items.clone())).collect()
+    }
+
     /// Materialize the live window as a horizontal [`Database`] (oldest
     /// transaction first) — the from-scratch mining path and the oracle
     /// the parity tests compare against. Requires a row-retaining window;
@@ -323,6 +336,26 @@ mod tests {
         assert_eq!(w.tid_range(), (0, 0));
         w.push(rows(2, 5));
         assert_eq!(w.tid_range(), (0, 2));
+    }
+
+    #[test]
+    fn pending_evictions_previews_the_next_push() {
+        let mut w = SlidingWindow::row_free(WindowSpec::sliding(2, 1));
+        assert!(w.pending_evictions().is_empty(), "empty window evicts nothing");
+        w.push(rows(3, 0));
+        assert!(w.pending_evictions().is_empty(), "window not yet full");
+        w.push(rows(2, 10));
+        // Window is full: the next push must evict exactly batch 0.
+        let preview = w.pending_evictions();
+        assert_eq!(preview, vec![(3, vec![0, 1, 2, 3])]);
+        let r = w.push(rows(4, 20));
+        assert_eq!(r.evicted.len(), preview.len());
+        assert_eq!((r.evicted[0].txns, r.evicted[0].items.clone()), preview[0]);
+        // Gap geometry (window 1, any slide): every push past the first
+        // evicts the sole live batch.
+        let mut g = SlidingWindow::row_free(WindowSpec::sliding(1, 3));
+        g.push(rows(2, 0));
+        assert_eq!(g.pending_evictions(), vec![(2, vec![0, 1, 2])]);
     }
 
     #[test]

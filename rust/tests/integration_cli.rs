@@ -164,6 +164,44 @@ fn stream_subcommand_replays_a_file_and_writes_snapshot() {
 }
 
 #[test]
+fn stream_subcommand_shards_the_store() {
+    // --shards 3 must replay the same stream to the same window, with
+    // per-shard accounting in the summary.
+    let dir = tmp_dir("stream_shards");
+    let file = format!("{dir}/stream.dat");
+    let rows: String = (0..12)
+        .map(|i| if i % 3 == 2 { "1 3\n".to_string() } else { "1 2\n".to_string() })
+        .collect();
+    std::fs::write(&file, rows).unwrap();
+    let json_path = format!("{dir}/snapshot.json");
+    let out = repro()
+        .args([
+            "stream", "--dataset", &file, "--batch", "4", "--window", "2", "--slide", "1",
+            "--batches", "3", "--min-sup", "3", "--min-conf", "0.5", "--shards", "3",
+            "--json", &json_path,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("3 shards"), "{text}");
+    assert!(text.contains("per-shard accounting"), "{text}");
+    assert!(text.contains("shard 2:"), "{text}");
+    // Same stream, same window as the unsharded run.
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json.contains("\"window_txns\": 8"), "{json}");
+    assert!(json.contains("\"frequents\""), "{json}");
+
+    // --shards must be positive.
+    let out = repro()
+        .args(["stream", "--dataset", &file, "--batches", "1", "--shards", "0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--shards"));
+}
+
+#[test]
 fn stream_serve_mode_runs_async_and_writes_snapshot() {
     // `--serve` routes the same replayed stream through the async
     // service + query threads; the drained final snapshot must cover

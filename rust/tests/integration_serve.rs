@@ -187,7 +187,7 @@ fn unpressured_async_service_matches_sync_emission_sequence() {
     service.drain().unwrap();
     let want = sync_last.expect("slide 2 over 14 batches emits");
     let got = handle
-        .wait_for_batch(want.batch_id, Duration::from_secs(30))
+        .wait_for_batch_timeout(want.batch_id, Duration::from_secs(30))
         .expect("async published the same final emission");
     assert_eq!(got.batch_id, want.batch_id);
     assert_eq!(got.frequents, want.frequents);
@@ -195,4 +195,87 @@ fn unpressured_async_service_matches_sync_emission_sequence() {
     assert_eq!(got.min_sup_count, want.min_sup_count);
     let miner = service.shutdown().unwrap();
     assert_eq!(miner.window_txns(), sync.window_txns());
+}
+
+/// Satellite: a blocked `wait_for_batch` waiter must not hang forever
+/// when the service (and with it the publisher) goes away — death wakes
+/// all waiters, which return `None`.
+#[test]
+fn service_death_unblocks_wait_for_batch() {
+    let min_sup = MinSup::count(2);
+    let miner = StreamingMiner::new(ctx(), StreamConfig::new(WindowSpec::sliding(3, 1), min_sup));
+    let service = StreamService::spawn(miner, IngestConfig::new(8));
+    let handle = service.handle();
+
+    // A waiter blocked on a batch id the stream will never reach.
+    let blocked = {
+        let handle = service.handle();
+        std::thread::spawn(move || handle.wait_for_batch(1_000_000))
+    };
+    // And one with a timeout far beyond the test budget — death, not
+    // the timeout, must be what wakes it.
+    let timed = {
+        let handle = service.handle();
+        std::thread::spawn(move || handle.wait_for_batch_timeout(1_000_000, Duration::from_secs(3600)))
+    };
+
+    for b in click_batches(4, 20, 41) {
+        service.push_batch(b).unwrap();
+    }
+    let last = service.drain().unwrap().expect("slide 1 emitted");
+    let start = Instant::now();
+    service.shutdown().unwrap(); // mining loop exits -> publisher drops
+
+    assert!(blocked.join().unwrap().is_none(), "dead publisher must yield None");
+    assert!(timed.join().unwrap().is_none(), "timed waiter must observe death, not sleep");
+    assert!(
+        start.elapsed() < Duration::from_secs(10),
+        "waiters should wake promptly on publisher death"
+    );
+    // Already-satisfied waits still answer from the retained snapshot.
+    let got = handle.wait_for_batch(last.batch_id).expect("retained snapshot");
+    assert_eq!(got.batch_id, last.batch_id);
+    assert!(!handle.publisher_alive());
+}
+
+/// Tentpole end-to-end: a 4-shard service and a 1-shard service fed the
+/// same unpressured stream publish identical final snapshots, both
+/// oracle-exact, and the sharded service surfaces per-shard stats.
+#[test]
+fn sharded_service_matches_single_shard_service() {
+    let min_sup = MinSup::count(3);
+    let spec = WindowSpec::sliding(5, 1);
+    let run = |shards: usize| {
+        let miner = StreamingMiner::new(
+            ClusterContext::builder().cores(3).build(),
+            StreamConfig::new(spec, min_sup).shards(shards),
+        );
+        let service = StreamService::spawn(miner, IngestConfig::new(64));
+        for b in click_batches(12, 40, 59) {
+            service.push_batch(b).unwrap();
+        }
+        let snap = service.drain().unwrap().expect("slide 1 emitted");
+        let stats = service.stats();
+        let miner = service.shutdown().unwrap();
+        (snap, stats, miner)
+    };
+    let (snap4, stats4, miner4) = run(4);
+    let (snap1, stats1, miner1) = run(1);
+
+    assert_eq!(snap4.batch_id, snap1.batch_id);
+    assert_eq!(snap4.frequents, snap1.frequents, "sharded service diverged from 1-shard");
+    assert_eq!(snap4.rules, snap1.rules);
+    assert_eq!(snap4.frequents, oracle(&miner4.materialize_window(), min_sup));
+    assert_eq!(miner4.window_txns(), miner1.window_txns());
+
+    assert_eq!(stats4.shards.len(), 4, "per-shard stats surfaced: {stats4:?}");
+    assert_eq!(stats1.shards.len(), 1);
+    let postings4: u64 = stats4.shards.iter().map(|s| s.postings).sum();
+    let postings1: u64 = stats1.shards.iter().map(|s| s.postings).sum();
+    assert!(postings4 > 0);
+    assert_eq!(postings4, postings1, "total postings are shard-count invariant");
+    assert!(
+        stats4.shards.iter().map(|s| s.mined_itemsets).sum::<u64>() > 0,
+        "sharded mining accounted itemsets: {stats4:?}"
+    );
 }

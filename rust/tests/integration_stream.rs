@@ -1,14 +1,20 @@
 //! Streaming correctness: at every emission, incremental window mining
 //! must equal `SeqEclat` run from scratch on the materialized window
 //! contents — across seeds, window geometries, slide steps (including
-//! slides larger than the window, i.e. full eviction between emissions)
-//! and degenerate batches (empty batches, empty transactions).
+//! slides larger than the window, i.e. full eviction between emissions),
+//! shard counts (1, 2, 4, 7 — including more shards than distinct
+//! items) and degenerate batches (empty batches, empty transactions).
+
+use std::collections::HashSet;
 
 use rdd_eclat::algorithms::SeqEclat;
 use rdd_eclat::data::clickstream::{generate_range, ClickParams};
 use rdd_eclat::engine::ClusterContext;
 use rdd_eclat::fim::{sort_frequents, Database, Frequent, MinSup};
-use rdd_eclat::stream::{MineMode, MinePlan, StreamConfig, StreamingMiner, WindowSpec};
+use rdd_eclat::stream::{
+    IncrementalVerticalDb, MineMode, MinePlan, ShardedVerticalDb, StreamConfig, StreamingMiner,
+    WindowSpec,
+};
 use rdd_eclat::util::prng::Rng;
 use rdd_eclat::util::prop::{check, prop_assert_eq, Config};
 
@@ -42,16 +48,21 @@ fn incremental_equals_from_scratch_oracle_at_every_emission() {
             MinSup::fraction(0.05 + rng.f64() * 0.6)
         };
         // Low churn thresholds force the delta path; high ones the full
-        // re-mine path — both must agree with the oracle.
+        // re-mine path — both must agree with the oracle. Shard counts
+        // cover the classic path (1) and sharded scatter-gather,
+        // including more shards (7) than most runs have items.
         let churn_threshold = if rng.chance(0.5) { 1.0 } else { rng.f64() };
+        let shards = [1usize, 2, 4, 7][rng.below(4) as usize];
         let cfg = StreamConfig {
             churn_threshold,
-            ..StreamConfig::new(WindowSpec::sliding(window, slide), min_sup)
+            ..StreamConfig::new(WindowSpec::sliding(window, slide), min_sup).shards(shards)
         };
+        let mut twin = StreamingMiner::new(ctx.clone(), StreamConfig { shards: 1, ..cfg.clone() });
         let mut miner = StreamingMiner::new(ctx.clone(), cfg);
         let mut emissions = 0;
         for _ in 0..rng.range(3, 20) {
             let batch = random_batch(rng, n_items);
+            let twin_snap = twin.push_batch(batch.clone()).expect("twin push");
             if let Some(snap) = miner.push_batch(batch).expect("push") {
                 emissions += 1;
                 let db = miner.materialize_window();
@@ -59,11 +70,19 @@ fn incremental_equals_from_scratch_oracle_at_every_emission() {
                 let want = oracle(&db, min_sup);
                 if snap.frequents != want {
                     return Err(format!(
-                        "emission {emissions} (plan {:?}, window {window} slide {slide}, \
-                         min_sup {min_sup:?}): got {:?} want {want:?}",
+                        "emission {emissions} (plan {:?}, {shards} shards, window {window} \
+                         slide {slide}, min_sup {min_sup:?}): got {:?} want {want:?}",
                         snap.plan, snap.frequents
                     ));
                 }
+                // The shards=1 twin is the parity oracle for the whole
+                // snapshot, rules included.
+                let twin_snap = twin_snap.ok_or("twin skipped an emission")?;
+                prop_assert_eq(&snap.frequents, &twin_snap.frequents, "sharded vs 1-shard")?;
+                prop_assert_eq(&snap.rules, &twin_snap.rules, "sharded vs 1-shard rules")?;
+                prop_assert_eq(snap.batch_id, twin_snap.batch_id, "emission batch ids")?;
+            } else if twin_snap.is_some() {
+                return Err(format!("{shards}-shard miner skipped an emission the twin made"));
             }
         }
         Ok(())
@@ -173,4 +192,130 @@ fn tumbling_full_eviction_between_emissions() {
     );
     assert!(snaps[2].frequents.is_empty(), "empty window mines empty");
     assert_eq!(snaps[2].window_txns, 0);
+}
+
+#[test]
+fn more_shards_than_distinct_items_leaves_empty_shards_exact() {
+    // 7 shards over a 3-item vocabulary: at least 4 shards own nothing,
+    // yet every one must track the shared tid space through appends,
+    // evictions and full drainage — and mining must stay oracle-exact.
+    let ctx = ClusterContext::builder().cores(2).build();
+    let min_sup = MinSup::count(2);
+    let cfg = StreamConfig::new(WindowSpec::sliding(2, 1), min_sup).shards(7);
+    let mut miner = StreamingMiner::new(ctx, cfg);
+    let batches: [Vec<Vec<u32>>; 6] = [
+        vec![vec![0, 1], vec![1, 2]],
+        vec![vec![0, 1, 2]],
+        vec![],                       // empty batch between emissions
+        vec![vec![2], vec![0, 2]],
+        vec![vec![1]],
+        vec![],                       // window drains down to one batch
+    ];
+    let mut emissions = 0;
+    for batch in batches {
+        if let Some(snap) = miner.push_batch(batch).expect("push") {
+            emissions += 1;
+            let want = oracle(&miner.materialize_window(), min_sup);
+            assert_eq!(snap.frequents, want, "emission {emissions}, plan {:?}", snap.plan);
+        }
+    }
+    assert_eq!(emissions, 6, "slide 1 emits on every push");
+    let stats = miner.shard_stats();
+    assert_eq!(stats.len(), 7);
+    let empty = stats.iter().filter(|s| s.postings == 0).count();
+    assert!(empty >= 4, "only 3 items can own postings, got {empty} empty shards");
+}
+
+#[test]
+fn sharded_long_run_stays_aligned_through_compaction() {
+    // Long drifting run on a sliding(6, 1) window: the dead prefix
+    // repeatedly outgrows the live span, so every shard compacts many
+    // times. A 4-shard miner, a 1-shard twin and the from-scratch oracle
+    // must agree at all ~30 emissions.
+    let params = ClickParams {
+        sessions: 2000,
+        items: 60,
+        avg_len: 2.5,
+        skew: 0.9,
+        locality: 0.5,
+        radius: 6,
+        drift: 60.0 / 2000.0,
+    };
+    let min_sup = MinSup::count(3);
+    let spec = WindowSpec::sliding(6, 1);
+    let ctx = ClusterContext::builder().cores(3).build();
+    let mut sharded = StreamingMiner::new(
+        ctx.clone(),
+        StreamConfig { churn_threshold: 1.0, ..StreamConfig::new(spec, min_sup).shards(4) },
+    );
+    let mut single = StreamingMiner::new(
+        ctx,
+        StreamConfig { churn_threshold: 1.0, ..StreamConfig::new(spec, min_sup) },
+    );
+    let (batch_size, n_batches) = (40, 36);
+    for b in 0..n_batches {
+        let rows = generate_range(&params, 77, b * batch_size, batch_size);
+        let snap = sharded.push_batch(rows.clone()).expect("push").expect("slide 1 emits");
+        let twin = single.push_batch(rows).expect("push").expect("slide 1 emits");
+        assert_eq!(snap.frequents, twin.frequents, "batch {b}: sharded vs 1-shard");
+        assert_eq!(snap.rules, twin.rules, "batch {b}: rules diverged");
+        let want = oracle(&sharded.materialize_window(), min_sup);
+        assert_eq!(snap.frequents, want, "batch {b}: sharded vs oracle, plan {:?}", snap.plan);
+    }
+    let stats = sharded.shard_stats();
+    assert_eq!(stats.len(), 4);
+    let total: u64 = stats.iter().map(|s| s.postings).sum();
+    assert!(total > 0, "sharded run ingested postings");
+    assert!(
+        stats.iter().filter(|s| s.postings > 0).count() >= 2,
+        "reverse-hash routing should spread 60 items over several shards: {stats:?}"
+    );
+}
+
+#[test]
+fn sharded_store_with_one_shard_is_the_single_store() {
+    // Through the public API, ShardedVerticalDb::new(1) must behave
+    // exactly like a bare IncrementalVerticalDb under the same lockstep
+    // append/evict sequence.
+    let mut single = IncrementalVerticalDb::new();
+    let mut one = ShardedVerticalDb::new(1);
+    let mut ds = HashSet::new();
+    let mut dm = vec![HashSet::new()];
+    let mut held: Vec<Vec<Vec<u32>>> = Vec::new();
+    for step in 0..60u32 {
+        let batch: Vec<Vec<u32>> = (0..(step % 3) as usize)
+            .map(|r| {
+                rdd_eclat::stream::window::normalize_row(vec![
+                    step % 7,
+                    (step + 1 + r as u32) % 7,
+                ])
+            })
+            .collect();
+        held.push(batch.clone());
+        single.append(&batch, &mut ds);
+        one.append(&batch, &mut dm);
+        if held.len() > 4 {
+            let old = held.remove(0);
+            let mut touched: Vec<u32> = old.iter().flatten().copied().collect();
+            touched.sort_unstable();
+            touched.dedup();
+            single.evict_touched(old.len(), &touched, &mut ds);
+            one.evict_touched(old.len(), &touched, &mut dm);
+        }
+        assert_eq!(one.txns(), single.txns(), "step {step}");
+        assert_eq!(one.distinct_items(), single.distinct_items(), "step {step}");
+        assert_eq!(one.live_rows(), single.live_rows(), "step {step}");
+        assert_eq!(dm[0], ds, "step {step}: dirty sets diverged");
+        for item in 0..7 {
+            assert_eq!(one.support(item), single.support(item), "step {step} item {item}");
+        }
+        let flat = |v: Vec<(u32, rdd_eclat::fim::TidBitmap, u32)>| -> Vec<(u32, Vec<u32>, u32)> {
+            v.into_iter().map(|(i, bm, s)| (i, bm.iter().collect(), s)).collect()
+        };
+        assert_eq!(
+            flat(one.atoms(1, |_| true)),
+            flat(single.atoms(1, |_| true)),
+            "step {step}: atoms diverged"
+        );
+    }
 }
