@@ -248,6 +248,27 @@ fn main() {
                 pooled.len()
             );
         }
+
+        // --- observability overhead: the same warm-arena mine with the
+        // obs layer off (the default) vs on. The instrumentation sites
+        // batch counts into locals and flush once per sweep, so the
+        // enabled row should sit within a few percent of the disabled
+        // one — the "near-zero overhead" claim, measured not asserted.
+        rdd_eclat::obs::set_enabled(false);
+        let m = bench.run("obs/overhead/bottomup_disabled", || {
+            out.clear();
+            bottom_up_with(&mut tid_scratch, &[100], &members, min_sup, &mut out);
+            black_box(out.len())
+        });
+        report.add(m);
+        rdd_eclat::obs::set_enabled(true);
+        let m = bench.run("obs/overhead/bottomup_enabled", || {
+            out.clear();
+            bottom_up_with(&mut tid_scratch, &[100], &members, min_sup, &mut out);
+            black_box(out.len())
+        });
+        report.add(m);
+        rdd_eclat::obs::set_enabled(false);
     }
 
     // --- Apriori candidate subset counting ---
@@ -284,6 +305,9 @@ fn main() {
         format!("{}/../BENCH_fim.json", env!("CARGO_MANIFEST_DIR"))
     });
     let scale = Bench::scale_from_env();
+    // The counters the enabled obs/overhead pass recorded ride along in
+    // the trajectory row — intersections attempted, early-aborts, emits.
+    report.add_extra("metrics", rdd_eclat::obs::snapshot().to_json());
     report.write_json(&out, "fim_micro", scale).expect("write BENCH_fim.json");
     println!("wrote {out}");
 }

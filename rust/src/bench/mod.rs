@@ -138,6 +138,7 @@ pub fn black_box<T>(x: T) -> T {
 #[derive(Debug, Default)]
 pub struct Report {
     rows: Vec<Measurement>,
+    extras: Vec<(String, String)>,
 }
 
 impl Report {
@@ -150,6 +151,15 @@ impl Report {
     pub fn add(&mut self, m: Measurement) {
         println!("{m}");
         self.rows.push(m);
+    }
+
+    /// Attach an extra top-level JSON field to [`Report::to_json`].
+    /// `raw_json` is emitted verbatim (it must already be valid JSON —
+    /// e.g. a [`crate::obs::MetricsSnapshot::to_json`] object), so
+    /// benches can merge observability snapshots into trajectory rows
+    /// without the harness knowing their schema.
+    pub fn add_extra(&mut self, key: impl Into<String>, raw_json: impl Into<String>) {
+        self.extras.push((key.into(), raw_json.into()));
     }
 
     /// Borrow the rows.
@@ -188,6 +198,9 @@ impl Report {
         let mut out = String::from("{\n");
         out.push_str(&format!("  \"bench\": {},\n", json_str(bench)));
         out.push_str(&format!("  \"scale\": {},\n", json_str(scale)));
+        for (key, raw) in &self.extras {
+            out.push_str(&format!("  {}: {raw},\n", json_str(key)));
+        }
         out.push_str("  \"results\": [\n");
         for (i, m) in self.rows.iter().enumerate() {
             let allocs = match m.allocs {
@@ -271,6 +284,18 @@ mod tests {
         assert_eq!(json.matches("\"allocs\"").count(), 1, "unmeasured rows omit allocs: {json}");
         // Exactly one comma between the two result rows, none trailing.
         assert_eq!(json.matches("},\n").count(), 1, "{json}");
+        assert!(!json.contains(",\n  ]"), "no trailing comma: {json}");
+    }
+
+    #[test]
+    fn extras_emitted_verbatim_before_results() {
+        let mut r = Report::new();
+        r.add(Measurement { name: "x".into(), secs: Summary::of(&[1.0]), allocs: None });
+        r.add_extra("metrics", "{\"counters\": [[\"a\", 3]]}");
+        let json = r.to_json("fim_micro", "quick");
+        let metrics_at = json.find("\"metrics\": {\"counters\": [[\"a\", 3]]},").expect("extra");
+        let results_at = json.find("\"results\"").expect("results");
+        assert!(metrics_at < results_at, "extras come before results: {json}");
         assert!(!json.contains(",\n  ]"), "no trailing comma: {json}");
     }
 

@@ -39,6 +39,7 @@ fn app() -> App {
                 .opt("backend", "phase-2 co-occurrence backend: native | xla")
                 .opt("data-dir", "dataset cache dir (default datasets/)")
                 .opt("output", "save frequent itemsets under this directory")
+                .opt("trace", "write a Chrome trace (chrome://tracing, Perfetto) to this path")
                 .flag("no-tri-matrix", "disable the triangular-matrix optimization")
                 .flag("quiet", "suppress the itemset listing"),
         )
@@ -72,8 +73,10 @@ fn app() -> App {
                 .opt("interval", "inter-batch pacing in milliseconds (default 0)")
                 .opt("json", "write the final snapshot (itemsets + rules) as JSON")
                 .opt("data-dir", "dataset cache dir")
+                .opt("trace", "write a Chrome trace (chrome://tracing, Perfetto) to this path")
                 .opt("queue-cap", "--serve: backpressure threshold in queued batches (default 8)")
                 .opt("readers", "--serve: concurrent query threads (default 2)")
+                .opt("stats-every", "--serve: print a one-line metrics digest every N batches")
                 .flag(
                     "serve",
                     "async ingest + live snapshot serving: mining runs on a service \
@@ -186,11 +189,36 @@ fn print_algo_listing() {
     }
 }
 
+/// Enable the observability layer when the invocation asked for it
+/// (`--trace` and/or `--stats-every`). Must run before any instrumented
+/// work so spans from worker threads land in the event log.
+fn arm_observability(args: &rdd_eclat::cli::Args) {
+    if args.get("trace").is_some() || args.get("stats-every").is_some() {
+        rdd_eclat::obs::set_enabled(true);
+    }
+}
+
+/// Write the collected span events as a Chrome trace, if `--trace` was
+/// given, and print where it went. Also prints the final metrics digest
+/// whenever the observability layer is armed.
+fn finish_observability(args: &rdd_eclat::cli::Args) -> Result<()> {
+    if let Some(path) = args.get("trace") {
+        rdd_eclat::obs::write_chrome_trace(path)?;
+        let (events, dropped) = rdd_eclat::obs::events();
+        println!("wrote {path} ({} trace events, {dropped} dropped)", events.len());
+    }
+    if rdd_eclat::obs::enabled() {
+        println!("metrics: {}", rdd_eclat::obs::snapshot().digest());
+    }
+    Ok(())
+}
+
 fn cmd_run(args: &rdd_eclat::cli::Args) -> Result<()> {
     if args.flag("list-algos") {
         print_algo_listing();
         return Ok(());
     }
+    arm_observability(args);
     let cfg = config_from_args(args)?;
     let variant: Variant = cfg.algorithm.parse()?;
     let db = data::resolve(&cfg.dataset, &cfg.data_dir)?;
@@ -236,7 +264,7 @@ fn cmd_run(args: &rdd_eclat::cli::Args) -> Result<()> {
             println!("  ... ({} more; use --output to save all)", sorted.len() - 20);
         }
     }
-    Ok(())
+    finish_observability(args)
 }
 
 fn cmd_generate(args: &rdd_eclat::cli::Args) -> Result<()> {
@@ -299,6 +327,7 @@ fn cmd_rules(args: &rdd_eclat::cli::Args) -> Result<()> {
 }
 
 fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
+    arm_observability(args);
     let cfg = config_from_args(args)?;
     let batch: usize = args.get_parse("batch", 500usize)?;
     let window: usize = args.get_parse("window", 20usize)?;
@@ -369,7 +398,7 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
     }
     let Some(snap) = last else {
         println!("stream ended before the first emission (need >= {slide} batches)");
-        return Ok(());
+        return finish_observability(args);
     };
     println!(
         "\n{emissions} emissions; final window: {} txns, {} frequent itemsets, {} rules",
@@ -390,7 +419,7 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
         std::fs::write(path, snap.to_json())?;
         println!("wrote {path}");
     }
-    Ok(())
+    finish_observability(args)
 }
 
 /// Per-shard store/mining accounting, shared by the sync and `--serve`
@@ -399,11 +428,12 @@ fn print_shard_stats(shards: &[rdd_eclat::stream::ShardStats]) {
     println!("per-shard accounting:");
     for (s, st) in shards.iter().enumerate() {
         println!(
-            "  shard {s}: {} live rows, {} postings, {} itemsets mined, last mine {}",
+            "  shard {s}: {} live rows, {} postings, {} itemsets mined, last mine {}, age {}",
             st.rows,
             st.postings,
             st.mined_itemsets,
-            fmt_duration(st.mine_wall)
+            fmt_duration(st.mine_wall),
+            fmt_duration(st.age)
         );
     }
 }
@@ -422,6 +452,7 @@ fn cmd_stream_serve(
 
     let queue_cap: usize = args.get_parse("queue-cap", 8usize)?;
     let readers: usize = args.get_parse("readers", 2usize)?;
+    let stats_every: usize = args.get_parse("stats-every", 0usize)?;
     if queue_cap == 0 {
         return Err(Error::Usage("--queue-cap must be >= 1".into()));
     }
@@ -470,9 +501,18 @@ fn cmd_stream_serve(
         })
         .collect();
 
-    for _ in 0..batches {
+    for i in 0..batches {
         let Some(rows) = source.next_batch() else { break };
         service.push_batch(rows)?;
+        if stats_every > 0 && (i + 1) % stats_every == 0 {
+            let st = service.stats();
+            println!(
+                "[stats] batch {:>4} (stats age {}): {}",
+                i + 1,
+                fmt_duration(st.age),
+                rdd_eclat::obs::snapshot().digest()
+            );
+        }
     }
     let last = service.drain()?;
     stop.store(true, Ordering::SeqCst);
@@ -485,7 +525,7 @@ fn cmd_stream_serve(
 
     let Some(snap) = last else {
         println!("stream ended before the first emission");
-        return Ok(());
+        return finish_observability(args);
     };
     println!(
         "\n{} batches in, {} emissions published, {} skipped under backpressure, \
@@ -509,5 +549,5 @@ fn cmd_stream_serve(
         std::fs::write(path, snap.to_json())?;
         println!("wrote {path}");
     }
-    Ok(())
+    finish_observability(args)
 }

@@ -6,7 +6,13 @@
 //! counts to produce the paper's Fig. 15 scaling curves on a small
 //! machine, and the benchmark harness reports stage breakdowns from the
 //! same log.
+//!
+//! Both logs are **bounded**: they keep the latest
+//! [`MetricsRegistry::DEFAULT_CAPACITY`] entries and count evicted ones
+//! in [`MetricsRegistry::dropped_tasks`]/[`MetricsRegistry::dropped_jobs`],
+//! so long `repro stream --serve` runs no longer grow without bound.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -54,18 +60,66 @@ pub struct JobSpan {
     pub stages: usize,
 }
 
+/// Keep-latest ring: push evicts the oldest entry once `cap` is
+/// reached, counting evictions in `dropped`.
+#[derive(Debug)]
+struct Ring<T> {
+    buf: VecDeque<T>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl<T> Ring<T> {
+    fn new(cap: usize) -> Ring<T> {
+        Ring { buf: VecDeque::new(), cap: cap.max(1), dropped: 0 }
+    }
+
+    fn push(&mut self, v: T) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(v);
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.dropped = 0;
+    }
+}
+
 /// Registry collecting task metrics and job spans for one context.
-#[derive(Default)]
 pub struct MetricsRegistry {
-    tasks: Mutex<Vec<TaskMetric>>,
-    jobs: Mutex<Vec<JobSpan>>,
+    tasks: Mutex<Ring<TaskMetric>>,
+    jobs: Mutex<Ring<JobSpan>>,
     next_job: AtomicUsize,
 }
 
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry::new()
+    }
+}
+
 impl MetricsRegistry {
-    /// Create an empty registry.
+    /// Default keep-latest capacity of each log (tasks and jobs
+    /// separately): enough for every bench/figure run while bounding
+    /// week-long streaming services.
+    pub const DEFAULT_CAPACITY: usize = 65_536;
+
+    /// Create an empty registry with [`Self::DEFAULT_CAPACITY`].
     pub fn new() -> Self {
-        Self::default()
+        Self::with_capacity(Self::DEFAULT_CAPACITY)
+    }
+
+    /// Create an empty registry keeping at most `cap` tasks and `cap`
+    /// jobs (latest win; `cap` is clamped to at least 1).
+    pub fn with_capacity(cap: usize) -> Self {
+        MetricsRegistry {
+            tasks: Mutex::new(Ring::new(cap)),
+            jobs: Mutex::new(Ring::new(cap)),
+            next_job: AtomicUsize::new(0),
+        }
     }
 
     /// Allocate the next job id.
@@ -83,19 +137,29 @@ impl MetricsRegistry {
         self.jobs.lock().unwrap().push(span);
     }
 
-    /// Snapshot of all task metrics.
+    /// Snapshot of the retained task metrics (oldest first).
     pub fn tasks(&self) -> Vec<TaskMetric> {
-        self.tasks.lock().unwrap().clone()
+        self.tasks.lock().unwrap().buf.iter().cloned().collect()
     }
 
-    /// Snapshot of all job spans.
+    /// Snapshot of the retained job spans (oldest first).
     pub fn jobs(&self) -> Vec<JobSpan> {
-        self.jobs.lock().unwrap().clone()
+        self.jobs.lock().unwrap().buf.iter().cloned().collect()
     }
 
     /// Tasks belonging to one job.
     pub fn tasks_of(&self, job: JobId) -> Vec<TaskMetric> {
-        self.tasks.lock().unwrap().iter().filter(|t| t.job == job).cloned().collect()
+        self.tasks.lock().unwrap().buf.iter().filter(|t| t.job == job).cloned().collect()
+    }
+
+    /// Task metrics evicted from the ring since the last [`Self::reset`].
+    pub fn dropped_tasks(&self) -> u64 {
+        self.tasks.lock().unwrap().dropped
+    }
+
+    /// Job spans evicted from the ring since the last [`Self::reset`].
+    pub fn dropped_jobs(&self) -> u64 {
+        self.jobs.lock().unwrap().dropped
     }
 
     /// Clear everything (between benchmark repetitions).
@@ -104,10 +168,10 @@ impl MetricsRegistry {
         self.jobs.lock().unwrap().clear();
     }
 
-    /// Sum of task wall time over all recorded tasks (the "total compute"
+    /// Sum of task wall time over all retained tasks (the "total compute"
     /// that the simulator spreads over virtual cores).
     pub fn total_task_time(&self) -> Duration {
-        self.tasks.lock().unwrap().iter().map(|t| t.wall).sum()
+        self.tasks.lock().unwrap().buf.iter().map(|t| t.wall).sum()
     }
 }
 
@@ -144,5 +208,36 @@ mod tests {
         assert_eq!(r.total_task_time(), Duration::from_millis(15));
         r.reset();
         assert!(r.tasks().is_empty());
+    }
+
+    #[test]
+    fn ring_keeps_latest_and_counts_dropped() {
+        let r = MetricsRegistry::with_capacity(3);
+        for i in 0..5 {
+            r.record_task(tm(0, 0, i, i as u64));
+        }
+        let tasks = r.tasks();
+        assert_eq!(tasks.len(), 3, "capped at capacity");
+        let parts: Vec<usize> = tasks.iter().map(|t| t.partition).collect();
+        assert_eq!(parts, vec![2, 3, 4], "latest kept, oldest first");
+        assert_eq!(r.dropped_tasks(), 2);
+        assert_eq!(r.dropped_jobs(), 0);
+        // total_task_time covers only the retained window.
+        assert_eq!(r.total_task_time(), Duration::from_millis(2 + 3 + 4));
+
+        for i in 0..4 {
+            r.record_job(JobSpan {
+                job: JobId(i),
+                name: format!("job{i}"),
+                wall: Duration::from_millis(1),
+                stages: 1,
+            });
+        }
+        assert_eq!(r.jobs().len(), 3);
+        assert_eq!(r.dropped_jobs(), 1);
+
+        r.reset();
+        assert_eq!(r.dropped_tasks(), 0);
+        assert!(r.tasks().is_empty() && r.jobs().is_empty());
     }
 }

@@ -18,12 +18,26 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Pool instrumentation cells, resolved once (see [`crate::obs`]).
+struct PoolObs {
+    queue_depth: &'static crate::obs::Gauge,
+    tasks_run: &'static crate::obs::Counter,
+}
+
+fn pool_obs() -> &'static PoolObs {
+    static OBS: OnceLock<PoolObs> = OnceLock::new();
+    OBS.get_or_init(|| PoolObs {
+        queue_depth: crate::obs::gauge("engine.pool.queue_depth"),
+        tasks_run: crate::obs::counter("engine.pool.tasks_run"),
+    })
+}
 
 /// Fixed-size worker pool. The number of workers models the number of
 /// executor cores of the simulated cluster.
@@ -71,6 +85,11 @@ impl ThreadPool {
                                 Err(_) => break,
                             }
                         };
+                        if crate::obs::enabled() {
+                            let o = pool_obs();
+                            o.queue_depth.add(-1);
+                            o.tasks_run.incr(1);
+                        }
                         // A panicking fire-and-forget job must not take
                         // the worker down with it (run_all additionally
                         // reports the panic to the driver).
@@ -96,7 +115,11 @@ impl ThreadPool {
             .ok_or_else(|| Error::engine("thread pool has shut down"))?;
         sender
             .send(Box::new(f))
-            .map_err(|_| Error::engine("thread pool has shut down"))
+            .map_err(|_| Error::engine("thread pool has shut down"))?;
+        if crate::obs::enabled() {
+            pool_obs().queue_depth.add(1);
+        }
+        Ok(())
     }
 
     /// Run every task and gather results **in task order**. Tasks run

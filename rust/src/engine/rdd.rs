@@ -623,6 +623,10 @@ impl<T: Data> Rdd<T> {
     fn run_job(&self, action: &str) -> Result<Vec<Vec<T>>> {
         let ctx = self.ctx().clone();
         let job = ctx.metrics().next_job_id();
+        // Job span on the driver thread; the engine's JobSpan wall is
+        // re-emitted into the same obs timeline via this guard.
+        let mut obs_span = crate::obs::span("engine.job");
+        obs_span.arg("job", job.0 as u64);
         let sw = Stopwatch::start();
         let mut stage = 0usize;
         self.prepare_shuffles(job, &mut stage)?;
@@ -643,6 +647,7 @@ impl<T: Data> Rdd<T> {
             wall: sw.elapsed(),
             stages: stage + 1,
         });
+        obs_span.arg("stages", stage as u64 + 1);
         Ok(out)
     }
 
@@ -702,8 +707,19 @@ where
         .map(|(p, task)| {
             let ctx = ctx.clone();
             move || {
+                // Task span on the worker thread: the scheduler's
+                // TaskMetric and the obs timeline see the same wall.
+                let mut obs_span = crate::obs::span(match kind {
+                    StageKind::ShuffleMap => "engine.task.shuffle_map",
+                    StageKind::Result => "engine.task.result",
+                });
                 let sw = Stopwatch::start();
                 let (result, records) = task();
+                obs_span
+                    .arg("job", job.0 as u64)
+                    .arg("stage", stage as u64)
+                    .arg("partition", p as u64)
+                    .arg("records", records);
                 ctx.metrics().record_task(TaskMetric {
                     job,
                     stage,

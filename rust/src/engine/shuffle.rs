@@ -10,7 +10,23 @@
 use std::any::Any;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::RwLock;
+use std::sync::{OnceLock, RwLock};
+
+/// Shuffle instrumentation cells, resolved once (see [`crate::obs`]).
+struct ShuffleObs {
+    puts: &'static crate::obs::Counter,
+    fetches: &'static crate::obs::Counter,
+    records: &'static crate::obs::Counter,
+}
+
+fn shuffle_obs() -> &'static ShuffleObs {
+    static OBS: OnceLock<ShuffleObs> = OnceLock::new();
+    OBS.get_or_init(|| ShuffleObs {
+        puts: crate::obs::counter("engine.shuffle.puts"),
+        fetches: crate::obs::counter("engine.shuffle.fetches"),
+        records: crate::obs::counter("engine.shuffle.records"),
+    })
+}
 
 /// Identifies one shuffle (one wide dependency).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -45,6 +61,11 @@ impl ShuffleStore {
         self.records.fetch_add(data.len() as u64, Ordering::Relaxed);
         self.bytes_approx
             .fetch_add((data.len() * std::mem::size_of::<T>()) as u64, Ordering::Relaxed);
+        if crate::obs::enabled() {
+            let o = shuffle_obs();
+            o.puts.incr(1);
+            o.records.incr(data.len() as u64);
+        }
         self.buckets
             .write()
             .unwrap()
@@ -59,6 +80,9 @@ impl ShuffleStore {
         num_map_tasks: usize,
         reduce: usize,
     ) -> Vec<T> {
+        if crate::obs::enabled() {
+            shuffle_obs().fetches.incr(1);
+        }
         let buckets = self.buckets.read().unwrap();
         let mut out = Vec::new();
         for m in 0..num_map_tasks {

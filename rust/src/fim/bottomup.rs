@@ -54,6 +54,32 @@ use super::tidset::{
     difference_bounded_into, intersect_bounded_into, intersect_into, Tidset,
 };
 
+/// Mining-core instrumentation cells, resolved once (see [`crate::obs`]).
+/// Recording is gated on [`crate::obs::enabled`] and batched per
+/// [`fill_children`] sweep, so the disabled cost of the inner loop is a
+/// couple of local register increments. The [`reference`] oracle is
+/// deliberately *not* instrumented.
+struct FimObs {
+    intersections: &'static crate::obs::Counter,
+    differences: &'static crate::obs::Counter,
+    abort_intersect: &'static crate::obs::Counter,
+    abort_diffset: &'static crate::obs::Counter,
+    emits: &'static crate::obs::Counter,
+    lane_high_water: &'static crate::obs::Gauge,
+}
+
+fn fim_obs() -> &'static FimObs {
+    static OBS: std::sync::OnceLock<FimObs> = std::sync::OnceLock::new();
+    OBS.get_or_init(|| FimObs {
+        intersections: crate::obs::counter("fim.bottomup.intersections"),
+        differences: crate::obs::counter("fim.bottomup.differences"),
+        abort_intersect: crate::obs::counter("fim.bottomup.early_abort.intersect"),
+        abort_diffset: crate::obs::counter("fim.bottomup.early_abort.diffset"),
+        emits: crate::obs::counter("fim.bottomup.emits"),
+        lane_high_water: crate::obs::gauge("fim.bottomup.lane_high_water"),
+    })
+}
+
 /// A tidset representation usable by the bottom-up search.
 pub trait TidRepr: Clone + Send + Sync + 'static {
     /// Support = number of transactions represented.
@@ -208,6 +234,9 @@ impl<R> MineScratch<R> {
         while self.lanes.len() <= depth {
             self.lanes.push(Lane::default());
         }
+        if crate::obs::enabled() {
+            fim_obs().lane_high_water.set(self.lanes.len() as i64);
+        }
         std::mem::take(&mut self.lanes[depth])
     }
 
@@ -247,6 +276,9 @@ impl<R> MineScratch<R> {
         self.emit_buf.extend_from_slice(&self.prefix[..pos]);
         self.emit_buf.push(item);
         self.emit_buf.extend_from_slice(&self.prefix[pos..]);
+        if crate::obs::enabled() {
+            fim_obs().emits.incr(1);
+        }
         out.emit(&self.emit_buf, support);
     }
 }
@@ -263,14 +295,25 @@ fn fill_children<'a, R: TidRepr>(
     min_sup: u32,
 ) {
     lane.recycle();
+    let mut attempted = 0u64;
+    let mut aborted = 0u64;
     for (item_j, tids_j) in rest {
+        attempted += 1;
         let mut buf = lane.grab();
         match tids_i.intersect_bounded_into(tids_j, min_sup, &mut buf) {
             Some(n) => lane.entries.push((item_j, buf, n)),
-            None => lane.pool.push(buf),
+            None => {
+                aborted += 1;
+                lane.pool.push(buf);
+            }
         }
     }
     lane.sort_rarest_first();
+    if crate::obs::enabled() {
+        let o = fim_obs();
+        o.intersections.incr(attempted);
+        o.abort_intersect.incr(aborted);
+    }
 }
 
 /// Bottom-Up(EC) — Algorithm 1. `prefix` is the class prefix itemset,
@@ -413,16 +456,28 @@ pub fn bottom_up_diffset_with<S: FrequentSink + ?Sized>(
         let budget = sup_i.saturating_sub(min_sup) as usize;
         let mut lane = scratch.take_lane(0);
         lane.recycle();
+        let mut attempted = 0u64;
+        let mut aborted = 0u64;
         for &(_, j) in &order[a + 1..] {
             let (item_j, tids_j) = &members[j as usize];
+            attempted += 1;
             let mut buf = lane.grab();
             // d(ab) = t(a) − t(b); σ(ab) = σ(a) − |d(ab)|.
             match difference_bounded_into(tids_i, tids_j, budget, &mut buf) {
                 Some(d) if sup_i - d >= min_sup => lane.entries.push((*item_j, buf, sup_i - d)),
-                _ => lane.pool.push(buf),
+                Some(_) => lane.pool.push(buf),
+                None => {
+                    aborted += 1;
+                    lane.pool.push(buf);
+                }
             }
         }
         lane.sort_rarest_first();
+        if crate::obs::enabled() {
+            let o = fim_obs();
+            o.differences.incr(attempted);
+            o.abort_diffset.incr(aborted);
+        }
         if !lane.entries.is_empty() {
             scratch.push_prefix(*item_i);
             diffset_level(scratch, 1, &lane.entries, min_sup, out);
@@ -451,15 +506,27 @@ fn diffset_level<S: FrequentSink + ?Sized>(
         let budget = sup_i.saturating_sub(min_sup) as usize;
         let mut lane = scratch.take_lane(depth);
         lane.recycle();
+        let mut attempted = 0u64;
+        let mut aborted = 0u64;
         for (item_j, diff_j, _) in &members[i + 1..] {
+            attempted += 1;
             let mut buf = lane.grab();
             // d(Pab) = d(Pb) − d(Pa); σ(Pab) = σ(Pa) − |d(Pab)|.
             match difference_bounded_into(diff_j, diff_i, budget, &mut buf) {
                 Some(d) if sup_i - d >= min_sup => lane.entries.push((*item_j, buf, sup_i - d)),
-                _ => lane.pool.push(buf),
+                Some(_) => lane.pool.push(buf),
+                None => {
+                    aborted += 1;
+                    lane.pool.push(buf);
+                }
             }
         }
         lane.sort_rarest_first();
+        if crate::obs::enabled() {
+            let o = fim_obs();
+            o.differences.incr(attempted);
+            o.abort_diffset.incr(aborted);
+        }
         if !lane.entries.is_empty() {
             scratch.push_prefix(*item_i);
             diffset_level(scratch, depth + 1, &lane.entries, min_sup, out);

@@ -31,7 +31,10 @@
 //! (DStream-style micro-batch mining: sliding windows over an
 //! incrementally maintained vertical store, with per-batch frequent
 //! itemset and association-rule snapshots, an async ingest service, and
-//! a lock-free-read snapshot serving layer).
+//! a lock-free-read snapshot serving layer). [`obs`] is the
+//! observability spine: a lock-free metrics registry, RAII span tracing
+//! across every layer, and a Chrome-trace exporter (`repro ... --trace
+//! out.trace.json`, load in Perfetto).
 //!
 //! ## Quickstart
 //!
@@ -82,6 +85,7 @@ pub mod engine;
 pub mod error;
 pub mod figures;
 pub mod fim;
+pub mod obs;
 pub mod runtime;
 pub mod stream;
 pub mod util;
@@ -100,6 +104,7 @@ pub mod prelude {
         generate_rules, sort_frequents, CollectSink, CountSink, Frequent, FrequentSink, Item,
         ItemSet, MinSup, PooledSink, Tid, TopKSink,
     };
+    pub use crate::obs::{self, MetricsSnapshot, SpanGuard};
     pub use crate::stream::{
         BatchSnapshot, BatchSource, IngestConfig, IngestStats, MineMode, ServingSnapshot,
         ShardLoad, ShardStats, ShardedVerticalDb, SnapshotHandle, StreamConfig, StreamService,

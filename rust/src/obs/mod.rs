@@ -1,0 +1,75 @@
+//! Crate-wide observability: metrics registry, span tracing, and
+//! Chrome-trace export — zero dependencies, near-zero overhead off.
+//!
+//! The paper's claims are timing claims (RDD-Eclat beating RDD-Apriori
+//! "by many times", Fig. 15 core scaling), so every layer of this
+//! reproduction reports through one instrumentation spine:
+//!
+//! * **Metrics** ([`registry`]) — atomic [`Counter`]s, [`Gauge`]s, and
+//!   log2 [`Histogram`]s registered by static name ([`counter`],
+//!   [`gauge`], [`histogram`]) and recorded lock-free. [`snapshot`]
+//!   flattens them into a [`MetricsSnapshot`] for `BENCH_*.json` rows
+//!   and the `--stats-every` CLI digest.
+//! * **Spans** ([`span`]) — RAII guards on per-thread span stacks
+//!   feeding a bounded ring-buffer event log. The engine's scheduler
+//!   tasks, per-shard mining, and snapshot publishes all record here,
+//!   so one timeline covers driver, executors, and the stream miner.
+//! * **Export** ([`trace`]) — [`chrome_trace_json`] writes the event
+//!   log as Chrome trace-event JSON (load in Perfetto or
+//!   `chrome://tracing`; `tid` = real worker thread), and
+//!   [`validate_trace`] is the minimal parser tests and CI use to
+//!   prove the export is well-formed.
+//!
+//! ## Overhead
+//!
+//! Tracing is **off** by default. Disabled span sites cost one relaxed
+//! atomic load; disabled metric sites cost nothing (the sites
+//! themselves check [`enabled`]). Enabled counters are single relaxed
+//! `fetch_add`s on leaked `'static` cells — no locks, no allocation on
+//! any hot path. The `obs/overhead` row in `BENCH_fim.json` (see
+//! `benches/fim_micro.rs`) pins the enabled-vs-disabled ratio for the
+//! mining inner loop.
+//!
+//! ```
+//! use rdd_eclat::obs;
+//!
+//! obs::set_enabled(true);
+//! {
+//!     let mut s = obs::span("phase2.mine_class");
+//!     s.arg("class", 7);
+//!     obs::counter("fim.emits").incr(1);
+//! } // span recorded on drop
+//! let json = obs::chrome_trace_json();
+//! assert!(obs::validate_trace(&json).unwrap() >= 1);
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub mod registry;
+pub mod span;
+pub mod trace;
+
+pub use registry::{
+    counter, gauge, histogram, reset_metrics, snapshot, Counter, Gauge, Histogram,
+    HistogramSummary, MetricsSnapshot,
+};
+pub use span::{
+    clear_events, current_depth, current_tid, event_capacity, events, instant, record_span,
+    set_event_capacity, span, EventKind, SpanEvent, SpanGuard, DEFAULT_EVENT_CAPACITY,
+};
+pub use trace::{chrome_trace_json, validate_trace, write_chrome_trace};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Whether observability recording is on (one relaxed load — this is
+/// the check every instrumentation site makes first).
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn observability recording on or off process-wide. The CLI flips
+/// this on for `--trace` and `--stats-every` runs.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}

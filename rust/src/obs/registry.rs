@@ -1,0 +1,478 @@
+//! Metrics registry: atomic counters, gauges, and log2 histograms,
+//! registered once by static name and recorded lock-free on hot paths.
+//!
+//! The registration maps are behind a `Mutex`, but registration happens
+//! once per call site (cached in a `OnceLock`): steady-state recording is
+//! a relaxed `fetch_add`/`fetch_max` on a leaked `'static` cell, with no
+//! locks and no allocation. Snapshots ([`snapshot`]) walk the maps and
+//! produce a flat [`MetricsSnapshot`] that serializes through
+//! [`crate::util::json`] for `BENCH_*.json` rows and CLI digests.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::json_str;
+
+/// Monotonic event counter. `incr` is a single relaxed `fetch_add`.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// New counter at zero (const — usable in statics).
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add `n` (relaxed).
+    #[inline]
+    pub fn incr(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero (between benchmark repetitions).
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Instantaneous level (queue depth, lane depth) with a high-water mark.
+///
+/// `add`/`set` update the level and fold the new level into the
+/// high-water mark, both with relaxed atomics.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicI64,
+    high_water: AtomicI64,
+}
+
+impl Gauge {
+    /// New gauge at zero (const — usable in statics).
+    pub const fn new() -> Gauge {
+        Gauge { value: AtomicI64::new(0), high_water: AtomicI64::new(0) }
+    }
+
+    /// Add `delta` (may be negative) and update the high-water mark.
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        let now = self.value.fetch_add(delta, Ordering::Relaxed) + delta;
+        self.high_water.fetch_max(now, Ordering::Relaxed);
+    }
+
+    /// Set the level and update the high-water mark.
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+        self.high_water.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current level.
+    #[inline]
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// Highest level ever observed.
+    #[inline]
+    pub fn high_water(&self) -> i64 {
+        self.high_water.load(Ordering::Relaxed)
+    }
+
+    /// Reset level and high-water mark to zero.
+    pub fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
+        self.high_water.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Number of log2 buckets: bucket 0 holds the value 0, bucket `b >= 1`
+/// holds values in `[2^(b-1), 2^b)`, so bucket 64 holds the top half of
+/// the `u64` range.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Fixed-bucket log2 histogram. Recording is three relaxed `fetch_add`s
+/// and one `fetch_max` — no locks, no allocation, exact `count`/`sum`.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Index of the log2 bucket holding `v`.
+#[inline]
+fn bucket_of(v: u64) -> usize {
+    (64 - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of bucket `b` (saturating at `u64::MAX`).
+fn bucket_upper(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else if b >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+impl Histogram {
+    /// New empty histogram (const — usable in statics).
+    pub const fn new() -> Histogram {
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            buckets: [Z; HIST_BUCKETS],
+        }
+    }
+
+    /// Record one observation.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact sum of observations.
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum observation (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Approximate quantile (`q` in `[0, 1]`): the inclusive upper bound
+    /// of the first bucket whose cumulative count reaches `q * count`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (b, slot) in self.buckets.iter().enumerate() {
+            cum += slot.load(Ordering::Relaxed);
+            if cum >= target {
+                return bucket_upper(b);
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1)
+    }
+
+    /// Summarize for snapshots.
+    pub fn summary(&self) -> HistogramSummary {
+        let count = self.count();
+        let sum = self.sum();
+        HistogramSummary {
+            count,
+            sum,
+            mean: if count == 0 { 0.0 } else { sum as f64 / count as f64 },
+            p50: self.quantile(0.5),
+            p99: self.quantile(0.99),
+            max: self.max(),
+        }
+    }
+
+    /// Clear all buckets and totals.
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Flat summary of one histogram for snapshots.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HistogramSummary {
+    /// Number of observations.
+    pub count: u64,
+    /// Exact sum of observations.
+    pub sum: u64,
+    /// `sum / count` (0 when empty).
+    pub mean: f64,
+    /// Approximate median (log2-bucket upper bound).
+    pub p50: u64,
+    /// Approximate 99th percentile (log2-bucket upper bound).
+    pub p99: u64,
+    /// Exact maximum observation.
+    pub max: u64,
+}
+
+// Global registration maps. `Mutex<BTreeMap>` is const-constructible, so
+// no lazy-init machinery is needed; deterministic iteration order keeps
+// snapshots stable.
+static COUNTERS: Mutex<BTreeMap<&'static str, &'static Counter>> = Mutex::new(BTreeMap::new());
+static GAUGES: Mutex<BTreeMap<&'static str, &'static Gauge>> = Mutex::new(BTreeMap::new());
+static HISTOGRAMS: Mutex<BTreeMap<&'static str, &'static Histogram>> = Mutex::new(BTreeMap::new());
+
+/// Look up (or register) the counter named `name`. The returned
+/// reference is `'static`; call sites cache it (typically in a
+/// `OnceLock`) so the map lookup happens once, not per record.
+pub fn counter(name: &'static str) -> &'static Counter {
+    let mut map = COUNTERS.lock().unwrap();
+    *map.entry(name).or_insert_with(|| Box::leak(Box::new(Counter::new())))
+}
+
+/// Look up (or register) the gauge named `name`.
+pub fn gauge(name: &'static str) -> &'static Gauge {
+    let mut map = GAUGES.lock().unwrap();
+    *map.entry(name).or_insert_with(|| Box::leak(Box::new(Gauge::new())))
+}
+
+/// Look up (or register) the histogram named `name`.
+pub fn histogram(name: &'static str) -> &'static Histogram {
+    let mut map = HISTOGRAMS.lock().unwrap();
+    *map.entry(name).or_insert_with(|| Box::leak(Box::new(Histogram::new())))
+}
+
+/// Zero every registered metric (between benchmark repetitions; the
+/// registrations themselves persist).
+pub fn reset_metrics() {
+    for c in COUNTERS.lock().unwrap().values() {
+        c.reset();
+    }
+    for g in GAUGES.lock().unwrap().values() {
+        g.reset();
+    }
+    for h in HISTOGRAMS.lock().unwrap().values() {
+        h.reset();
+    }
+}
+
+/// Point-in-time copy of every registered metric, ready to serialize.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    /// `(name, value)` for every registered counter, name-sorted.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, level, high_water)` for every registered gauge.
+    pub gauges: Vec<(String, i64, i64)>,
+    /// `(name, summary)` for every registered histogram.
+    pub histograms: Vec<(String, HistogramSummary)>,
+}
+
+/// Snapshot every registered metric.
+pub fn snapshot() -> MetricsSnapshot {
+    let counters = COUNTERS
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(name, c)| (name.to_string(), c.get()))
+        .collect();
+    let gauges = GAUGES
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(name, g)| (name.to_string(), g.get(), g.high_water()))
+        .collect();
+    let histograms = HISTOGRAMS
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|(name, h)| (name.to_string(), h.summary()))
+        .collect();
+    MetricsSnapshot { counters, gauges, histograms }
+}
+
+impl MetricsSnapshot {
+    /// Serialize as one JSON object:
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {...}}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"counters\": {");
+        for (i, (name, v)) in self.counters.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("{}: {v}", json_str(name)));
+        }
+        out.push_str("}, \"gauges\": {");
+        for (i, (name, v, hw)) in self.gauges.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("{}: {{\"value\": {v}, \"high_water\": {hw}}}", json_str(name)));
+        }
+        out.push_str("}, \"histograms\": {");
+        for (i, (name, h)) in self.histograms.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!(
+                "{}: {{\"count\": {}, \"sum\": {}, \"mean\": {}, \"p50\": {}, \"p99\": {}, \
+                 \"max\": {}}}",
+                json_str(name),
+                h.count,
+                h.sum,
+                crate::util::json::json_f64(h.mean),
+                h.p50,
+                h.p99,
+                h.max
+            ));
+        }
+        out.push_str("}}");
+        out
+    }
+
+    /// One-line digest for periodic CLI prints (`--stats-every`): every
+    /// non-zero counter and gauge, plus `count/p50` per histogram.
+    pub fn digest(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for (name, v) in &self.counters {
+            if *v != 0 {
+                parts.push(format!("{name}={v}"));
+            }
+        }
+        for (name, v, hw) in &self.gauges {
+            if *v != 0 || *hw != 0 {
+                parts.push(format!("{name}={v}(hi {hw})"));
+            }
+        }
+        for (name, h) in &self.histograms {
+            if h.count != 0 {
+                parts.push(format!("{name}[n={} p50={}]", h.count, h.p50));
+            }
+        }
+        if parts.is_empty() {
+            "no metrics recorded".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn counter_concurrent_totals_exact() {
+        let c = Arc::new(Counter::new());
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for _ in 0..10_000 {
+                        c.incr(1);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 80_000);
+    }
+
+    #[test]
+    fn histogram_concurrent_totals_exact() {
+        let h = Arc::new(Histogram::new());
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    for i in 0..5_000u64 {
+                        h.record(t * 5_000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(h.count(), 20_000);
+        // Sum of 0..20000 regardless of interleaving.
+        assert_eq!(h.sum(), (0..20_000u64).sum::<u64>());
+        assert_eq!(h.max(), 19_999);
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 1);
+        assert_eq!(bucket_of(2), 2);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 3);
+        assert_eq!(bucket_of(1023), 10);
+        assert_eq!(bucket_of(1024), 11);
+        assert_eq!(bucket_of(u64::MAX), 64);
+        assert_eq!(bucket_upper(0), 0);
+        assert_eq!(bucket_upper(1), 1);
+        assert_eq!(bucket_upper(10), 1023);
+        assert_eq!(bucket_upper(64), u64::MAX);
+
+        let h = Histogram::new();
+        for v in [0, 1, 2, 3, 4, 1023, 1024, u64::MAX] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.max(), u64::MAX);
+        // Quantiles land on bucket upper bounds.
+        assert_eq!(h.quantile(0.0), 0);
+        assert_eq!(h.quantile(1.0), u64::MAX);
+        let h2 = Histogram::new();
+        h2.record(5);
+        assert_eq!(h2.quantile(0.5), 7, "one value in [4,8) reports the bucket bound");
+    }
+
+    #[test]
+    fn gauge_tracks_level_and_high_water() {
+        let g = Gauge::new();
+        g.add(3);
+        g.add(2);
+        g.add(-4);
+        assert_eq!(g.get(), 1);
+        assert_eq!(g.high_water(), 5);
+        g.set(2);
+        assert_eq!(g.get(), 2);
+        assert_eq!(g.high_water(), 5);
+        g.reset();
+        assert_eq!((g.get(), g.high_water()), (0, 0));
+    }
+
+    #[test]
+    fn registry_returns_same_cell_and_snapshots() {
+        let a = counter("test.registry.hits");
+        let b = counter("test.registry.hits");
+        assert!(std::ptr::eq(a, b), "same name resolves to the same cell");
+        a.reset();
+        a.incr(7);
+        gauge("test.registry.depth").set(3);
+        histogram("test.registry.lat_us").record(100);
+        let snap = snapshot();
+        assert!(snap.counters.iter().any(|(n, v)| n == "test.registry.hits" && *v == 7));
+        assert!(snap.gauges.iter().any(|(n, v, _)| n == "test.registry.depth" && *v == 3));
+        assert!(snap.histograms.iter().any(|(n, h)| n == "test.registry.lat_us" && h.count >= 1));
+        let json = snap.to_json();
+        assert!(json.contains("\"test.registry.hits\": 7"), "{json}");
+        assert!(json.contains("\"high_water\""), "{json}");
+        let digest = snap.digest();
+        assert!(digest.contains("test.registry.hits=7"), "{digest}");
+    }
+}

@@ -1,0 +1,353 @@
+//! Span tracing: RAII guards on per-thread span stacks feeding a
+//! bounded ring-buffer event log.
+//!
+//! [`span`] returns a [`SpanGuard`] that pushes onto the current
+//! thread's span stack; dropping it (including during panic unwinding)
+//! pops the stack and appends one [`SpanEvent`] to the global event
+//! ring. Events carry a stable small thread id (`tid`), microsecond
+//! timestamps against one process-wide epoch, nesting depth, and
+//! optional `(key, value)` args attached at close — exactly what the
+//! Chrome trace exporter ([`super::trace`]) needs.
+//!
+//! Tracing is off by default: when disabled ([`super::enabled`] is
+//! false) [`span`] costs one relaxed atomic load and returns an inert
+//! guard. The ring keeps the latest [`event_capacity`] events and counts
+//! overwritten ones in `dropped`, so long `--serve` runs stay bounded.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Default event-ring capacity (latest events kept).
+pub const DEFAULT_EVENT_CAPACITY: usize = 65_536;
+
+/// Whether an event is a duration span or a zero-length marker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// A completed span with a duration (Chrome `ph: "X"`).
+    Span,
+    /// An instantaneous marker (Chrome `ph: "i"`).
+    Instant,
+}
+
+/// One recorded event.
+#[derive(Debug, Clone)]
+pub struct SpanEvent {
+    /// Static event name (`engine.task.result`, `stream.mine_class`...).
+    pub name: &'static str,
+    /// Stable small id of the recording thread.
+    pub tid: u32,
+    /// Start time, microseconds since the process trace epoch.
+    pub start_us: u64,
+    /// Duration in microseconds (0 for [`EventKind::Instant`]).
+    pub dur_us: u64,
+    /// Span-stack depth at the time the event opened (0 = top level).
+    pub depth: usize,
+    /// Args attached at close (`("records", 128)`, `("shard", 3)`...).
+    pub args: Vec<(&'static str, u64)>,
+    /// Span or instant marker.
+    pub kind: EventKind,
+}
+
+struct EventRing {
+    buf: Vec<SpanEvent>,
+    next: usize,
+    cap: usize,
+    dropped: u64,
+}
+
+impl EventRing {
+    const fn new() -> EventRing {
+        EventRing { buf: Vec::new(), next: 0, cap: DEFAULT_EVENT_CAPACITY, dropped: 0 }
+    }
+
+    fn push(&mut self, e: SpanEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+        } else {
+            self.buf[self.next] = e;
+            self.next = (self.next + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Events in chronological order.
+    fn snapshot(&self) -> Vec<SpanEvent> {
+        if self.buf.len() < self.cap || self.next == 0 {
+            self.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.buf.len());
+            out.extend_from_slice(&self.buf[self.next..]);
+            out.extend_from_slice(&self.buf[..self.next]);
+            out
+        }
+    }
+
+    fn clear(&mut self) {
+        self.buf.clear();
+        self.next = 0;
+        self.dropped = 0;
+    }
+}
+
+static EVENTS: Mutex<EventRing> = Mutex::new(EventRing::new());
+static THREAD_NAMES: Mutex<Vec<(u32, String)>> = Mutex::new(Vec::new());
+static NEXT_TID: AtomicU32 = AtomicU32::new(0);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    static SPAN_STACK: RefCell<Vec<&'static str>> = const { RefCell::new(Vec::new()) };
+    static TID: RefCell<Option<u32>> = const { RefCell::new(None) };
+}
+
+/// The process trace epoch: timestamps in all events are measured from
+/// the first call (made on first use).
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn micros_since_epoch(t: Instant) -> u64 {
+    t.saturating_duration_since(epoch()).as_micros() as u64
+}
+
+/// Stable small id for the current thread; registers the thread's name
+/// (or `thread-N`) on first use so the exporter can label tracks.
+pub fn current_tid() -> u32 {
+    TID.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        if let Some(tid) = *slot {
+            return tid;
+        }
+        let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        let name = std::thread::current()
+            .name()
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("thread-{tid}"));
+        THREAD_NAMES.lock().unwrap().push((tid, name));
+        *slot = Some(tid);
+        tid
+    })
+}
+
+/// `(tid, name)` for every thread that has recorded an event.
+pub fn thread_names() -> Vec<(u32, String)> {
+    THREAD_NAMES.lock().unwrap().clone()
+}
+
+/// Current nesting depth of the calling thread's span stack.
+pub fn current_depth() -> usize {
+    SPAN_STACK.with(|s| s.borrow().len())
+}
+
+/// RAII span: records one [`SpanEvent`] when dropped (panic-safe — the
+/// stack pop and the event both happen during unwinding too).
+pub struct SpanGuard {
+    name: &'static str,
+    start: Instant,
+    depth: usize,
+    args: Vec<(&'static str, u64)>,
+    active: bool,
+}
+
+/// Open a span. When tracing is disabled this is one relaxed load and
+/// the returned guard is inert.
+#[inline]
+pub fn span(name: &'static str) -> SpanGuard {
+    if !super::enabled() {
+        return SpanGuard { name, start: epoch(), depth: 0, args: Vec::new(), active: false };
+    }
+    let depth = SPAN_STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        s.push(name);
+        s.len() - 1
+    });
+    SpanGuard { name, start: Instant::now(), depth, args: Vec::new(), active: true }
+}
+
+impl SpanGuard {
+    /// Attach a counter value to the span; it rides into the Chrome
+    /// trace as an `args` entry when the span closes.
+    pub fn arg(&mut self, key: &'static str, value: u64) -> &mut SpanGuard {
+        if self.active {
+            self.args.push((key, value));
+        }
+        self
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        SPAN_STACK.with(|s| {
+            s.borrow_mut().pop();
+        });
+        let event = SpanEvent {
+            name: self.name,
+            tid: current_tid(),
+            start_us: micros_since_epoch(self.start),
+            dur_us: self.start.elapsed().as_micros() as u64,
+            depth: self.depth,
+            args: std::mem::take(&mut self.args),
+            kind: EventKind::Span,
+        };
+        EVENTS.lock().unwrap().push(event);
+    }
+}
+
+/// Record an instantaneous marker event (no-op when tracing is off).
+#[inline]
+pub fn instant(name: &'static str) {
+    if !super::enabled() {
+        return;
+    }
+    let event = SpanEvent {
+        name,
+        tid: current_tid(),
+        start_us: micros_since_epoch(Instant::now()),
+        dur_us: 0,
+        depth: SPAN_STACK.with(|s| s.borrow().len()),
+        args: Vec::new(),
+        kind: EventKind::Instant,
+    };
+    EVENTS.lock().unwrap().push(event);
+}
+
+/// Record an externally timed span (used to re-emit the engine's
+/// `TaskMetric`/`JobSpan` walls into the same timeline as live spans).
+pub fn record_span(
+    name: &'static str,
+    start: Instant,
+    dur_us: u64,
+    args: Vec<(&'static str, u64)>,
+) {
+    if !super::enabled() {
+        return;
+    }
+    let event = SpanEvent {
+        name,
+        tid: current_tid(),
+        start_us: micros_since_epoch(start),
+        dur_us,
+        depth: SPAN_STACK.with(|s| s.borrow().len()),
+        args,
+        kind: EventKind::Span,
+    };
+    EVENTS.lock().unwrap().push(event);
+}
+
+/// Chronological snapshot of the event ring plus the count of events
+/// overwritten after the ring filled.
+pub fn events() -> (Vec<SpanEvent>, u64) {
+    let ring = EVENTS.lock().unwrap();
+    (ring.snapshot(), ring.dropped)
+}
+
+/// Clear the event ring (capacity and thread registrations persist).
+pub fn clear_events() {
+    EVENTS.lock().unwrap().clear();
+}
+
+/// Resize the event ring (clears it). The default is
+/// [`DEFAULT_EVENT_CAPACITY`].
+pub fn set_event_capacity(cap: usize) {
+    let mut ring = EVENTS.lock().unwrap();
+    ring.cap = cap.max(1);
+    ring.clear();
+}
+
+/// Current event-ring capacity.
+pub fn event_capacity() -> usize {
+    EVENTS.lock().unwrap().cap
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_and_counts_dropped() {
+        let mut ring = EventRing::new();
+        ring.cap = 4;
+        let ev = |i: u64| SpanEvent {
+            name: "t",
+            tid: 0,
+            start_us: i,
+            dur_us: 0,
+            depth: 0,
+            args: Vec::new(),
+            kind: EventKind::Span,
+        };
+        for i in 0..7 {
+            ring.push(ev(i));
+        }
+        assert_eq!(ring.dropped, 3);
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 4);
+        let starts: Vec<u64> = snap.iter().map(|e| e.start_us).collect();
+        assert_eq!(starts, vec![3, 4, 5, 6], "latest kept, chronological");
+        ring.clear();
+        assert_eq!(ring.dropped, 0);
+        assert!(ring.snapshot().is_empty());
+    }
+
+    #[test]
+    fn span_stack_nests_and_unwinds_on_panic() {
+        // Enabled tracing is process-global; the stack itself is
+        // thread-local, so run the scenario on a dedicated thread.
+        crate::obs::set_enabled(true);
+        let handle = std::thread::Builder::new()
+            .name("obs-nest-test".into())
+            .spawn(|| {
+                assert_eq!(current_depth(), 0);
+                {
+                    let _a = span("outer");
+                    assert_eq!(current_depth(), 1);
+                    {
+                        let mut b = span("inner");
+                        b.arg("k", 7);
+                        assert_eq!(current_depth(), 2);
+                    }
+                    assert_eq!(current_depth(), 1);
+                }
+                assert_eq!(current_depth(), 0);
+
+                // RAII unwinding: a panic inside a span still pops it.
+                let r = std::panic::catch_unwind(|| {
+                    let _g = span("doomed");
+                    panic!("boom");
+                });
+                assert!(r.is_err());
+                assert_eq!(current_depth(), 0, "stack unwound by Drop");
+            })
+            .unwrap();
+        handle.join().unwrap();
+
+        let (events, _) = events();
+        let inner = events.iter().find(|e| e.name == "inner").expect("inner recorded");
+        assert_eq!(inner.depth, 1);
+        assert_eq!(inner.args, vec![("k", 7)]);
+        let doomed = events.iter().find(|e| e.name == "doomed").expect("doomed recorded");
+        assert_eq!(doomed.kind, EventKind::Span);
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        // Another test may have enabled tracing concurrently; drive the
+        // guard directly to keep this deterministic.
+        let g = SpanGuard { name: "x", start: epoch(), depth: 0, args: Vec::new(), active: false };
+        drop(g);
+        // An inert guard records nothing and touches no stack; nothing
+        // to assert beyond "did not panic or deadlock".
+    }
+
+    #[test]
+    fn tid_is_stable_and_named() {
+        let a = current_tid();
+        let b = current_tid();
+        assert_eq!(a, b);
+        assert!(thread_names().iter().any(|(tid, _)| *tid == a));
+    }
+}

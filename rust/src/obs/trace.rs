@@ -1,0 +1,349 @@
+//! Chrome trace-event exporter and a minimal well-formedness checker.
+//!
+//! [`chrome_trace_json`] serializes the current event ring as a Chrome
+//! trace-event JSON document — open it in Perfetto
+//! (<https://ui.perfetto.dev>) or `chrome://tracing`. Spans become
+//! `"ph": "X"` complete events, markers become `"ph": "i"` instants,
+//! and each recorded thread gets a `thread_name` metadata event so the
+//! tracks read `executor-0`, `stream-miner`, `main`... The category
+//! (`cat`) is the event-name prefix before the first `.`, so the UI can
+//! filter by layer (`engine`, `fim`, `stream`).
+//!
+//! [`validate_trace`] is a tiny recursive-descent JSON parser used by
+//! tests and CI smoke runs to prove the emitted trace parses and has
+//! the required keys — no serde needed.
+
+use crate::util::json::json_str;
+
+use super::span::{events, thread_names, EventKind};
+
+/// Serialize the current event ring as a Chrome trace-event JSON
+/// document (`{"traceEvents": [...]}` object form).
+pub fn chrome_trace_json() -> String {
+    let (evs, dropped) = events();
+    let mut out = String::from("{\"traceEvents\": [\n");
+    let mut first = true;
+    let mut push = |s: String, first: &mut bool| {
+        if !*first {
+            out.push_str(",\n");
+        }
+        out.push_str(&s);
+        *first = false;
+    };
+    for (tid, name) in thread_names() {
+        push(
+            format!(
+                "  {{\"ph\": \"M\", \"pid\": 1, \"tid\": {tid}, \"name\": \"thread_name\", \
+                 \"args\": {{\"name\": {}}}}}",
+                json_str(&name)
+            ),
+            &mut first,
+        );
+    }
+    for e in &evs {
+        let cat = e.name.split('.').next().unwrap_or("obs");
+        let mut args = String::from("{");
+        for (i, (k, v)) in e.args.iter().enumerate() {
+            if i > 0 {
+                args.push_str(", ");
+            }
+            args.push_str(&format!("{}: {v}", json_str(k)));
+        }
+        args.push('}');
+        let row = match e.kind {
+            EventKind::Span => format!(
+                "  {{\"ph\": \"X\", \"pid\": 1, \"tid\": {}, \"ts\": {}, \"dur\": {}, \
+                 \"name\": {}, \"cat\": {}, \"args\": {args}}}",
+                e.tid,
+                e.start_us,
+                e.dur_us,
+                json_str(e.name),
+                json_str(cat)
+            ),
+            EventKind::Instant => format!(
+                "  {{\"ph\": \"i\", \"pid\": 1, \"tid\": {}, \"ts\": {}, \"s\": \"t\", \
+                 \"name\": {}, \"cat\": {}, \"args\": {args}}}",
+                e.tid,
+                e.start_us,
+                json_str(e.name),
+                json_str(cat)
+            ),
+        };
+        push(row, &mut first);
+    }
+    out.push_str("\n], \"otherData\": {\"dropped_events\": ");
+    out.push_str(&dropped.to_string());
+    out.push_str("}}\n");
+    out
+}
+
+/// Write [`chrome_trace_json`] to `path` (parent directories created).
+pub fn write_chrome_trace(path: &str) -> crate::error::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, chrome_trace_json())?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Minimal JSON checker.
+// ---------------------------------------------------------------------
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Parser<'a> {
+        Parser { s: s.as_bytes(), i: 0 }
+    }
+
+    fn err(&self, msg: &str) -> String {
+        format!("{msg} at byte {}", self.i)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.s.get(self.i).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<(), String> {
+        match self.peek() {
+            Some(b'{') => self.object().map(|_| ()),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string().map(|_| ()),
+            Some(b't') => self.literal("true"),
+            Some(b'f') => self.literal("false"),
+            Some(b'n') => self.literal("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn literal(&mut self, lit: &str) -> Result<(), String> {
+        self.skip_ws();
+        if self.s[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{lit}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<(), String> {
+        self.skip_ws();
+        let start = self.i;
+        if self.s.get(self.i) == Some(&b'-') {
+            self.i += 1;
+        }
+        while self
+            .s
+            .get(self.i)
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.i += 1;
+        }
+        if self.i == start {
+            Err(self.err("expected a number"))
+        } else {
+            Ok(())
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        while let Some(&c) = self.s.get(self.i) {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = *self.s.get(self.i).ok_or_else(|| self.err("bad escape"))?;
+                    self.i += 1;
+                    match esc {
+                        b'u' => {
+                            if self.i + 4 > self.s.len() {
+                                return Err(self.err("bad \\u escape"));
+                            }
+                            self.i += 4;
+                            out.push('?');
+                        }
+                        _ => out.push(esc as char),
+                    }
+                }
+                c => out.push(c as char),
+            }
+        }
+        Err(self.err("unterminated string"))
+    }
+
+    /// Parse an object, returning its top-level key names.
+    fn object(&mut self) -> Result<Vec<String>, String> {
+        self.expect(b'{')?;
+        let mut keys = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(keys);
+        }
+        loop {
+            keys.push(self.string()?);
+            self.expect(b':')?;
+            self.value()?;
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(keys);
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<(), String> {
+        self.expect(b'[')?;
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.value()?;
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+}
+
+/// Check that `text` is a well-formed Chrome trace: valid JSON, a
+/// top-level `traceEvents` array, and every event object carrying `ph`
+/// and `name` keys (plus `ts` for non-metadata events). Returns the
+/// number of events.
+pub fn validate_trace(text: &str) -> Result<usize, String> {
+    let mut p = Parser::new(text);
+    p.expect(b'{')?;
+    let mut seen_trace_events = false;
+    let mut n_events = 0usize;
+    loop {
+        let key = p.string()?;
+        p.expect(b':')?;
+        if key == "traceEvents" {
+            seen_trace_events = true;
+            p.expect(b'[')?;
+            if p.peek() == Some(b']') {
+                p.i += 1;
+            } else {
+                loop {
+                    let keys = p.object()?;
+                    for required in ["ph", "name"] {
+                        if !keys.iter().any(|k| k == required) {
+                            return Err(format!("event {n_events} missing key '{required}'"));
+                        }
+                    }
+                    n_events += 1;
+                    match p.peek() {
+                        Some(b',') => p.i += 1,
+                        Some(b']') => {
+                            p.i += 1;
+                            break;
+                        }
+                        _ => return Err(p.err("expected ',' or ']'")),
+                    }
+                }
+            }
+        } else {
+            p.value()?;
+        }
+        match p.peek() {
+            Some(b',') => p.i += 1,
+            Some(b'}') => {
+                p.i += 1;
+                break;
+            }
+            _ => return Err(p.err("expected ',' or '}'")),
+        }
+    }
+    p.skip_ws();
+    if p.i != p.s.len() {
+        return Err(p.err("trailing content"));
+    }
+    if !seen_trace_events {
+        return Err("no traceEvents array".to_string());
+    }
+    Ok(n_events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    #[test]
+    fn exported_trace_is_well_formed() {
+        obs::set_enabled(true);
+        {
+            let mut g = obs::span("trace.test.outer");
+            g.arg("items", 3);
+            let _inner = obs::span("trace.test.inner");
+        }
+        obs::instant("trace.test.marker");
+        let json = chrome_trace_json();
+        let n = validate_trace(&json).expect("trace parses");
+        assert!(n >= 3, "metadata + at least two spans: {n}\n{json}");
+        assert!(json.contains("\"trace.test.outer\""), "{json}");
+        assert!(json.contains("\"ph\": \"X\""), "{json}");
+        assert!(json.contains("\"ph\": \"i\""), "{json}");
+        assert!(json.contains("\"thread_name\""), "{json}");
+        assert!(json.contains("\"items\": 3"), "{json}");
+        assert!(json.contains("\"dropped_events\""), "{json}");
+    }
+
+    #[test]
+    fn checker_accepts_minimal_and_rejects_malformed() {
+        assert_eq!(validate_trace("{\"traceEvents\": []}"), Ok(0));
+        let ok = "{\"traceEvents\": [{\"ph\": \"X\", \"name\": \"a\", \"ts\": 1, \"dur\": 2}]}";
+        assert_eq!(validate_trace(ok), Ok(1));
+        assert!(validate_trace("{\"traceEvents\": [{\"ph\": \"X\"}]}").is_err(), "missing name");
+        assert!(validate_trace("{\"traceEvents\": [}").is_err());
+        assert!(validate_trace("{\"other\": 1}").is_err(), "no traceEvents");
+        assert!(validate_trace("{\"traceEvents\": []} trailing").is_err());
+        // Escapes and nesting survive the minimal parser.
+        let nested = "{\"traceEvents\": [{\"ph\": \"M\", \"name\": \"t\\\"n\", \
+                      \"args\": {\"name\": \"executor-0\", \"xs\": [1, -2.5e3, null]}}]}";
+        assert_eq!(validate_trace(nested), Ok(1));
+    }
+
+    #[test]
+    fn write_chrome_trace_creates_parent_dirs() {
+        let dir = std::env::temp_dir().join("rdd_eclat_obs_trace_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("sub").join("out.trace.json");
+        write_chrome_trace(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        validate_trace(&text).expect("written trace parses");
+    }
+}

@@ -30,12 +30,26 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::fim::Item;
+
+/// Ingest instrumentation cells, resolved once (see [`crate::obs`]).
+struct IngestObs {
+    queue_depth: &'static crate::obs::Gauge,
+    skipped: &'static crate::obs::Counter,
+}
+
+fn ingest_obs() -> &'static IngestObs {
+    static OBS: OnceLock<IngestObs> = OnceLock::new();
+    OBS.get_or_init(|| IngestObs {
+        queue_depth: crate::obs::gauge("stream.ingest.queue_depth"),
+        skipped: crate::obs::counter("stream.ingest.skipped"),
+    })
+}
 
 use super::job::{ShardStats, StreamingMiner};
 use super::serve::{snapshot_pipe, ServingSnapshot, SnapshotHandle, SnapshotPublisher};
@@ -105,6 +119,11 @@ pub struct IngestStats {
     /// loop after every bookkept batch and every published emission, so
     /// shard imbalance is observable while the service runs.
     pub shards: Vec<ShardStats>,
+    /// Staleness of `shards`: monotonic time since the mining loop last
+    /// refreshed the per-shard accounting. A stalled or wedged miner
+    /// shows up as a growing `age`, instead of silently serving
+    /// arbitrarily old numbers as if they were current.
+    pub age: Duration,
 }
 
 /// Queue state shared between producers, the mining loop, and `drain`.
@@ -132,8 +151,9 @@ struct Shared {
     emissions: AtomicU64,
     skipped: AtomicU64,
     /// Latest per-shard accounting, copied out of the miner by the
-    /// mining loop (the miner itself lives on the loop thread).
-    shard_stats: Mutex<Vec<ShardStats>>,
+    /// mining loop (the miner itself lives on the loop thread), plus
+    /// the monotonic instant of that refresh (drives `IngestStats::age`).
+    shard_stats: Mutex<(Instant, Vec<ShardStats>)>,
 }
 
 impl Shared {
@@ -171,7 +191,7 @@ impl StreamService {
             batches: AtomicU64::new(0),
             emissions: AtomicU64::new(0),
             skipped: AtomicU64::new(0),
-            shard_stats: Mutex::new(miner.shard_stats()),
+            shard_stats: Mutex::new((Instant::now(), miner.shard_stats())),
         });
         let (publisher, handle) = snapshot_pipe();
         let worker = {
@@ -207,6 +227,9 @@ impl StreamService {
         st.queue.push_back(rows);
         let pending = st.queue.len();
         drop(st);
+        if crate::obs::enabled() {
+            ingest_obs().queue_depth.set(pending as i64);
+        }
         self.shared.batches.fetch_add(1, Ordering::SeqCst);
         self.shared.work_cv.notify_one();
         if pending > self.shared.cap {
@@ -222,13 +245,23 @@ impl StreamService {
     }
 
     /// Lifetime counters (batches in, emissions published, emissions
-    /// skipped under backpressure).
+    /// skipped under backpressure), per-shard accounting, and the
+    /// staleness (`age`) of that accounting.
     pub fn stats(&self) -> IngestStats {
+        let (refreshed, shards) = self
+            .shared
+            .shard_stats
+            .lock()
+            .map(|s| (s.0, s.1.clone()))
+            .unwrap_or_else(|_| (Instant::now(), Vec::new()));
+        let age = refreshed.elapsed();
+        let shards = shards.into_iter().map(|s| ShardStats { age, ..s }).collect();
         IngestStats {
             batches: self.shared.batches.load(Ordering::SeqCst),
             emissions: self.shared.emissions.load(Ordering::SeqCst),
             skipped: self.shared.skipped.load(Ordering::SeqCst),
-            shards: self.shared.shard_stats.lock().map(|s| s.clone()).unwrap_or_default(),
+            shards,
+            age,
         }
     }
 
@@ -319,6 +352,9 @@ fn mining_loop(
             st.busy = false;
             loop {
                 if let Some(batch) = st.queue.pop_front() {
+                    if crate::obs::enabled() {
+                        ingest_obs().queue_depth.set(st.queue.len() as i64);
+                    }
                     st.busy = true;
                     break Work::Batch(batch);
                 }
@@ -374,6 +410,9 @@ fn mining_loop(
                         st.unmined = true;
                         drop(st);
                         shared.skipped.fetch_add(1, Ordering::SeqCst);
+                        if crate::obs::enabled() {
+                            ingest_obs().skipped.incr(1);
+                        }
                         false
                     } else {
                         true
@@ -384,7 +423,14 @@ fn mining_loop(
         };
 
         if mine {
-            match catch_unwind(AssertUnwindSafe(|| miner.mine_now())) {
+            match catch_unwind(AssertUnwindSafe(|| {
+                let mut sp = crate::obs::span("stream.mine_now");
+                let r = miner.mine_now();
+                if let Ok(snap) = &r {
+                    sp.arg("batch", snap.batch_id).arg("frequents", snap.frequents.len() as u64);
+                }
+                r
+            })) {
                 Ok(Ok(snap)) => {
                     publisher.publish(snap);
                     shared.emissions.fetch_add(1, Ordering::SeqCst);
@@ -413,7 +459,7 @@ fn mining_loop(
 /// `StreamService::stats` observes it from any thread.
 fn refresh_shard_stats(shared: &Shared, miner: &StreamingMiner) {
     if let Ok(mut s) = shared.shard_stats.lock() {
-        *s = miner.shard_stats();
+        *s = (Instant::now(), miner.shard_stats());
     }
 }
 
@@ -555,6 +601,18 @@ mod tests {
         assert!(
             stats.shards.iter().any(|s| s.mined_itemsets > 0 || s.rows > 0),
             "at least one shard did observable work: {stats:?}"
+        );
+        // Satellite: staleness stamping. Every shard carries the same
+        // age as the stats container, and with the loop idle after
+        // drain, age grows monotonically instead of masquerading as
+        // fresh.
+        assert!(stats.shards.iter().all(|s| s.age == stats.age), "uniform age stamp");
+        std::thread::sleep(Duration::from_millis(15));
+        let older = service.stats();
+        assert!(
+            older.age >= Duration::from_millis(15),
+            "idle mining loop must surface growing staleness, got {:?}",
+            older.age
         );
         service.shutdown().unwrap();
     }

@@ -20,7 +20,7 @@
 //!   job falls back to re-mining every class from the store.
 
 use std::collections::HashSet;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 use crate::algorithms::partitioners::ReverseHashClassPartitioner;
@@ -36,6 +36,20 @@ use crate::util::Stopwatch;
 
 use super::sharded::ShardedVerticalDb;
 use super::window::{normalize_row, SlidingWindow, WindowSpec};
+
+/// Streaming-job instrumentation cells, resolved once (see [`crate::obs`]).
+struct StreamObs {
+    churn_fallback: &'static crate::obs::Counter,
+    mine_wall_us: &'static crate::obs::Histogram,
+}
+
+fn stream_obs() -> &'static StreamObs {
+    static OBS: OnceLock<StreamObs> = OnceLock::new();
+    OBS.get_or_init(|| StreamObs {
+        churn_fallback: crate::obs::counter("stream.churn_fallback"),
+        mine_wall_us: crate::obs::histogram("stream.shard.mine_wall_us"),
+    })
+}
 
 /// How each emission is mined.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -245,6 +259,12 @@ pub struct ShardStats {
     pub mined_itemsets: u64,
     /// Wall time of this shard's most recent mining task.
     pub mine_wall: Duration,
+    /// Staleness stamp: monotonic time since these numbers were last
+    /// refreshed. Zero when read synchronously from the miner
+    /// ([`StreamingMiner::shard_stats`]); the async service
+    /// (`IngestStats`) stamps it with now − last mining-loop refresh,
+    /// so a stalled miner cannot serve old numbers as current.
+    pub age: Duration,
 }
 
 /// What one shard's mining task did during one emission.
@@ -341,6 +361,7 @@ impl StreamingMiner {
                 postings: load.postings,
                 mined_itemsets,
                 mine_wall,
+                age: Duration::ZERO,
             })
             .collect()
     }
@@ -353,7 +374,11 @@ impl StreamingMiner {
 
     /// Fold one emission's per-shard mining runs into the stats.
     fn record_mine(&mut self, runs: Vec<ShardRun>) {
+        let obs = crate::obs::enabled();
         for run in runs {
+            if obs {
+                stream_obs().mine_wall_us.record(run.wall.as_micros() as u64);
+            }
             let (wall, itemsets) = &mut self.mine_stats[run.shard];
             *wall = run.wall;
             *itemsets += run.itemsets;
@@ -484,6 +509,12 @@ impl StreamingMiner {
             }
         };
         if full {
+            // A full re-mine with a live cache means reuse was available
+            // but abandoned — the churn-fallback signal (also fires on a
+            // min_sup change, which likewise invalidates the cache).
+            if self.cache.is_some() && crate::obs::enabled() {
+                stream_obs().churn_fallback.incr(1);
+            }
             let atoms = self.store.atoms(min_sup_count, |_| true);
             let (frequents, runs) = mine_atoms(&self.ctx, atoms, min_sup_count, self.cfg.shards)?;
             self.record_mine(runs);
@@ -552,7 +583,13 @@ fn mine_atoms(
         let tasks: Vec<_> = (0..shared.len() - 1)
             .map(|i| {
                 let atoms = Arc::clone(&shared);
-                move || mine_class(&atoms, i, min_sup, PooledSink::new(), &mut MineScratch::new())
+                move || {
+                    let mut sp = crate::obs::span("stream.mine_class");
+                    let found =
+                        mine_class(&atoms, i, min_sup, PooledSink::new(), &mut MineScratch::new());
+                    sp.arg("class", i as u64).arg("itemsets", found.len() as u64);
+                    found
+                }
             })
             .collect();
         let mut itemsets = 0u64;
@@ -578,6 +615,8 @@ fn mine_atoms(
         let atoms = Arc::clone(&shared);
         tasks.push(move || {
             let sw = Stopwatch::start();
+            let mut sp = crate::obs::span("stream.mine_shard");
+            let classes = group.len() as u64;
             // One sink + one scratch arena across the whole class group;
             // presized so the first classes don't pay warm-up growth.
             let mut found = PooledSink::with_capacity(group.len() * 8, group.len() * 4);
@@ -585,6 +624,9 @@ fn mine_atoms(
             for i in group {
                 found = mine_class(&atoms, i, min_sup, found, &mut scratch);
             }
+            sp.arg("shard", s as u64)
+                .arg("classes", classes)
+                .arg("itemsets", found.len() as u64);
             (found, sw.elapsed())
         });
     }

@@ -31,13 +31,27 @@
 use std::cell::UnsafeCell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::fim::{Item, ItemSet, Rule};
 
 use super::job::BatchSnapshot;
 use super::window::normalize_row;
+
+/// Serving-layer instrumentation cells, resolved once (see [`crate::obs`]).
+struct ServeObs {
+    publishes: &'static crate::obs::Counter,
+    reader_wait_us: &'static crate::obs::Histogram,
+}
+
+fn serve_obs() -> &'static ServeObs {
+    static OBS: OnceLock<ServeObs> = OnceLock::new();
+    OBS.get_or_init(|| ServeObs {
+        publishes: crate::obs::counter("stream.serve.publishes"),
+        reader_wait_us: crate::obs::histogram("stream.serve.reader_wait_us"),
+    })
+}
 
 /// A published snapshot with its query indices prebuilt — what readers
 /// get from [`SnapshotHandle::latest`]. Dereferences to the underlying
@@ -51,6 +65,9 @@ pub struct ServingSnapshot {
     /// confidence descending, and the index preserves that order within
     /// each antecedent.
     by_antecedent: HashMap<ItemSet, Vec<u32>>,
+    /// When this snapshot was indexed (monotonic) — see
+    /// [`ServingSnapshot::age`].
+    indexed_at: Instant,
 }
 
 impl ServingSnapshot {
@@ -63,7 +80,14 @@ impl ServingSnapshot {
         for (i, r) in snap.rules.iter().enumerate() {
             by_antecedent.entry(r.antecedent.clone()).or_default().push(i as u32);
         }
-        ServingSnapshot { snap, frequent, by_antecedent }
+        ServingSnapshot { snap, frequent, by_antecedent, indexed_at: Instant::now() }
+    }
+
+    /// Monotonic time since this snapshot was indexed for serving — how
+    /// stale the data a reader holding it is looking at. Grows until the
+    /// reader re-fetches [`SnapshotHandle::latest`].
+    pub fn age(&self) -> Duration {
+        self.indexed_at.elapsed()
     }
 
     /// The raw snapshot (also reachable through `Deref`).
@@ -216,8 +240,15 @@ impl SnapshotPublisher {
     /// Index `snap` and publish it, returning the shared form (so the
     /// publisher can inspect what it just made visible).
     pub fn publish(&mut self, snap: BatchSnapshot) -> Arc<ServingSnapshot> {
+        let mut sp = crate::obs::span("stream.publish");
+        sp.arg("batch", snap.batch_id)
+            .arg("frequents", snap.frequents.len() as u64)
+            .arg("rules", snap.rules.len() as u64);
         let served = Arc::new(ServingSnapshot::new(snap));
         self.cell.publish(Arc::clone(&served));
+        if crate::obs::enabled() {
+            serve_obs().publishes.incr(1);
+        }
         served
     }
 
@@ -288,6 +319,15 @@ impl SnapshotHandle {
     /// [`SnapshotHandle::wait_for_batch_timeout`] when the caller also
     /// needs a wall-clock bound.
     pub fn wait_for_batch(&self, min_batch_id: u64) -> Option<Arc<ServingSnapshot>> {
+        let sw = crate::obs::enabled().then(Instant::now);
+        let out = self.wait_inner(min_batch_id);
+        if let Some(start) = sw {
+            serve_obs().reader_wait_us.record(start.elapsed().as_micros() as u64);
+        }
+        out
+    }
+
+    fn wait_inner(&self, min_batch_id: u64) -> Option<Arc<ServingSnapshot>> {
         loop {
             if let Some(s) = self.latest() {
                 if s.batch_id >= min_batch_id {
@@ -314,6 +354,19 @@ impl SnapshotHandle {
     /// returns the qualifying snapshot, or `None` when the timeout
     /// expires or the publisher dies first.
     pub fn wait_for_batch_timeout(
+        &self,
+        min_batch_id: u64,
+        timeout: Duration,
+    ) -> Option<Arc<ServingSnapshot>> {
+        let sw = crate::obs::enabled().then(Instant::now);
+        let out = self.wait_timeout_inner(min_batch_id, timeout);
+        if let Some(start) = sw {
+            serve_obs().reader_wait_us.record(start.elapsed().as_micros() as u64);
+        }
+        out
+    }
+
+    fn wait_timeout_inner(
         &self,
         min_batch_id: u64,
         timeout: Duration,
@@ -382,6 +435,16 @@ mod tests {
             rules: Vec::new(),
             wall: Duration::ZERO,
         }
+    }
+
+    #[test]
+    fn served_snapshot_age_grows_monotonically() {
+        let served = ServingSnapshot::new(snap(1));
+        let a0 = served.age();
+        std::thread::sleep(Duration::from_millis(5));
+        let a1 = served.age();
+        assert!(a1 > a0, "age must grow: {a0:?} -> {a1:?}");
+        assert!(a1 >= Duration::from_millis(5));
     }
 
     #[test]

@@ -277,6 +277,62 @@ fn bad_usage_exits_nonzero_with_help() {
 }
 
 #[test]
+fn run_trace_writes_valid_chrome_trace() {
+    let dir = tmp_dir("run_trace");
+    let trace = format!("{dir}/run.trace.json");
+    let out = repro()
+        .args([
+            "run", "--algo", "v5", "--dataset", "chess", "--min-sup", "0.9",
+            "--data-dir", &dir, "--quiet", "--trace", &trace,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("trace events"), "{text}");
+    assert!(text.contains("metrics:"), "{text}");
+    let trace_text = std::fs::read_to_string(&trace).unwrap();
+    let events = rdd_eclat::obs::validate_trace(&trace_text).expect("well-formed trace");
+    assert!(events > 0, "trace must carry events");
+    // Scheduler spans land on the executor worker thread tracks.
+    assert!(trace_text.contains("engine.job"), "{trace_text}");
+    assert!(trace_text.contains("engine.task"), "{trace_text}");
+    assert!(trace_text.contains("executor-"), "{trace_text}");
+}
+
+#[test]
+fn stream_serve_trace_covers_mining_and_publishes() {
+    // The PR acceptance trace: async serving with 4 shards must produce
+    // a well-formed Chrome trace carrying per-shard mining spans and
+    // publish spans on the mining service's thread track.
+    let dir = tmp_dir("serve_trace");
+    let file = format!("{dir}/stream.dat");
+    let rows: String = (0..24)
+        .map(|i| if i % 3 == 2 { "1 3\n".to_string() } else { "1 2\n".to_string() })
+        .collect();
+    std::fs::write(&file, rows).unwrap();
+    let trace = format!("{dir}/serve.trace.json");
+    let out = repro()
+        .args([
+            "stream", "--serve", "--dataset", &file, "--batch", "4", "--window", "2",
+            "--slide", "1", "--min-sup", "3", "--shards", "4", "--quiet",
+            "--stats-every", "2", "--trace", &trace,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("[stats]"), "digest lines printed: {text}");
+    let trace_text = std::fs::read_to_string(&trace).unwrap();
+    let events = rdd_eclat::obs::validate_trace(&trace_text).expect("well-formed trace");
+    assert!(events > 0, "trace must carry events");
+    assert!(trace_text.contains("stream.mine_now"), "{trace_text}");
+    assert!(trace_text.contains("stream.mine_shard"), "{trace_text}");
+    assert!(trace_text.contains("stream.publish"), "{trace_text}");
+    assert!(trace_text.contains("stream-miner"), "{trace_text}");
+}
+
+#[test]
 fn invalid_min_sup_rejected() {
     let out = repro()
         .args(["run", "--dataset", "chess", "--min-sup", "abc"])
