@@ -89,6 +89,42 @@ fn main() {
         }));
     }
 
+    // --- recovery overhead: the same shuffle job fault-free, under
+    // transient task panics (retried), and under certain shuffle loss
+    // (map stage re-materialized through lineage every iteration) ---
+    {
+        let data: Vec<(u32, u32)> = (0..200_000).map(|i| (i % 2_000, 1)).collect();
+        let job = |ctx: &ClusterContext| {
+            let rdd = ctx.parallelize(data.clone(), cores * 2);
+            black_box(rdd.reduce_by_key(cores, |a, b| a + b).count().unwrap())
+        };
+        let ctx = ClusterContext::builder().cores(cores).without_chaos().build();
+        report.add(bench.run("engine/recovery/fault_free", || job(&ctx)));
+
+        let ctx = ClusterContext::builder()
+            .cores(cores)
+            .chaos(rdd_eclat::engine::ChaosPolicy::new(7).task_panics(0.3))
+            .build();
+        report.add(bench.run("engine/recovery/task_retry", || job(&ctx)));
+
+        let ctx = ClusterContext::builder()
+            .cores(cores)
+            .chaos(rdd_eclat::engine::ChaosPolicy::new(7).shuffle_loss(1.0))
+            .build();
+        report.add(bench.run("engine/recovery/shuffle_rerun", || job(&ctx)));
+    }
+
     report.write_csv("bench_engine_micro.csv").expect("write csv");
     println!("\nwrote results/bench_engine_micro.csv");
+
+    // Perf trajectory: BENCH_engine.json at the repo root (cargo runs
+    // benches with the package dir as CWD, hence the `..`). A separate
+    // file from BENCH_fim.json — write_json replaces a whole file, and
+    // the fim bench owns that one.
+    let out = std::env::var("BENCH_ENGINE_OUT").unwrap_or_else(|_| {
+        format!("{}/../BENCH_engine.json", env!("CARGO_MANIFEST_DIR"))
+    });
+    let scale = Bench::scale_from_env();
+    report.write_json(&out, "engine_micro", scale).expect("write BENCH_engine.json");
+    println!("wrote {out}");
 }

@@ -16,7 +16,7 @@ use rdd_eclat::cli::{App, Command};
 use rdd_eclat::conf::EclatConfig;
 use rdd_eclat::data::clickstream::ClickParams;
 use rdd_eclat::data::{self, DatasetSpec, TABLE2};
-use rdd_eclat::engine::ClusterContext;
+use rdd_eclat::engine::{ChaosPolicy, ClusterContext, ContextBuilder};
 use rdd_eclat::error::{Error, Result};
 use rdd_eclat::fim::{generate_rules, rules_to_json, sort_frequents};
 use rdd_eclat::stream::{
@@ -40,6 +40,7 @@ fn app() -> App {
                 .opt("data-dir", "dataset cache dir (default datasets/)")
                 .opt("output", "save frequent itemsets under this directory")
                 .opt("trace", "write a Chrome trace (chrome://tracing, Perfetto) to this path")
+                .opt("chaos", "inject seeded faults mid-job: <seed>:<p> (results must not change)")
                 .flag("no-tri-matrix", "disable the triangular-matrix optimization")
                 .flag("quiet", "suppress the itemset listing"),
         )
@@ -74,6 +75,7 @@ fn app() -> App {
                 .opt("json", "write the final snapshot (itemsets + rules) as JSON")
                 .opt("data-dir", "dataset cache dir")
                 .opt("trace", "write a Chrome trace (chrome://tracing, Perfetto) to this path")
+                .opt("chaos", "inject seeded faults mid-job: <seed>:<p> (results must not change)")
                 .opt("queue-cap", "--serve: backpressure threshold in queued batches (default 8)")
                 .opt("readers", "--serve: concurrent query threads (default 2)")
                 .opt("stats-every", "--serve: print a one-line metrics digest every N batches")
@@ -198,6 +200,29 @@ fn arm_observability(args: &rdd_eclat::cli::Args) {
     }
 }
 
+/// Resolve the chaos policy for this invocation: the explicit `--chaos
+/// <seed>:<p>` flag wins; otherwise the `RDD_ECLAT_CHAOS` environment
+/// variable (same syntax) arms it. Both reject malformed specs loudly —
+/// a chaos run that silently ran fault-free would prove nothing.
+fn chaos_from_args(args: &rdd_eclat::cli::Args) -> Result<Option<ChaosPolicy>> {
+    match args.get("chaos") {
+        Some(spec) => ChaosPolicy::parse(spec).map(Some),
+        None => ChaosPolicy::from_env(),
+    }
+}
+
+/// Arm `builder` with `chaos` (if any) and announce it in the run
+/// header, so chaos-mode output is self-describing in CI logs.
+fn arm_chaos(builder: ContextBuilder, chaos: &Option<ChaosPolicy>) -> ContextBuilder {
+    match chaos {
+        Some(c) => {
+            println!("chaos armed: {c}");
+            builder.chaos(c.clone())
+        }
+        None => builder,
+    }
+}
+
 /// Write the collected span events as a Chrome trace, if `--trace` was
 /// given, and print where it went. Also prints the final metrics digest
 /// whenever the observability layer is armed.
@@ -224,7 +249,8 @@ fn cmd_run(args: &rdd_eclat::cli::Args) -> Result<()> {
     let db = data::resolve(&cfg.dataset, &cfg.data_dir)?;
     let stats = db.stats();
     let cores = cfg.effective_cores();
-    let ctx = ClusterContext::builder().cores(cores).build();
+    let chaos = chaos_from_args(args)?;
+    let ctx = arm_chaos(ClusterContext::builder().cores(cores), &chaos).build();
     println!(
         "mining {} ({} txns, {} items, avg width {:.1}) with {} @ min_sup {} on {cores} cores",
         cfg.dataset, stats.transactions, stats.distinct_items, stats.avg_width,
@@ -369,7 +395,19 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
     }
 
     let cores = cfg.effective_cores();
-    let ctx = ClusterContext::builder().cores(cores).build();
+    // `--serve` also injects emission failures (at the engine-fault
+    // probability, bounded to 2 consecutive) to exercise the service's
+    // degraded-mode retry; the sync path mines inline, where a failed
+    // emission would just be the command failing.
+    let chaos = chaos_from_args(args)?.map(|c| {
+        if args.flag("serve") {
+            let p = c.task_panic_p();
+            c.emission_failures(p, 2)
+        } else {
+            c
+        }
+    });
+    let ctx = arm_chaos(ClusterContext::builder().cores(cores), &chaos).build();
     let stream_cfg = StreamConfig::new(WindowSpec::sliding(window, slide), cfg.min_sup_typed()?)
         .mode(mode)
         .min_conf(cfg.min_conf)

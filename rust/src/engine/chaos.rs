@@ -1,0 +1,400 @@
+//! Seeded, deterministic fault injection for the execution engine.
+//!
+//! [`ChaosPolicy`] is the during-a-job counterpart to
+//! [`crate::engine::lineage::FaultInjector`]: where the injector drops
+//! cache blocks and shuffle outputs *between* jobs to exercise lineage
+//! recovery, a chaos policy armed on a [`crate::engine::ClusterContext`]
+//! perturbs tasks *while a job is running* — transient panics, straggler
+//! delays and shuffle-fetch failures — so the scheduler's retry,
+//! speculation and mid-job re-materialization paths are exercised under
+//! test and benchmark.
+//!
+//! Every decision is a pure function of the policy seed and the stable
+//! identity of the victim (`(job, stage, partition)` for tasks,
+//! `(shuffle, reduce)` for fetches, the emission index for streaming), so
+//! two runs with the same seed inject the *same* fault set regardless of
+//! thread scheduling — which is what makes the recovery-equivalence
+//! property ("a chaos run returns byte-identical results to a fault-free
+//! run") testable at all.
+//!
+//! A policy can be armed three ways: explicitly per test via
+//! [`crate::engine::ContextBuilder::chaos`], process-wide through the
+//! `RDD_ECLAT_CHAOS=<seed>:<p>` environment variable (picked up by
+//! [`crate::engine::ContextBuilder::build`] unless the builder says
+//! otherwise), or from the CLI via `repro run --chaos <seed>:<p>`.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::{Mutex, PoisonError};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::util::prng::Rng;
+
+/// Environment variable that arms a default chaos policy process-wide
+/// (format `<seed>:<p>`, e.g. `RDD_ECLAT_CHAOS=7:0.2`).
+pub const CHAOS_ENV: &str = "RDD_ECLAT_CHAOS";
+
+/// A fault the scheduler must apply to one task attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum TaskFault {
+    /// Fail this attempt as if the task body panicked.
+    Panic,
+    /// Delay this attempt by the given amount before running the body
+    /// (a straggler; only ever injected on the first attempt so a
+    /// speculative duplicate can win).
+    Straggle(Duration),
+}
+
+/// Seeded, deterministic mid-execution fault injector.
+///
+/// Probabilities select *victims* (which task, which fetch); the
+/// injected failures themselves are bounded — a victim task fails only
+/// its first `k` attempts (`k` is drawn below
+/// [`ChaosPolicy::max_injected_failures`], which defaults to 2, safely
+/// under the scheduler's default `max_task_failures` of 4), a victim
+/// fetch fails only the first query of its `(shuffle, reduce)` pair, and
+/// emission failures never exceed a consecutive cap. A chaos run is
+/// therefore guaranteed to *recover*, which turns "results equal the
+/// fault-free run" into a hard test assertion.
+///
+/// Attempt counters live behind a mutex inside the policy; cloning a
+/// policy resets them (the clone re-injects the same fault set from
+/// scratch).
+pub struct ChaosPolicy {
+    seed: u64,
+    task_panic_p: f64,
+    max_injected_failures: u32,
+    straggler_p: f64,
+    straggler_delay: Duration,
+    shuffle_loss_p: f64,
+    emission_p: f64,
+    max_emission_failures: u32,
+    /// Per-victim attempt counts: `(domain, a, b)` → attempts seen.
+    /// Domain 0 = task `(job·stages + stage, partition)`, domain 1 =
+    /// fetch `(shuffle, reduce)`.
+    attempts: Mutex<HashMap<(u8, u64, u64), u32>>,
+    /// `(next emission index, consecutive injected emission failures)`.
+    emission_state: Mutex<(u64, u32)>,
+}
+
+impl ChaosPolicy {
+    /// A policy with the given seed and *no* faults armed; chain the
+    /// builder methods to switch individual fault classes on.
+    pub fn new(seed: u64) -> ChaosPolicy {
+        ChaosPolicy {
+            seed,
+            task_panic_p: 0.0,
+            max_injected_failures: 2,
+            straggler_p: 0.0,
+            straggler_delay: Duration::from_millis(20),
+            shuffle_loss_p: 0.0,
+            emission_p: 0.0,
+            max_emission_failures: 2,
+            attempts: Mutex::new(HashMap::new()),
+            emission_state: Mutex::new((0, 0)),
+        }
+    }
+
+    /// The default suite armed by `--chaos <seed>:<p>` and the
+    /// [`CHAOS_ENV`] variable: task panics at `p`, stragglers at `p/2`
+    /// (20 ms delay), shuffle-fetch loss at `p/2`. Emission failures
+    /// stay off — they are opt-in via [`ChaosPolicy::emission_failures`]
+    /// because only the async [`crate::stream::StreamService`] retries
+    /// them.
+    pub fn default_suite(seed: u64, p: f64) -> ChaosPolicy {
+        ChaosPolicy::new(seed)
+            .task_panics(p)
+            .stragglers(p / 2.0, Duration::from_millis(20))
+            .shuffle_loss(p / 2.0)
+    }
+
+    /// Parse a `<seed>:<p>` spec (as taken by `--chaos` and
+    /// [`CHAOS_ENV`]) into a [`ChaosPolicy::default_suite`].
+    pub fn parse(spec: &str) -> Result<ChaosPolicy> {
+        let bad = || Error::Config(format!("bad chaos spec {spec:?}: want <seed>:<p>, e.g. 7:0.2"));
+        let (seed, p) = spec.split_once(':').ok_or_else(bad)?;
+        let seed: u64 = seed.trim().parse().map_err(|_| bad())?;
+        let p: f64 = p.trim().parse().map_err(|_| bad())?;
+        if !(0.0..=1.0).contains(&p) {
+            return Err(Error::Config(format!(
+                "bad chaos spec {spec:?}: probability {p} outside [0, 1]"
+            )));
+        }
+        Ok(ChaosPolicy::default_suite(seed, p))
+    }
+
+    /// Read [`CHAOS_ENV`] and arm a [`ChaosPolicy::default_suite`] from
+    /// it; `None` when unset or empty. A malformed value is an error —
+    /// silently mining without the faults CI asked for would defeat the
+    /// point.
+    pub fn from_env() -> Result<Option<ChaosPolicy>> {
+        match std::env::var(CHAOS_ENV) {
+            Ok(spec) if !spec.trim().is_empty() => ChaosPolicy::parse(&spec).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// Make each task a victim of transient panics with probability `p`
+    /// (the victim's first `k < max_injected_failures + 1` attempts
+    /// fail, then it succeeds).
+    pub fn task_panics(mut self, p: f64) -> ChaosPolicy {
+        self.task_panic_p = p;
+        self
+    }
+
+    /// Make each task a straggler with probability `p`, delaying its
+    /// first attempt by `delay`.
+    pub fn stragglers(mut self, p: f64, delay: Duration) -> ChaosPolicy {
+        self.straggler_p = p;
+        self.straggler_delay = delay;
+        self
+    }
+
+    /// Fail (and drop the map outputs behind) the *first* fetch of each
+    /// `(shuffle, reduce)` pair with probability `p` — the mid-job
+    /// shuffle-loss scenario that forces the scheduler to re-run the map
+    /// stage through lineage.
+    pub fn shuffle_loss(mut self, p: f64) -> ChaosPolicy {
+        self.shuffle_loss_p = p;
+        self
+    }
+
+    /// Fail streaming emissions with probability `p`, never more than
+    /// `max_consecutive` in a row (so a service whose death bound
+    /// exceeds `max_consecutive` is guaranteed to keep serving).
+    pub fn emission_failures(mut self, p: f64, max_consecutive: u32) -> ChaosPolicy {
+        self.emission_p = p;
+        self.max_emission_failures = max_consecutive;
+        self
+    }
+
+    /// Cap on injected failures per victim task (default 2; keep it
+    /// under the scheduler's `max_task_failures` or victims can never
+    /// recover).
+    pub fn max_injected_failures(mut self, k: u32) -> ChaosPolicy {
+        self.max_injected_failures = k.max(1);
+        self
+    }
+
+    /// The task-panic victim probability (used by the CLI to derive an
+    /// emission-failure rate for `repro stream --serve --chaos`).
+    pub fn task_panic_p(&self) -> f64 {
+        self.task_panic_p
+    }
+
+    /// A per-victim random stream: pure function of the policy seed,
+    /// a fault domain and the victim's identity.
+    fn decide(&self, domain: u64, a: u64, b: u64, c: u64) -> Rng {
+        let mut h = self.seed ^ domain.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        for x in [a, b, c] {
+            h = (h ^ x).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            h ^= h >> 27;
+        }
+        Rng::new(h)
+    }
+
+    fn bump_attempt(&self, key: (u8, u64, u64)) -> u32 {
+        let mut m = self.attempts.lock().unwrap_or_else(PoisonError::into_inner);
+        let e = m.entry(key).or_insert(0);
+        let seen = *e;
+        *e += 1;
+        seen
+    }
+
+    /// Decide the fault (if any) for one attempt of task
+    /// `(job, stage, partition)`. Called by the stage scheduler before
+    /// the task body runs, so injected faults never leave partial side
+    /// effects behind.
+    pub(crate) fn task_fault(
+        &self,
+        job: u64,
+        stage: usize,
+        partition: usize,
+    ) -> Option<TaskFault> {
+        let key = (0u8, job << 20 | stage as u64, partition as u64);
+        let attempt = self.bump_attempt(key);
+        let mut rng = self.decide(1, job, stage as u64, partition as u64);
+        if self.task_panic_p > 0.0 && rng.chance(self.task_panic_p) {
+            let k = 1 + (rng.next_u64() % u64::from(self.max_injected_failures)) as u32;
+            if attempt < k {
+                return Some(TaskFault::Panic);
+            }
+        }
+        if self.straggler_p > 0.0 && rng.chance(self.straggler_p) && attempt == 0 {
+            return Some(TaskFault::Straggle(self.straggler_delay));
+        }
+        None
+    }
+
+    /// Decide whether this fetch of `(shuffle, reduce)` fails. Only the
+    /// first query of each pair can be a victim; the caller is expected
+    /// to drop the shuffle's buckets and raise a fetch failure, so a
+    /// `true` here is "one mid-job shuffle loss".
+    pub(crate) fn fail_fetch(&self, shuffle: u64, reduce: usize) -> bool {
+        let attempt = self.bump_attempt((1u8, shuffle, reduce as u64));
+        if attempt > 0 || self.shuffle_loss_p <= 0.0 {
+            return false;
+        }
+        self.decide(2, shuffle, reduce as u64, 0).chance(self.shuffle_loss_p)
+    }
+
+    /// Decide whether the next streaming emission fails. Consecutive
+    /// injected failures are capped (see
+    /// [`ChaosPolicy::emission_failures`]); a forced success resets the
+    /// streak, mirroring how the service's own consecutive-failure
+    /// counter resets on success.
+    pub(crate) fn fail_emission(&self) -> bool {
+        let mut st = self.emission_state.lock().unwrap_or_else(PoisonError::into_inner);
+        let idx = st.0;
+        st.0 += 1;
+        if self.emission_p <= 0.0 {
+            return false;
+        }
+        if st.1 >= self.max_emission_failures {
+            st.1 = 0;
+            return false;
+        }
+        if self.decide(3, idx, 0, 0).chance(self.emission_p) {
+            st.1 += 1;
+            true
+        } else {
+            st.1 = 0;
+            false
+        }
+    }
+}
+
+impl Clone for ChaosPolicy {
+    /// Clones share the seed and probabilities but reset the attempt
+    /// counters: decisions are pure in the victim identity, so a clone
+    /// re-injects the same fault set from scratch.
+    fn clone(&self) -> ChaosPolicy {
+        ChaosPolicy {
+            seed: self.seed,
+            task_panic_p: self.task_panic_p,
+            max_injected_failures: self.max_injected_failures,
+            straggler_p: self.straggler_p,
+            straggler_delay: self.straggler_delay,
+            shuffle_loss_p: self.shuffle_loss_p,
+            emission_p: self.emission_p,
+            max_emission_failures: self.max_emission_failures,
+            attempts: Mutex::new(HashMap::new()),
+            emission_state: Mutex::new((0, 0)),
+        }
+    }
+}
+
+impl fmt::Debug for ChaosPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ChaosPolicy")
+            .field("seed", &self.seed)
+            .field("task_panic_p", &self.task_panic_p)
+            .field("straggler_p", &self.straggler_p)
+            .field("shuffle_loss_p", &self.shuffle_loss_p)
+            .field("emission_p", &self.emission_p)
+            .finish_non_exhaustive()
+    }
+}
+
+impl fmt::Display for ChaosPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "seed={} task-panic p={:.2} straggler p={:.2} ({:?}) shuffle-loss p={:.2} \
+             emission p={:.2}",
+            self.seed,
+            self.task_panic_p,
+            self.straggler_p,
+            self.straggler_delay,
+            self.shuffle_loss_p,
+            self.emission_p
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_seed_colon_p() {
+        let c = ChaosPolicy::parse("7:0.2").unwrap();
+        assert_eq!(c.seed, 7);
+        assert!((c.task_panic_p - 0.2).abs() < 1e-12);
+        assert!((c.straggler_p - 0.1).abs() < 1e-12);
+        assert!((c.shuffle_loss_p - 0.1).abs() < 1e-12);
+        assert!(c.emission_p == 0.0);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in ["", "7", "x:0.2", "7:x", "7:1.5", "7:-0.1"] {
+            assert!(ChaosPolicy::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn task_faults_are_deterministic_and_bounded() {
+        let a = ChaosPolicy::new(42).task_panics(1.0);
+        let b = a.clone();
+        for (job, stage, p) in [(0u64, 0usize, 0usize), (0, 1, 3), (9, 0, 7)] {
+            // Same victim, same decisions on both clones; panics stop
+            // after at most `max_injected_failures` attempts.
+            let mut panics = 0;
+            for attempt in 0..6 {
+                let fa = a.task_fault(job, stage, p);
+                let fb = b.task_fault(job, stage, p);
+                assert_eq!(fa, fb, "attempt {attempt} diverged");
+                if fa == Some(TaskFault::Panic) {
+                    panics += 1;
+                }
+            }
+            assert!(panics >= 1 && panics <= 2, "panics = {panics}");
+            assert_ne!(a.task_fault(job, stage, p), Some(TaskFault::Panic));
+        }
+    }
+
+    #[test]
+    fn stragglers_only_hit_the_first_attempt() {
+        let c = ChaosPolicy::new(3).stragglers(1.0, Duration::from_millis(5));
+        assert_eq!(
+            c.task_fault(1, 0, 0),
+            Some(TaskFault::Straggle(Duration::from_millis(5)))
+        );
+        assert_eq!(c.task_fault(1, 0, 0), None);
+    }
+
+    #[test]
+    fn fetch_failure_fires_at_most_once_per_reduce() {
+        let c = ChaosPolicy::new(5).shuffle_loss(1.0);
+        assert!(c.fail_fetch(2, 0));
+        assert!(!c.fail_fetch(2, 0), "second fetch of the pair must succeed");
+        assert!(c.fail_fetch(2, 1), "other reduce partitions decide independently");
+    }
+
+    #[test]
+    fn emission_failures_respect_the_consecutive_cap() {
+        let c = ChaosPolicy::new(1).emission_failures(1.0, 2);
+        let run: Vec<bool> = (0..9).map(|_| c.fail_emission()).collect();
+        assert_eq!(run, vec![true, true, false, true, true, false, true, true, false]);
+    }
+
+    #[test]
+    fn unarmed_policy_injects_nothing() {
+        let c = ChaosPolicy::new(7);
+        for p in 0..64 {
+            assert_eq!(c.task_fault(0, 0, p), None);
+            assert!(!c.fail_fetch(0, p));
+        }
+        assert!(!c.fail_emission());
+    }
+
+    #[test]
+    fn display_mentions_seed_and_probabilities() {
+        let c = ChaosPolicy::default_suite(7, 0.2);
+        let s = c.to_string();
+        assert!(s.contains("seed=7"), "{s}");
+        assert!(s.contains("task-panic p=0.20"), "{s}");
+    }
+}

@@ -7,17 +7,71 @@
 //! one context share executors and stores, exactly like one Spark
 //! application.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, PoisonError, RwLock};
+use std::time::Duration;
 
 use crate::error::Result;
 
-use super::metrics::MetricsRegistry;
+use super::chaos::ChaosPolicy;
+use super::metrics::{JobId, MetricsRegistry};
 use super::pool::ThreadPool;
-use super::rdd::{Rdd, RddId};
+use super::rdd::{FetchFailed, Rdd, RddId, ShuffleDepHandle, TaskAbort};
 use super::shared::{Accumulator, Broadcast};
 use super::shuffle::{ShuffleId, ShuffleStore};
 use super::storage::CacheStore;
+
+/// Per-application scheduler knobs (the analogue of Spark's
+/// `spark.task.maxFailures` / `spark.speculation.*` configuration),
+/// set through [`ContextBuilder`] and read by the stage scheduler in
+/// [`crate::engine::rdd`].
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Give up on a task (and fail the job) after this many failed
+    /// attempts (Spark's `spark.task.maxFailures`, default 4). Fetch
+    /// failures do not count — they trigger map-stage recovery instead.
+    pub max_task_failures: u32,
+    /// Base delay before a failed task is retried; doubles per failure,
+    /// capped at 100 ms.
+    pub retry_backoff: Duration,
+    /// Re-launch straggling tasks speculatively (off by default, like
+    /// `spark.speculation`). The first finisher wins; duplicate results
+    /// are dropped, so side-effect-free pipelines are unaffected.
+    pub speculation: bool,
+    /// A running task is a straggler once it has been in flight longer
+    /// than `median completed duration × multiplier`.
+    pub speculation_multiplier: f64,
+    /// Fraction of a stage's tasks that must have completed before
+    /// stragglers are considered (Spark's `spark.speculation.quantile`).
+    pub speculation_quantile: f64,
+    /// Fail a stage that has not completed within this wall-clock bound
+    /// with an [`crate::error::Error::Engine`] carrying the per-task
+    /// attempt history, instead of wedging the job. `None` = no bound.
+    pub stage_deadline: Option<Duration>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> SchedulerConfig {
+        SchedulerConfig {
+            max_task_failures: 4,
+            retry_backoff: Duration::from_millis(1),
+            speculation: false,
+            speculation_multiplier: 1.5,
+            speculation_quantile: 0.75,
+            stage_deadline: None,
+        }
+    }
+}
+
+/// How the builder arms chaos: inherit from the environment (default),
+/// explicitly off, or an explicit policy.
+#[derive(Debug, Clone)]
+enum ChaosArm {
+    FromEnv,
+    Off,
+    On(ChaosPolicy),
+}
 
 /// Shared internals of one "application".
 pub(crate) struct CtxInner {
@@ -27,6 +81,11 @@ pub(crate) struct CtxInner {
     pub(crate) cache: CacheStore,
     pub(crate) shuffle: ShuffleStore,
     pub(crate) metrics: MetricsRegistry,
+    pub(crate) scheduler: SchedulerConfig,
+    chaos: RwLock<Option<Arc<ChaosPolicy>>>,
+    /// Shuffle lineage of every *running* job, registered by `run_job`
+    /// so a mid-job fetch failure can find the map stage to re-run.
+    job_shuffles: RwLock<HashMap<usize, Vec<Arc<ShuffleDepHandle>>>>,
     next_rdd: AtomicUsize,
     next_shuffle: AtomicUsize,
 }
@@ -42,11 +101,18 @@ pub struct ClusterContext {
 pub struct ContextBuilder {
     cores: usize,
     default_parallelism: Option<usize>,
+    scheduler: SchedulerConfig,
+    chaos: ChaosArm,
 }
 
 impl Default for ContextBuilder {
     fn default() -> Self {
-        ContextBuilder { cores: available_cores(), default_parallelism: None }
+        ContextBuilder {
+            cores: available_cores(),
+            default_parallelism: None,
+            scheduler: SchedulerConfig::default(),
+            chaos: ChaosArm::FromEnv,
+        }
     }
 }
 
@@ -70,9 +136,75 @@ impl ContextBuilder {
         self
     }
 
+    /// Give up on a task after `n` failed attempts (Spark's
+    /// `spark.task.maxFailures`; default 4, floor 1).
+    pub fn max_task_failures(mut self, n: u32) -> Self {
+        self.scheduler.max_task_failures = n.max(1);
+        self
+    }
+
+    /// Base retry backoff (doubles per failure, capped at 100 ms).
+    pub fn retry_backoff(mut self, d: Duration) -> Self {
+        self.scheduler.retry_backoff = d;
+        self
+    }
+
+    /// Enable speculative re-launch of stragglers (`spark.speculation`).
+    pub fn speculation(mut self, on: bool) -> Self {
+        self.scheduler.speculation = on;
+        self
+    }
+
+    /// Straggler threshold as a multiple of the median completed task
+    /// duration (floor 1.0).
+    pub fn speculation_multiplier(mut self, x: f64) -> Self {
+        self.scheduler.speculation_multiplier = x.max(1.0);
+        self
+    }
+
+    /// Fraction of a stage that must complete before speculation kicks
+    /// in (clamped to [0, 1]).
+    pub fn speculation_quantile(mut self, q: f64) -> Self {
+        self.scheduler.speculation_quantile = q.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Wall-clock bound per stage; a stage still incomplete after `d`
+    /// fails the job with its attempt history.
+    pub fn stage_deadline(mut self, d: Duration) -> Self {
+        self.scheduler.stage_deadline = Some(d);
+        self
+    }
+
+    /// Arm a [`ChaosPolicy`] on the context (overrides the
+    /// `RDD_ECLAT_CHAOS` environment variable).
+    pub fn chaos(mut self, policy: ChaosPolicy) -> Self {
+        self.chaos = ChaosArm::On(policy);
+        self
+    }
+
+    /// Build with chaos explicitly disarmed, ignoring `RDD_ECLAT_CHAOS`.
+    /// This is how fault-free baselines are built in the equivalence
+    /// tests even when CI runs the whole suite under an env-armed policy.
+    pub fn without_chaos(mut self) -> Self {
+        self.chaos = ChaosArm::Off;
+        self
+    }
+
     /// Build the context, spawning executor threads.
+    ///
+    /// Unless [`ContextBuilder::chaos`] or
+    /// [`ContextBuilder::without_chaos`] was called, a chaos policy is
+    /// auto-armed from the `RDD_ECLAT_CHAOS=<seed>:<p>` environment
+    /// variable when present (malformed specs are ignored here; the CLI
+    /// rejects them with a proper error).
     pub fn build(self) -> ClusterContext {
         let parallelism = self.default_parallelism.unwrap_or(self.cores);
+        let chaos = match self.chaos {
+            ChaosArm::On(policy) => Some(Arc::new(policy)),
+            ChaosArm::Off => None,
+            ChaosArm::FromEnv => ChaosPolicy::from_env().unwrap_or(None).map(Arc::new),
+        };
         ClusterContext {
             inner: Arc::new(CtxInner {
                 pool: ThreadPool::new(self.cores),
@@ -81,6 +213,9 @@ impl ContextBuilder {
                 cache: CacheStore::new(),
                 shuffle: ShuffleStore::new(),
                 metrics: MetricsRegistry::new(),
+                scheduler: self.scheduler,
+                chaos: RwLock::new(chaos),
+                job_shuffles: RwLock::new(HashMap::new()),
                 next_rdd: AtomicUsize::new(0),
                 next_shuffle: AtomicUsize::new(0),
             }),
@@ -130,6 +265,84 @@ impl ClusterContext {
     /// The shuffle store (exposed for fault-injection tests).
     pub fn shuffle_store(&self) -> &ShuffleStore {
         &self.inner.shuffle
+    }
+
+    /// The scheduler configuration this context was built with.
+    pub fn scheduler_config(&self) -> &SchedulerConfig {
+        &self.inner.scheduler
+    }
+
+    /// The armed chaos policy, if any.
+    pub fn chaos(&self) -> Option<Arc<ChaosPolicy>> {
+        self.inner.chaos.read().unwrap_or_else(PoisonError::into_inner).clone()
+    }
+
+    /// Arm (or disarm with `None`) a chaos policy on a live context.
+    pub fn set_chaos(&self, policy: Option<ChaosPolicy>) {
+        *self.inner.chaos.write().unwrap_or_else(PoisonError::into_inner) =
+            policy.map(Arc::new);
+    }
+
+    /// Register the ordered shuffle lineage of a starting job so the
+    /// stage scheduler can re-materialize a lost shuffle mid-job.
+    pub(crate) fn register_job_shuffles(&self, job: JobId, handles: Vec<Arc<ShuffleDepHandle>>) {
+        self.inner
+            .job_shuffles
+            .write()
+            .unwrap_or_else(PoisonError::into_inner)
+            .insert(job.0, handles);
+    }
+
+    /// Drop a finished (or failed) job's lineage registration.
+    pub(crate) fn clear_job_shuffles(&self, job: JobId) {
+        self.inner.job_shuffles.write().unwrap_or_else(PoisonError::into_inner).remove(&job.0);
+    }
+
+    /// Look up the lineage handle for `shuffle` within a running job.
+    pub(crate) fn job_shuffle_handle(
+        &self,
+        job: JobId,
+        shuffle: ShuffleId,
+    ) -> Option<Arc<ShuffleDepHandle>> {
+        self.inner
+            .job_shuffles
+            .read()
+            .unwrap_or_else(PoisonError::into_inner)
+            .get(&job.0)?
+            .iter()
+            .find(|h| h.shuffle_id == shuffle)
+            .cloned()
+    }
+
+    /// Fetch one reduce partition's shuffle input from inside a task.
+    ///
+    /// This is the executor-side entry point every reduce task goes
+    /// through; it is where during-job fault tolerance hooks in:
+    /// an armed [`ChaosPolicy`] may drop the shuffle's buckets and fail
+    /// the fetch, a genuinely missing shuffle (lost mid-job) raises a
+    /// typed [`FetchFailed`] panic that the stage scheduler catches and
+    /// answers by re-running the map stage through lineage, and a bucket
+    /// type mismatch raises [`TaskAbort`], failing the job cleanly
+    /// without killing the executor.
+    pub(crate) fn fetch_shuffle<T: Clone + 'static>(
+        &self,
+        shuffle: ShuffleId,
+        num_map_tasks: usize,
+        reduce: usize,
+    ) -> Vec<T> {
+        if let Some(chaos) = self.chaos() {
+            if chaos.fail_fetch(shuffle.0 as u64, reduce) {
+                self.shuffle_store().lose(shuffle);
+                std::panic::panic_any(FetchFailed { shuffle });
+            }
+        }
+        if !self.shuffle_store().is_materialized(shuffle) {
+            std::panic::panic_any(FetchFailed { shuffle });
+        }
+        match self.shuffle_store().fetch::<T>(shuffle, num_map_tasks, reduce) {
+            Ok(v) => v,
+            Err(e) => std::panic::panic_any(TaskAbort(e.to_string())),
+        }
     }
 
     /// Distribute a collection into `parts` partitions (Spark's
@@ -189,6 +402,29 @@ mod tests {
         assert_eq!(ctx.default_parallelism(), 3);
         let ctx = ClusterContext::builder().cores(2).default_parallelism(8).build();
         assert_eq!(ctx.default_parallelism(), 8);
+    }
+
+    #[test]
+    fn scheduler_config_defaults_and_overrides() {
+        let ctx = ClusterContext::builder().cores(1).without_chaos().build();
+        assert_eq!(ctx.scheduler_config().max_task_failures, 4);
+        assert!(!ctx.scheduler_config().speculation);
+        assert!(ctx.chaos().is_none());
+        let ctx = ClusterContext::builder()
+            .cores(1)
+            .max_task_failures(0) // floored to 1
+            .speculation(true)
+            .speculation_multiplier(0.5) // floored to 1.0
+            .stage_deadline(Duration::from_secs(5))
+            .chaos(ChaosPolicy::new(7))
+            .build();
+        assert_eq!(ctx.scheduler_config().max_task_failures, 1);
+        assert!(ctx.scheduler_config().speculation);
+        assert_eq!(ctx.scheduler_config().speculation_multiplier, 1.0);
+        assert_eq!(ctx.scheduler_config().stage_deadline, Some(Duration::from_secs(5)));
+        assert!(ctx.chaos().is_some());
+        ctx.set_chaos(None);
+        assert!(ctx.chaos().is_none());
     }
 
     #[test]

@@ -7,6 +7,13 @@
 //! re-runs un-materialized map stages. [`FaultInjector`] drives seeded,
 //! repeatable loss scenarios used by the recovery tests and the
 //! failure-injection benchmarks.
+//!
+//! This module covers *between-jobs* loss: everything injected here is
+//! observed by the next action, which rebuilds before running. Faults
+//! that strike *while a job is running* — task panics, stragglers,
+//! mid-job shuffle loss — are the domain of
+//! [`super::chaos::ChaosPolicy`] and the retrying stage scheduler in
+//! [`super::rdd`].
 
 use crate::util::prng::Rng;
 

@@ -14,7 +14,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
 
 /// Identifies a job (one action).
@@ -101,6 +101,14 @@ impl Default for MetricsRegistry {
     }
 }
 
+
+/// Poison-tolerant lock: a task that panicked while holding the metrics
+/// mutex leaves consistent data behind (pushes are atomic), so recording
+/// must keep working on the surviving executors.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 impl MetricsRegistry {
     /// Default keep-latest capacity of each log (tasks and jobs
     /// separately): enough for every bench/figure run while bounding
@@ -129,49 +137,49 @@ impl MetricsRegistry {
 
     /// Record one task.
     pub fn record_task(&self, m: TaskMetric) {
-        self.tasks.lock().unwrap().push(m);
+        lock(&self.tasks).push(m);
     }
 
     /// Record one finished job.
     pub fn record_job(&self, span: JobSpan) {
-        self.jobs.lock().unwrap().push(span);
+        lock(&self.jobs).push(span);
     }
 
     /// Snapshot of the retained task metrics (oldest first).
     pub fn tasks(&self) -> Vec<TaskMetric> {
-        self.tasks.lock().unwrap().buf.iter().cloned().collect()
+        lock(&self.tasks).buf.iter().cloned().collect()
     }
 
     /// Snapshot of the retained job spans (oldest first).
     pub fn jobs(&self) -> Vec<JobSpan> {
-        self.jobs.lock().unwrap().buf.iter().cloned().collect()
+        lock(&self.jobs).buf.iter().cloned().collect()
     }
 
     /// Tasks belonging to one job.
     pub fn tasks_of(&self, job: JobId) -> Vec<TaskMetric> {
-        self.tasks.lock().unwrap().buf.iter().filter(|t| t.job == job).cloned().collect()
+        lock(&self.tasks).buf.iter().filter(|t| t.job == job).cloned().collect()
     }
 
     /// Task metrics evicted from the ring since the last [`Self::reset`].
     pub fn dropped_tasks(&self) -> u64 {
-        self.tasks.lock().unwrap().dropped
+        lock(&self.tasks).dropped
     }
 
     /// Job spans evicted from the ring since the last [`Self::reset`].
     pub fn dropped_jobs(&self) -> u64 {
-        self.jobs.lock().unwrap().dropped
+        lock(&self.jobs).dropped
     }
 
     /// Clear everything (between benchmark repetitions).
     pub fn reset(&self) {
-        self.tasks.lock().unwrap().clear();
-        self.jobs.lock().unwrap().clear();
+        lock(&self.tasks).clear();
+        lock(&self.jobs).clear();
     }
 
     /// Sum of task wall time over all retained tasks (the "total compute"
     /// that the simulator spreads over virtual cores).
     pub fn total_task_time(&self) -> Duration {
-        self.tasks.lock().unwrap().buf.iter().map(|t| t.wall).sum()
+        lock(&self.tasks).buf.iter().map(|t| t.wall).sum()
     }
 }
 

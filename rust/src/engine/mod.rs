@@ -8,7 +8,14 @@
 //! `repartition`), actions (`collect`, `count`, `saveAsTextFile`),
 //! `.cache()`, broadcast variables and accumulators — plus per-task
 //! metrics and a virtual-cluster simulator for core-scaling studies.
+//!
+//! Execution is fault-tolerant during a job, not just between jobs: the
+//! stage scheduler retries panicked tasks, re-materializes lost shuffle
+//! outputs through lineage mid-job, and can speculate on stragglers (see
+//! [`rdd`] and [`context::SchedulerConfig`]); [`chaos::ChaosPolicy`]
+//! injects seeded faults to exercise all of it deterministically.
 
+pub mod chaos;
 pub mod context;
 pub mod lineage;
 pub mod metrics;
@@ -20,7 +27,8 @@ pub mod shuffle;
 pub mod simcluster;
 pub mod storage;
 
-pub use context::{available_cores, ClusterContext, ContextBuilder};
+pub use chaos::ChaosPolicy;
+pub use context::{available_cores, ClusterContext, ContextBuilder, SchedulerConfig};
 pub use lineage::FaultInjector;
 pub use metrics::{JobId, JobSpan, MetricsRegistry, StageKind, TaskMetric};
 pub use partitioner::{FnPartitioner, HashPartitioner, Partitioner};

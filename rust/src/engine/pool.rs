@@ -122,13 +122,14 @@ impl ThreadPool {
         Ok(())
     }
 
-    /// Run every task and gather results **in task order**. Tasks run
-    /// concurrently across the pool's workers; the calling thread blocks
-    /// until all tasks finish. A panicking task yields `Error::Engine`
-    /// carrying the panic payload (all other tasks still run to
-    /// completion); submitting against a shut-down pool yields
-    /// `Error::Engine` immediately.
-    pub fn run_all<T, F>(&self, tasks: Vec<F>) -> Result<Vec<T>>
+    /// Run every task and gather **per-slot outcomes in task order**:
+    /// `Ok(value)` for each task that completed, `Err(panic message)`
+    /// for each task that panicked. All tasks run to completion either
+    /// way — one bad slot never hides its siblings' results, which is
+    /// what lets the stage scheduler retry exactly the failed partitions.
+    /// The outer `Err` only fires when the pool itself is unusable
+    /// (shut down or disconnected).
+    pub fn try_run_all<T, F>(&self, tasks: Vec<F>) -> Result<Vec<std::result::Result<T, String>>>
     where
         T: Send + 'static,
         F: FnOnce() -> T + Send + 'static,
@@ -147,25 +148,38 @@ impl ThreadPool {
             })?;
         }
         drop(tx);
-        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
-        let mut first_err: Option<String> = None;
+        let mut slots: Vec<Option<std::result::Result<T, String>>> =
+            (0..n).map(|_| None).collect();
         for _ in 0..n {
             let (i, r) = rx
                 .recv()
                 .map_err(|_| Error::engine("executor pool disconnected"))?;
-            match r {
-                Ok(v) => slots[i] = Some(v),
-                Err(payload) => {
-                    if first_err.is_none() {
-                        first_err = Some(panic_message(payload));
-                    }
-                }
-            }
-        }
-        if let Some(msg) = first_err {
-            return Err(Error::engine(format!("task panicked: {msg}")));
+            slots[i] = Some(r.map_err(panic_message));
         }
         Ok(slots.into_iter().map(|s| s.expect("all tasks reported")).collect())
+    }
+
+    /// Run every task and gather results **in task order**. Tasks run
+    /// concurrently across the pool's workers; the calling thread blocks
+    /// until all tasks finish. A panicking task yields `Error::Engine`
+    /// carrying the first panic payload (all other tasks still run to
+    /// completion); submitting against a shut-down pool yields
+    /// `Error::Engine` immediately. Callers that want to keep the good
+    /// slots use [`ThreadPool::try_run_all`].
+    pub fn run_all<T, F>(&self, tasks: Vec<F>) -> Result<Vec<T>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let slots = self.try_run_all(tasks)?;
+        let mut out = Vec::with_capacity(slots.len());
+        for slot in slots {
+            match slot {
+                Ok(v) => out.push(v),
+                Err(msg) => return Err(Error::engine(format!("task panicked: {msg}"))),
+            }
+        }
+        Ok(out)
     }
 
     /// Graceful shutdown: stop accepting jobs, let the workers drain
@@ -184,7 +198,10 @@ impl ThreadPool {
     }
 }
 
-fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+/// Best-effort extraction of a human-readable message from a panic
+/// payload (shared by the pool, the stage scheduler and the streaming
+/// ingest loop).
+pub(crate) fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -235,6 +252,21 @@ mod tests {
             .collect();
         pool.run_all(tasks).unwrap();
         assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn try_run_all_keeps_good_slots_next_to_failed_ones() {
+        let pool = ThreadPool::new(2);
+        let tasks: Vec<Box<dyn FnOnce() -> i32 + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("slot 1 down")),
+            Box::new(|| 3),
+        ];
+        let slots = pool.try_run_all(tasks).unwrap();
+        assert_eq!(slots[0], Ok(1));
+        assert_eq!(slots[2], Ok(3));
+        let msg = slots[1].as_ref().unwrap_err();
+        assert!(msg.contains("slot 1 down"), "{msg}");
     }
 
     #[test]

@@ -17,23 +17,52 @@
 //!   pool.
 //! * **Lineage.** A cached/shuffled partition that is lost (see
 //!   [`super::lineage`]) is transparently recomputed from its parents.
+//! * **Tasks are resilient.** The stage scheduler ([`run_stage`]) retries
+//!   panicked tasks with backoff up to
+//!   [`super::context::SchedulerConfig::max_task_failures`] attempts,
+//!   answers a mid-job shuffle-fetch failure by re-running the lost map
+//!   stage through lineage, can speculatively duplicate stragglers
+//!   (first finisher wins), and converts a hung stage into an
+//!   [`Error::Engine`] with the per-task attempt history when a
+//!   stage deadline is configured. Fault injection for all of this lives
+//!   in [`super::chaos`].
 //!
 //! Per-task wall time and record counts are recorded in the context's
-//! [`super::metrics::MetricsRegistry`]; the virtual-cluster simulator
-//! replays them at other core counts.
+//! [`super::metrics::MetricsRegistry`] — once per partition, by the
+//! winning attempt only, so retries and speculative duplicates do not
+//! inflate the numbers the simulator replays.
 
 use std::collections::HashMap;
 use std::hash::Hash;
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, OnceLock};
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::util::Stopwatch;
 
+use super::chaos::TaskFault;
 use super::context::ClusterContext;
 use super::metrics::{JobId, StageKind, TaskMetric};
 use super::partitioner::Partitioner;
+use super::pool::panic_message;
 use super::shuffle::ShuffleId;
 use super::storage::StorageLevel;
+
+/// Typed panic payload raised by the executor-side shuffle fetch
+/// (`ClusterContext::fetch_shuffle`) when a reduce task finds its
+/// shuffle input missing (executor loss, injected chaos). The stage
+/// scheduler downcasts it and re-materializes the map stage through
+/// lineage instead of failing the job.
+pub(crate) struct FetchFailed {
+    pub(crate) shuffle: ShuffleId,
+}
+
+/// Typed panic payload for unrecoverable task errors (e.g. a shuffle
+/// bucket stored with a different element type). The scheduler fails
+/// the job immediately — retrying a deterministic error is pointless —
+/// but the executor pool survives.
+pub(crate) struct TaskAbort(pub(crate) String);
 
 /// Marker for element types an RDD can carry.
 pub trait Data: Send + Sync + Clone + 'static {}
@@ -338,7 +367,7 @@ impl<T: Data> Rdd<T> {
             ctx,
             "repartition",
             n,
-            move |r| fetch_ctx.shuffle_store().fetch::<T>(sid, m, r),
+            move |r| fetch_ctx.fetch_shuffle::<T>(sid, m, r),
             vec![Dep::Shuffle(Arc::new(ShuffleDepHandle {
                 shuffle_id: sid,
                 parent: self.dag_node(),
@@ -400,7 +429,7 @@ where
             ctx,
             "partitionBy",
             n,
-            move |r| fetch_ctx.shuffle_store().fetch::<(K, V)>(sid, m, r),
+            move |r| fetch_ctx.fetch_shuffle::<(K, V)>(sid, m, r),
             vec![Dep::Shuffle(Arc::new(ShuffleDepHandle {
                 shuffle_id: sid,
                 parent: self.dag_node(),
@@ -452,7 +481,7 @@ where
             "groupByKey",
             n,
             move |r| {
-                let raw = fetch_ctx.shuffle_store().fetch::<(K, V)>(sid, m, r);
+                let raw = fetch_ctx.fetch_shuffle::<(K, V)>(sid, m, r);
                 let mut groups: HashMap<K, Vec<V>> = HashMap::new();
                 for (k, v) in raw {
                     groups.entry(k).or_default().push(v);
@@ -526,7 +555,7 @@ where
             "reduceByKey",
             n,
             move |r| {
-                let raw = fetch_ctx.shuffle_store().fetch::<(K, V)>(sid, m, r);
+                let raw = fetch_ctx.fetch_shuffle::<(K, V)>(sid, m, r);
                 let mut merged: HashMap<K, V> = HashMap::new();
                 for (k, v) in raw {
                     match merged.remove(&k) {
@@ -628,8 +657,24 @@ impl<T: Data> Rdd<T> {
         let mut obs_span = crate::obs::span("engine.job");
         obs_span.arg("job", job.0 as u64);
         let sw = Stopwatch::start();
+        // Register the job's full shuffle lineage before anything runs,
+        // so a fetch failure inside *any* stage (including a downstream
+        // map stage) can find the map stage to re-run. The guard clears
+        // the registration on every exit path.
+        let mut visited = std::collections::HashSet::new();
+        let mut ordered: Vec<Arc<ShuffleDepHandle>> = Vec::new();
+        collect_shuffles(&self.dag_node(), &mut visited, &mut ordered);
+        ctx.register_job_shuffles(job, ordered.clone());
+        let _lineage = JobLineageScope { ctx: ctx.clone(), job };
+        // Materialize every not-yet-materialized shuffle, parents first.
         let mut stage = 0usize;
-        self.prepare_shuffles(job, &mut stage)?;
+        for handle in &ordered {
+            if !ctx.shuffle_store().is_materialized(handle.shuffle_id) {
+                (handle.run_map_stage)(job, stage)?;
+                ctx.shuffle_store().mark_materialized(handle.shuffle_id);
+                stage += 1;
+            }
+        }
         let tasks: Vec<_> = (0..self.num_partitions())
             .map(|p| {
                 let rdd = self.clone();
@@ -650,21 +695,18 @@ impl<T: Data> Rdd<T> {
         obs_span.arg("stages", stage as u64 + 1);
         Ok(out)
     }
+}
 
-    /// Walk the lineage DAG and materialize every not-yet-materialized
-    /// shuffle, parents first.
-    fn prepare_shuffles(&self, job: JobId, stage: &mut usize) -> Result<()> {
-        let mut visited = std::collections::HashSet::new();
-        let mut ordered: Vec<Arc<ShuffleDepHandle>> = Vec::new();
-        collect_shuffles(&self.dag_node(), &mut visited, &mut ordered);
-        for handle in ordered {
-            if !self.ctx().shuffle_store().is_materialized(handle.shuffle_id) {
-                (handle.run_map_stage)(job, *stage)?;
-                self.ctx().shuffle_store().mark_materialized(handle.shuffle_id);
-                *stage += 1;
-            }
-        }
-        Ok(())
+/// Clears a job's lineage registration when the job leaves `run_job`,
+/// successfully or not.
+struct JobLineageScope {
+    ctx: ClusterContext,
+    job: JobId,
+}
+
+impl Drop for JobLineageScope {
+    fn drop(&mut self) {
+        self.ctx.clear_job_shuffles(self.job);
     }
 }
 
@@ -688,8 +730,99 @@ fn collect_shuffles(
     }
 }
 
-/// Execute one stage's tasks on the context's executor pool, recording a
-/// [`TaskMetric`] per task. Tasks return `(result, records)`.
+/// Counters surfaced through the obs registry by the stage scheduler.
+struct SchedObs {
+    task_retries: &'static crate::obs::Counter,
+    task_failures: &'static crate::obs::Counter,
+    speculative_launched: &'static crate::obs::Counter,
+    speculative_won: &'static crate::obs::Counter,
+}
+
+fn sched_obs() -> &'static SchedObs {
+    static OBS: OnceLock<SchedObs> = OnceLock::new();
+    OBS.get_or_init(|| SchedObs {
+        task_retries: crate::obs::counter("engine.task.retries"),
+        task_failures: crate::obs::counter("engine.task.failures"),
+        speculative_launched: crate::obs::counter("engine.speculative.launched"),
+        speculative_won: crate::obs::counter("engine.speculative.won"),
+    })
+}
+
+/// How one task attempt ended, reported back to the driver's gather
+/// loop. Panics are caught on the worker and classified by payload.
+enum Outcome<R> {
+    Done { value: R, records: u64, wall: Duration },
+    Panicked(String),
+    Aborted(String),
+    FetchFailed(ShuffleId),
+}
+
+fn classify<R>(payload: Box<dyn std::any::Any + Send>) -> Outcome<R> {
+    match payload.downcast::<FetchFailed>() {
+        Ok(f) => Outcome::FetchFailed(f.shuffle),
+        Err(payload) => match payload.downcast::<TaskAbort>() {
+            Ok(a) => Outcome::Aborted(a.0),
+            Err(payload) => Outcome::Panicked(panic_message(payload)),
+        },
+    }
+}
+
+fn stage_error(stage: usize, job: JobId, msg: &str, history: &[Vec<String>]) -> Error {
+    let mut attempts = String::new();
+    for (p, h) in history.iter().enumerate() {
+        if !h.is_empty() {
+            attempts.push_str(&format!(" [task {p}: {}]", h.join("; ")));
+        }
+    }
+    Error::Engine(format!("stage {stage} of job {job:?} failed: {msg}{attempts}"))
+}
+
+/// Smallest completed-task count before speculation is considered.
+fn speculation_floor(n: usize, quantile: f64) -> usize {
+    (((n as f64) * quantile).ceil() as usize).clamp(1, n)
+}
+
+/// Re-run the map stage that produced `shuffle` through the lineage
+/// handle the owning job registered, then mark it materialized again.
+/// No-op when a sibling recovery already restored it.
+fn rematerialize(ctx: &ClusterContext, job: JobId, shuffle: ShuffleId) -> Result<()> {
+    if ctx.shuffle_store().is_materialized(shuffle) {
+        return Ok(());
+    }
+    let Some(handle) = ctx.job_shuffle_handle(job, shuffle) else {
+        return Err(Error::engine(format!(
+            "shuffle {} lost mid-job with no lineage handle registered",
+            shuffle.0
+        )));
+    };
+    // The recovery stage borrows the shuffle id as its stage index so
+    // recovery tasks are distinguishable in metrics and traces.
+    (handle.run_map_stage)(job, shuffle.0)?;
+    ctx.shuffle_store().mark_materialized(shuffle);
+    Ok(())
+}
+
+/// Execute one stage's tasks on the context's executor pool. Tasks
+/// return `(result, records)`; a [`TaskMetric`] is recorded for the
+/// winning attempt of each partition.
+///
+/// This is the resilient core of the engine: per-task outcomes come back
+/// over a channel as `Result`-like [`Outcome`]s (a panic no longer kills
+/// the job), panicked tasks are retried with exponential backoff up to
+/// [`super::context::SchedulerConfig::max_task_failures`] attempts,
+/// fetch failures re-materialize the lost map stage through lineage and
+/// re-run the task without charging it a failure, stragglers can be
+/// speculatively duplicated (first finisher fills the partition's
+/// idempotent result slot; the loser's result is dropped), and an
+/// optional stage deadline turns a hung stage into an error carrying the
+/// full attempt history.
+///
+/// Tasks must therefore be re-runnable (`Fn`, not `FnOnce`) and
+/// effectively deterministic: a retried or speculated map task rewrites
+/// identical shuffle buckets, which is harmless. Accumulator updates
+/// from duplicate attempts are the one visible exception — which is why
+/// speculation is opt-in and injected chaos faults fire *before* the
+/// task body runs.
 pub(crate) fn run_stage<R, F>(
     ctx: &ClusterContext,
     job: JobId,
@@ -699,43 +832,207 @@ pub(crate) fn run_stage<R, F>(
 ) -> Result<Vec<R>>
 where
     R: Send + 'static,
-    F: FnOnce() -> (R, u64) + Send + 'static,
+    F: Fn() -> (R, u64) + Send + Sync + 'static,
 {
-    let wrapped: Vec<_> = tasks
-        .into_iter()
-        .enumerate()
-        .map(|(p, task)| {
-            let ctx = ctx.clone();
-            move || {
-                // Task span on the worker thread: the scheduler's
-                // TaskMetric and the obs timeline see the same wall.
-                let mut obs_span = crate::obs::span(match kind {
-                    StageKind::ShuffleMap => "engine.task.shuffle_map",
-                    StageKind::Result => "engine.task.result",
-                });
-                let sw = Stopwatch::start();
-                let (result, records) = task();
-                obs_span
-                    .arg("job", job.0 as u64)
-                    .arg("stage", stage as u64)
-                    .arg("partition", p as u64)
-                    .arg("records", records);
-                ctx.metrics().record_task(TaskMetric {
-                    job,
-                    stage,
-                    kind,
-                    partition: p,
-                    wall: sw.elapsed(),
-                    records,
-                });
-                result
+    let n = tasks.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let cfg = ctx.scheduler_config().clone();
+    let chaos = ctx.chaos();
+    let tasks: Vec<Arc<F>> = tasks.into_iter().map(Arc::new).collect();
+    let (tx, rx) = mpsc::channel::<(usize, bool, Outcome<R>)>();
+
+    let launch = |p: usize, speculative: bool, backoff: Duration| -> Result<()> {
+        let task = Arc::clone(&tasks[p]);
+        let chaos = chaos.clone();
+        let tx = tx.clone();
+        ctx.inner.pool.execute(move || {
+            if !backoff.is_zero() {
+                std::thread::sleep(backoff);
             }
+            // Chaos decides before the task body runs, so an injected
+            // fault never leaves partial side effects behind.
+            if let Some(chaos) = &chaos {
+                match chaos.task_fault(job.0 as u64, stage, p) {
+                    Some(TaskFault::Panic) => {
+                        let _ = tx.send((
+                            p,
+                            speculative,
+                            Outcome::Panicked(format!(
+                                "chaos: injected panic (job {} stage {stage} partition {p})",
+                                job.0
+                            )),
+                        ));
+                        return;
+                    }
+                    Some(TaskFault::Straggle(d)) => std::thread::sleep(d),
+                    None => {}
+                }
+            }
+            // Task span on the worker thread: the scheduler's TaskMetric
+            // and the obs timeline see the same wall.
+            let mut obs_span = crate::obs::span(match kind {
+                StageKind::ShuffleMap => "engine.task.shuffle_map",
+                StageKind::Result => "engine.task.result",
+            });
+            let sw = Stopwatch::start();
+            let outcome = match catch_unwind(AssertUnwindSafe(|| task())) {
+                Ok((value, records)) => {
+                    obs_span
+                        .arg("job", job.0 as u64)
+                        .arg("stage", stage as u64)
+                        .arg("partition", p as u64)
+                        .arg("records", records);
+                    Outcome::Done { value, records, wall: sw.elapsed() }
+                }
+                Err(payload) => classify(payload),
+            };
+            let _ = tx.send((p, speculative, outcome));
         })
-        .collect();
-    ctx.inner.pool.run_all(wrapped).map_err(|e| match e {
-        Error::Engine(msg) => Error::Engine(format!("stage {stage} of job {job:?} failed: {msg}")),
-        other => other,
-    })
+    };
+
+    for p in 0..n {
+        launch(p, false, Duration::ZERO)?;
+    }
+
+    let stage_start = Instant::now();
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut done = 0usize;
+    let mut failures = vec![0u32; n];
+    let mut history: Vec<Vec<String>> = vec![Vec::new(); n];
+    let mut speculated = vec![false; n];
+    let mut launched_at = vec![stage_start; n];
+    let mut completed_walls: Vec<Duration> = Vec::new();
+    // Bounds runaway recovery loops; generous because every reduce
+    // partition may independently report the same loss once.
+    let mut fetch_recoveries = 0u32;
+    let max_fetch_recoveries = 4 + 2 * n as u32;
+
+    while done < n {
+        let msg = match rx.recv_timeout(Duration::from_millis(5)) {
+            Ok(m) => Some(m),
+            Err(mpsc::RecvTimeoutError::Timeout) => None,
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(stage_error(stage, job, "executor pool disconnected", &history));
+            }
+        };
+        if let Some((p, speculative, outcome)) = msg {
+            match outcome {
+                Outcome::Done { value, records, wall } => {
+                    // First finisher wins; a speculative loser's (or
+                    // late retry's) duplicate result is dropped here.
+                    if slots[p].is_none() {
+                        slots[p] = Some(value);
+                        done += 1;
+                        completed_walls.push(wall);
+                        ctx.metrics().record_task(TaskMetric {
+                            job,
+                            stage,
+                            kind,
+                            partition: p,
+                            wall,
+                            records,
+                        });
+                        if speculative && crate::obs::enabled() {
+                            sched_obs().speculative_won.incr(1);
+                        }
+                    }
+                }
+                Outcome::FetchFailed(shuffle) if slots[p].is_none() => {
+                    fetch_recoveries += 1;
+                    if fetch_recoveries > max_fetch_recoveries {
+                        return Err(stage_error(
+                            stage,
+                            job,
+                            &format!("shuffle {} kept failing to re-materialize", shuffle.0),
+                            &history,
+                        ));
+                    }
+                    history[p].push(format!("fetch failure on shuffle {}", shuffle.0));
+                    rematerialize(ctx, job, shuffle).map_err(|e| {
+                        stage_error(
+                            stage,
+                            job,
+                            &format!("recovering shuffle {}: {e}", shuffle.0),
+                            &history,
+                        )
+                    })?;
+                    // Not charged as a task failure: the task was a
+                    // victim of the lost shuffle, not the culprit.
+                    launch(p, false, Duration::ZERO)?;
+                    launched_at[p] = Instant::now();
+                }
+                Outcome::Aborted(msg) if slots[p].is_none() => {
+                    return Err(stage_error(
+                        stage,
+                        job,
+                        &format!("task {p} aborted: {msg}"),
+                        &history,
+                    ));
+                }
+                Outcome::Panicked(msg) if slots[p].is_none() => {
+                    failures[p] += 1;
+                    history[p].push(format!("attempt {}: {msg}", failures[p]));
+                    if crate::obs::enabled() {
+                        sched_obs().task_failures.incr(1);
+                    }
+                    if failures[p] >= cfg.max_task_failures {
+                        return Err(stage_error(
+                            stage,
+                            job,
+                            &format!("task {p} failed {} times", failures[p]),
+                            &history,
+                        ));
+                    }
+                    if crate::obs::enabled() {
+                        sched_obs().task_retries.incr(1);
+                    }
+                    let exp = (failures[p] - 1).min(6);
+                    let backoff =
+                        (cfg.retry_backoff * 2u32.pow(exp)).min(Duration::from_millis(100));
+                    launch(p, false, backoff)?;
+                    launched_at[p] = Instant::now();
+                }
+                // A failure from an attempt whose partition already has
+                // a winner carries no information — drop it.
+                _ => {}
+            }
+        }
+        if done == n {
+            break;
+        }
+        if let Some(deadline) = cfg.stage_deadline {
+            if stage_start.elapsed() > deadline {
+                return Err(stage_error(
+                    stage,
+                    job,
+                    &format!("deadline {deadline:?} exceeded with {done}/{n} tasks complete"),
+                    &history,
+                ));
+            }
+        }
+        if cfg.speculation && done >= speculation_floor(n, cfg.speculation_quantile) {
+            let mut walls = completed_walls.clone();
+            walls.sort_unstable();
+            let median = walls[walls.len() / 2];
+            // The 10 ms floor keeps trivial stages (median ≈ 0) from
+            // speculating every still-queued task.
+            let threshold =
+                median.mul_f64(cfg.speculation_multiplier).max(Duration::from_millis(10));
+            for p in 0..n {
+                if slots[p].is_none() && !speculated[p] && launched_at[p].elapsed() > threshold {
+                    speculated[p] = true;
+                    if crate::obs::enabled() {
+                        sched_obs().speculative_launched.incr(1);
+                    }
+                    launch(p, true, Duration::ZERO)?;
+                }
+            }
+        }
+    }
+
+    Ok(slots.into_iter().map(|s| s.expect("all result slots filled")).collect())
 }
 
 #[cfg(test)]
@@ -956,6 +1253,80 @@ mod tests {
             rdd.map_values(|v| v.to_uppercase()).collect().unwrap(),
             vec![(1, "A".to_string()), (2, "B".to_string())]
         );
+    }
+
+    #[test]
+    fn mistyped_shuffle_fetch_fails_the_job_cleanly() {
+        let c = ctx();
+        let sid = c.new_shuffle_id();
+        c.shuffle_store().put(sid, 0, 0, vec![1u32, 2]);
+        c.shuffle_store().mark_materialized(sid);
+        let fetch = c.clone();
+        let bad: Rdd<String> = Rdd::new(
+            c.clone(),
+            "mistyped",
+            1,
+            move |r| fetch.fetch_shuffle::<String>(sid, 1, r),
+            Vec::new(),
+        );
+        let err = bad.collect().unwrap_err();
+        assert!(err.to_string().contains("type mismatch"), "{err}");
+        assert!(err.to_string().contains("aborted"), "deterministic errors are not retried: {err}");
+        // The executor pool survived the failed job.
+        assert_eq!(c.parallelize((0..10u32).collect(), 4).count().unwrap(), 10);
+    }
+
+    #[test]
+    fn transient_task_panics_are_retried_to_success() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let c = ctx();
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let a = Arc::clone(&attempts);
+        let rdd = c.parallelize((0..8u32).collect(), 2).map_partitions_with_index(
+            move |p, data| {
+                // Partition 1 panics on its first two attempts.
+                if p == 1 && a.fetch_add(1, Ordering::SeqCst) < 2 {
+                    panic!("transient executor failure");
+                }
+                data
+            },
+        );
+        assert_eq!(rdd.collect().unwrap(), (0..8).collect::<Vec<_>>());
+        assert_eq!(attempts.load(Ordering::SeqCst), 3, "two failures + the winning attempt");
+    }
+
+    #[test]
+    fn permanent_task_failure_exhausts_retries_with_history() {
+        let c = ClusterContext::builder().cores(2).max_task_failures(2).without_chaos().build();
+        let rdd = c.parallelize((0..4u32).collect(), 2).map(|x| {
+            if x >= 2 {
+                panic!("poison element {x}");
+            }
+            x
+        });
+        let err = rdd.collect().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("failed 2 times"), "{msg}");
+        assert!(msg.contains("poison element"), "attempt history carried: {msg}");
+        // The pool survives an exhausted job.
+        assert_eq!(c.parallelize((0..6u32).collect(), 3).count().unwrap(), 6);
+    }
+
+    #[test]
+    fn stage_deadline_turns_a_hung_stage_into_an_error() {
+        let c = ClusterContext::builder()
+            .cores(2)
+            .stage_deadline(Duration::from_millis(40))
+            .without_chaos()
+            .build();
+        let rdd = c.parallelize((0..2u32).collect(), 2).map(|x| {
+            if x == 1 {
+                std::thread::sleep(Duration::from_millis(400));
+            }
+            x
+        });
+        let err = rdd.collect().unwrap_err();
+        assert!(err.to_string().contains("deadline"), "{err}");
     }
 
     #[test]

@@ -10,7 +10,21 @@
 use std::any::Any;
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{OnceLock, RwLock};
+use std::sync::{OnceLock, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+use crate::error::{Error, Result};
+
+/// Poison-tolerant read lock: a panicked executor must not cascade into
+/// every other task that touches the store (the data is still
+/// consistent — buckets are only ever inserted or removed whole).
+fn read<T>(lock: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    lock.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-tolerant write lock; see [`read`].
+fn write<T>(lock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    lock.write().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Shuffle instrumentation cells, resolved once (see [`crate::obs`]).
 struct ShuffleObs {
@@ -66,56 +80,61 @@ impl ShuffleStore {
             o.puts.incr(1);
             o.records.incr(data.len() as u64);
         }
-        self.buckets
-            .write()
-            .unwrap()
-            .insert((shuffle, map_task, reduce), Box::new(data));
+        write(&self.buckets).insert((shuffle, map_task, reduce), Box::new(data));
     }
 
     /// Fetch all buckets for reduce partition `reduce`, concatenated in map
     /// task order. Cloning out keeps the store reusable for recomputes.
+    /// Missing buckets are skipped (an empty bucket and no bucket are
+    /// indistinguishable by design); a bucket stored with a different
+    /// element type is an [`Error::Engine`] — callers inside tasks turn
+    /// it into a clean job failure instead of an executor panic.
     pub fn fetch<T: Clone + 'static>(
         &self,
         shuffle: ShuffleId,
         num_map_tasks: usize,
         reduce: usize,
-    ) -> Vec<T> {
+    ) -> Result<Vec<T>> {
         if crate::obs::enabled() {
             shuffle_obs().fetches.incr(1);
         }
-        let buckets = self.buckets.read().unwrap();
+        let buckets = read(&self.buckets);
         let mut out = Vec::new();
         for m in 0..num_map_tasks {
             if let Some(b) = buckets.get(&(shuffle, m, reduce)) {
-                let v = b
-                    .downcast_ref::<Vec<T>>()
-                    .expect("shuffle type mismatch: bucket stored with a different type");
+                let v = b.downcast_ref::<Vec<T>>().ok_or_else(|| {
+                    Error::engine(format!(
+                        "shuffle type mismatch: bucket (shuffle {}, map {m}, reduce {reduce}) \
+                         stored with a different element type",
+                        shuffle.0
+                    ))
+                })?;
                 out.extend(v.iter().cloned());
             }
         }
-        out
+        Ok(out)
     }
 
     /// Mark a shuffle's map stage complete.
     pub fn mark_materialized(&self, shuffle: ShuffleId) {
-        self.materialized.write().unwrap().insert(shuffle);
+        write(&self.materialized).insert(shuffle);
     }
 
     /// Whether the map stage for this shuffle already ran.
     pub fn is_materialized(&self, shuffle: ShuffleId) -> bool {
-        self.materialized.read().unwrap().contains(&shuffle)
+        read(&self.materialized).contains(&shuffle)
     }
 
     /// Fault injection: drop every map output of a shuffle and clear its
     /// materialized flag — the next job that needs it recomputes the map
     /// stage through lineage. Returns the number of dropped buckets.
     pub fn lose(&self, shuffle: ShuffleId) -> usize {
-        let mut buckets = self.buckets.write().unwrap();
+        let mut buckets = write(&self.buckets);
         let keys: Vec<_> = buckets.keys().filter(|(s, _, _)| *s == shuffle).cloned().collect();
         for k in &keys {
             buckets.remove(k);
         }
-        self.materialized.write().unwrap().remove(&shuffle);
+        write(&self.materialized).remove(&shuffle);
         keys.len()
     }
 
@@ -126,7 +145,7 @@ impl ShuffleStore {
 
     /// Number of buckets currently stored.
     pub fn len(&self) -> usize {
-        self.buckets.read().unwrap().len()
+        read(&self.buckets).len()
     }
 
     /// True when no buckets stored.
@@ -146,12 +165,23 @@ mod tests {
         s.put(id, 1, 0, vec![("b", 2)]);
         s.put(id, 0, 0, vec![("a", 1)]);
         s.put(id, 0, 1, vec![("z", 9)]);
-        let r0: Vec<(&str, i32)> = s.fetch(id, 2, 0);
+        let r0: Vec<(&str, i32)> = s.fetch(id, 2, 0).unwrap();
         assert_eq!(r0, vec![("a", 1), ("b", 2)]);
-        let r1: Vec<(&str, i32)> = s.fetch(id, 2, 1);
+        let r1: Vec<(&str, i32)> = s.fetch(id, 2, 1).unwrap();
         assert_eq!(r1, vec![("z", 9)]);
-        let r2: Vec<(&str, i32)> = s.fetch(id, 2, 2);
+        let r2: Vec<(&str, i32)> = s.fetch(id, 2, 2).unwrap();
         assert!(r2.is_empty());
+    }
+
+    #[test]
+    fn type_mismatch_is_an_error_not_a_panic() {
+        let s = ShuffleStore::new();
+        let id = ShuffleId(9);
+        s.put(id, 0, 0, vec![1u32, 2]);
+        let err = s.fetch::<String>(id, 1, 0).unwrap_err();
+        assert!(err.to_string().contains("shuffle type mismatch"), "{err}");
+        // The store is still usable with the right type.
+        assert_eq!(s.fetch::<u32>(id, 1, 0).unwrap(), vec![1, 2]);
     }
 
     #[test]
@@ -164,7 +194,7 @@ mod tests {
         assert!(s.is_materialized(id));
         assert_eq!(s.lose(id), 1);
         assert!(!s.is_materialized(id));
-        let empty: Vec<u64> = s.fetch(id, 1, 0);
+        let empty: Vec<u64> = s.fetch(id, 1, 0).unwrap();
         assert!(empty.is_empty());
     }
 
@@ -182,9 +212,9 @@ mod tests {
         let s = ShuffleStore::new();
         s.put(ShuffleId(1), 0, 0, vec![1u8]);
         s.put(ShuffleId(2), 0, 0, vec![2u8]);
-        assert_eq!(s.fetch::<u8>(ShuffleId(1), 1, 0), vec![1]);
-        assert_eq!(s.fetch::<u8>(ShuffleId(2), 1, 0), vec![2]);
+        assert_eq!(s.fetch::<u8>(ShuffleId(1), 1, 0).unwrap(), vec![1]);
+        assert_eq!(s.fetch::<u8>(ShuffleId(2), 1, 0).unwrap(), vec![2]);
         s.lose(ShuffleId(1));
-        assert_eq!(s.fetch::<u8>(ShuffleId(2), 1, 0), vec![2]);
+        assert_eq!(s.fetch::<u8>(ShuffleId(2), 1, 0).unwrap(), vec![2]);
     }
 }

@@ -6,7 +6,7 @@
 use std::any::Any;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::{Mutex, PoisonError, RwLock};
 
 use super::rdd::RddId;
 
@@ -41,17 +41,18 @@ impl CacheStore {
 
     /// Record the declared storage level of an RDD (`.cache()`).
     pub fn set_level(&self, rdd: RddId, level: StorageLevel) {
-        self.levels.lock().unwrap().insert(rdd, level);
+        self.levels.lock().unwrap_or_else(PoisonError::into_inner).insert(rdd, level);
     }
 
     /// The declared storage level (None when never declared).
     pub fn level(&self, rdd: RddId) -> StorageLevel {
-        *self.levels.lock().unwrap().get(&rdd).unwrap_or(&StorageLevel::None)
+        let levels = self.levels.lock().unwrap_or_else(PoisonError::into_inner);
+        *levels.get(&rdd).unwrap_or(&StorageLevel::None)
     }
 
     /// Fetch a cached partition, cloning out the typed value.
     pub fn get<T: Clone + 'static>(&self, rdd: RddId, partition: usize) -> Option<Vec<T>> {
-        let blocks = self.blocks.read().unwrap();
+        let blocks = self.blocks.read().unwrap_or_else(PoisonError::into_inner);
         match blocks.get(&(rdd, partition)) {
             Some(b) => {
                 let v = b
@@ -69,18 +70,20 @@ impl CacheStore {
 
     /// Insert a computed partition.
     pub fn put<T: Clone + Send + Sync + 'static>(&self, rdd: RddId, partition: usize, data: Vec<T>) {
-        self.blocks.write().unwrap().insert((rdd, partition), Box::new(data));
+        let mut blocks = self.blocks.write().unwrap_or_else(PoisonError::into_inner);
+        blocks.insert((rdd, partition), Box::new(data));
     }
 
     /// Drop a single cached partition (fault injection / eviction).
     /// Returns true when something was actually dropped.
     pub fn evict(&self, rdd: RddId, partition: usize) -> bool {
-        self.blocks.write().unwrap().remove(&(rdd, partition)).is_some()
+        let mut blocks = self.blocks.write().unwrap_or_else(PoisonError::into_inner);
+        blocks.remove(&(rdd, partition)).is_some()
     }
 
     /// Drop every cached partition of an RDD; returns how many were dropped.
     pub fn evict_rdd(&self, rdd: RddId) -> usize {
-        let mut blocks = self.blocks.write().unwrap();
+        let mut blocks = self.blocks.write().unwrap_or_else(PoisonError::into_inner);
         let keys: Vec<_> = blocks.keys().filter(|(r, _)| *r == rdd).cloned().collect();
         for k in &keys {
             blocks.remove(k);
@@ -90,7 +93,7 @@ impl CacheStore {
 
     /// Number of cached partitions currently held.
     pub fn len(&self) -> usize {
-        self.blocks.read().unwrap().len()
+        self.blocks.read().unwrap_or_else(PoisonError::into_inner).len()
     }
 
     /// True when nothing is cached.

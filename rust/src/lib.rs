@@ -98,7 +98,7 @@ pub mod prelude {
     };
     pub use crate::conf::EclatConfig;
     pub use crate::data::{Database, DatasetSpec};
-    pub use crate::engine::{ClusterContext, Rdd};
+    pub use crate::engine::{ChaosPolicy, ClusterContext, Rdd, SchedulerConfig};
     pub use crate::error::{Error, Result};
     pub use crate::fim::{
         generate_rules, sort_frequents, CollectSink, CountSink, Frequent, FrequentSink, Item,

@@ -26,6 +26,14 @@
 //! * **Reader side** — every emission is published through the
 //!   double-buffered [`SnapshotHandle`](super::serve::SnapshotHandle),
 //!   so queries run lock-free while the next window is mined.
+//! * **Graceful degradation** — a failed or panicked *emission* does
+//!   not kill the service: the loop invalidates the miner's reuse cache
+//!   (the next attempt is a full re-mine from the always-exact vertical
+//!   store), keeps serving the last good snapshot, and retries at its
+//!   next pass. Only [`IngestConfig::max_mine_failures`] *consecutive*
+//!   failures — or a failure during window/store bookkeeping, which
+//!   poisons the store — take the terminal `dead` path. Failure, retry
+//!   and degraded-mode state are surfaced through [`IngestStats`].
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -41,6 +49,8 @@ use crate::fim::Item;
 struct IngestObs {
     queue_depth: &'static crate::obs::Gauge,
     skipped: &'static crate::obs::Counter,
+    mine_retries: &'static crate::obs::Counter,
+    degraded: &'static crate::obs::Gauge,
 }
 
 fn ingest_obs() -> &'static IngestObs {
@@ -48,6 +58,8 @@ fn ingest_obs() -> &'static IngestObs {
     OBS.get_or_init(|| IngestObs {
         queue_depth: crate::obs::gauge("stream.ingest.queue_depth"),
         skipped: crate::obs::counter("stream.ingest.skipped"),
+        mine_retries: crate::obs::counter("stream.mine_retries"),
+        degraded: crate::obs::gauge("stream.degraded"),
     })
 }
 
@@ -66,11 +78,18 @@ pub struct IngestConfig {
     /// production; demos and tests use it to pace the mining loop
     /// deterministically.
     pub emission_throttle: Duration,
+    /// How many **consecutive** emission failures the service tolerates
+    /// before declaring the mining loop dead (default 3, floor 1). Each
+    /// tolerated failure triggers a degraded-mode retry: the reuse
+    /// cache is invalidated and the next pass re-mines the window from
+    /// the vertical store while readers keep the last good snapshot. A
+    /// single successful emission resets the streak.
+    pub max_mine_failures: u32,
 }
 
 impl Default for IngestConfig {
     fn default() -> IngestConfig {
-        IngestConfig { queue_cap: 8, emission_throttle: Duration::ZERO }
+        IngestConfig { queue_cap: 8, emission_throttle: Duration::ZERO, max_mine_failures: 3 }
     }
 }
 
@@ -84,6 +103,13 @@ impl IngestConfig {
     /// Set the per-emission throttle (builder style).
     pub fn throttle(mut self, d: Duration) -> IngestConfig {
         self.emission_throttle = d;
+        self
+    }
+
+    /// Set the consecutive-emission-failure bound (builder style;
+    /// values below 1 are clamped to 1 — "die on the first failure").
+    pub fn max_mine_failures(mut self, n: u32) -> IngestConfig {
+        self.max_mine_failures = n.max(1);
         self
     }
 }
@@ -114,6 +140,17 @@ pub struct IngestStats {
     /// Emission points skipped under backpressure (each later covered
     /// by a catch-up or subsequent emission).
     pub skipped: u64,
+    /// Emissions that failed (error or panic while mining), lifetime.
+    pub mine_failures: u64,
+    /// Of those, how many were retried in degraded mode rather than
+    /// killing the service (always `mine_failures` minus at most one —
+    /// the final failure of an exhausted streak is not retried).
+    pub mine_retries: u64,
+    /// True while the service is in degraded mode: the last emission
+    /// attempt failed, readers are being served the previous good
+    /// snapshot, and a retry is pending. Cleared by the next successful
+    /// emission.
+    pub degraded: bool,
     /// Per-shard ingest + mining accounting (one entry per store shard;
     /// a single entry for an unsharded miner). Refreshed by the mining
     /// loop after every bookkept batch and every published emission, so
@@ -150,6 +187,13 @@ struct Shared {
     batches: AtomicU64,
     emissions: AtomicU64,
     skipped: AtomicU64,
+    /// Emission failures, lifetime / retried / current streak (the
+    /// streak doubles as the degraded-mode flag: non-zero = degraded).
+    mine_failures: AtomicU64,
+    mine_retries: AtomicU64,
+    consecutive_failures: AtomicU64,
+    /// Terminal bound on `consecutive_failures`.
+    max_mine_failures: u64,
     /// Latest per-shard accounting, copied out of the miner by the
     /// mining loop (the miner itself lives on the loop thread), plus
     /// the monotonic instant of that refresh (drives `IngestStats::age`).
@@ -191,6 +235,10 @@ impl StreamService {
             batches: AtomicU64::new(0),
             emissions: AtomicU64::new(0),
             skipped: AtomicU64::new(0),
+            mine_failures: AtomicU64::new(0),
+            mine_retries: AtomicU64::new(0),
+            consecutive_failures: AtomicU64::new(0),
+            max_mine_failures: cfg.max_mine_failures.max(1) as u64,
             shard_stats: Mutex::new((Instant::now(), miner.shard_stats())),
         });
         let (publisher, handle) = snapshot_pipe();
@@ -260,6 +308,9 @@ impl StreamService {
             batches: self.shared.batches.load(Ordering::SeqCst),
             emissions: self.shared.emissions.load(Ordering::SeqCst),
             skipped: self.shared.skipped.load(Ordering::SeqCst),
+            mine_failures: self.shared.mine_failures.load(Ordering::SeqCst),
+            mine_retries: self.shared.mine_retries.load(Ordering::SeqCst),
+            degraded: self.shared.consecutive_failures.load(Ordering::SeqCst) > 0,
             shards,
             age,
         }
@@ -434,6 +485,10 @@ fn mining_loop(
                 Ok(Ok(snap)) => {
                     publisher.publish(snap);
                     shared.emissions.fetch_add(1, Ordering::SeqCst);
+                    shared.consecutive_failures.store(0, Ordering::SeqCst);
+                    if crate::obs::enabled() {
+                        ingest_obs().degraded.set(0);
+                    }
                     refresh_shard_stats(&shared, &miner);
                     if let Ok(mut st) = shared.lock() {
                         st.unmined = false;
@@ -442,17 +497,50 @@ fn mining_loop(
                         std::thread::sleep(throttle);
                     }
                 }
-                Ok(Err(e)) => return die(miner, &shared, e),
+                Ok(Err(e)) => {
+                    if let Some(fatal) = note_mine_failure(&mut miner, &shared, &e.to_string()) {
+                        return die(miner, &shared, fatal);
+                    }
+                }
                 Err(payload) => {
-                    let e = Error::engine(format!(
-                        "mining loop panicked: {}",
-                        panic_message(payload)
-                    ));
-                    return die(miner, &shared, e);
+                    let msg = format!("mining panicked: {}", panic_message(payload));
+                    if let Some(fatal) = note_mine_failure(&mut miner, &shared, &msg) {
+                        return die(miner, &shared, fatal);
+                    }
                 }
             }
         }
     }
+}
+
+/// Handle one failed emission attempt (error or panic while mining).
+/// Bumps the failure counters; when the consecutive streak reaches the
+/// bound, returns the terminal error for the caller to die with.
+/// Otherwise arranges a degraded-mode retry and returns `None`: the
+/// reuse cache is invalidated (the failed attempt may have half-built
+/// it — the next attempt full-re-mines from the always-exact vertical
+/// store) and `unmined` is left set, so the loop's next pass re-mines
+/// the live window while readers keep the last good snapshot.
+fn note_mine_failure(miner: &mut StreamingMiner, shared: &Shared, msg: &str) -> Option<Error> {
+    shared.mine_failures.fetch_add(1, Ordering::SeqCst);
+    let streak = shared.consecutive_failures.fetch_add(1, Ordering::SeqCst) + 1;
+    if crate::obs::enabled() {
+        ingest_obs().degraded.set(streak as i64);
+    }
+    if streak >= shared.max_mine_failures {
+        return Some(Error::engine(format!(
+            "{streak} consecutive emission failures, last: {msg}"
+        )));
+    }
+    shared.mine_retries.fetch_add(1, Ordering::SeqCst);
+    if crate::obs::enabled() {
+        ingest_obs().mine_retries.incr(1);
+    }
+    miner.invalidate_cache();
+    if let Ok(mut st) = shared.lock() {
+        st.unmined = true;
+    }
+    None
 }
 
 /// Copy the miner's per-shard accounting into the shared stats cell so
@@ -577,6 +665,59 @@ mod tests {
         assert_eq!(snap.batch_id, 3);
         assert!(snap.frequent(&[3]).is_some(), "batch 3's items are in the window");
         service.shutdown().unwrap();
+    }
+
+    #[test]
+    fn emission_failures_degrade_then_recover() {
+        // Chaos: every emission attempt fails twice, then the consecutive
+        // cap forces a success. The default bound (3) is never reached,
+        // so the service degrades, retries, and recovers — it must end
+        // window-exact and never die.
+        let ctx = ClusterContext::builder()
+            .cores(2)
+            .chaos(crate::engine::ChaosPolicy::new(11).emission_failures(1.0, 2))
+            .build();
+        let cfg = StreamConfig::new(WindowSpec::tumbling(1), MinSup::count(2));
+        let service = StreamService::spawn(StreamingMiner::new(ctx, cfg), IngestConfig::default());
+        for b in batches(3) {
+            service.push_batch(b).unwrap();
+        }
+        let snap = service.drain().unwrap().expect("emissions survived the chaos");
+        let stats = service.stats();
+        assert!(stats.mine_failures > 0, "chaos fired: {stats:?}");
+        assert_eq!(stats.mine_retries, stats.mine_failures, "every failure was retried");
+        assert!(!stats.degraded, "a successful emission clears degraded mode");
+        assert!(stats.emissions >= 1);
+        let miner = service.shutdown().unwrap();
+        let mut oracle = SeqEclat::mine(&miner.materialize_window(), MinSup::count(2));
+        sort_frequents(&mut oracle);
+        assert_eq!(snap.frequents, oracle, "window-exact after recovery");
+    }
+
+    #[test]
+    fn service_dies_after_consecutive_emission_failures() {
+        // Chaos that out-fails the bound: emissions fail 10 times in a
+        // row, the service tolerates only 2 — the terminal path must
+        // fire with the streak in the message, and producers must see a
+        // clean error instead of a hang.
+        let ctx = ClusterContext::builder()
+            .cores(2)
+            .chaos(crate::engine::ChaosPolicy::new(11).emission_failures(1.0, 10))
+            .build();
+        let cfg = StreamConfig::new(WindowSpec::tumbling(1), MinSup::count(1));
+        let service = StreamService::spawn(
+            StreamingMiner::new(ctx, cfg),
+            IngestConfig::default().max_mine_failures(2),
+        );
+        service.push_batch(vec![vec![1, 2]]).unwrap();
+        let err = service.drain().unwrap_err();
+        assert!(err.to_string().contains("consecutive emission failures"), "{err}");
+        let stats = service.stats();
+        assert_eq!(stats.mine_failures, 2);
+        assert_eq!(stats.mine_retries, 1, "the final failure is not retried");
+        assert!(stats.degraded, "died degraded");
+        assert!(service.push_batch(vec![vec![3]]).is_err(), "producers see the death");
+        assert!(service.shutdown().is_err());
     }
 
     #[test]

@@ -26,7 +26,7 @@ use std::time::Duration;
 use crate::algorithms::partitioners::ReverseHashClassPartitioner;
 use crate::algorithms::SeqEclat;
 use crate::engine::{ClusterContext, Partitioner};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::fim::{
     bottom_up_with, generate_rules, rules_to_json, sort_frequents, Frequent, Item, MineScratch,
     MinSup, PooledSink, Rule, TidBitmap,
@@ -436,8 +436,28 @@ impl StreamingMiner {
     /// the newest ingested batch — the skip-to-latest catch-up emission
     /// of the async service, and the second half of
     /// [`StreamingMiner::push_batch`].
+    ///
+    /// When the context has an armed [`crate::engine::ChaosPolicy`] with
+    /// emission failures enabled, this is the injection point: the
+    /// emission fails *before* mining (no partial state), exactly like a
+    /// mid-mine panic surfaced as an error — the retry path in
+    /// [`crate::stream::ingest`] takes over from there.
     pub fn mine_now(&mut self) -> Result<BatchSnapshot> {
+        if let Some(chaos) = self.ctx.chaos() {
+            if chaos.fail_emission() {
+                return Err(Error::engine("chaos: injected emission failure"));
+            }
+        }
         self.emit()
+    }
+
+    /// Drop the incremental reuse cache so the next emission re-mines
+    /// every class from the vertical store. The degraded-mode retry in
+    /// [`crate::stream::ingest`] calls this after a failed emission: the
+    /// cache may describe a snapshot that was never published, and a
+    /// full re-mine from the (always-exact) store is the safe restart.
+    pub fn invalidate_cache(&mut self) {
+        self.cache = None;
     }
 
     fn emit(&mut self) -> Result<BatchSnapshot> {

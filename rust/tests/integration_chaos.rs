@@ -1,0 +1,189 @@
+//! Recovery equivalence under injected chaos (PR 8 acceptance): every
+//! RDD variant, run on a context armed with a seeded [`ChaosPolicy`]
+//! (transient task panics, stragglers, mid-job shuffle loss), must
+//! produce byte-identical results to a fault-free run — the scheduler's
+//! retries, lineage re-materialization and speculative tasks are
+//! correctness-preserving, not best-effort. The streaming service gets
+//! the same treatment with injected emission failures.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use rdd_eclat::algorithms::{
+    Algorithm, EclatV1, EclatV2, EclatV3, EclatV4, EclatV5, SeqEclat,
+};
+use rdd_eclat::data::Database;
+use rdd_eclat::engine::{ChaosPolicy, ClusterContext};
+use rdd_eclat::fim::{sort_frequents, Frequent, MinSup};
+use rdd_eclat::stream::{IngestConfig, StreamConfig, StreamService, StreamingMiner, WindowSpec};
+use rdd_eclat::util::prng::Rng;
+use rdd_eclat::util::prop::{check, prop_assert_eq, Config};
+
+fn random_db(rng: &mut Rng) -> Database {
+    let n_items = rng.range(3, 25) as u32;
+    let n_txns = rng.range(5, 120);
+    let density = 0.15 + rng.f64() * 0.4;
+    let rows: Vec<Vec<u32>> = (0..n_txns)
+        .map(|_| (0..n_items).filter(|_| rng.chance(density)).collect())
+        .filter(|t: &Vec<u32>| !t.is_empty())
+        .collect();
+    Database::from_rows(rows)
+}
+
+fn mined(algo: &dyn Algorithm, ctx: &ClusterContext, db: &Database, ms: MinSup) -> Vec<Frequent> {
+    let mut v = algo.run_on(ctx, db, ms).expect("run").frequents;
+    sort_frequents(&mut v);
+    v
+}
+
+fn variants() -> Vec<Box<dyn Algorithm>> {
+    vec![
+        Box::new(EclatV1::default()),
+        Box::new(EclatV2::default()),
+        Box::new(EclatV3::default()),
+        Box::new(EclatV4::default()),
+        Box::new(EclatV5::default()),
+    ]
+}
+
+/// The headline equivalence property: a chaos-armed context (panics +
+/// stragglers + shuffle loss from one seed) and a fault-free context
+/// mine identical frequent-itemset sets on randomized databases, for
+/// all five variants, and both match the sequential oracle.
+#[test]
+fn chaos_runs_are_byte_identical_to_fault_free_runs() {
+    // `without_chaos` shields the baseline from any ambient
+    // RDD_ECLAT_CHAOS in the environment (the CI chaos job sets it).
+    let clean = ClusterContext::builder().cores(2).without_chaos().build();
+    let chaotic = ClusterContext::builder()
+        .cores(2)
+        .chaos(ChaosPolicy::default_suite(0xC4A05, 0.25))
+        .build();
+    let algos = variants();
+    check(Config::default().cases(6).seed(0x0DD5), |rng| {
+        let db = random_db(rng);
+        let min_sup = MinSup::count(rng.range(1, 2 + db.len() / 3) as u32);
+        let mut want = SeqEclat::mine(&db, min_sup);
+        sort_frequents(&mut want);
+        for algo in &algos {
+            let base = mined(algo.as_ref(), &clean, &db, min_sup);
+            prop_assert_eq(base == want, true, &format!("{} fault-free", algo.name()))?;
+            let got = mined(algo.as_ref(), &chaotic, &db, min_sup);
+            prop_assert_eq(got == want, true, &format!("{} under chaos", algo.name()))?;
+        }
+        Ok(())
+    });
+}
+
+/// Certain shuffle loss (p = 1.0): the first fetch of every reduce
+/// partition fails mid-job, forcing a lineage re-run of the map stage
+/// for each shuffle — and results still match the fault-free run.
+#[test]
+fn certain_shuffle_loss_recovers_through_lineage_mid_job() {
+    let clean = ClusterContext::builder().cores(2).without_chaos().build();
+    let chaotic = ClusterContext::builder()
+        .cores(2)
+        .chaos(ChaosPolicy::new(0x1085).shuffle_loss(1.0))
+        .build();
+    // A bare shuffle job first: counts survive a guaranteed fetch failure.
+    let pairs: Vec<(u32, u64)> = (0..60).map(|i| (i % 5, 1u64)).collect();
+    let mut got = chaotic
+        .parallelize(pairs.clone(), 4)
+        .reduce_by_key(3, |a, b| a + b)
+        .collect()
+        .unwrap();
+    got.sort();
+    let mut base = clean
+        .parallelize(pairs, 4)
+        .reduce_by_key(3, |a, b| a + b)
+        .collect()
+        .unwrap();
+    base.sort();
+    assert_eq!(got, base, "re-materialized shuffle changed the answer");
+
+    // Then a full multi-shuffle miner on both contexts.
+    let mut rng = Rng::new(0x5107);
+    let db = random_db(&mut rng);
+    let ms = MinSup::count(2);
+    for algo in variants() {
+        let got = mined(algo.as_ref(), &chaotic, &db, ms);
+        let want = mined(algo.as_ref(), &clean, &db, ms);
+        assert_eq!(got, want, "{} under certain shuffle loss", algo.name());
+    }
+}
+
+/// Speculative execution: one deterministic straggler (first attempt of
+/// whichever task grabs the one-shot flag sleeps far past the median),
+/// speculation armed. The job must finish with correct results — the
+/// speculative copy wins while the original sleeps — and the
+/// `engine.speculative.*` counters must move.
+#[test]
+fn speculation_launches_a_copy_and_first_finisher_wins() {
+    rdd_eclat::obs::set_enabled(true);
+    let launched0 = rdd_eclat::obs::counter("engine.speculative.launched").get();
+    let won0 = rdd_eclat::obs::counter("engine.speculative.won").get();
+
+    let ctx = ClusterContext::builder()
+        .cores(4)
+        .without_chaos()
+        .speculation(true)
+        .speculation_multiplier(1.2)
+        .speculation_quantile(0.5)
+        .build();
+    let straggle_once = Arc::new(AtomicBool::new(true));
+    let flag = Arc::clone(&straggle_once);
+    let mut out = ctx
+        .parallelize((0..80u32).collect(), 8)
+        .map_partitions_with_index(move |_p, rows| {
+            if flag.swap(false, Ordering::SeqCst) {
+                // Only the first attempt of one task straggles; its
+                // speculative relaunch (and everyone else) is fast.
+                std::thread::sleep(Duration::from_millis(300));
+            }
+            rows.into_iter().map(|x| x * 2).collect()
+        })
+        .collect()
+        .unwrap();
+    out.sort();
+    assert_eq!(out, (0..80u32).map(|x| x * 2).collect::<Vec<_>>());
+
+    let launched = rdd_eclat::obs::counter("engine.speculative.launched").get() - launched0;
+    let won = rdd_eclat::obs::counter("engine.speculative.won").get() - won0;
+    assert!(launched >= 1, "no speculative task launched against a 300ms straggler");
+    assert!(won >= 1, "speculative copy should beat a sleeping original (launched {launched})");
+}
+
+/// Streaming graceful degradation end-to-end: a service whose context
+/// injects emission failures (cap 2 consecutive, below the service's
+/// death bound of 3) must keep serving, retry with full re-mines, and
+/// converge to the exact window oracle.
+#[test]
+fn streaming_service_survives_emission_panics_and_stays_window_exact() {
+    let min_sup = MinSup::count(2);
+    let ctx = ClusterContext::builder()
+        .cores(2)
+        .without_chaos()
+        .build();
+    ctx.set_chaos(Some(ChaosPolicy::new(0xE).emission_failures(0.9, 2)));
+    let miner =
+        StreamingMiner::new(ctx, StreamConfig::new(WindowSpec::sliding(3, 1), min_sup));
+    let service = StreamService::spawn(miner, IngestConfig::new(16));
+
+    let mut rng = Rng::new(0x5EA);
+    for _ in 0..10 {
+        let batch: Vec<Vec<u32>> =
+            (0..8).map(|_| (0..10u32).filter(|_| rng.chance(0.4)).collect()).collect();
+        service.push_batch(batch).unwrap();
+    }
+    let snap = service.drain().unwrap().expect("slide 1 emitted");
+    let stats = service.stats();
+    let miner = service.shutdown().unwrap();
+
+    assert!(stats.mine_failures > 0, "p=0.9 over 10 emissions injected nothing: {stats:?}");
+    assert!(stats.mine_retries > 0, "failures must schedule retries: {stats:?}");
+    assert!(!stats.degraded, "a drained service must have recovered: {stats:?}");
+    let mut want = SeqEclat::mine(&miner.materialize_window(), min_sup);
+    sort_frequents(&mut want);
+    assert_eq!(snap.frequents, want, "degraded-mode retries broke window exactness");
+}

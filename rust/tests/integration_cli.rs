@@ -333,6 +333,79 @@ fn stream_serve_trace_covers_mining_and_publishes() {
 }
 
 #[test]
+fn chaos_run_prints_header_and_matches_fault_free_result() {
+    let dir = tmp_dir("chaos_run");
+    let found_line = |text: &str| -> String {
+        text.lines()
+            .find(|l| l.contains("found") && l.contains("frequent itemsets"))
+            .unwrap_or_else(|| panic!("no result line in:\n{text}"))
+            .to_string()
+    };
+    // Fault-free baseline; shield it from any ambient CI chaos env.
+    let out = repro()
+        .args(["run", "--algo", "v2", "--dataset", "chess", "--min-sup", "0.9",
+               "--data-dir", &dir, "--quiet"])
+        .env_remove("RDD_ECLAT_CHAOS")
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let clean = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(!clean.contains("chaos armed"), "{clean}");
+
+    // Same mine under injected faults: header printed, result unchanged.
+    let out = repro()
+        .args(["run", "--algo", "v2", "--dataset", "chess", "--min-sup", "0.9",
+               "--data-dir", &dir, "--quiet", "--chaos", "7:0.2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let chaotic = String::from_utf8_lossy(&out.stdout).into_owned();
+    assert!(chaotic.contains("chaos armed"), "{chaotic}");
+    assert_eq!(
+        found_line(&chaotic),
+        found_line(&clean),
+        "chaos changed the mined result"
+    );
+}
+
+#[test]
+fn invalid_chaos_spec_is_a_usage_error() {
+    let out = repro()
+        .args(["run", "--dataset", "chess", "--chaos", "nope"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("chaos"));
+}
+
+#[test]
+fn stream_serve_with_chaos_survives_and_stays_window_exact() {
+    // `--serve --chaos` arms emission failures on top of engine faults;
+    // the service must retry through them and drain to the exact window.
+    let dir = tmp_dir("stream_chaos");
+    let file = format!("{dir}/stream.dat");
+    let rows: String = (0..12)
+        .map(|i| if i % 3 == 2 { "1 3\n".to_string() } else { "1 2\n".to_string() })
+        .collect();
+    std::fs::write(&file, rows).unwrap();
+    let json_path = format!("{dir}/snapshot.json");
+    let out = repro()
+        .args([
+            "stream", "--serve", "--dataset", &file, "--batch", "4", "--window", "2",
+            "--slide", "1", "--min-sup", "3", "--quiet", "--chaos", "7:0.3",
+            "--json", &json_path,
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("chaos armed"), "{text}");
+    let json = std::fs::read_to_string(&json_path).unwrap();
+    assert!(json.contains("\"window_txns\": 8"), "{json}");
+    assert!(json.contains("\"frequents\""), "{json}");
+}
+
+#[test]
 fn invalid_min_sup_rejected() {
     let out = repro()
         .args(["run", "--dataset", "chess", "--min-sup", "abc"])
