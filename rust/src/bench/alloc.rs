@@ -33,22 +33,38 @@ impl CountingAllocator {
     }
 }
 
+// SAFETY: pure pass-through to `System`, which upholds the GlobalAlloc
+// contract; the only addition is a relaxed counter bump, which neither
+// allocates (no reentrancy) nor unwinds.
 unsafe impl GlobalAlloc for CountingAllocator {
+    // SAFETY: caller upholds GlobalAlloc's contract (valid `layout`);
+    // we forward it to `System` unchanged.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // ordering: Relaxed — allocation tally; RMW atomicity keeps the
+        // count exact and nothing synchronizes through it. This is the
+        // hottest line in the crate when installed — any stronger
+        // ordering would tax every allocation.
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.alloc(layout)
     }
 
+    // SAFETY: caller guarantees `ptr` came from this allocator with
+    // `layout`; forwarded to `System` unchanged.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }
 
+    // SAFETY: as `alloc` — valid `layout` forwarded to `System`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        // ordering: Relaxed — see `alloc`.
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: caller guarantees `ptr`/`layout` per the GlobalAlloc
+    // contract; forwarded to `System` unchanged.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // ordering: Relaxed — see `alloc`.
         ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
         System.realloc(ptr, layout, new_size)
     }
@@ -57,16 +73,21 @@ unsafe impl GlobalAlloc for CountingAllocator {
 /// Record that a [`CountingAllocator`] is the process's global allocator.
 /// Call once from the bench binary's `main` (the library cannot know).
 pub fn mark_installed() {
+    // ordering: Relaxed — write-once flag set in `main` before any
+    // measurement thread exists; no data is published through it.
     INSTALLED.store(true, Ordering::Relaxed);
 }
 
 /// Whether allocation counts are meaningful in this process.
 pub fn installed() -> bool {
+    // ordering: Relaxed — see `mark_installed`.
     INSTALLED.load(Ordering::Relaxed)
 }
 
 /// Total allocations since process start (monotone counter).
 pub fn allocations() -> u64 {
+    // ordering: Relaxed — monitoring read of a monotone tally; benches
+    // are single-threaded around the measured closure.
     ALLOCATIONS.load(Ordering::Relaxed)
 }
 

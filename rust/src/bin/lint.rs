@@ -1,0 +1,581 @@
+//! Crate-specific concurrency lint — zero dependencies, line-wise.
+//!
+//! `cargo run --bin lint` scans the crate sources (default
+//! `src/`, override with `--root <dir>`) and enforces the PR-9
+//! concurrency-hygiene rules that rustc and clippy cannot express:
+//!
+//! | rule id            | scope                 | requirement                                             |
+//! |--------------------|-----------------------|---------------------------------------------------------|
+//! | `bare-lock-unwrap` | all files             | no `.lock().unwrap()` / `.read().unwrap()` /            |
+//! |                    |                       | `.write().unwrap()` — use the poison-tolerant           |
+//! |                    |                       | `crate::sync::*_unpoisoned` helpers or map the error    |
+//! | `ordering-comment` | all files             | every `Ordering::{Relaxed,Acquire,Release,AcqRel,`      |
+//! |                    |                       | `SeqCst}` use carries an `// ordering:` justification   |
+//! | `safety-comment`   | all files             | every `unsafe` block/impl/fn carries a `// SAFETY:`     |
+//! |                    |                       | justification                                           |
+//! | `chaos-determinism`| `engine/chaos.rs`     | no `Instant::now` / `SystemTime` — fault decisions must |
+//! |                    |                       | be a pure function of the seeded policy                 |
+//! | `shim-imports`     | the five shimmed      | no `std::sync` / `std::thread` — loom-modelable modules |
+//! |                    | concurrency modules   | import `crate::sync` so `--cfg loom` swaps the types    |
+//!
+//! Justification comments may sit on the offending line or in the
+//! contiguous `//` comment block above the statement (attribute lines
+//! and statement continuations are looked through). Test-only regions —
+//! items gated by a `#[cfg(...)]` containing `test` — are exempt from
+//! every rule: tests may use bare `unwrap` (a poisoned lock *should*
+//! fail a test loudly) and std types (they never compile under loom,
+//! or only behind `cfg(all(loom, test))`).
+//!
+//! The scanner is a heuristic, not a parser: it is string-, char-,
+//! raw-string- and comment-aware (including block comments) so braces
+//! and keywords inside literals don't confuse it, but pathological
+//! formatting can evade it. That is fine — it is a tripwire for the
+//! crate's own conventions, reviewed alongside the code it checks.
+//!
+//! Exit status: 0 when clean, 1 with one `file:line: [rule] message`
+//! diagnostic per violation otherwise. `--list` prints the rule table.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Which files a rule applies to.
+#[derive(Clone, Copy)]
+enum Scope {
+    All,
+    /// Only files whose `/`-separated path ends with one of these suffixes.
+    Only(&'static [&'static str]),
+}
+
+#[derive(Clone, Copy)]
+enum Kind {
+    /// The code portion of a non-test line must not contain any needle.
+    Forbid(&'static [&'static str]),
+    /// A non-test line whose code portion contains a trigger must carry
+    /// `marker` in its own comment or the comment block above it.
+    RequireComment { triggers: &'static [&'static str], marker: &'static str },
+}
+
+struct Rule {
+    id: &'static str,
+    scope: Scope,
+    kind: Kind,
+    /// Raw-line substrings that exempt an otherwise-matching line.
+    allow: &'static [&'static str],
+    summary: &'static str,
+}
+
+/// The five modules refactored onto the `crate::sync` shim (PR 9);
+/// keep in sync with the list in `src/sync.rs` docs.
+const SHIMMED: &[&str] = &[
+    "stream/serve.rs",
+    "engine/pool.rs",
+    "engine/shuffle.rs",
+    "obs/registry.rs",
+    "obs/span.rs",
+];
+
+const RULES: &[Rule] = &[
+    Rule {
+        id: "bare-lock-unwrap",
+        scope: Scope::All,
+        kind: Kind::Forbid(&[".lock().unwrap()", ".read().unwrap()", ".write().unwrap()"]),
+        allow: &[],
+        summary: "unwrap on a poisonable guard propagates panics across threads; use \
+                  crate::sync::{lock,read,write}_unpoisoned or map the PoisonError",
+    },
+    Rule {
+        id: "ordering-comment",
+        scope: Scope::All,
+        kind: Kind::RequireComment {
+            triggers: &[
+                "Ordering::Relaxed",
+                "Ordering::Acquire",
+                "Ordering::Release",
+                "Ordering::AcqRel",
+                "Ordering::SeqCst",
+            ],
+            marker: "ordering:",
+        },
+        allow: &[],
+        summary: "every atomic memory-ordering choice carries an `// ordering:` comment \
+                  saying why that strength is sufficient (or deliberately strong)",
+    },
+    Rule {
+        id: "safety-comment",
+        scope: Scope::All,
+        kind: Kind::RequireComment { triggers: &["unsafe "], marker: "SAFETY:" },
+        allow: &[],
+        summary: "every `unsafe` block, fn, or impl carries a `// SAFETY:` comment stating \
+                  the invariant that makes it sound",
+    },
+    Rule {
+        id: "chaos-determinism",
+        scope: Scope::Only(&["engine/chaos.rs"]),
+        kind: Kind::Forbid(&["Instant::now", "SystemTime"]),
+        allow: &[],
+        summary: "chaos fault decisions must be a pure function of the seeded policy — \
+                  wall-clock reads would make failure schedules unreproducible",
+    },
+    Rule {
+        id: "shim-imports",
+        scope: Scope::Only(SHIMMED),
+        kind: Kind::Forbid(&["std::sync", "std::thread"]),
+        allow: &["std::thread::current"],
+        summary: "loom-modelable modules import crate::sync (the shim), never std::sync / \
+                  std::thread directly, so `--cfg loom` swaps every primitive",
+    },
+];
+
+#[derive(Debug)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+/// One source line, split by the file-global scanner.
+struct Line {
+    /// Characters outside comments; string/char literal *contents* are
+    /// masked out so needles inside literals can't fire rules.
+    code: String,
+    /// Characters inside `//` or `/* */` comments.
+    comment: String,
+    /// Brace depth after this line (braces counted in code, outside
+    /// strings and comments).
+    depth_after: i32,
+}
+
+fn main() -> ExitCode {
+    let mut root: PathBuf = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--list" => {
+                print_rules();
+                return ExitCode::SUCCESS;
+            }
+            "--root" => match args.next() {
+                Some(dir) => root = PathBuf::from(dir),
+                None => {
+                    eprintln!("lint: --root needs a directory argument");
+                    return ExitCode::FAILURE;
+                }
+            },
+            other => {
+                eprintln!("lint: unknown argument `{other}` (try --root <dir> or --list)");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    let mut files = Vec::new();
+    collect_rs_files(&root, &mut files);
+    files.sort();
+    if files.is_empty() {
+        eprintln!("lint: no .rs files under {}", root.display());
+        return ExitCode::FAILURE;
+    }
+
+    let mut violations = Vec::new();
+    for file in &files {
+        let rel = file
+            .strip_prefix(&root)
+            .unwrap_or(file)
+            .to_string_lossy()
+            .replace('\\', "/");
+        // The lint's own rule table spells out the forbidden patterns.
+        if rel.ends_with("bin/lint.rs") {
+            continue;
+        }
+        match fs::read_to_string(file) {
+            Ok(text) => scan_file(&rel, &text, &mut violations),
+            Err(e) => {
+                eprintln!("lint: cannot read {}: {e}", file.display());
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+
+    for v in &violations {
+        println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+    }
+    if violations.is_empty() {
+        println!("lint: clean ({} files)", files.len());
+        ExitCode::SUCCESS
+    } else {
+        println!("lint: {} violation(s) in {} files scanned", violations.len(), files.len());
+        ExitCode::FAILURE
+    }
+}
+
+fn print_rules() {
+    println!("lint rules (see src/bin/lint.rs docs for the full table):");
+    for r in RULES {
+        let scope = match r.scope {
+            Scope::All => "all files".to_string(),
+            Scope::Only(files) => files.join(", "),
+        };
+        println!("  {:<18} [{}]\n    {}", r.id, scope, r.summary);
+    }
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else { return };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+}
+
+fn scan_file(rel: &str, text: &str, out: &mut Vec<Violation>) {
+    let lines = split_lines(text);
+    let masked = test_mask(&lines);
+    let raw: Vec<&str> = text.lines().collect();
+
+    for rule in RULES {
+        if let Scope::Only(files) = rule.scope {
+            if !files.iter().any(|f| rel.ends_with(f)) {
+                continue;
+            }
+        }
+        for (i, line) in lines.iter().enumerate() {
+            if masked[i] {
+                continue;
+            }
+            if rule.allow.iter().any(|a| raw.get(i).is_some_and(|r| r.contains(a))) {
+                continue;
+            }
+            match rule.kind {
+                Kind::Forbid(needles) => {
+                    for needle in needles {
+                        if line.code.contains(needle) {
+                            out.push(Violation {
+                                file: rel.to_string(),
+                                line: i + 1,
+                                rule: rule.id,
+                                msg: format!("forbidden pattern `{needle}` — {}", rule.summary),
+                            });
+                        }
+                    }
+                }
+                Kind::RequireComment { triggers, marker } => {
+                    for trigger in triggers {
+                        if line.code.contains(trigger) && !justified(&lines, i, marker, triggers)
+                        {
+                            out.push(Violation {
+                                file: rel.to_string(),
+                                line: i + 1,
+                                rule: rule.id,
+                                msg: format!(
+                                    "`{}` without a `// {marker}` comment — {}",
+                                    trigger.trim_end(),
+                                    rule.summary
+                                ),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Is the trigger on `lines[idx]` justified by a `marker` comment — on
+/// the line itself, or in the contiguous comment block above the
+/// statement? The upward walk looks through attribute lines, sibling
+/// trigger lines (one comment block may cover a run of annotated
+/// statements), and statement continuations (a preceding code line that
+/// doesn't end a statement).
+fn justified(lines: &[Line], idx: usize, marker: &str, triggers: &[&str]) -> bool {
+    if lines[idx].comment.contains(marker) {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let line = &lines[i];
+        let code = line.code.trim();
+        if code.is_empty() {
+            if line.comment.contains(marker) {
+                return true;
+            }
+            if line.comment.trim().is_empty() {
+                // Blank line: the comment block (if any) ended.
+                return false;
+            }
+            continue; // pure comment line, keep walking the block
+        }
+        if code.starts_with("#[") || code.starts_with("#![") {
+            continue; // attribute between comment and item
+        }
+        if triggers.iter().any(|t| code.contains(t)) {
+            // A sibling annotated statement; its comment may say "as
+            // above" — keep walking to the block that opened the run.
+            if line.comment.contains(marker) {
+                return true;
+            }
+            continue;
+        }
+        let ends_statement = code.ends_with(';')
+            || code.ends_with('{')
+            || code.ends_with('}')
+            || code.ends_with(',');
+        if !ends_statement {
+            // Continuation of the same multi-line statement.
+            if line.comment.contains(marker) {
+                return true;
+            }
+            continue;
+        }
+        return line.comment.contains(marker);
+    }
+    false
+}
+
+/// Mark every line inside a `#[cfg(...)]`-gated test region. A cfg is a
+/// test cfg when it mentions `test` outside `not(...)` — `cfg(test)`,
+/// `cfg(all(test, not(loom)))`, and `cfg(all(loom, test))` all count;
+/// `cfg(not(test))` does not.
+fn test_mask(lines: &[Line]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut active: Option<i32> = None; // base depth of the gated item
+    let mut entered = false;
+    let mut depth_before = 0;
+    for (i, line) in lines.iter().enumerate() {
+        if active.is_none() && is_test_cfg(&line.code) {
+            active = Some(depth_before);
+            entered = false;
+        }
+        if let Some(base) = active {
+            mask[i] = true;
+            if line.depth_after > base {
+                entered = true;
+            }
+            if entered && line.depth_after <= base {
+                active = None;
+            }
+        }
+        depth_before = line.depth_after;
+    }
+    mask
+}
+
+fn is_test_cfg(code: &str) -> bool {
+    let Some(at) = code.find("#[cfg(") else { return false };
+    let attr = &code[at..];
+    let mut search = attr;
+    while let Some(pos) = search.find("test") {
+        // `test` as its own cfg token, not a substring of e.g. `latest`.
+        let before = attr.len() - search.len() + pos;
+        let prev_ok = before == 0
+            || !attr[..before]
+                .chars()
+                .next_back()
+                .is_some_and(|c| c.is_alphanumeric() || c == '_');
+        let after = &search[pos + 4..];
+        let next_ok = !after.chars().next().is_some_and(|c| c.is_alphanumeric() || c == '_');
+        if prev_ok && next_ok && !attr[..before].ends_with("not(") {
+            return true;
+        }
+        search = &search[pos + 4..];
+    }
+    false
+}
+
+/// File-global scanner: split `text` into per-line code/comment parts
+/// and track brace depth, carrying string/char/comment state across
+/// newlines so multi-line literals and block comments can't confuse the
+/// rules.
+fn split_lines(text: &str) -> Vec<Line> {
+    #[derive(Clone, Copy, PartialEq)]
+    enum State {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+        Char,
+    }
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut depth = 0i32;
+    let mut state = State::Code;
+    let chars: Vec<char> = text.chars().collect();
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+                depth_after: depth,
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                match c {
+                    '/' if next == Some('/') => {
+                        state = State::LineComment;
+                        i += 2;
+                        continue;
+                    }
+                    '/' if next == Some('*') => {
+                        state = State::BlockComment(1);
+                        i += 2;
+                        continue;
+                    }
+                    '"' => {
+                        state = State::Str;
+                        code.push(c);
+                    }
+                    'r' | 'b'
+                        if is_raw_string_start(&chars, i)
+                            && (i == 0 || !is_ident(chars[i - 1])) =>
+                    {
+                        // Consume `r`/`br` + hashes + opening quote.
+                        let mut j = i + 1;
+                        if chars.get(i) == Some(&'b') {
+                            j += 1; // the `r` after `b`
+                        }
+                        let mut hashes = 0;
+                        while chars.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        for k in i..=j {
+                            code.push(chars[k]);
+                        }
+                        state = State::RawStr(hashes);
+                        i = j + 1;
+                        continue;
+                    }
+                    '\'' => {
+                        // Char literal vs lifetime: `'x'` / `'\n'` are
+                        // chars; `'a>` / `'static` are lifetimes.
+                        code.push(c);
+                        if next == Some('\\')
+                            || (next.is_some()
+                                && chars.get(i + 2) == Some(&'\'')
+                                && next != Some('\''))
+                        {
+                            state = State::Char;
+                        }
+                    }
+                    '{' => {
+                        depth += 1;
+                        code.push(c);
+                    }
+                    '}' => {
+                        depth -= 1;
+                        code.push(c);
+                    }
+                    _ => code.push(c),
+                }
+                i += 1;
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(n) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    state = if n == 1 { State::Code } else { State::BlockComment(n - 1) };
+                    comment.push_str("*/");
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(n + 1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                // Literal contents are masked (not pushed to `code`).
+                if c == '\\' {
+                    // Consume the escaped char — except a line
+                    // continuation's newline, which the top-of-loop
+                    // handler must still see to keep line counts true.
+                    if let Some(&esc) = chars.get(i + 1) {
+                        if esc != '\n' {
+                            i += 1;
+                        }
+                    }
+                } else if c == '"' {
+                    code.push(c);
+                    state = State::Code;
+                }
+                i += 1;
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for k in 0..hashes as usize {
+                        if chars.get(i + 1 + k) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        code.push('"');
+                        for k in 0..hashes as usize {
+                            code.push(chars[i + 1 + k]);
+                        }
+                        i += hashes as usize;
+                        state = State::Code;
+                    }
+                }
+                i += 1;
+            }
+            State::Char => {
+                if c == '\\' {
+                    if chars.get(i + 1).is_some() {
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    code.push(c);
+                    state = State::Code;
+                }
+                i += 1;
+            }
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(Line { code, comment, depth_after: depth });
+    }
+    lines
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// At `chars[i]` (an `r` or `b`), does a raw string literal start?
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    let mut j = i + 1;
+    if chars.get(i) == Some(&'b') {
+        if chars.get(j) != Some(&'r') {
+            return false;
+        }
+        j += 1;
+    }
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}

@@ -506,6 +506,10 @@ fn cmd_stream_serve(
             std::thread::spawn(move || {
                 let mut last_seen = u64::MAX;
                 let mut queries = 0u64;
+                // ordering: SeqCst — simple stop flag on a cold loop
+                // (each iteration does a snapshot read); strongest
+                // ordering keeps the final query counts coherent with
+                // the drain that precedes the store. Not a hot path.
                 while !stop.load(Ordering::SeqCst) {
                     if let Some(snap) = handle.latest() {
                         queries += 1;
@@ -553,6 +557,7 @@ fn cmd_stream_serve(
         }
     }
     let last = service.drain()?;
+    // ordering: SeqCst — pairs with the readers' stop-flag load above.
     stop.store(true, Ordering::SeqCst);
     let mut total_queries = 0u64;
     for t in query_threads {

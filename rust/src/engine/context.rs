@@ -245,10 +245,16 @@ impl ClusterContext {
     }
 
     pub(crate) fn new_rdd_id(&self) -> RddId {
+        // ordering: SeqCst — id allocation is cold (once per RDD, not
+        // per record); uniqueness needs only RMW atomicity, but the
+        // total order also makes ids monotone across threads, which
+        // debug logs and trace timelines rely on when interleaving
+        // driver output. Not worth weakening.
         RddId(self.inner.next_rdd.fetch_add(1, Ordering::SeqCst))
     }
 
     pub(crate) fn new_shuffle_id(&self) -> ShuffleId {
+        // ordering: SeqCst — as `new_rdd_id`.
         ShuffleId(self.inner.next_shuffle.fetch_add(1, Ordering::SeqCst))
     }
 

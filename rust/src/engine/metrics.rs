@@ -132,6 +132,9 @@ impl MetricsRegistry {
 
     /// Allocate the next job id.
     pub fn next_job_id(&self) -> JobId {
+        // ordering: SeqCst — cold id allocation (once per job);
+        // uniqueness needs only RMW atomicity, the total order keeps
+        // job ids monotone across driver threads. Not worth weakening.
         JobId(self.next_job.fetch_add(1, Ordering::SeqCst))
     }
 

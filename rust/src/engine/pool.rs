@@ -15,15 +15,26 @@
 //! Shutdown is graceful: [`ThreadPool::shutdown`] (also run on drop)
 //! closes the submission side, lets the workers drain every job already
 //! queued, and joins them.
+//!
+//! The submission queue is a hand-rolled `Mutex<VecDeque> + Condvar`
+//! (not an `mpsc` channel) built on [`crate::sync`], so the
+//! shutdown-vs-`execute` races are model-checked by loom
+//! (`tests/loom_models.rs`); the only channel left is the sequential
+//! result gather in [`ThreadPool::try_run_all`], which no model runs.
 
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex, OnceLock};
-use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
+use crate::sync::global::OnceLock;
+use crate::sync::thread::{Builder, JoinHandle};
+use crate::sync::{lock_unpoisoned, mpsc, Arc, Condvar, Mutex, PoisonError};
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// What `catch_unwind` hands back for a task: the value, or the panic
+/// payload.
+type TaskResult<T> = std::result::Result<T, Box<dyn std::any::Any + Send + 'static>>;
 
 /// Pool instrumentation cells, resolved once (see [`crate::obs`]).
 struct PoolObs {
@@ -39,22 +50,70 @@ fn pool_obs() -> &'static PoolObs {
     })
 }
 
+/// The submission queue, guarded by one mutex. `closed` is part of the
+/// same guarded state as `jobs` on purpose: a submitter observes
+/// "closed" and "queue contents" atomically, so a job is either rejected
+/// or guaranteed to be drained — never silently dropped in between.
+struct Queue {
+    jobs: VecDeque<Job>,
+    /// Set by [`ThreadPool::shutdown`]. Workers drain `jobs` first and
+    /// only exit on `closed && empty`.
+    closed: bool,
+}
+
+/// State shared between the pool handle and its workers.
+struct PoolShared {
+    queue: Mutex<Queue>,
+    /// Signaled on every submit (one waiter) and on close (all).
+    work: Condvar,
+}
+
 /// Fixed-size worker pool. The number of workers models the number of
 /// executor cores of the simulated cluster.
 pub struct ThreadPool {
-    /// `None` once the pool has been shut down; dropping the sender is
-    /// what tells the workers (after draining the queue) to exit.
-    sender: Option<Sender<Job>>,
+    shared: Arc<PoolShared>,
     workers: Vec<JoinHandle<()>>,
     size: usize,
 }
 
 impl std::fmt::Debug for ThreadPool {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let shut_down = lock_unpoisoned(&self.shared.queue).closed;
         f.debug_struct("ThreadPool")
             .field("size", &self.size)
-            .field("shut_down", &self.sender.is_none())
+            .field("shut_down", &shut_down)
             .finish()
+    }
+}
+
+/// One worker: pop-and-run until the queue is closed *and* drained.
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let job = {
+            let mut q = lock_unpoisoned(&shared.queue);
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.closed {
+                    return;
+                }
+                // The wait atomically releases and reacquires the queue
+                // lock; poisoning is recovered for the same reason as
+                // in `lock_unpoisoned` (a sibling's panic is reported
+                // through the scheduler, not by cascading here).
+                q = shared.work.wait(q).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        if crate::obs::enabled() {
+            let o = pool_obs();
+            o.queue_depth.add(-1);
+            o.tasks_run.incr(1);
+        }
+        // A panicking fire-and-forget job must not take the worker down
+        // with it (run_all additionally reports the panic to the
+        // driver).
+        let _ = catch_unwind(AssertUnwindSafe(job));
     }
 }
 
@@ -62,43 +121,21 @@ impl ThreadPool {
     /// Spawn a pool with `size` workers (`size >= 1`).
     pub fn new(size: usize) -> Self {
         let size = size.max(1);
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), closed: false }),
+            work: Condvar::new(),
+        });
         let mut workers = Vec::with_capacity(size);
         for i in 0..size {
-            let rx = Arc::clone(&rx);
+            let shared = Arc::clone(&shared);
             workers.push(
-                std::thread::Builder::new()
+                Builder::new()
                     .name(format!("executor-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            // Hold the lock only while receiving. A
-                            // poisoned mutex means a sibling worker died
-                            // mid-receive; exit cleanly instead of
-                            // cascading the panic.
-                            let Ok(guard) = rx.lock() else { break };
-                            // A closed channel (pool shut down) still
-                            // yields every queued job before Err, so
-                            // pending work drains.
-                            match guard.recv() {
-                                Ok(job) => job,
-                                Err(_) => break,
-                            }
-                        };
-                        if crate::obs::enabled() {
-                            let o = pool_obs();
-                            o.queue_depth.add(-1);
-                            o.tasks_run.incr(1);
-                        }
-                        // A panicking fire-and-forget job must not take
-                        // the worker down with it (run_all additionally
-                        // reports the panic to the driver).
-                        let _ = catch_unwind(AssertUnwindSafe(job));
-                    })
+                    .spawn(move || worker_loop(&shared))
                     .expect("spawn executor thread"),
             );
         }
-        ThreadPool { sender: Some(tx), workers, size }
+        ThreadPool { shared, workers, size }
     }
 
     /// Number of worker threads.
@@ -109,13 +146,16 @@ impl ThreadPool {
     /// Submit a fire-and-forget job. Errors (instead of panicking) when
     /// the pool has been shut down.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<()> {
-        let sender = self
-            .sender
-            .as_ref()
-            .ok_or_else(|| Error::engine("thread pool has shut down"))?;
-        sender
-            .send(Box::new(f))
-            .map_err(|_| Error::engine("thread pool has shut down"))?;
+        {
+            let mut q = lock_unpoisoned(&self.shared.queue);
+            if q.closed {
+                return Err(Error::engine("thread pool has shut down"));
+            }
+            q.jobs.push_back(Box::new(f));
+        }
+        // Outside the lock: the woken worker would otherwise block
+        // straight back on the queue mutex we still hold.
+        self.shared.work.notify_one();
         if crate::obs::enabled() {
             pool_obs().queue_depth.add(1);
         }
@@ -138,7 +178,7 @@ impl ThreadPool {
         if n == 0 {
             return Ok(Vec::new());
         }
-        let (tx, rx) = channel::<(usize, std::thread::Result<T>)>();
+        let (tx, rx) = mpsc::channel::<(usize, TaskResult<T>)>();
         for (i, task) in tasks.into_iter().enumerate() {
             let tx = tx.clone();
             self.execute(move || {
@@ -182,16 +222,28 @@ impl ThreadPool {
         Ok(out)
     }
 
+    /// Close the submission side without joining the workers — the
+    /// first half of [`ThreadPool::shutdown`]. Needs only `&self`, so a
+    /// driver holding the pool in an `Arc` can race it against
+    /// [`ThreadPool::execute`] from other threads: because `closed`
+    /// lives under the same mutex as the queue, every job is either
+    /// rejected or guaranteed to drain (model-checked in
+    /// `loom_pool_execute_vs_close_job_runs_iff_accepted`).
+    pub fn close(&self) {
+        lock_unpoisoned(&self.shared.queue).closed = true;
+        // Every worker must wake: those idle on the condvar see
+        // `closed` and exit; those mid-job finish, drain what is left,
+        // then exit.
+        self.shared.work.notify_all();
+    }
+
     /// Graceful shutdown: stop accepting jobs, let the workers drain
     /// everything already queued, and join them. Idempotent; also run on
     /// drop. After shutdown, [`ThreadPool::execute`] and
     /// [`ThreadPool::run_all`] return `Error::Engine` instead of
     /// panicking.
     pub fn shutdown(&mut self) {
-        // Dropping the only sender closes the channel; recv() keeps
-        // returning queued jobs until the queue is empty, then errors —
-        // exactly the drain-then-stop we want.
-        self.sender.take();
+        self.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -217,9 +269,13 @@ impl Drop for ThreadPool {
     }
 }
 
-#[cfg(test)]
+// Not compiled under `cfg(loom)`: these tests sleep and hammer; the
+// model-checked coverage of the shutdown/execute races lives in
+// `tests/loom_models.rs`.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
+    use std::panic::panic_any;
     use std::sync::atomic::{AtomicU64, Ordering};
     use std::time::Duration;
 
@@ -350,5 +406,35 @@ mod tests {
         }
         pool.shutdown();
         assert_eq!(counter.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn debug_reflects_shutdown_state() {
+        let mut pool = ThreadPool::new(2);
+        assert!(format!("{pool:?}").contains("shut_down: false"));
+        pool.shutdown();
+        assert!(format!("{pool:?}").contains("shut_down: true"));
+    }
+
+    #[test]
+    fn panic_message_extracts_str_and_string_payloads() {
+        assert_eq!(panic_message(Box::new("static str")), "static str");
+        assert_eq!(panic_message(Box::new(String::from("owned message"))), "owned message");
+    }
+
+    #[test]
+    fn panic_message_non_string_payloads_fall_back() {
+        // `panic_any` carries arbitrary payloads; they must degrade to
+        // the sentinel, not crash the reporter.
+        let payload = catch_unwind(|| panic_any(42u32)).unwrap_err();
+        assert_eq!(panic_message(payload), "<non-string panic>");
+        let payload = catch_unwind(|| panic_any(vec![1u8, 2])).unwrap_err();
+        assert_eq!(panic_message(payload), "<non-string panic>");
+        // While `&str`/`String` payloads thrown through `panic_any`
+        // still come out verbatim.
+        let payload = catch_unwind(|| panic_any("typed str")).unwrap_err();
+        assert_eq!(panic_message(payload), "typed str");
+        let payload = catch_unwind(|| panic_any(String::from("typed string"))).unwrap_err();
+        assert_eq!(panic_message(payload), "typed string");
     }
 }

@@ -12,6 +12,8 @@
 
 use std::sync::{Arc, Mutex};
 
+use crate::sync::global::lock_unpoisoned;
+
 /// Read-only value shared with every task.
 #[derive(Debug)]
 pub struct Broadcast<T: Send + Sync + 'static> {
@@ -58,8 +60,16 @@ impl<T: Send + 'static> Accumulator<T> {
     }
 
     /// Merge a local contribution into the shared state.
+    ///
+    /// Poison-tolerant: a user `merge` that panics poisons the mutex,
+    /// but that task's failure is already reported through the
+    /// scheduler; other tasks keep accumulating. The contribution whose
+    /// merge panicked is (partially or wholly) lost — acceptable,
+    /// because the scheduler fails the whole job on a panicked task
+    /// anyway, so a poisoned accumulator is only ever read on an
+    /// already-failed path.
     pub fn add(&self, local: T) {
-        let mut guard = self.state.lock().unwrap();
+        let mut guard = lock_unpoisoned(&self.state);
         (self.merge)(&mut guard, local);
     }
 
@@ -68,19 +78,19 @@ impl<T: Send + 'static> Accumulator<T> {
     where
         T: Clone,
     {
-        self.state.lock().unwrap().clone()
+        lock_unpoisoned(&self.state).clone()
     }
 
     /// Run a closure against the accumulated state without cloning it out
     /// (for large values like the triangular matrix).
     pub fn with_value<R>(&self, f: impl FnOnce(&T) -> R) -> R {
-        f(&self.state.lock().unwrap())
+        f(&lock_unpoisoned(&self.state))
     }
 
     /// Extract the accumulated state, leaving `replacement` behind. Avoids
     /// cloning multi-megabyte matrices on the driver path.
     pub fn take(&self, replacement: T) -> T {
-        std::mem::replace(&mut self.state.lock().unwrap(), replacement)
+        std::mem::replace(&mut lock_unpoisoned(&self.state), replacement)
     }
 }
 
@@ -153,5 +163,25 @@ mod tests {
         acc.add(3);
         assert_eq!(acc.take(0), 3);
         assert_eq!(acc.value(), 0);
+    }
+
+    #[test]
+    fn poisoned_accumulator_stays_readable() {
+        // A merge closure that panics poisons the mutex through the
+        // public API; lock_unpoisoned must keep the accumulator usable
+        // for every later add/read instead of cascading the panic.
+        let acc: Accumulator<u64> = Accumulator::new(0, |a, b| {
+            assert!(b != 13, "injected merge panic");
+            *a += b;
+        });
+        acc.add(5);
+        let poisoner = acc.clone();
+        let res = std::thread::spawn(move || poisoner.add(13)).join();
+        assert!(res.is_err(), "merge panic must propagate to the task");
+        // State before the panicking merge mutated anything survives.
+        assert_eq!(acc.value(), 5);
+        acc.add(2);
+        assert_eq!(acc.value(), 7);
+        assert_eq!(acc.take(0), 7);
     }
 }

@@ -9,22 +9,16 @@
 
 use std::any::Any;
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{OnceLock, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
 
 use crate::error::{Error, Result};
-
-/// Poison-tolerant read lock: a panicked executor must not cascade into
-/// every other task that touches the store (the data is still
-/// consistent — buckets are only ever inserted or removed whole).
-fn read<T>(lock: &RwLock<T>) -> RwLockReadGuard<'_, T> {
-    lock.read().unwrap_or_else(PoisonError::into_inner)
-}
-
-/// Poison-tolerant write lock; see [`read`].
-fn write<T>(lock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
-    lock.write().unwrap_or_else(PoisonError::into_inner)
-}
+// Poison-tolerant locking (a panicked executor must not cascade into
+// every other task touching the store — buckets are only ever inserted
+// or removed whole) now comes from the canonical `crate::sync` helpers;
+// building on the shim also makes the store loom-modelable
+// (tests/loom_models.rs).
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::global::OnceLock;
+use crate::sync::{read_unpoisoned as read, write_unpoisoned as write, RwLock};
 
 /// Shuffle instrumentation cells, resolved once (see [`crate::obs`]).
 struct ShuffleObs {
@@ -50,12 +44,24 @@ type Bucket = Box<dyn Any + Send + Sync>;
 
 /// In-memory map-output store: `(shuffle, map task, reduce partition) →
 /// bucket`.
-#[derive(Default)]
 pub struct ShuffleStore {
     buckets: RwLock<HashMap<(ShuffleId, usize, usize), Bucket>>,
     materialized: RwLock<HashSet<ShuffleId>>,
     bytes_approx: AtomicU64,
     records: AtomicU64,
+}
+
+// Manual (not derived) so it only needs `new()` on the shimmed types —
+// loom's primitives do not all implement `Default`.
+impl Default for ShuffleStore {
+    fn default() -> Self {
+        ShuffleStore {
+            buckets: RwLock::new(HashMap::new()),
+            materialized: RwLock::new(HashSet::new()),
+            bytes_approx: AtomicU64::new(0),
+            records: AtomicU64::new(0),
+        }
+    }
 }
 
 impl ShuffleStore {
@@ -72,7 +78,12 @@ impl ShuffleStore {
         reduce: usize,
         data: Vec<T>,
     ) {
+        // ordering: Relaxed — traffic counters are independent tallies;
+        // RMW atomicity alone keeps the totals exact (loom-checked in
+        // loom_shuffle_concurrent_puts_*), and readers of the buckets
+        // synchronize through the RwLock, not these cells.
         self.records.fetch_add(data.len() as u64, Ordering::Relaxed);
+        // ordering: Relaxed — as above.
         self.bytes_approx
             .fetch_add((data.len() * std::mem::size_of::<T>()) as u64, Ordering::Relaxed);
         if crate::obs::enabled() {
@@ -140,6 +151,7 @@ impl ShuffleStore {
 
     /// (records shuffled, approximate payload bytes) — feeds metrics.
     pub fn traffic(&self) -> (u64, u64) {
+        // ordering: Relaxed — monitoring reads of independent tallies.
         (self.records.load(Ordering::Relaxed), self.bytes_approx.load(Ordering::Relaxed))
     }
 
@@ -154,7 +166,9 @@ impl ShuffleStore {
     }
 }
 
-#[cfg(test)]
+// Not compiled under `cfg(loom)`; the concurrent coverage lives in
+// `tests/loom_models.rs`.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 

@@ -58,10 +58,15 @@ impl CacheStore {
                 let v = b
                     .downcast_ref::<Vec<T>>()
                     .expect("cache type mismatch: same RDD id stored with two types");
+                // ordering: Relaxed — hit/miss tallies are independent
+                // monitoring counters; RMW atomicity keeps them exact,
+                // and nothing is published through them (the blocks
+                // themselves synchronize via the RwLock).
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(v.clone())
             }
             None => {
+                // ordering: Relaxed — as above.
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
@@ -103,6 +108,7 @@ impl CacheStore {
 
     /// (hits, misses) counters.
     pub fn counters(&self) -> (u64, u64) {
+        // ordering: Relaxed — monitoring reads of independent tallies.
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
     }
 }

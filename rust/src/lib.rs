@@ -34,7 +34,11 @@
 //! a lock-free-read snapshot serving layer). [`obs`] is the
 //! observability spine: a lock-free metrics registry, RAII span tracing
 //! across every layer, and a Chrome-trace exporter (`repro ... --trace
-//! out.trace.json`, load in Perfetto).
+//! out.trace.json`, load in Perfetto). [`sync`] is the loom-aware
+//! synchronization shim every hand-rolled concurrent structure is built
+//! on; together with the loom model suite, the Miri/TSan CI jobs and
+//! the crate lint (`cargo run --bin lint`) it forms the concurrency
+//! correctness layer (see README "Correctness tooling").
 //!
 //! ## Quickstart
 //!
@@ -88,6 +92,7 @@ pub mod fim;
 pub mod obs;
 pub mod runtime;
 pub mod stream;
+pub mod sync;
 pub mod util;
 
 /// Convenience re-exports for the common API surface.

@@ -65,11 +65,17 @@ static ENABLED: AtomicBool = AtomicBool::new(false);
 /// the check every instrumentation site makes first).
 #[inline]
 pub fn enabled() -> bool {
+    // ordering: Relaxed — the flag only gates *whether* events are
+    // recorded; a site observing a stale value merely records (or
+    // skips) one extra event, it never corrupts state. Nothing is
+    // published through this cell.
     ENABLED.load(Ordering::Relaxed)
 }
 
 /// Turn observability recording on or off process-wide. The CLI flips
 /// this on for `--trace` and `--stats-every` runs.
 pub fn set_enabled(on: bool) {
+    // ordering: Relaxed — see `enabled`: the flip need not synchronize
+    // with in-flight recording.
     ENABLED.store(on, Ordering::Relaxed);
 }

@@ -7,37 +7,68 @@
 //! locks and no allocation. Snapshots ([`snapshot`]) walk the maps and
 //! produce a flat [`MetricsSnapshot`] that serializes through
 //! [`crate::util::json`] for `BENCH_*.json` rows and CLI digests.
+//!
+//! The metric cells build on [`crate::sync`], so the relaxed-ordering
+//! claims (exact counter totals, monotone gauge high-water marks, exact
+//! histogram counts) are model-checked by loom (`tests/loom_models.rs`).
+//! The registration maps themselves stay on the std-only
+//! [`crate::sync::global`] plane: loom types cannot live in statics, and
+//! registration is mutex-serialized bookkeeping, not a lock-free
+//! protocol.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::Mutex;
 
+use crate::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use crate::sync::{fetch_max_i64, fetch_max_u64, global};
 use crate::util::json::json_str;
 
 /// Monotonic event counter. `incr` is a single relaxed `fetch_add`.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Counter(AtomicU64);
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
 
 impl Counter {
     /// New counter at zero (const — usable in statics).
+    #[cfg(not(loom))]
     pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// New counter at zero. (Non-const under `cfg(loom)`: loom atomics
+    /// cannot be const-constructed; models build cells at runtime.)
+    #[cfg(loom)]
+    pub fn new() -> Counter {
         Counter(AtomicU64::new(0))
     }
 
     /// Add `n` (relaxed).
     #[inline]
     pub fn incr(&self, n: u64) {
+        // ordering: Relaxed — an independent event count: the RMW's
+        // atomicity alone makes the total exact (loom-checked in
+        // loom_counter_concurrent_increments_exact), and no other
+        // memory is published through this cell.
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Current value.
     #[inline]
     pub fn get(&self) -> u64 {
+        // ordering: Relaxed — monitoring read; bounded staleness is
+        // fine, exactness comes from the RMW increments.
         self.0.load(Ordering::Relaxed)
     }
 
     /// Reset to zero (between benchmark repetitions).
     pub fn reset(&self) {
+        // ordering: Relaxed — reset happens at external sync points
+        // (benchmark repetition boundaries), not concurrently with
+        // recording that must be kept.
         self.0.store(0, Ordering::Relaxed);
     }
 }
@@ -46,47 +77,73 @@ impl Counter {
 ///
 /// `add`/`set` update the level and fold the new level into the
 /// high-water mark, both with relaxed atomics.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Gauge {
     value: AtomicI64,
     high_water: AtomicI64,
 }
 
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
 impl Gauge {
     /// New gauge at zero (const — usable in statics).
+    #[cfg(not(loom))]
     pub const fn new() -> Gauge {
+        Gauge { value: AtomicI64::new(0), high_water: AtomicI64::new(0) }
+    }
+
+    /// New gauge at zero. (Non-const under `cfg(loom)`; see
+    /// [`Counter::new`].)
+    #[cfg(loom)]
+    pub fn new() -> Gauge {
         Gauge { value: AtomicI64::new(0), high_water: AtomicI64::new(0) }
     }
 
     /// Add `delta` (may be negative) and update the high-water mark.
     #[inline]
     pub fn add(&self, delta: i64) {
+        // ordering: Relaxed — the RMW return value gives this thread's
+        // exact post-add level; no cross-cell ordering is implied.
         let now = self.value.fetch_add(delta, Ordering::Relaxed) + delta;
-        self.high_water.fetch_max(now, Ordering::Relaxed);
+        // ordering: Relaxed — max-folding is commutative and monotone,
+        // so any interleaving yields the true high-water mark
+        // (loom-checked in loom_gauge_high_water_is_monotone_max).
+        fetch_max_i64(&self.high_water, now, Ordering::Relaxed);
     }
 
     /// Set the level and update the high-water mark.
     #[inline]
     pub fn set(&self, v: i64) {
+        // ordering: Relaxed — last-writer-wins level; `set` races are
+        // meaningless for a sampled gauge.
         self.value.store(v, Ordering::Relaxed);
-        self.high_water.fetch_max(v, Ordering::Relaxed);
+        // ordering: Relaxed — see `add`: max-folding is order-free.
+        fetch_max_i64(&self.high_water, v, Ordering::Relaxed);
     }
 
     /// Current level.
     #[inline]
     pub fn get(&self) -> i64 {
+        // ordering: Relaxed — monitoring read.
         self.value.load(Ordering::Relaxed)
     }
 
     /// Highest level ever observed.
     #[inline]
     pub fn high_water(&self) -> i64 {
+        // ordering: Relaxed — monitoring read of a monotone cell.
         self.high_water.load(Ordering::Relaxed)
     }
 
     /// Reset level and high-water mark to zero.
     pub fn reset(&self) {
+        // ordering: Relaxed — external sync point; see `Counter::reset`.
         self.value.store(0, Ordering::Relaxed);
+        // ordering: Relaxed — as above.
         self.high_water.store(0, Ordering::Relaxed);
     }
 }
@@ -131,6 +188,7 @@ fn bucket_upper(b: usize) -> u64 {
 
 impl Histogram {
     /// New empty histogram (const — usable in statics).
+    #[cfg(not(loom))]
     pub const fn new() -> Histogram {
         const Z: AtomicU64 = AtomicU64::new(0);
         Histogram {
@@ -141,27 +199,49 @@ impl Histogram {
         }
     }
 
+    /// New empty histogram. (Non-const under `cfg(loom)`; see
+    /// [`Counter::new`].)
+    #[cfg(loom)]
+    pub fn new() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
     /// Record one observation.
     #[inline]
     pub fn record(&self, v: u64) {
+        // ordering: Relaxed — per-cell RMW exactness is all the
+        // histogram claims; `count`/`sum`/`buckets` are not read as a
+        // consistent triple mid-flight, only after recorders quiesce
+        // (loom-checked in loom_histogram_concurrent_records_exact).
         self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        // ordering: Relaxed — as above.
         self.count.fetch_add(1, Ordering::Relaxed);
+        // ordering: Relaxed — as above.
         self.sum.fetch_add(v, Ordering::Relaxed);
-        self.max.fetch_max(v, Ordering::Relaxed);
+        // ordering: Relaxed — max-folding is order-free; see `Gauge::add`.
+        fetch_max_u64(&self.max, v, Ordering::Relaxed);
     }
 
     /// Number of observations.
     pub fn count(&self) -> u64 {
+        // ordering: Relaxed — monitoring read.
         self.count.load(Ordering::Relaxed)
     }
 
     /// Exact sum of observations.
     pub fn sum(&self) -> u64 {
+        // ordering: Relaxed — monitoring read.
         self.sum.load(Ordering::Relaxed)
     }
 
     /// Exact maximum observation (0 when empty).
     pub fn max(&self) -> u64 {
+        // ordering: Relaxed — monitoring read of a monotone cell.
         self.max.load(Ordering::Relaxed)
     }
 
@@ -175,6 +255,8 @@ impl Histogram {
         let target = ((q * total as f64).ceil() as u64).clamp(1, total);
         let mut cum = 0u64;
         for (b, slot) in self.buckets.iter().enumerate() {
+            // ordering: Relaxed — quantiles over a live histogram are
+            // approximate by contract; each bucket read is itself exact.
             cum += slot.load(Ordering::Relaxed);
             if cum >= target {
                 return bucket_upper(b);
@@ -199,10 +281,14 @@ impl Histogram {
 
     /// Clear all buckets and totals.
     pub fn reset(&self) {
+        // ordering: Relaxed — external sync point; see `Counter::reset`.
         self.count.store(0, Ordering::Relaxed);
+        // ordering: Relaxed — as above.
         self.sum.store(0, Ordering::Relaxed);
+        // ordering: Relaxed — as above.
         self.max.store(0, Ordering::Relaxed);
         for b in &self.buckets {
+            // ordering: Relaxed — as above.
             b.store(0, Ordering::Relaxed);
         }
     }
@@ -225,43 +311,47 @@ pub struct HistogramSummary {
     pub max: u64,
 }
 
-// Global registration maps. `Mutex<BTreeMap>` is const-constructible, so
-// no lazy-init machinery is needed; deterministic iteration order keeps
-// snapshots stable.
-static COUNTERS: Mutex<BTreeMap<&'static str, &'static Counter>> = Mutex::new(BTreeMap::new());
-static GAUGES: Mutex<BTreeMap<&'static str, &'static Gauge>> = Mutex::new(BTreeMap::new());
-static HISTOGRAMS: Mutex<BTreeMap<&'static str, &'static Histogram>> = Mutex::new(BTreeMap::new());
+// Global registration maps, on the std-only `sync::global` plane (loom
+// types cannot live in statics). `Mutex<BTreeMap>` is
+// const-constructible, so no lazy-init machinery is needed;
+// deterministic iteration order keeps snapshots stable.
+static COUNTERS: global::Mutex<BTreeMap<&'static str, &'static Counter>> =
+    global::Mutex::new(BTreeMap::new());
+static GAUGES: global::Mutex<BTreeMap<&'static str, &'static Gauge>> =
+    global::Mutex::new(BTreeMap::new());
+static HISTOGRAMS: global::Mutex<BTreeMap<&'static str, &'static Histogram>> =
+    global::Mutex::new(BTreeMap::new());
 
 /// Look up (or register) the counter named `name`. The returned
 /// reference is `'static`; call sites cache it (typically in a
 /// `OnceLock`) so the map lookup happens once, not per record.
 pub fn counter(name: &'static str) -> &'static Counter {
-    let mut map = COUNTERS.lock().unwrap();
+    let mut map = global::lock_unpoisoned(&COUNTERS);
     *map.entry(name).or_insert_with(|| Box::leak(Box::new(Counter::new())))
 }
 
 /// Look up (or register) the gauge named `name`.
 pub fn gauge(name: &'static str) -> &'static Gauge {
-    let mut map = GAUGES.lock().unwrap();
+    let mut map = global::lock_unpoisoned(&GAUGES);
     *map.entry(name).or_insert_with(|| Box::leak(Box::new(Gauge::new())))
 }
 
 /// Look up (or register) the histogram named `name`.
 pub fn histogram(name: &'static str) -> &'static Histogram {
-    let mut map = HISTOGRAMS.lock().unwrap();
+    let mut map = global::lock_unpoisoned(&HISTOGRAMS);
     *map.entry(name).or_insert_with(|| Box::leak(Box::new(Histogram::new())))
 }
 
 /// Zero every registered metric (between benchmark repetitions; the
 /// registrations themselves persist).
 pub fn reset_metrics() {
-    for c in COUNTERS.lock().unwrap().values() {
+    for c in global::lock_unpoisoned(&COUNTERS).values() {
         c.reset();
     }
-    for g in GAUGES.lock().unwrap().values() {
+    for g in global::lock_unpoisoned(&GAUGES).values() {
         g.reset();
     }
-    for h in HISTOGRAMS.lock().unwrap().values() {
+    for h in global::lock_unpoisoned(&HISTOGRAMS).values() {
         h.reset();
     }
 }
@@ -279,21 +369,15 @@ pub struct MetricsSnapshot {
 
 /// Snapshot every registered metric.
 pub fn snapshot() -> MetricsSnapshot {
-    let counters = COUNTERS
-        .lock()
-        .unwrap()
+    let counters = global::lock_unpoisoned(&COUNTERS)
         .iter()
         .map(|(name, c)| (name.to_string(), c.get()))
         .collect();
-    let gauges = GAUGES
-        .lock()
-        .unwrap()
+    let gauges = global::lock_unpoisoned(&GAUGES)
         .iter()
         .map(|(name, g)| (name.to_string(), g.get(), g.high_water()))
         .collect();
-    let histograms = HISTOGRAMS
-        .lock()
-        .unwrap()
+    let histograms = global::lock_unpoisoned(&HISTOGRAMS)
         .iter()
         .map(|(name, h)| (name.to_string(), h.summary()))
         .collect();
@@ -366,19 +450,25 @@ impl MetricsSnapshot {
     }
 }
 
-#[cfg(test)]
+// Not compiled under `cfg(loom)`: the hammer versions of these
+// invariants live in `tests/loom_models.rs` as exhaustive models.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use std::sync::Arc;
 
     #[test]
     fn counter_concurrent_totals_exact() {
+        // Miri explores this with a slow interpreter; shrink the load
+        // there (loom proves the same invariant exhaustively).
+        const THREADS: u64 = if cfg!(miri) { 2 } else { 8 };
+        const PER: u64 = if cfg!(miri) { 500 } else { 10_000 };
         let c = Arc::new(Counter::new());
-        let threads: Vec<_> = (0..8)
+        let threads: Vec<_> = (0..THREADS)
             .map(|_| {
                 let c = Arc::clone(&c);
                 std::thread::spawn(move || {
-                    for _ in 0..10_000 {
+                    for _ in 0..PER {
                         c.incr(1);
                     }
                 })
@@ -387,18 +477,20 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
-        assert_eq!(c.get(), 80_000);
+        assert_eq!(c.get(), THREADS * PER);
     }
 
     #[test]
     fn histogram_concurrent_totals_exact() {
+        const THREADS: u64 = if cfg!(miri) { 2 } else { 4 };
+        const PER: u64 = if cfg!(miri) { 500 } else { 5_000 };
         let h = Arc::new(Histogram::new());
-        let threads: Vec<_> = (0..4)
+        let threads: Vec<_> = (0..THREADS)
             .map(|t| {
                 let h = Arc::clone(&h);
                 std::thread::spawn(move || {
-                    for i in 0..5_000u64 {
-                        h.record(t * 5_000 + i);
+                    for i in 0..PER {
+                        h.record(t * PER + i);
                     }
                 })
             })
@@ -406,10 +498,10 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
-        assert_eq!(h.count(), 20_000);
-        // Sum of 0..20000 regardless of interleaving.
-        assert_eq!(h.sum(), (0..20_000u64).sum::<u64>());
-        assert_eq!(h.max(), 19_999);
+        assert_eq!(h.count(), THREADS * PER);
+        // Sum of 0..THREADS*PER regardless of interleaving.
+        assert_eq!(h.sum(), (0..THREADS * PER).sum::<u64>());
+        assert_eq!(h.max(), THREADS * PER - 1);
     }
 
     #[test]

@@ -15,9 +15,12 @@
 //! overwritten ones in `dropped`, so long `--serve` runs stay bounded.
 
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicU32, Ordering};
-use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
+
+// Process-wide statics live on the std-only `sync::global` plane (loom
+// types cannot live in statics); the `EventRing` itself is modeled by
+// loom in `loom_tests` below, constructed inside the model.
+use crate::sync::global::{lock_unpoisoned, AtomicU32, Mutex, OnceLock, Ordering};
 
 /// Default event-ring capacity (latest events kept).
 pub const DEFAULT_EVENT_CAPACITY: usize = 65_536;
@@ -119,12 +122,16 @@ pub fn current_tid() -> u32 {
         if let Some(tid) = *slot {
             return tid;
         }
+        // ordering: Relaxed — uniqueness comes from the RMW atomicity
+        // of fetch_add alone; no other memory is published through it.
         let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        // Name capture is registration-plane code (std thread API;
+        // allowlisted for the `shim-imports` lint rule).
         let name = std::thread::current()
             .name()
             .map(str::to_string)
             .unwrap_or_else(|| format!("thread-{tid}"));
-        THREAD_NAMES.lock().unwrap().push((tid, name));
+        lock_unpoisoned(&THREAD_NAMES).push((tid, name));
         *slot = Some(tid);
         tid
     })
@@ -132,7 +139,7 @@ pub fn current_tid() -> u32 {
 
 /// `(tid, name)` for every thread that has recorded an event.
 pub fn thread_names() -> Vec<(u32, String)> {
-    THREAD_NAMES.lock().unwrap().clone()
+    lock_unpoisoned(&THREAD_NAMES).clone()
 }
 
 /// Current nesting depth of the calling thread's span stack.
@@ -193,7 +200,7 @@ impl Drop for SpanGuard {
             args: std::mem::take(&mut self.args),
             kind: EventKind::Span,
         };
-        EVENTS.lock().unwrap().push(event);
+        lock_unpoisoned(&EVENTS).push(event);
     }
 }
 
@@ -212,7 +219,7 @@ pub fn instant(name: &'static str) {
         args: Vec::new(),
         kind: EventKind::Instant,
     };
-    EVENTS.lock().unwrap().push(event);
+    lock_unpoisoned(&EVENTS).push(event);
 }
 
 /// Record an externally timed span (used to re-emit the engine's
@@ -235,35 +242,37 @@ pub fn record_span(
         args,
         kind: EventKind::Span,
     };
-    EVENTS.lock().unwrap().push(event);
+    lock_unpoisoned(&EVENTS).push(event);
 }
 
 /// Chronological snapshot of the event ring plus the count of events
 /// overwritten after the ring filled.
 pub fn events() -> (Vec<SpanEvent>, u64) {
-    let ring = EVENTS.lock().unwrap();
+    let ring = lock_unpoisoned(&EVENTS);
     (ring.snapshot(), ring.dropped)
 }
 
 /// Clear the event ring (capacity and thread registrations persist).
 pub fn clear_events() {
-    EVENTS.lock().unwrap().clear();
+    lock_unpoisoned(&EVENTS).clear();
 }
 
 /// Resize the event ring (clears it). The default is
 /// [`DEFAULT_EVENT_CAPACITY`].
 pub fn set_event_capacity(cap: usize) {
-    let mut ring = EVENTS.lock().unwrap();
+    let mut ring = lock_unpoisoned(&EVENTS);
     ring.cap = cap.max(1);
     ring.clear();
 }
 
 /// Current event-ring capacity.
 pub fn event_capacity() -> usize {
-    EVENTS.lock().unwrap().cap
+    lock_unpoisoned(&EVENTS).cap
 }
 
-#[cfg(test)]
+// Not compiled under `cfg(loom)` (real threads and process-global
+// state); the concurrent-recorder coverage lives in `loom_tests`.
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
 
@@ -349,5 +358,58 @@ mod tests {
         let b = current_tid();
         assert_eq!(a, b);
         assert!(thread_names().iter().any(|(tid, _)| *tid == a));
+    }
+}
+
+/// Loom model of the `EventRing` under concurrent recorders: kept +
+/// dropped must account for every push, exactly, in every interleaving.
+/// Run with `RUSTFLAGS="--cfg loom" cargo test --lib loom_`.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::*;
+    use crate::sync::{thread, Arc, Mutex};
+
+    fn ev(i: u64) -> SpanEvent {
+        SpanEvent {
+            name: "t",
+            tid: 0,
+            start_us: i,
+            dur_us: 0,
+            depth: 0,
+            args: Vec::new(),
+            kind: EventKind::Span,
+        }
+    }
+
+    #[test]
+    fn loom_ring_wrap_vs_concurrent_recorders_dropped_exact() {
+        loom::model(|| {
+            // Capacity 2, 4 pushes from 2 threads: exactly 2 events kept
+            // and exactly 2 dropped, whatever the interleaving.
+            let ring = Arc::new(Mutex::new(EventRing {
+                buf: Vec::new(),
+                next: 0,
+                cap: 2,
+                dropped: 0,
+            }));
+            let recorders: Vec<_> = (0..2u64)
+                .map(|t| {
+                    let ring = Arc::clone(&ring);
+                    thread::spawn(move || {
+                        for i in 0..2u64 {
+                            ring.lock().unwrap().push(ev(t * 2 + i));
+                        }
+                    })
+                })
+                .collect();
+            for r in recorders {
+                r.join().unwrap();
+            }
+            let ring = ring.lock().unwrap();
+            assert_eq!(ring.dropped, 2, "4 pushes into a cap-2 ring drop exactly 2");
+            let snap = ring.snapshot();
+            assert_eq!(snap.len(), 2, "exactly `cap` latest events kept");
+            assert_eq!(ring.dropped + snap.len() as u64, 4, "every push accounted for");
+        });
     }
 }

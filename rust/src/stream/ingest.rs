@@ -278,6 +278,11 @@ impl StreamService {
         if crate::obs::enabled() {
             ingest_obs().queue_depth.set(pending as i64);
         }
+        // ordering: SeqCst — the lifetime counters are asserted against
+        // each other by tests and shutdown logic (e.g. retries vs
+        // failures), so they stay in one total order; they are cold
+        // (once per batch), so the strongest ordering costs nothing.
+        // Any weakening is gated on a green loom run (PR 9 note).
         self.shared.batches.fetch_add(1, Ordering::SeqCst);
         self.shared.work_cv.notify_one();
         if pending > self.shared.cap {
@@ -305,6 +310,10 @@ impl StreamService {
         let age = refreshed.elapsed();
         let shards = shards.into_iter().map(|s| ShardStats { age, ..s }).collect();
         IngestStats {
+            // ordering: SeqCst — read side of the lifetime counters; the
+            // single total order keeps cross-counter invariants
+            // (retries ≤ failures, degraded ⇔ streak > 0) observable
+            // exactly as the mining loop established them.
             batches: self.shared.batches.load(Ordering::SeqCst),
             emissions: self.shared.emissions.load(Ordering::SeqCst),
             skipped: self.shared.skipped.load(Ordering::SeqCst),
@@ -460,6 +469,8 @@ fn mining_loop(
                     if st.queue.len() > shared.cap {
                         st.unmined = true;
                         drop(st);
+                        // ordering: SeqCst — lifetime counter, see
+                        // `push_batch`.
                         shared.skipped.fetch_add(1, Ordering::SeqCst);
                         if crate::obs::enabled() {
                             ingest_obs().skipped.incr(1);
@@ -484,6 +495,10 @@ fn mining_loop(
             })) {
                 Ok(Ok(snap)) => {
                     publisher.publish(snap);
+                    // ordering: SeqCst — lifetime counters, see
+                    // `push_batch`; the streak reset must not be
+                    // reordered after a later failure's increment in
+                    // the total order `stats()` reads.
                     shared.emissions.fetch_add(1, Ordering::SeqCst);
                     shared.consecutive_failures.store(0, Ordering::SeqCst);
                     if crate::obs::enabled() {
@@ -522,6 +537,9 @@ fn mining_loop(
 /// store) and `unmined` is left set, so the loop's next pass re-mines
 /// the live window while readers keep the last good snapshot.
 fn note_mine_failure(miner: &mut StreamingMiner, shared: &Shared, msg: &str) -> Option<Error> {
+    // ordering: SeqCst — lifetime counters, see `push_batch`; keeping
+    // failures/retries/streak in one total order is what lets tests
+    // assert exact relationships between them.
     shared.mine_failures.fetch_add(1, Ordering::SeqCst);
     let streak = shared.consecutive_failures.fetch_add(1, Ordering::SeqCst) + 1;
     if crate::obs::enabled() {
@@ -532,6 +550,7 @@ fn note_mine_failure(miner: &mut StreamingMiner, shared: &Shared, msg: &str) -> 
             "{streak} consecutive emission failures, last: {msg}"
         )));
     }
+    // ordering: SeqCst — lifetime counter, see `push_batch`.
     shared.mine_retries.fetch_add(1, Ordering::SeqCst);
     if crate::obs::enabled() {
         ingest_obs().mine_retries.incr(1);
@@ -574,7 +593,10 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-#[cfg(test)]
+// Not compiled under `cfg(loom)`: these tests drive the real service
+// (timed snapshot waits such as `wait_for_batch_timeout` are
+// `cfg(not(loom))`-only).
+#[cfg(all(test, not(loom)))]
 mod tests {
     use super::*;
     use crate::algorithms::SeqEclat;

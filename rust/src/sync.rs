@@ -1,0 +1,289 @@
+//! Loom-aware synchronization shim — the crate's single doorway to
+//! `std::sync` / `std::thread` primitives.
+//!
+//! Every hand-rolled concurrent structure — the double-buffered snapshot
+//! cell in [`crate::stream::serve`], the metric cells in [`crate::obs`]
+//! (registry counters/gauges/histograms and the span `EventRing`), the
+//! executor queue in [`crate::engine::pool`], and the map-output store in
+//! [`crate::engine::shuffle`] — imports its primitives from here instead
+//! of from `std`. Under an ordinary build the re-exports *are* the `std`
+//! types (zero cost). Under `RUSTFLAGS="--cfg loom"` they become the
+//! [loom](https://docs.rs/loom) model checker's instrumented twins, and
+//! the model suite (`tests/loom_models.rs` plus the
+//! `#[cfg(all(loom, test))]` unit mods in `serve.rs` / `span.rs`)
+//! exhaustively explores the interleavings of those structures'
+//! protocols under the C11 memory model — including weak-memory
+//! reorderings that hammer tests on x86 can never exhibit.
+//!
+//! The crate lint (`cargo run --bin lint`, rule `shim-imports`) enforces
+//! that the shimmed modules never import `std::sync` / `std::thread`
+//! directly, so new concurrency added to those files stays
+//! loom-checkable by construction.
+//!
+//! ## What deliberately stays `std`: the [`global`] plane
+//!
+//! loom types cannot be constructed in `const` context and panic when
+//! touched outside `loom::model`, so the **registration plane** —
+//! process-wide statics such as the metric registration maps, the span
+//! event ring and thread-name table, and the trace epoch — keeps using
+//! `std` primitives via the [`global`] submodule. That plane is
+//! `Mutex`-serialized bookkeeping, not a lock-free protocol; the loom
+//! models instead construct the cells they check *inside* the model.
+//! The same reasoning covers [`mpsc`]: loom has no channel model, and
+//! the only channel left in the crate
+//! ([`crate::engine::pool::ThreadPool::try_run_all`]'s result gather) is
+//! sequential driver-side code.
+//!
+//! ## Poison recovery
+//!
+//! [`lock_unpoisoned`] / [`read_unpoisoned`] / [`write_unpoisoned`] are
+//! the canonical PR-8 poison-recovery helpers: a panicked task must not
+//! cascade into every other thread touching a shared structure whose
+//! data is still consistent (all guarded sections in this crate mutate
+//! whole entries, never leave partial states). The lint rule
+//! `bare-lock-unwrap` forbids `.lock().unwrap()` and friends outside
+//! these helpers so the recovery policy cannot silently regress.
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+// loom's lock APIs return the std poison types, so these are shared.
+pub use std::sync::{LockResult, PoisonError};
+
+/// Atomic types and [`Ordering`](atomic::Ordering). loom re-exports the
+/// std `Ordering` enum, so `Ordering` is the same type either way.
+pub mod atomic {
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// `UnsafeCell` with loom's closure-based access API.
+///
+/// loom's `UnsafeCell` only exposes `with` / `with_mut` (so the checker
+/// can observe every raw access and flag concurrent conflicting ones —
+/// this is exactly how the serve-layer models detect a torn snapshot).
+/// The std wrapper mirrors that shape at zero cost.
+pub mod cell {
+    #[cfg(loom)]
+    pub use loom::cell::UnsafeCell;
+
+    /// Mirror of `loom::cell::UnsafeCell` over `std::cell::UnsafeCell`.
+    #[cfg(not(loom))]
+    #[derive(Debug)]
+    pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+    #[cfg(not(loom))]
+    impl<T> UnsafeCell<T> {
+        /// Wrap a value.
+        pub const fn new(value: T) -> Self {
+            UnsafeCell(std::cell::UnsafeCell::new(value))
+        }
+
+        /// Run `f` with a raw const pointer to the contents. The caller
+        /// must uphold the aliasing rules exactly as with
+        /// `std::cell::UnsafeCell::get`.
+        #[inline]
+        pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Run `f` with a raw mut pointer to the contents. Same contract
+        /// as [`UnsafeCell::with`], plus exclusivity.
+        #[inline]
+        pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+    }
+}
+
+/// Spin-loop hint. Under loom a real spin would livelock the model (the
+/// checker controls scheduling), so it maps to `loom::thread::yield_now`,
+/// which also tells loom the thread cannot make progress alone.
+pub mod hint {
+    #[cfg(not(loom))]
+    pub use std::hint::spin_loop;
+
+    #[cfg(loom)]
+    pub fn spin_loop() {
+        loom::thread::yield_now();
+    }
+}
+
+/// Thread spawning for shimmed modules and loom models.
+pub mod thread {
+    #[cfg(loom)]
+    pub use loom::thread::{spawn, yield_now, Builder, JoinHandle};
+    #[cfg(not(loom))]
+    pub use std::thread::{spawn, yield_now, Builder, JoinHandle};
+}
+
+/// Channels stay `std` unconditionally: loom has no channel model, and
+/// the crate's only remaining channel use is sequential result
+/// gathering on the driver ([`crate::engine::pool::ThreadPool::try_run_all`]),
+/// which no loom model executes.
+pub mod mpsc {
+    pub use std::sync::mpsc::{channel, Receiver, Sender};
+}
+
+/// The registration plane: `std` primitives for process-wide statics.
+///
+/// loom types are not const-constructible and panic outside a model, so
+/// anything that must live in a `static` — metric registration maps,
+/// the span ring, the trace epoch — uses these instead of the shimmed
+/// types above. Code on this plane is plain mutex-serialized
+/// bookkeeping; the loom suite checks the *cells* (constructed inside
+/// models), not the registration maps.
+pub mod global {
+    pub use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+    pub use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+
+    /// Poison-tolerant lock for registration-plane statics; see
+    /// [`crate::sync::lock_unpoisoned`] for the policy.
+    pub fn lock_unpoisoned<T>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+        mutex.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// Poison-tolerant `Mutex::lock`: recover the guard from a poisoned
+/// mutex instead of propagating the sibling thread's panic. Appropriate
+/// whenever every guarded section keeps the data consistent (inserts /
+/// removes whole entries); the panic itself is reported through the
+/// scheduler's own channels, so re-throwing here would only cascade.
+pub fn lock_unpoisoned<T>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+    mutex.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-tolerant `RwLock::read`; see [`lock_unpoisoned`].
+pub fn read_unpoisoned<T>(lock: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    lock.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Poison-tolerant `RwLock::write`; see [`lock_unpoisoned`].
+pub fn write_unpoisoned<T>(lock: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    lock.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `fetch_max` on [`atomic::AtomicU64`]. Native under std; under loom it
+/// is emulated with a compare-exchange loop because loom does not model
+/// `fetch_max` directly. Callers pass the ordering they need for the
+/// *success* case; the emulation's failure reloads are `Relaxed`.
+#[inline]
+pub fn fetch_max_u64(cell: &atomic::AtomicU64, value: u64, order: atomic::Ordering) -> u64 {
+    #[cfg(not(loom))]
+    {
+        cell.fetch_max(value, order)
+    }
+    #[cfg(loom)]
+    {
+        // ordering: Relaxed — optimistic first read; the CAS below is
+        // what carries the caller's ordering.
+        let mut current = cell.load(atomic::Ordering::Relaxed);
+        loop {
+            if current >= value {
+                return current;
+            }
+            // ordering: Relaxed on failure — a failed CAS publishes
+            // nothing; success uses the caller's `order`.
+            match cell.compare_exchange(current, value, order, atomic::Ordering::Relaxed) {
+                Ok(previous) => return previous,
+                Err(previous) => current = previous,
+            }
+        }
+    }
+}
+
+/// `fetch_max` on [`atomic::AtomicI64`]; see [`fetch_max_u64`].
+#[inline]
+pub fn fetch_max_i64(cell: &atomic::AtomicI64, value: i64, order: atomic::Ordering) -> i64 {
+    #[cfg(not(loom))]
+    {
+        cell.fetch_max(value, order)
+    }
+    #[cfg(loom)]
+    {
+        // ordering: Relaxed — see `fetch_max_u64`.
+        let mut current = cell.load(atomic::Ordering::Relaxed);
+        loop {
+            if current >= value {
+                return current;
+            }
+            // ordering: Relaxed on failure — see `fetch_max_u64`.
+            match cell.compare_exchange(current, value, order, atomic::Ordering::Relaxed) {
+                Ok(previous) => return previous,
+                Err(previous) => current = previous,
+            }
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_holder_panics() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = catch_unwind(AssertUnwindSafe(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert!(m.lock().is_err(), "mutex must actually be poisoned");
+        // Round-trip: recover, mutate, recover again, observe.
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn rwlock_helpers_recover_after_writer_panics() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        std::thread::spawn(move || {
+            let _guard = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join()
+        .unwrap_err();
+        assert!(l.read().is_err(), "rwlock must actually be poisoned");
+        assert_eq!(read_unpoisoned(&l).len(), 3);
+        write_unpoisoned(&l).push(4);
+        assert_eq!(*read_unpoisoned(&l), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn global_lock_unpoisoned_recovers() {
+        static CELL: global::Mutex<u32> = global::Mutex::new(1);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = CELL.lock().unwrap();
+            panic!("poison it");
+        }));
+        assert_eq!(*global::lock_unpoisoned(&CELL), 1);
+    }
+
+    #[test]
+    fn unsafe_cell_with_and_with_mut_round_trip() {
+        let cell = cell::UnsafeCell::new(10u64);
+        // SAFETY: single-threaded test — no concurrent access to the cell.
+        cell.with_mut(|p| unsafe { *p += 5 });
+        // SAFETY: as above; shared read with no live mutable pointer.
+        let v = cell.with(|p| unsafe { *p });
+        assert_eq!(v, 15);
+    }
+
+    #[test]
+    fn fetch_max_helpers_keep_the_maximum() {
+        let u = atomic::AtomicU64::new(5);
+        assert_eq!(fetch_max_u64(&u, 3, atomic::Ordering::Relaxed), 5);
+        assert_eq!(fetch_max_u64(&u, 9, atomic::Ordering::Relaxed), 5);
+        assert_eq!(u.load(atomic::Ordering::Relaxed), 9);
+        let i = atomic::AtomicI64::new(-2);
+        assert_eq!(fetch_max_i64(&i, -5, atomic::Ordering::Relaxed), -2);
+        assert_eq!(fetch_max_i64(&i, 4, atomic::Ordering::Relaxed), -2);
+        assert_eq!(i.load(atomic::Ordering::Relaxed), 4);
+    }
+}

@@ -1,0 +1,116 @@
+//! End-to-end tests for the `lint` binary (PR 9): the crate's own
+//! sources must scan clean, and every seeded violation in
+//! `tests/lint_fixtures/` must be reported with its exact file, line,
+//! and rule id.
+
+#![cfg(not(loom))]
+
+use std::path::Path;
+use std::process::{Command, Output};
+
+fn run_lint(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_lint"))
+        .args(args)
+        .output()
+        .expect("run lint binary")
+}
+
+fn fixtures_root() -> String {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/lint_fixtures/src")
+        .to_string_lossy()
+        .into_owned()
+}
+
+#[test]
+fn crate_sources_are_clean() {
+    let out = run_lint(&[]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(
+        out.status.success(),
+        "lint must exit 0 on the crate's own sources:\n{stdout}{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    assert!(stdout.contains("lint: clean"), "clean summary line, got:\n{stdout}");
+}
+
+#[test]
+fn fixtures_fail_with_file_line_and_rule_diagnostics() {
+    let root = fixtures_root();
+    let out = run_lint(&["--root", &root]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(!out.status.success(), "seeded violations must exit nonzero:\n{stdout}");
+
+    // Every seeded violation, by exact file:line and rule id.
+    let expected = [
+        "bare_lock.rs:8: [bare-lock-unwrap]",
+        "bare_lock.rs:13: [bare-lock-unwrap]",
+        "bare_lock.rs:18: [bare-lock-unwrap]",
+        "missing_ordering.rs:11: [ordering-comment]",
+        "missing_ordering.rs:16: [ordering-comment]",
+        "missing_safety.rs:7: [safety-comment]",
+        "missing_safety.rs:13: [safety-comment]",
+        "engine/chaos.rs:8: [chaos-determinism]",
+        "engine/chaos.rs:11: [chaos-determinism]",
+        "stream/serve.rs:5: [shim-imports]",
+        "stream/serve.rs:8: [shim-imports]",
+    ];
+    for needle in expected {
+        assert!(stdout.contains(needle), "missing diagnostic `{needle}` in:\n{stdout}");
+    }
+
+    // Exactly the seeded violations — the count pins down false
+    // positives anywhere in the fixture tree.
+    let diagnostics =
+        stdout.lines().filter(|l| l.contains(": [") && !l.starts_with("lint:")).count();
+    assert_eq!(
+        diagnostics,
+        expected.len(),
+        "unexpected extra or missing diagnostics:\n{stdout}"
+    );
+}
+
+#[test]
+fn fixtures_respect_exemptions() {
+    let root = fixtures_root();
+    let out = run_lint(&["--root", &root]);
+    let stdout = String::from_utf8_lossy(&out.stdout);
+
+    // The fully-compliant file must not appear at all.
+    assert!(!stdout.contains("clean.rs:"), "clean.rs must scan clean:\n{stdout}");
+    // Test regions are exempt from bare-lock-unwrap (bare_lock.rs has a
+    // `.lock().unwrap()` inside `#[cfg(test)]` on line 30).
+    assert!(!stdout.contains("bare_lock.rs:30"), "test region not masked:\n{stdout}");
+    // Justified sites are exempt.
+    assert!(!stdout.contains("missing_ordering.rs:22"), "justified ordering flagged:\n{stdout}");
+    assert!(!stdout.contains("missing_ordering.rs:26"), "inline justification flagged:\n{stdout}");
+    assert!(!stdout.contains("missing_safety.rs:17"), "justified unsafe impl flagged:\n{stdout}");
+    assert!(!stdout.contains("missing_safety.rs:21"), "justified unsafe block flagged:\n{stdout}");
+    // The shim-imports allowlist (std::thread::current).
+    assert!(!stdout.contains("stream/serve.rs:15"), "allowlisted line flagged:\n{stdout}");
+}
+
+#[test]
+fn list_prints_every_rule() {
+    let out = run_lint(&["--list"]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let rules = [
+        "bare-lock-unwrap",
+        "ordering-comment",
+        "safety-comment",
+        "chaos-determinism",
+        "shim-imports",
+    ];
+    for rule in rules {
+        assert!(stdout.contains(rule), "rule `{rule}` missing from --list:\n{stdout}");
+    }
+}
+
+#[test]
+fn unknown_flags_error_out() {
+    let out = run_lint(&["--frobnicate"]);
+    assert!(!out.status.success());
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("unknown argument"), "{stderr}");
+}

@@ -1,0 +1,32 @@
+//! Fixture: bare guard unwraps outside test code must be flagged.
+//! Never compiled — scanned by `tests/integration_lint.rs` only.
+
+use std::sync::{Mutex, RwLock};
+
+pub fn drain(queue: &Mutex<Vec<u32>>) -> Vec<u32> {
+    // VIOLATION(bare-lock-unwrap) on the next line (line 8).
+    std::mem::take(&mut *queue.lock().unwrap())
+}
+
+pub fn peek(table: &RwLock<Vec<u32>>) -> usize {
+    // VIOLATION(bare-lock-unwrap) on the next line (line 13).
+    table.read().unwrap().len()
+}
+
+pub fn grow(table: &RwLock<Vec<u32>>, v: u32) {
+    // VIOLATION(bare-lock-unwrap) on the next line (line 18).
+    table.write().unwrap().push(v);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tests_may_unwrap_guards() {
+        // NOT a violation: test regions are exempt — a poisoned lock
+        // should fail the test loudly.
+        let q = Mutex::new(vec![1]);
+        assert_eq!(*q.lock().unwrap(), vec![1]);
+    }
+}

@@ -1,0 +1,34 @@
+//! Fixture: fully compliant file — the lint must report nothing here.
+//! Never compiled — scanned by `tests/integration_lint.rs` only.
+//!
+//! Doc text may mention `.lock().unwrap()` or `Ordering::SeqCst` or
+//! `unsafe` freely: comments are not code.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub static TALLY: AtomicU64 = AtomicU64::new(0);
+
+pub fn bump() {
+    // ordering: Relaxed — independent tally; RMW atomicity alone keeps
+    // it exact and nothing synchronizes through it.
+    TALLY.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn drain(queue: &Mutex<Vec<u32>>) -> Vec<u32> {
+    // Poison-tolerant: maps the error instead of unwrapping the guard.
+    queue
+        .lock()
+        .map(|mut q| std::mem::take(&mut *q))
+        .unwrap_or_default()
+}
+
+pub fn first_byte(v: &[u8]) -> u8 {
+    // SAFETY: caller guarantees `v` is non-empty.
+    unsafe { *v.get_unchecked(0) }
+}
+
+pub fn strings_are_not_code() -> &'static str {
+    // Needles inside string literals describe, they don't execute:
+    "call .lock().unwrap() and Ordering::SeqCst in an unsafe { } block"
+}

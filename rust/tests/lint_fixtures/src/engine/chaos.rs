@@ -1,0 +1,14 @@
+//! Fixture: wall-clock reads in the chaos module must be flagged.
+//! Never compiled — scanned by `tests/integration_lint.rs` only.
+
+use std::time::Instant;
+
+pub fn should_fail(seed: u64, attempt: u64) -> bool {
+    // VIOLATION(chaos-determinism) on the next line (line 8).
+    let jitter = Instant::now();
+    let _ = jitter;
+    // VIOLATION(chaos-determinism) on the next line (line 11).
+    let wall = std::time::SystemTime::now();
+    let _ = wall;
+    (seed ^ attempt) % 7 == 0
+}

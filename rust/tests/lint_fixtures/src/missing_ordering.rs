@@ -1,0 +1,27 @@
+//! Fixture: atomic orderings without `// ordering:` justifications.
+//! Never compiled — scanned by `tests/integration_lint.rs` only.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub static HITS: AtomicU64 = AtomicU64::new(0);
+
+pub fn bump() {
+    // A plain comment is not a justification.
+    // VIOLATION(ordering-comment) on the next line (line 11).
+    HITS.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn read() -> u64 {
+    // VIOLATION(ordering-comment) on the next line (line 16).
+    HITS.load(Ordering::SeqCst)
+}
+
+pub fn annotated() -> u64 {
+    // ordering: Relaxed — monitoring read of an independent tally;
+    // NOT a violation (justified by this comment block).
+    HITS.load(Ordering::Relaxed)
+}
+
+pub fn annotated_inline() {
+    HITS.store(0, Ordering::Relaxed); // ordering: Relaxed — external sync point.
+}

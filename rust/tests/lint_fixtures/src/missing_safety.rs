@@ -1,0 +1,22 @@
+//! Fixture: `unsafe` without `// SAFETY:` justifications.
+//! Never compiled — scanned by `tests/integration_lint.rs` only.
+
+pub fn first_byte(v: &[u8]) -> u8 {
+    // A comment that is not a SAFETY justification.
+    // VIOLATION(safety-comment) on the next line (line 7).
+    unsafe { *v.get_unchecked(0) }
+}
+
+pub struct Wrapper(*const u8);
+
+// VIOLATION(safety-comment) on the next line (line 13).
+unsafe impl Send for Wrapper {}
+
+// SAFETY: the pointer is never dereferenced through a shared reference;
+// NOT a violation (justified by this comment block).
+unsafe impl Sync for Wrapper {}
+
+pub fn justified(v: &[u8]) -> u8 {
+    // SAFETY: caller guarantees `v` is non-empty.
+    unsafe { *v.get_unchecked(0) }
+}

@@ -1,0 +1,20 @@
+//! Fixture: a shimmed module importing std concurrency directly.
+//! Never compiled — scanned by `tests/integration_lint.rs` only.
+
+// VIOLATION(shim-imports) on the next line (line 5).
+use std::sync::Mutex;
+
+// VIOLATION(shim-imports) on the next line (line 8).
+pub fn spawn_reader() -> std::thread::JoinHandle<()> {
+    unreachable!("fixture only")
+}
+
+// NOT a violation: the registration-plane thread-name read is
+// allowlisted for this rule.
+pub fn name() -> Option<String> {
+    std::thread::current().name().map(str::to_string)
+}
+
+pub fn shared() -> Mutex<u32> {
+    Mutex::new(0)
+}

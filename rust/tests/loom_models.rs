@@ -1,0 +1,264 @@
+//! Loom model checking for the crate's hand-rolled concurrent
+//! structures (PR 9). Compiled only under `RUSTFLAGS="--cfg loom"`:
+//!
+//! ```text
+//! RUSTFLAGS="--cfg loom" cargo test --release --test loom_models
+//! ```
+//!
+//! Every structure here is built on the [`rdd_eclat::sync`] shim, so
+//! under `--cfg loom` these models drive the *production* code paths
+//! with loom's exhaustive scheduler — every interleaving up to the
+//! preemption bound is executed, and each `assert!` must hold in all of
+//! them. Internal-state models (reader pins on the double-buffer slots,
+//! the span `EventRing`) live next to their modules in
+//! `#[cfg(all(loom, test))]` unit mods; this file checks the public
+//! APIs: metric cells, the shuffle store, the thread pool, and the
+//! snapshot pipe.
+
+#![cfg(loom)]
+
+use loom::sync::atomic::{AtomicUsize, Ordering};
+use loom::sync::Arc;
+use loom::thread;
+
+use rdd_eclat::engine::pool::ThreadPool;
+use rdd_eclat::engine::{ShuffleId, ShuffleStore};
+use rdd_eclat::fim::Frequent;
+use rdd_eclat::obs::{Counter, Gauge, Histogram};
+use rdd_eclat::stream::{snapshot_pipe, BatchSnapshot, MinePlan};
+
+/// Run `f` under loom with the suite's standard bounds. A preemption
+/// bound of 3 is loom's recommended sweet spot: every bug class the
+/// models target (torn publish, lost wakeup, dropped count) needs at
+/// most a couple of forced preemptions to surface, and the bound keeps
+/// the state space tractable.
+fn model(f: impl Fn() + Sync + Send + 'static) {
+    let mut builder = loom::model::Builder::new();
+    builder.preemption_bound = Some(3);
+    builder.max_branches = 100_000;
+    builder.check(f);
+}
+
+/// A self-consistent synthetic snapshot: `window_txns` is a function of
+/// `batch_id`, so any torn read shows up as an inconsistent pair.
+fn snap(k: u64) -> BatchSnapshot {
+    BatchSnapshot {
+        batch_id: k,
+        window_txns: (k as usize) * 3 + 1,
+        window_batches: 1,
+        min_sup_count: 1,
+        frequent_items: 1,
+        dirty_frequent_items: 0,
+        plan: MinePlan::Rebuild,
+        frequents: vec![Frequent::new(vec![k as u32], k as u32 + 1)],
+        rules: Vec::new(),
+        wall: std::time::Duration::ZERO,
+    }
+}
+
+// ---------------------------------------------------------------- obs
+
+/// Referenced by the `// ordering:` comment on `Counter::incr`: relaxed
+/// RMWs alone keep concurrent increments exact.
+#[test]
+fn loom_counter_concurrent_increments_exact() {
+    model(|| {
+        let c = Arc::new(Counter::new());
+        let threads: Vec<_> = (0..2)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                thread::spawn(move || {
+                    c.incr(1);
+                    c.incr(1);
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 4, "no increment may be lost in any interleaving");
+    });
+}
+
+/// Referenced by the `// ordering:` comment on `Gauge::add`: the
+/// high-water mark is a monotone max-fold — no interleaving of relaxed
+/// RMW + max can under-report the peak level.
+#[test]
+fn loom_gauge_high_water_is_monotone_max() {
+    model(|| {
+        let g = Arc::new(Gauge::new());
+        let a = {
+            let g = Arc::clone(&g);
+            thread::spawn(move || {
+                g.add(2);
+                g.add(-2);
+            })
+        };
+        let b = {
+            let g = Arc::clone(&g);
+            thread::spawn(move || g.add(1))
+        };
+        a.join().unwrap();
+        b.join().unwrap();
+        assert_eq!(g.get(), 1, "level is the sum of all deltas");
+        let hw = g.high_water();
+        // Thread A's first add alone reaches level >= 2; with B's +1
+        // interleaved before it the peak is 3. Any hw outside [2, 3]
+        // means a max-fold was lost or invented.
+        assert!((2..=3).contains(&hw), "high-water {hw} outside the reachable peaks");
+    });
+}
+
+/// Referenced by the `// ordering:` comment on `Histogram::record`:
+/// bucket/count/sum/max stay exact under concurrent recording.
+#[test]
+fn loom_histogram_concurrent_records_exact() {
+    model(|| {
+        let h = Arc::new(Histogram::new());
+        let a = {
+            let h = Arc::clone(&h);
+            thread::spawn(move || h.record(3))
+        };
+        let b = {
+            let h = Arc::clone(&h);
+            thread::spawn(move || h.record(100))
+        };
+        a.join().unwrap();
+        b.join().unwrap();
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum(), 103);
+        assert_eq!(h.max(), 100);
+    });
+}
+
+// ------------------------------------------------------------- engine
+
+/// Referenced by the `// ordering:` comment in `ShuffleStore::put`:
+/// the relaxed traffic tallies stay exact under concurrent map-task
+/// writes, and the buckets themselves are published by the `RwLock`.
+#[test]
+fn loom_shuffle_concurrent_puts_tally_exactly() {
+    model(|| {
+        let store = Arc::new(ShuffleStore::new());
+        let id = ShuffleId(0);
+        let a = {
+            let store = Arc::clone(&store);
+            thread::spawn(move || store.put(id, 0, 0, vec![1u32, 2]))
+        };
+        let b = {
+            let store = Arc::clone(&store);
+            thread::spawn(move || store.put(id, 1, 0, vec![3u32]))
+        };
+        a.join().unwrap();
+        b.join().unwrap();
+        let (records, bytes) = store.traffic();
+        assert_eq!(records, 3, "record tally lost an RMW");
+        assert_eq!(bytes, 12, "byte tally lost an RMW");
+        assert_eq!(store.len(), 2);
+        let merged: Vec<u32> = store.fetch(id, 2, 0).unwrap();
+        assert_eq!(merged, vec![1, 2, 3], "map-order concatenation");
+    });
+}
+
+/// `execute` racing `close` (the `&self` half of shutdown) admits
+/// exactly two outcomes: the job is accepted and then *guaranteed* to
+/// run (workers drain the queue before exiting), or it is cleanly
+/// rejected. Never accepted-and-dropped, never run twice.
+#[test]
+fn loom_pool_execute_vs_close_job_runs_iff_accepted() {
+    model(|| {
+        let ran = Arc::new(AtomicUsize::new(0));
+        let pool = Arc::new(ThreadPool::new(1));
+        let submitter = {
+            let pool = Arc::clone(&pool);
+            let ran = Arc::clone(&ran);
+            thread::spawn(move || {
+                pool.execute(move || {
+                    // ordering: Relaxed — single observer, after join.
+                    ran.fetch_add(1, Ordering::Relaxed);
+                })
+                .is_ok()
+            })
+        };
+        pool.close();
+        let accepted = submitter.join().unwrap();
+        // Last Arc: drop runs shutdown, joining the worker.
+        drop(pool);
+        // ordering: Relaxed — the worker is joined; read is sequential.
+        let runs = ran.load(Ordering::Relaxed);
+        if accepted {
+            assert_eq!(runs, 1, "accepted job must run exactly once");
+        } else {
+            assert_eq!(runs, 0, "rejected job must never run");
+        }
+    });
+}
+
+/// Dropping the pool (implicit shutdown) drains every queued job.
+#[test]
+fn loom_pool_drop_drains_queued_jobs() {
+    model(|| {
+        let ran = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(1);
+            for _ in 0..2 {
+                let ran = Arc::clone(&ran);
+                pool.execute(move || {
+                    // ordering: Relaxed — single observer after join.
+                    ran.fetch_add(1, Ordering::Relaxed);
+                })
+                .expect("pool is open");
+            }
+        } // drop == shutdown: close, drain, join
+        // ordering: Relaxed — workers are joined; this is sequential.
+        assert_eq!(ran.load(Ordering::Relaxed), 2, "drop may not drop queued jobs");
+    });
+}
+
+/// Idempotent shutdown: a second shutdown (and the drop after it) is a
+/// no-op, and execute-after-shutdown reliably errors.
+#[test]
+fn loom_pool_shutdown_is_idempotent_and_closes_submission() {
+    model(|| {
+        let mut pool = ThreadPool::new(1);
+        pool.shutdown();
+        pool.shutdown();
+        assert!(pool.execute(|| ()).is_err(), "closed pool must reject jobs");
+    });
+}
+
+// ------------------------------------------------------------- stream
+
+/// Public-API end of the double-buffer protocol: a reader races two
+/// publishes. Every observed snapshot must be internally consistent
+/// (no torn `ServingSnapshot`) and the sequence a single reader sees
+/// must be monotone in `batch_id`.
+#[test]
+fn loom_serve_reader_sees_consistent_monotone_snapshots() {
+    model(|| {
+        let (mut publisher, handle) = snapshot_pipe();
+        let reader = {
+            let handle = handle.clone();
+            thread::spawn(move || {
+                let mut last = 0u64;
+                for _ in 0..2 {
+                    if let Some(s) = handle.latest() {
+                        assert_eq!(
+                            s.window_txns,
+                            (s.batch_id as usize) * 3 + 1,
+                            "torn snapshot: fields from different publishes"
+                        );
+                        assert!(s.batch_id >= last, "reader went back in time");
+                        last = s.batch_id;
+                    }
+                }
+            })
+        };
+        publisher.publish(snap(1));
+        publisher.publish(snap(2));
+        reader.join().unwrap();
+        let final_snap = handle.latest().expect("two publishes happened");
+        assert_eq!(final_snap.batch_id, 2, "last publish wins");
+        assert_eq!(handle.version(), 2);
+    });
+}
