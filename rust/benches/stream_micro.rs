@@ -7,7 +7,9 @@
 //! emission". The `stream/ingest/{sync,async}_push` rows additionally
 //! compare the producer-visible per-batch cost of the synchronous
 //! `push_batch` (mines inline) against the async `StreamService`
-//! (enqueue-and-return; mining overlaps on the service thread). Besides
+//! (enqueue-and-return; mining overlaps on the service thread), and the
+//! `stream/remote/*` rows price mining on two loopback-TCP shard
+//! workers against the in-process 2-shard twin. Besides
 //! the CSV under `results/`, the run emits the perf-trajectory file
 //! `BENCH_stream.json` at the repository root (override with
 //! `BENCH_STREAM_OUT`). Reproduce with:
@@ -20,6 +22,7 @@ use rdd_eclat::bench::{black_box, Bench, Report};
 use rdd_eclat::data::clickstream::{generate_range, ClickParams};
 use rdd_eclat::engine::ClusterContext;
 use rdd_eclat::fim::MinSup;
+use rdd_eclat::net::{RemoteShardSet, ShardWorker};
 use rdd_eclat::stream::{
     IngestConfig, MineMode, StreamConfig, StreamService, StreamingMiner, WindowSpec,
 };
@@ -176,6 +179,56 @@ fn main() {
         println!("{shards}-shard emission speedup over 1-shard: {ratio:.2}x");
     }
     println!();
+
+    // Remote shards over loopback TCP vs the in-process 2-shard twin:
+    // the same steady-state emission with the shard replicas hosted by
+    // two `ShardWorker`s — the measured delta is pure wire cost (frame
+    // encode/decode + loopback round-trips of atoms and mined sinks).
+    let remote_base = report.rows().len();
+    let mut remote_finals = Vec::new();
+    for remote in [false, true] {
+        let cfg = StreamConfig::new(WindowSpec::sliding(w.window, 1), MinSup::count(w.min_sup))
+            .shards(2);
+        let mut miner = StreamingMiner::new(ClusterContext::builder().build(), cfg);
+        let mut workers = Vec::new();
+        if remote {
+            let mut addrs = Vec::new();
+            for _ in 0..2 {
+                let worker = ShardWorker::bind("127.0.0.1:0").expect("bind loopback");
+                addrs.push(worker.local_addr().expect("local addr").to_string());
+                workers.push(std::thread::spawn(move || worker.run().expect("worker run")));
+            }
+            miner.attach_remote(RemoteShardSet::connect(&addrs).expect("connect workers"));
+        }
+        let name = if remote {
+            "stream/remote/loopback_2worker_emission"
+        } else {
+            "stream/remote/local_2shard_emission"
+        };
+        let mut feed = batches.iter().cloned();
+        for _ in 0..w.window {
+            let _ = miner.push_batch(feed.next().expect("fill batches")).expect("push");
+        }
+        let mut last_len = 0usize;
+        report.add(bench.run(name, || {
+            let batch = feed.next().expect("measured batches pre-generated");
+            let snap = miner.push_batch(batch).expect("push").expect("slide 1 emits every batch");
+            last_len = snap.frequents.len();
+            black_box(last_len)
+        }));
+        remote_finals.push((miner.window_txns(), last_len));
+        if let Some(set) = miner.remote_mut() {
+            assert!(set.all_live(), "bench run must not lose a worker");
+            set.shutdown();
+        }
+        for h in workers {
+            h.join().expect("worker thread exits after Shutdown");
+        }
+    }
+    assert_eq!(remote_finals[0], remote_finals[1], "remote mining diverged from local twin");
+    let wire_tax = report.rows()[remote_base + 1].mean()
+        / report.rows()[remote_base].mean().max(1e-12);
+    println!("loopback 2-worker emission cost vs in-process 2-shard: {wire_tax:.2}x\n");
 
     report.write_csv("bench_stream_micro.csv").expect("write csv");
     println!("wrote results/bench_stream_micro.csv");

@@ -15,8 +15,10 @@
 //! |                    |                       | justification                                           |
 //! | `chaos-determinism`| `engine/chaos.rs`     | no `Instant::now` / `SystemTime` — fault decisions must |
 //! |                    |                       | be a pure function of the seeded policy                 |
-//! | `shim-imports`     | the five shimmed      | no `std::sync` / `std::thread` — loom-modelable modules |
+//! | `shim-imports`     | the shimmed           | no `std::sync` / `std::thread` — loom-modelable modules |
 //! |                    | concurrency modules   | import `crate::sync` so `--cfg loom` swaps the types    |
+//! | `socket-unwrap`    | `net/` modules        | no `.unwrap()` on a line doing socket I/O — transport   |
+//! |                    |                       | failures are routine and must map into `Error::Net`     |
 //!
 //! Justification comments may sit on the offending line or in the
 //! contiguous `//` comment block above the statement (attribute lines
@@ -54,6 +56,9 @@ enum Kind {
     /// A non-test line whose code portion contains a trigger must carry
     /// `marker` in its own comment or the comment block above it.
     RequireComment { triggers: &'static [&'static str], marker: &'static str },
+    /// The code portion of a non-test line containing any `when` needle
+    /// must not also contain `then` (conjunction forbid).
+    ForbidPair { when: &'static [&'static str], then: &'static str },
 }
 
 struct Rule {
@@ -65,15 +70,22 @@ struct Rule {
     summary: &'static str,
 }
 
-/// The five modules refactored onto the `crate::sync` shim (PR 9);
-/// keep in sync with the list in `src/sync.rs` docs.
+/// The modules refactored onto the `crate::sync` shim (five in PR 9,
+/// plus the `net/` transport layer in PR 10); keep in sync with the
+/// list in `src/sync.rs` docs.
 const SHIMMED: &[&str] = &[
     "stream/serve.rs",
     "engine/pool.rs",
     "engine/shuffle.rs",
     "obs/registry.rs",
     "obs/span.rs",
+    "net/wire.rs",
+    "net/transport.rs",
 ];
+
+/// The wire/transport modules: every socket operation there must map
+/// its error instead of unwrapping.
+const NET: &[&str] = &["net/wire.rs", "net/transport.rs"];
 
 const RULES: &[Rule] = &[
     Rule {
@@ -124,6 +136,30 @@ const RULES: &[Rule] = &[
         allow: &["std::thread::current"],
         summary: "loom-modelable modules import crate::sync (the shim), never std::sync / \
                   std::thread directly, so `--cfg loom` swaps every primitive",
+    },
+    Rule {
+        id: "socket-unwrap",
+        scope: Scope::Only(NET),
+        kind: Kind::ForbidPair {
+            when: &[
+                ".read(",
+                ".read_exact(",
+                ".write(",
+                ".write_all(",
+                ".flush(",
+                ".connect(",
+                ".accept(",
+                ".send(",
+                ".recv(",
+                ".recv_bytes(",
+                ".set_read_timeout(",
+                ".set_write_timeout(",
+            ],
+            then: ".unwrap()",
+        },
+        allow: &[],
+        summary: "socket I/O fails routinely (timeouts, resets, chaos-dropped peers); \
+                  transport code maps those errors into Error::Net, never unwraps them",
     },
 ];
 
@@ -261,6 +297,23 @@ fn scan_file(rel: &str, text: &str, out: &mut Vec<Violation>) {
                                 rule: rule.id,
                                 msg: format!("forbidden pattern `{needle}` — {}", rule.summary),
                             });
+                        }
+                    }
+                }
+                Kind::ForbidPair { when, then } => {
+                    if line.code.contains(then) {
+                        for needle in when {
+                            if line.code.contains(needle) {
+                                out.push(Violation {
+                                    file: rel.to_string(),
+                                    line: i + 1,
+                                    rule: rule.id,
+                                    msg: format!(
+                                        "`{needle}...){then}` — {}",
+                                        rule.summary
+                                    ),
+                                });
+                            }
                         }
                     }
                 }

@@ -19,6 +19,7 @@ use rdd_eclat::data::{self, DatasetSpec, TABLE2};
 use rdd_eclat::engine::{ChaosPolicy, ClusterContext, ContextBuilder};
 use rdd_eclat::error::{Error, Result};
 use rdd_eclat::fim::{generate_rules, rules_to_json, sort_frequents};
+use rdd_eclat::net::{RemoteShardSet, ShardWorker};
 use rdd_eclat::stream::{
     BatchSource, ClickstreamSource, IngestConfig, MineMode, Paced, ReplaySource, StreamConfig,
     StreamService, StreamingMiner, WindowSpec,
@@ -70,6 +71,11 @@ fn app() -> App {
                 .opt("min-conf", "minimum rule confidence (default 0.8)")
                 .opt("cores", "executor cores (default: all)")
                 .opt("shards", "store shards mined in parallel per emission (default 1)")
+                .opt(
+                    "workers",
+                    "mine on remote shard workers at host:port,host:port,... \
+                     (one shard per worker; mutually exclusive with --shards)",
+                )
                 .opt("mode", "incremental | from-scratch (default incremental)")
                 .opt("interval", "inter-batch pacing in milliseconds (default 0)")
                 .opt("json", "write the final snapshot (itemsets + rules) as JSON")
@@ -79,12 +85,17 @@ fn app() -> App {
                 .opt("queue-cap", "--serve: backpressure threshold in queued batches (default 8)")
                 .opt("readers", "--serve: concurrent query threads (default 2)")
                 .opt("stats-every", "--serve: print a one-line metrics digest every N batches")
+                .opt("stats-json", "--serve: write the final ingest stats as JSON to this path")
                 .flag(
                     "serve",
                     "async ingest + live snapshot serving: mining runs on a service \
                      thread while query threads read the double-buffered handle",
                 )
                 .flag("quiet", "suppress the per-emission progress lines"),
+        )
+        .command(
+            Command::new("shard-worker", "host streaming store shards for a remote driver")
+                .opt("listen", "host:port to listen on (required; port 0 picks a free one)"),
         )
 }
 
@@ -112,6 +123,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "datasets" => cmd_datasets(),
         "rules" => cmd_rules(&args),
         "stream" => cmd_stream(&args),
+        "shard-worker" => cmd_shard_worker(&args),
         _ => unreachable!(),
     }
 }
@@ -365,7 +377,28 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
         _ => args.get_parse("batches", 60usize)?,
     };
     let interval_ms: u64 = args.get_parse("interval", 0u64)?;
-    let shards: usize = args.get_parse("shards", 1usize)?;
+    // `--workers` moves the store shards out of the process: one shard
+    // per worker, so the worker list fixes the shard count and the two
+    // flags cannot both be given.
+    let workers: Option<Vec<String>> = match args.get("workers") {
+        Some(spec) => {
+            if args.get("shards").is_some() {
+                return Err(Error::Usage(
+                    "--workers and --shards are mutually exclusive (one shard per worker)".into(),
+                ));
+            }
+            Some(
+                spec.split(',')
+                    .map(|a| parse_worker_addr(a.trim()))
+                    .collect::<Result<Vec<String>>>()?,
+            )
+        }
+        None => None,
+    };
+    let shards: usize = match &workers {
+        Some(list) => list.len(),
+        None => args.get_parse("shards", 1usize)?,
+    };
     if batch == 0 || window == 0 || slide == 0 {
         return Err(Error::Usage("--batch, --window and --slide must be >= 1".into()));
     }
@@ -417,10 +450,14 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
          min_conf {} ({mode:?}, {cores} cores, {shards} shards)",
         batch, cfg.min_sup, cfg.min_conf
     );
-    if args.flag("serve") {
-        return cmd_stream_serve(args, source, StreamingMiner::new(ctx, stream_cfg), batches);
-    }
     let mut miner = StreamingMiner::new(ctx, stream_cfg);
+    if let Some(addrs) = &workers {
+        println!("remote shards: {} workers ({})", addrs.len(), addrs.join(", "));
+        miner.attach_remote(RemoteShardSet::connect(addrs)?.with_chaos(chaos.as_ref()));
+    }
+    if args.flag("serve") {
+        return cmd_stream_serve(args, source, miner, batches);
+    }
 
     let mut last = None;
     let mut emissions = 0usize;
@@ -433,6 +470,9 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
             }
             last = Some(snap);
         }
+    }
+    if let Some(remote) = miner.remote_mut() {
+        remote.shutdown();
     }
     let Some(snap) = last else {
         println!("stream ended before the first emission (need >= {slide} batches)");
@@ -458,6 +498,31 @@ fn cmd_stream(args: &rdd_eclat::cli::Args) -> Result<()> {
         println!("wrote {path}");
     }
     finish_observability(args)
+}
+
+/// Syntax-check one `--workers` address: `host:port` with a numeric
+/// port (reachability is only known at connect time).
+fn parse_worker_addr(addr: &str) -> Result<String> {
+    let bad = || Error::Usage(format!("worker address {addr:?} must be host:port"));
+    let (host, port) = addr.rsplit_once(':').ok_or_else(bad)?;
+    if host.is_empty() || port.parse::<u16>().is_err() {
+        return Err(bad());
+    }
+    Ok(addr.to_string())
+}
+
+/// `repro shard-worker`: host streaming store shards behind a listen
+/// address and serve apply/mine/stats RPCs until the driver sends a
+/// shutdown frame. Replica state survives reconnects, so a chaos-prone
+/// driver can drop and re-establish its connection freely.
+fn cmd_shard_worker(args: &rdd_eclat::cli::Args) -> Result<()> {
+    let addr = args.get("listen").ok_or_else(|| Error::Usage("--listen required".into()))?;
+    let worker = ShardWorker::bind(addr)?;
+    println!("shard worker listening on {}", worker.local_addr()?);
+    // The accept loop blocks next; flush so a supervising script sees
+    // readiness even when stdout is a pipe.
+    std::io::Write::flush(&mut std::io::stdout()).ok();
+    worker.run()
 }
 
 /// Per-shard store/mining accounting, shared by the sync and `--serve`
@@ -564,7 +629,14 @@ fn cmd_stream_serve(
         total_queries += t.join().unwrap_or(0);
     }
     let stats = service.stats();
-    service.shutdown()?;
+    let mut miner = service.shutdown()?;
+    if let Some(remote) = miner.remote_mut() {
+        remote.shutdown();
+    }
+    if let Some(path) = args.get("stats-json") {
+        std::fs::write(path, stats.to_json())?;
+        println!("wrote {path}");
+    }
 
     let Some(snap) = last else {
         println!("stream ended before the first emission");

@@ -46,6 +46,19 @@ pub(crate) enum TaskFault {
     Straggle(Duration),
 }
 
+/// A fault injected into one shard-RPC attempt (see
+/// [`ChaosPolicy::net_fault`]). Applied driver-side by
+/// [`crate::net::RemoteShardSet`]: a drop severs the connection before
+/// the request is written (safe to resend), a corruption flips a byte
+/// in the received reply so the frame CRC rejects it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum NetFault {
+    /// Sever the worker connection before sending this attempt.
+    DropConnection,
+    /// Flip one byte of this attempt's reply frame.
+    CorruptReply,
+}
+
 /// Seeded, deterministic mid-execution fault injector.
 ///
 /// Probabilities select *victims* (which task, which fetch); the
@@ -70,9 +83,11 @@ pub struct ChaosPolicy {
     shuffle_loss_p: f64,
     emission_p: f64,
     max_emission_failures: u32,
+    conn_drop_p: f64,
+    reply_corrupt_p: f64,
     /// Per-victim attempt counts: `(domain, a, b)` → attempts seen.
     /// Domain 0 = task `(job·stages + stage, partition)`, domain 1 =
-    /// fetch `(shuffle, reduce)`.
+    /// fetch `(shuffle, reduce)`, domain 2 = shard RPC `(worker, rpc)`.
     attempts: Mutex<HashMap<(u8, u64, u64), u32>>,
     /// `(next emission index, consecutive injected emission failures)`.
     emission_state: Mutex<(u64, u32)>,
@@ -91,6 +106,8 @@ impl ChaosPolicy {
             shuffle_loss_p: 0.0,
             emission_p: 0.0,
             max_emission_failures: 2,
+            conn_drop_p: 0.0,
+            reply_corrupt_p: 0.0,
             attempts: Mutex::new(HashMap::new()),
             emission_state: Mutex::new((0, 0)),
         }
@@ -98,15 +115,18 @@ impl ChaosPolicy {
 
     /// The default suite armed by `--chaos <seed>:<p>` and the
     /// [`CHAOS_ENV`] variable: task panics at `p`, stragglers at `p/2`
-    /// (20 ms delay), shuffle-fetch loss at `p/2`. Emission failures
-    /// stay off — they are opt-in via [`ChaosPolicy::emission_failures`]
-    /// because only the async [`crate::stream::StreamService`] retries
-    /// them.
+    /// (20 ms delay), shuffle-fetch loss at `p/2`, shard-RPC connection
+    /// drops and reply corruption at `p/2` each (only consulted when a
+    /// remote shard set is attached). Emission failures stay off — they
+    /// are opt-in via [`ChaosPolicy::emission_failures`] because only
+    /// the async [`crate::stream::StreamService`] retries them.
     pub fn default_suite(seed: u64, p: f64) -> ChaosPolicy {
         ChaosPolicy::new(seed)
             .task_panics(p)
             .stragglers(p / 2.0, Duration::from_millis(20))
             .shuffle_loss(p / 2.0)
+            .conn_drops(p / 2.0)
+            .reply_corruption(p / 2.0)
     }
 
     /// Parse a `<seed>:<p>` spec (as taken by `--chaos` and
@@ -166,6 +186,22 @@ impl ChaosPolicy {
     pub fn emission_failures(mut self, p: f64, max_consecutive: u32) -> ChaosPolicy {
         self.emission_p = p;
         self.max_emission_failures = max_consecutive;
+        self
+    }
+
+    /// Sever each shard-RPC's worker connection with probability `p`,
+    /// first attempt only — the resend is guaranteed clean, mirroring
+    /// [`ChaosPolicy::shuffle_loss`], so a bounded retry always recovers.
+    pub fn conn_drops(mut self, p: f64) -> ChaosPolicy {
+        self.conn_drop_p = p;
+        self
+    }
+
+    /// Corrupt each shard-RPC's reply frame with probability `p`, first
+    /// attempt only; the flipped byte is caught by the frame CRC and the
+    /// resend is guaranteed clean.
+    pub fn reply_corruption(mut self, p: f64) -> ChaosPolicy {
+        self.reply_corrupt_p = p;
         self
     }
 
@@ -239,6 +275,28 @@ impl ChaosPolicy {
         self.decide(2, shuffle, reduce as u64, 0).chance(self.shuffle_loss_p)
     }
 
+    /// Decide the fault (if any) for one attempt of shard RPC
+    /// `(worker, rpc)` — `rpc` is the worker connection's logical RPC
+    /// sequence number, so the identity is stable across retries. Only
+    /// the first attempt of a given RPC can be a victim (one shared
+    /// attempt counter covers both fault kinds), which bounds every
+    /// injected net fault to a single retry — [`crate::net`] retries
+    /// once, so a chaos run never loses a worker to injection alone.
+    pub(crate) fn net_fault(&self, worker: u64, rpc: u64) -> Option<NetFault> {
+        let attempt = self.bump_attempt((2u8, worker, rpc));
+        if attempt > 0 {
+            return None;
+        }
+        if self.conn_drop_p > 0.0 && self.decide(4, worker, rpc, 0).chance(self.conn_drop_p) {
+            return Some(NetFault::DropConnection);
+        }
+        if self.reply_corrupt_p > 0.0 && self.decide(5, worker, rpc, 0).chance(self.reply_corrupt_p)
+        {
+            return Some(NetFault::CorruptReply);
+        }
+        None
+    }
+
     /// Decide whether the next streaming emission fails. Consecutive
     /// injected failures are capped (see
     /// [`ChaosPolicy::emission_failures`]); a forced success resets the
@@ -279,6 +337,8 @@ impl Clone for ChaosPolicy {
             shuffle_loss_p: self.shuffle_loss_p,
             emission_p: self.emission_p,
             max_emission_failures: self.max_emission_failures,
+            conn_drop_p: self.conn_drop_p,
+            reply_corrupt_p: self.reply_corrupt_p,
             attempts: Mutex::new(HashMap::new()),
             emission_state: Mutex::new((0, 0)),
         }
@@ -302,13 +362,15 @@ impl fmt::Display for ChaosPolicy {
         write!(
             f,
             "seed={} task-panic p={:.2} straggler p={:.2} ({:?}) shuffle-loss p={:.2} \
-             emission p={:.2}",
+             emission p={:.2} conn-drop p={:.2} reply-corrupt p={:.2}",
             self.seed,
             self.task_panic_p,
             self.straggler_p,
             self.straggler_delay,
             self.shuffle_loss_p,
-            self.emission_p
+            self.emission_p,
+            self.conn_drop_p,
+            self.reply_corrupt_p
         )
     }
 }
@@ -324,6 +386,8 @@ mod tests {
         assert!((c.task_panic_p - 0.2).abs() < 1e-12);
         assert!((c.straggler_p - 0.1).abs() < 1e-12);
         assert!((c.shuffle_loss_p - 0.1).abs() < 1e-12);
+        assert!((c.conn_drop_p - 0.1).abs() < 1e-12);
+        assert!((c.reply_corrupt_p - 0.1).abs() < 1e-12);
         assert!(c.emission_p == 0.0);
     }
 
@@ -381,6 +445,28 @@ mod tests {
     }
 
     #[test]
+    fn net_faults_are_deterministic_and_first_attempt_only() {
+        let a = ChaosPolicy::new(11).conn_drops(1.0);
+        let b = a.clone();
+        for rpc in 0..8u64 {
+            let fa = a.net_fault(0, rpc);
+            assert_eq!(fa, b.net_fault(0, rpc), "rpc {rpc} diverged across clones");
+            assert_eq!(fa, Some(NetFault::DropConnection));
+            assert_eq!(a.net_fault(0, rpc), None, "retry of rpc {rpc} must be clean");
+        }
+        // Corruption decides independently per (worker, rpc) and is
+        // likewise bounded to the first attempt.
+        let c = ChaosPolicy::new(11).reply_corruption(1.0);
+        assert_eq!(c.net_fault(3, 0), Some(NetFault::CorruptReply));
+        assert_eq!(c.net_fault(3, 0), None);
+        // A drop decision shadows corruption on the same attempt: one
+        // fault per RPC, never both.
+        let d = ChaosPolicy::new(11).conn_drops(1.0).reply_corruption(1.0);
+        assert_eq!(d.net_fault(0, 0), Some(NetFault::DropConnection));
+        assert_eq!(d.net_fault(0, 0), None);
+    }
+
+    #[test]
     fn unarmed_policy_injects_nothing() {
         let c = ChaosPolicy::new(7);
         for p in 0..64 {
@@ -388,6 +474,7 @@ mod tests {
             assert!(!c.fail_fetch(0, p));
         }
         assert!(!c.fail_emission());
+        assert_eq!(c.net_fault(0, 0), None);
     }
 
     #[test]

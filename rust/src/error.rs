@@ -31,6 +31,11 @@ pub enum Error {
     #[error("runtime error: {0}")]
     Runtime(String),
 
+    /// Wire-format or transport failure (corrupt/truncated/version-skewed
+    /// frame, RPC protocol violation, unreachable shard worker).
+    #[error("net error: {0}")]
+    Net(String),
+
     /// CLI usage error; carries the message shown to the user.
     #[error("usage error: {0}")]
     Usage(String),
@@ -56,6 +61,11 @@ impl Error {
     pub fn runtime(msg: impl Into<String>) -> Self {
         Error::Runtime(msg.into())
     }
+
+    /// Shorthand for [`Error::Net`].
+    pub fn net(msg: impl Into<String>) -> Self {
+        Error::Net(msg.into())
+    }
 }
 
 #[cfg(test)]
@@ -68,6 +78,8 @@ mod tests {
         assert_eq!(e.to_string(), "parse error: bad line 3");
         let e = Error::engine("lost partition");
         assert_eq!(e.to_string(), "engine error: lost partition");
+        let e = Error::net("truncated frame");
+        assert_eq!(e.to_string(), "net error: truncated frame");
     }
 
     #[test]

@@ -31,6 +31,25 @@ impl TidBitmap {
         bm
     }
 
+    /// Rebuild from raw words (the wire-decode fast path): `words` must
+    /// be exactly `universe.div_ceil(64)` long with no bits set at or
+    /// beyond `universe`. Returns `None` when either invariant fails, so
+    /// a corrupt frame surfaces as a decode error instead of a bitmap
+    /// that disagrees with its own universe.
+    pub fn from_raw_words(universe: usize, words: Vec<u64>) -> Option<TidBitmap> {
+        if words.len() != universe.div_ceil(64) {
+            return None;
+        }
+        if universe % 64 != 0 {
+            if let Some(&last) = words.last() {
+                if last >> (universe % 64) != 0 {
+                    return None;
+                }
+            }
+        }
+        Some(TidBitmap { words, universe })
+    }
+
     /// Universe size (exclusive upper bound on tids).
     pub fn universe(&self) -> usize {
         self.universe
@@ -273,6 +292,21 @@ mod tests {
         }
         assert!(!bm.contains(1));
         assert_eq!(bm.count(), 6);
+    }
+
+    #[test]
+    fn from_raw_words_validates_shape_and_tail_bits() {
+        let bm = TidBitmap::from_tids(70, [0u32, 63, 69]);
+        let rebuilt = TidBitmap::from_raw_words(70, bm.words().to_vec()).unwrap();
+        assert_eq!(rebuilt, bm);
+        // Wrong word count for the universe.
+        assert!(TidBitmap::from_raw_words(70, vec![0u64; 3]).is_none());
+        assert!(TidBitmap::from_raw_words(70, vec![0u64; 1]).is_none());
+        // A bit at/beyond the universe (tid 70 in universe 70).
+        assert!(TidBitmap::from_raw_words(70, vec![0, 1u64 << 6]).is_none());
+        // Word-aligned universes have no tail mask to violate.
+        assert_eq!(TidBitmap::from_raw_words(128, vec![u64::MAX; 2]).unwrap().count(), 128);
+        assert_eq!(TidBitmap::from_raw_words(0, vec![]).unwrap().count(), 0);
     }
 
     #[test]

@@ -83,7 +83,7 @@ impl FrequentSink for CollectSink {
 /// Per-partition pools are summed with [`PooledSink::absorb`] and
 /// decoded driver-side with [`PooledSink::decode`] or replayed into
 /// another sink with [`PooledSink::replay`].
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct PooledSink {
     /// All emitted itemsets, concatenated.
     items: Vec<Item>,

@@ -31,7 +31,11 @@
 //! (DStream-style micro-batch mining: sliding windows over an
 //! incrementally maintained vertical store, with per-batch frequent
 //! itemset and association-rule snapshots, an async ingest service, and
-//! a lock-free-read snapshot serving layer). [`obs`] is the
+//! a lock-free-read snapshot serving layer). [`net`] moves the
+//! streaming shards out of the process: a versioned CRC-guarded wire
+//! format plus a blocking framed TCP transport (`repro shard-worker`
+//! hosts shard replicas, `repro stream --workers` drives them with the
+//! same apply/mine surface as the in-process store). [`obs`] is the
 //! observability spine: a lock-free metrics registry, RAII span tracing
 //! across every layer, and a Chrome-trace exporter (`repro ... --trace
 //! out.trace.json`, load in Perfetto). [`sync`] is the loom-aware
@@ -89,6 +93,7 @@ pub mod engine;
 pub mod error;
 pub mod figures;
 pub mod fim;
+pub mod net;
 pub mod obs;
 pub mod runtime;
 pub mod stream;
@@ -109,6 +114,7 @@ pub mod prelude {
         generate_rules, sort_frequents, CollectSink, CountSink, Frequent, FrequentSink, Item,
         ItemSet, MinSup, PooledSink, Tid, TopKSink,
     };
+    pub use crate::net::{RemoteShardSet, ShardWorker};
     pub use crate::obs::{self, MetricsSnapshot, SpanGuard};
     pub use crate::stream::{
         BatchSnapshot, BatchSource, IngestConfig, IngestStats, MineMode, ServingSnapshot,

@@ -1,0 +1,27 @@
+//! Wire format and transport layer that moves streaming shards out of
+//! the process.
+//!
+//! Two layers, zero-dependency like the rest of the crate:
+//!
+//! * [`wire`] — a versioned, length-prefixed, explicitly little-endian
+//!   wire format. Every payload that crosses a process boundary
+//!   (tid-bitmap columns, pooled itemset arenas, window batches, shard
+//!   stats) implements the [`wire::Wire`] codec, and every message
+//!   travels inside a CRC-guarded [`wire::Frame`]. Corrupt, truncated,
+//!   or version-skewed bytes decode to typed [`crate::error::Error::Net`]
+//!   values — never panics.
+//! * [`transport`] — blocking framed TCP on `std::net`: the
+//!   [`transport::ShardWorker`] accept loop hosting shard replicas
+//!   (`repro shard-worker --listen ADDR`), and the driver-side
+//!   [`transport::RemoteShardSet`] that mirrors the in-process
+//!   `ShardedVerticalDb` apply/mine surface, with seeded chaos faults,
+//!   bounded retries, and degradation to driver-local mining on worker
+//!   loss.
+
+pub mod transport;
+pub mod wire;
+
+pub use transport::{
+    Bounds, FramedConn, RemoteNetStats, RemoteShardSet, ShardWorker, WorkerShardStats,
+};
+pub use wire::{Frame, FrameKind, Reader, Wire, VERSION};

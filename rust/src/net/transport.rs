@@ -1,0 +1,961 @@
+//! Blocking framed TCP transport: shard workers and the driver-side
+//! remote shard set.
+//!
+//! One [`FramedConn`] carries [`Frame`]s over a `std::net::TcpStream`
+//! with connect/read/write timeouts. A [`ShardWorker`] hosts N
+//! [`IncrementalVerticalDb`] shard replicas behind an accept loop and
+//! serves four RPCs — `ApplyBatch`, `MineClasses`, `Stats`, `Shutdown`
+//! — each request answered by exactly one reply frame. The driver side
+//! is [`RemoteShardSet`]: the same apply/mine surface as the in-process
+//! [`crate::stream::ShardedVerticalDb`], so the streaming miner
+//! dispatches local-vs-remote behind one enum.
+//!
+//! **Tid-space alignment across the wire.** The driver keeps its own
+//! always-exact store; workers hold replicas of their shard slices.
+//! Every `ApplyBatch` reply carries the worker's post-apply
+//! [`Bounds`] (`txns`, `live_lo`, `next`), which the driver checks
+//! against its mirror — replicas therefore advance (and compact) in
+//! lockstep with the driver or get marked lost, never silently drift.
+//! `MineClasses` re-checks the invariant from the other side: the
+//! worker verifies that the shipped supports of atoms it owns match its
+//! replica before mining.
+//!
+//! **Fault handling.** Each logical RPC is retried once (reconnect +
+//! resend) — the bounded-retry shape of the PR-8 scheduler, and exactly
+//! what the seeded [`ChaosPolicy`] net faults (connection drops, reply
+//! corruption) are bounded against. `ApplyBatch` is not idempotent, so
+//! its recovery goes through a `Stats` probe: the replica's bounds
+//! reveal whether the apply landed before the reply was lost. A worker
+//! that stays unreachable is marked **lost** and the miner degrades to
+//! a driver-local full re-mine from its always-exact store.
+
+use std::collections::HashSet;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use crate::algorithms::partitioners::ReverseHashClassPartitioner;
+use crate::engine::chaos::{ChaosPolicy, NetFault};
+use crate::engine::Partitioner;
+use crate::error::{Error, Result};
+use crate::fim::{Item, MineScratch, PooledSink, Tid, TidBitmap};
+use crate::stream::job::mine_class;
+use crate::stream::sharded::ShardLoad;
+use crate::stream::IncrementalVerticalDb;
+use crate::util::Stopwatch;
+
+use super::wire::{Frame, FrameKind, Reader, Wire, HEADER_LEN, MAX_BODY};
+
+/// Timeout for establishing a worker connection.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+/// Driver-side read timeout per reply (covers one remote mine).
+pub const READ_TIMEOUT: Duration = Duration::from_secs(60);
+/// Write timeout for one frame, both sides.
+pub const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Network-plane instrumentation cells, resolved once (see [`crate::obs`]).
+struct NetObs {
+    bytes_tx: &'static crate::obs::Counter,
+    bytes_rx: &'static crate::obs::Counter,
+    rpc_wall_us: &'static crate::obs::Histogram,
+    rpc_retries: &'static crate::obs::Counter,
+    workers_lost: &'static crate::obs::Counter,
+}
+
+fn net_obs() -> &'static NetObs {
+    static OBS: crate::sync::global::OnceLock<NetObs> = crate::sync::global::OnceLock::new();
+    OBS.get_or_init(|| NetObs {
+        bytes_tx: crate::obs::counter("net.bytes_tx"),
+        bytes_rx: crate::obs::counter("net.bytes_rx"),
+        rpc_wall_us: crate::obs::histogram("net.rpc_wall_us"),
+        rpc_retries: crate::obs::counter("net.rpc_retries"),
+        workers_lost: crate::obs::counter("net.workers_lost"),
+    })
+}
+
+/// Tid-space position of a shard replica: `(txns, live_lo, next)`. The
+/// alignment token exchanged on every handshake and apply.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Bounds {
+    /// Live transactions in the window.
+    pub txns: u64,
+    /// First live tid (grows until compaction rebases it to 0).
+    pub live_lo: Tid,
+    /// Next tid to be assigned.
+    pub next: Tid,
+}
+
+impl Wire for Bounds {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.txns.encode(out);
+        self.live_lo.encode(out);
+        self.next.encode(out);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(Bounds { txns: r.u64()?, live_lo: r.u32()?, next: r.u32()? })
+    }
+}
+
+/// `Hello` request: the shard layout this worker participates in.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Hello {
+    /// Total shards across the ensemble (= routing modulus).
+    pub total_shards: u64,
+    /// Global shard indices this worker hosts.
+    pub owned: Vec<u32>,
+}
+
+impl Wire for Hello {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.total_shards.encode(out);
+        self.owned.encode(out);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(Hello { total_shards: r.u64()?, owned: Vec::<u32>::decode(r)? })
+    }
+}
+
+/// `ApplyBatch` request: one normalized window batch plus the eviction
+/// hints previewed for it, broadcast to every worker (each filters rows
+/// to its owned items, row counts preserved — the tid-space alignment
+/// invariant).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ApplyBatchReq {
+    /// Normalized rows of the incoming batch.
+    pub rows: Vec<Vec<Item>>,
+    /// Evictions to run after the append: `(txns, touched items)`.
+    pub evictions: Vec<(u64, Vec<Item>)>,
+}
+
+impl Wire for ApplyBatchReq {
+    fn encode(&self, out: &mut Vec<u8>) {
+        (self.rows.len() as u64).encode(out);
+        for row in &self.rows {
+            row.encode(out);
+        }
+        (self.evictions.len() as u64).encode(out);
+        for (txns, touched) in &self.evictions {
+            txns.encode(out);
+            touched.encode(out);
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let n = r.seq_len(8)?;
+        let mut rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            rows.push(Vec::<Item>::decode(r)?);
+        }
+        let n = r.seq_len(16)?;
+        let mut evictions = Vec::with_capacity(n);
+        for _ in 0..n {
+            evictions.push((r.u64()?, Vec::<Item>::decode(r)?));
+        }
+        Ok(ApplyBatchReq { rows, evictions })
+    }
+}
+
+/// `MineClasses` request: the full support-ordered atom list (tid
+/// columns included — this is the shard-motion payload) plus the
+/// absolute support threshold. Each worker derives its own class groups
+/// from the shared reverse-hash dealing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MineReq {
+    /// Absolute support threshold for this emission.
+    pub min_sup: u32,
+    /// Frequent atoms in Phase-1 total order: `(item, tid column,
+    /// support)`.
+    pub atoms: Vec<(Item, TidBitmap, u32)>,
+}
+
+impl Wire for MineReq {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.min_sup.encode(out);
+        (self.atoms.len() as u64).encode(out);
+        for (item, bm, support) in &self.atoms {
+            item.encode(out);
+            support.encode(out);
+            bm.encode(out);
+        }
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        let min_sup = r.u32()?;
+        let n = r.seq_len(24)?;
+        let mut atoms = Vec::with_capacity(n);
+        for _ in 0..n {
+            let item = r.u32()?;
+            let support = r.u32()?;
+            let bm = TidBitmap::decode(r)?;
+            atoms.push((item, bm, support));
+        }
+        Ok(MineReq { min_sup, atoms })
+    }
+}
+
+/// One shard's scatter-gather result inside a `Mined` reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MinedShard {
+    /// Global shard index that mined this group.
+    pub shard: u64,
+    /// Wall time of the group's mining task.
+    pub wall: Duration,
+    /// Itemsets emitted into the sink.
+    pub itemsets: u64,
+    /// The pooled arena of mined itemsets, shipped as one blob.
+    pub sink: PooledSink,
+}
+
+impl Wire for MinedShard {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.shard.encode(out);
+        self.wall.encode(out);
+        self.itemsets.encode(out);
+        self.sink.encode(out);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(MinedShard {
+            shard: r.u64()?,
+            wall: Duration::decode(r)?,
+            itemsets: r.u64()?,
+            sink: PooledSink::decode(r)?,
+        })
+    }
+}
+
+/// Per-shard accounting in a `StatsReply`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerShardStats {
+    /// Global shard index.
+    pub shard: u64,
+    /// Rows that contained at least one owned item.
+    pub rows: u64,
+    /// Postings appended to the replica.
+    pub postings: u64,
+    /// The replica's tid-space position.
+    pub bounds: Bounds,
+}
+
+impl Wire for WorkerShardStats {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.shard.encode(out);
+        self.rows.encode(out);
+        self.postings.encode(out);
+        self.bounds.encode(out);
+    }
+
+    fn decode(r: &mut Reader<'_>) -> Result<Self> {
+        Ok(WorkerShardStats {
+            shard: r.u64()?,
+            rows: r.u64()?,
+            postings: r.u64()?,
+            bounds: Bounds::decode(r)?,
+        })
+    }
+}
+
+/// One framed, timeout-guarded TCP connection. Every transport failure
+/// (including timeouts and short reads) surfaces as [`Error::Net`].
+#[derive(Debug)]
+pub struct FramedConn {
+    stream: TcpStream,
+    peer: String,
+}
+
+impl FramedConn {
+    /// Connect to `addr` (`host:port`) with [`CONNECT_TIMEOUT`] and arm
+    /// the read/write timeouts.
+    pub fn connect(addr: &str) -> Result<FramedConn> {
+        let resolved: Vec<SocketAddr> = addr
+            .to_socket_addrs()
+            .map_err(|e| Error::net(format!("cannot resolve {addr}: {e}")))?
+            .collect();
+        let first = resolved
+            .first()
+            .ok_or_else(|| Error::net(format!("{addr} resolves to no address")))?;
+        let stream = TcpStream::connect_timeout(first, CONNECT_TIMEOUT)
+            .map_err(|e| Error::net(format!("cannot connect to {addr}: {e}")))?;
+        FramedConn::from_stream(stream, READ_TIMEOUT)
+    }
+
+    /// Wrap an accepted stream (worker side: no read timeout, the driver
+    /// is allowed to idle between batches).
+    fn accept(stream: TcpStream) -> Result<FramedConn> {
+        FramedConn::from_stream(stream, Duration::ZERO)
+    }
+
+    fn from_stream(stream: TcpStream, read_timeout: Duration) -> Result<FramedConn> {
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+        let wrap = |e: std::io::Error| Error::net(format!("socket setup to {peer}: {e}"));
+        stream.set_nodelay(true).map_err(wrap)?;
+        let read = if read_timeout.is_zero() { None } else { Some(read_timeout) };
+        stream.set_read_timeout(read).map_err(wrap)?;
+        stream.set_write_timeout(Some(WRITE_TIMEOUT)).map_err(wrap)?;
+        Ok(FramedConn { peer, stream })
+    }
+
+    /// The peer address, for diagnostics.
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    /// Write one frame (header + body in a single buffer).
+    pub fn send(&mut self, frame: &Frame) -> Result<()> {
+        let bytes = frame.encode();
+        self.stream
+            .write_all(&bytes)
+            .and_then(|()| self.stream.flush())
+            .map_err(|e| Error::net(format!("send to {}: {e}", self.peer)))?;
+        if crate::obs::enabled() {
+            net_obs().bytes_tx.incr(bytes.len() as u64);
+        }
+        Ok(())
+    }
+
+    /// Read one frame's raw bytes (header + body). Split from
+    /// [`FramedConn::recv`] so the chaos reply-corruption fault can flip
+    /// a byte *before* the frame is decoded — corruption then flows
+    /// through the real CRC/decode rejection path.
+    pub fn recv_bytes(&mut self) -> Result<Vec<u8>> {
+        let mut header = [0u8; HEADER_LEN];
+        self.stream
+            .read_exact(&mut header)
+            .map_err(|e| Error::net(format!("recv header from {}: {e}", self.peer)))?;
+        let (_, len) = Frame::parse_header(&header)?;
+        debug_assert!(len <= MAX_BODY, "parse_header bounds the body");
+        let mut bytes = vec![0u8; HEADER_LEN + len];
+        bytes[..HEADER_LEN].copy_from_slice(&header);
+        self.stream
+            .read_exact(&mut bytes[HEADER_LEN..])
+            .map_err(|e| Error::net(format!("recv body from {}: {e}", self.peer)))?;
+        if crate::obs::enabled() {
+            net_obs().bytes_rx.incr(bytes.len() as u64);
+        }
+        Ok(bytes)
+    }
+
+    /// Read and decode one frame.
+    pub fn recv(&mut self) -> Result<Frame> {
+        Frame::decode(&self.recv_bytes()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Replica state a worker builds from the driver's `Hello` and keeps
+/// across reconnects (a chaos-dropped connection must not reset the
+/// replicas — the driver verifies continuity through the handshake
+/// bounds).
+struct WorkerState {
+    total: usize,
+    owned: Vec<usize>,
+    router: ReverseHashClassPartitioner,
+    shards: Vec<IncrementalVerticalDb>,
+    loads: Vec<ShardLoad>,
+    /// Scratch dirty set for the replica appends (the driver owns the
+    /// real dirty bookkeeping).
+    dirty: HashSet<Item>,
+}
+
+impl WorkerState {
+    fn new(hello: &Hello) -> Result<WorkerState> {
+        let total = usize::try_from(hello.total_shards)
+            .map_err(|_| Error::net("total_shards overflows usize"))?;
+        if total == 0 || hello.owned.is_empty() {
+            return Err(Error::net("hello must name at least one shard"));
+        }
+        let owned: Vec<usize> = hello.owned.iter().map(|&s| s as usize).collect();
+        if let Some(&bad) = owned.iter().find(|&&s| s >= total) {
+            return Err(Error::net(format!("owned shard {bad} out of range 0..{total}")));
+        }
+        Ok(WorkerState {
+            total,
+            owned: owned.clone(),
+            router: ReverseHashClassPartitioner::new(total),
+            shards: owned.iter().map(|_| IncrementalVerticalDb::new()).collect(),
+            loads: vec![ShardLoad::default(); owned.len()],
+            dirty: HashSet::new(),
+        })
+    }
+
+    /// The replicas' shared tid-space position; errors if the owned
+    /// shards ever disagree (an internal invariant violation).
+    fn bounds(&self) -> Result<Bounds> {
+        let first = &self.shards[0];
+        let (live_lo, next) = first.tid_bounds();
+        let bounds = Bounds { txns: first.txns() as u64, live_lo, next };
+        for (k, shard) in self.shards.iter().enumerate() {
+            let (lo, hi) = shard.tid_bounds();
+            if (shard.txns() as u64, lo, hi) != (bounds.txns, bounds.live_lo, bounds.next) {
+                return Err(Error::net(format!(
+                    "worker replicas out of alignment: shard slot {k} at ({}, {lo}, {hi}), \
+                     slot 0 at ({}, {}, {})",
+                    shard.txns(),
+                    bounds.txns,
+                    bounds.live_lo,
+                    bounds.next
+                )));
+            }
+        }
+        Ok(bounds)
+    }
+
+    /// Apply one broadcast batch: per owned shard, filter rows to owned
+    /// items (row count preserved) and run append-then-evictions —
+    /// byte-for-byte the `ShardedVerticalDb` scatter semantics, so the
+    /// replica advances and compacts in lockstep with the driver mirror.
+    fn apply(&mut self, req: &ApplyBatchReq) -> Result<Bounds> {
+        for k in 0..self.owned.len() {
+            let s = self.owned[k];
+            let shard_rows: Vec<Vec<Item>> = req
+                .rows
+                .iter()
+                .map(|row| {
+                    row.iter().copied().filter(|&i| self.router.shard_of_item(i) == s).collect()
+                })
+                .collect();
+            for row in &shard_rows {
+                if !row.is_empty() {
+                    self.loads[k].rows += 1;
+                    self.loads[k].postings += row.len() as u64;
+                }
+            }
+            self.dirty.clear();
+            self.shards[k].append(&shard_rows, &mut self.dirty);
+            for (txns, touched) in &req.evictions {
+                let txns = usize::try_from(*txns)
+                    .map_err(|_| Error::net("eviction txns overflows usize"))?;
+                let hint: Vec<Item> = touched
+                    .iter()
+                    .copied()
+                    .filter(|&i| self.router.shard_of_item(i) == s)
+                    .collect();
+                self.dirty.clear();
+                self.shards[k].evict_touched(txns, &hint, &mut self.dirty);
+            }
+        }
+        self.bounds()
+    }
+
+    /// Mine this worker's class groups over the shipped atoms. Before
+    /// mining, the shipped supports of owned atoms are checked against
+    /// the replica — the cross-wire half of the alignment invariant.
+    fn mine(&mut self, req: &MineReq) -> Result<Vec<MinedShard>> {
+        for (item, _, support) in &req.atoms {
+            let s = self.router.shard_of_item(*item);
+            if let Some(k) = self.owned.iter().position(|&o| o == s) {
+                let local = self.shards[k].support(*item);
+                if local != *support {
+                    return Err(Error::net(format!(
+                        "tid-space misalignment: item {item} has support {local} on the \
+                         replica, driver shipped {support}"
+                    )));
+                }
+            }
+        }
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); self.owned.len()];
+        if req.atoms.len() >= 2 {
+            for i in 0..req.atoms.len() - 1 {
+                let s = self.router.partition(&i);
+                if let Some(k) = self.owned.iter().position(|&o| o == s) {
+                    groups[k].push(i);
+                }
+            }
+        }
+        let mut mined = Vec::new();
+        for (k, group) in groups.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            let sw = Stopwatch::start();
+            let mut found = PooledSink::with_capacity(group.len() * 8, group.len() * 4);
+            let mut scratch = MineScratch::new();
+            for i in group {
+                found = mine_class(&req.atoms, i, req.min_sup, found, &mut scratch);
+            }
+            mined.push(MinedShard {
+                shard: self.owned[k] as u64,
+                wall: sw.elapsed(),
+                itemsets: found.len() as u64,
+                sink: found,
+            });
+        }
+        Ok(mined)
+    }
+
+    fn stats(&self) -> Result<Vec<WorkerShardStats>> {
+        let bounds = self.bounds()?;
+        Ok(self
+            .owned
+            .iter()
+            .zip(&self.loads)
+            .map(|(&shard, load)| WorkerShardStats {
+                shard: shard as u64,
+                rows: load.rows,
+                postings: load.postings,
+                bounds,
+            })
+            .collect())
+    }
+}
+
+/// A bound shard-worker endpoint: accepts driver connections serially
+/// and serves the shard RPCs until a `Shutdown` frame arrives. Replica
+/// state persists across reconnects; the handshake bounds let the
+/// driver verify continuity.
+#[derive(Debug)]
+pub struct ShardWorker {
+    listener: TcpListener,
+}
+
+impl ShardWorker {
+    /// Bind the listen address (`host:port`; port `0` picks a free one).
+    pub fn bind(addr: &str) -> Result<ShardWorker> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::net(format!("cannot bind {addr}: {e}")))?;
+        Ok(ShardWorker { listener })
+    }
+
+    /// The actually-bound address (resolves port `0`).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().map_err(|e| Error::net(format!("local_addr: {e}")))
+    }
+
+    /// Serve until a `Shutdown` RPC. Connections are handled one at a
+    /// time (the driver holds one connection per worker); a dropped
+    /// connection sends the worker back to `accept` with its replica
+    /// state intact.
+    pub fn run(self) -> Result<()> {
+        let mut state: Option<WorkerState> = None;
+        loop {
+            let (stream, _) = self
+                .listener
+                .accept()
+                .map_err(|e| Error::net(format!("accept: {e}")))?;
+            let mut conn = match FramedConn::accept(stream) {
+                Ok(c) => c,
+                Err(_) => continue,
+            };
+            match serve_conn(&mut conn, &mut state) {
+                Ok(true) => return Ok(()),
+                // Connection died (driver gone, reconnect pending) or the
+                // stream turned to garbage — wait for the next connection.
+                Ok(false) | Err(_) => continue,
+            }
+        }
+    }
+}
+
+/// Serve one driver connection; `Ok(true)` means a `Shutdown` was
+/// acknowledged and the worker should exit.
+fn serve_conn(conn: &mut FramedConn, state: &mut Option<WorkerState>) -> Result<bool> {
+    loop {
+        let frame = conn.recv()?;
+        let reply = handle_request(&frame, state);
+        match reply {
+            Ok(reply) => {
+                conn.send(&reply)?;
+                if frame.kind == FrameKind::Shutdown {
+                    return Ok(true);
+                }
+            }
+            Err(e) => {
+                // Request-level failure: report it in-band and keep
+                // serving — a misaligned mine must not kill the worker.
+                conn.send(&Frame::new(FrameKind::Err, e.to_string().into_bytes()))?;
+            }
+        }
+    }
+}
+
+fn handle_request(frame: &Frame, state: &mut Option<WorkerState>) -> Result<Frame> {
+    match frame.kind {
+        FrameKind::Hello => {
+            let hello = Hello::from_bytes(&frame.body)?;
+            if let Some(st) = state.as_ref() {
+                let owned: Vec<usize> = hello.owned.iter().map(|&s| s as usize).collect();
+                if st.total as u64 != hello.total_shards || st.owned != owned {
+                    return Err(Error::net(format!(
+                        "hello layout changed: worker hosts {:?} of {}, driver says {:?} of {}",
+                        st.owned, st.total, owned, hello.total_shards
+                    )));
+                }
+            } else {
+                *state = Some(WorkerState::new(&hello)?);
+            }
+            let st = state.as_ref().expect("hello just ensured state");
+            Ok(Frame::from_msg(FrameKind::HelloAck, &st.bounds()?))
+        }
+        FrameKind::ApplyBatch => {
+            let st = state.as_mut().ok_or_else(|| Error::net("ApplyBatch before Hello"))?;
+            let req = ApplyBatchReq::from_bytes(&frame.body)?;
+            Ok(Frame::from_msg(FrameKind::ApplyAck, &st.apply(&req)?))
+        }
+        FrameKind::MineClasses => {
+            let st = state.as_mut().ok_or_else(|| Error::net("MineClasses before Hello"))?;
+            let req = MineReq::from_bytes(&frame.body)?;
+            Ok(Frame::from_msg(FrameKind::Mined, &st.mine(&req)?))
+        }
+        FrameKind::Stats => {
+            let st = state.as_ref().ok_or_else(|| Error::net("Stats before Hello"))?;
+            Ok(Frame::from_msg(FrameKind::StatsReply, &st.stats()?))
+        }
+        FrameKind::Shutdown => Ok(Frame::new(FrameKind::Ok, Vec::new())),
+        other => Err(Error::net(format!("unexpected request kind {other:?}"))),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Driver side
+// ---------------------------------------------------------------------------
+
+/// One remote worker slot.
+#[derive(Debug)]
+struct Worker {
+    addr: String,
+    conn: Option<FramedConn>,
+    lost: bool,
+    /// Logical RPC sequence number — the stable chaos victim identity;
+    /// retries of one RPC share it, so injected faults stay bounded.
+    rpc_seq: u64,
+}
+
+/// Cumulative remote-plane accounting (driver side), surfaced through
+/// [`RemoteShardSet::net_stats`] and the `net.*` metrics.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RemoteNetStats {
+    /// Logical RPCs issued.
+    pub rpcs: u64,
+    /// RPC attempts that failed and were retried or probed.
+    pub retries: u64,
+    /// Workers marked lost (unreachable after bounded retry).
+    pub workers_lost: u64,
+}
+
+/// Driver-side handle to an ensemble of shard workers: one global shard
+/// per worker, the same apply/mine surface as the in-process
+/// [`crate::stream::ShardedVerticalDb`]. See the module docs for the
+/// alignment and fault-handling contracts.
+#[derive(Debug)]
+pub struct RemoteShardSet {
+    workers: Vec<Worker>,
+    total_shards: usize,
+    /// The driver mirror's bounds after the last successful apply — what
+    /// reconnect handshakes and recovery probes are verified against.
+    bounds: Bounds,
+    chaos: Option<ChaosPolicy>,
+    stats: RemoteNetStats,
+}
+
+impl RemoteShardSet {
+    /// Connect to one worker per address and hand shard `w` to worker
+    /// `w` (routing modulus = worker count, matching the in-process
+    /// `--shards N` twin). Workers must be fresh: a handshake returning
+    /// non-zero bounds means the endpoint holds another run's state.
+    pub fn connect(addrs: &[String]) -> Result<RemoteShardSet> {
+        if addrs.is_empty() {
+            return Err(Error::net("need at least one worker address"));
+        }
+        let mut set = RemoteShardSet {
+            workers: addrs
+                .iter()
+                .map(|a| Worker { addr: a.clone(), conn: None, lost: false, rpc_seq: 0 })
+                .collect(),
+            total_shards: addrs.len(),
+            bounds: Bounds::default(),
+            chaos: None,
+            stats: RemoteNetStats::default(),
+        };
+        for w in 0..set.workers.len() {
+            set.ensure_conn(w)?;
+        }
+        Ok(set)
+    }
+
+    /// Arm seeded net faults (connection drops / reply corruption) for
+    /// every subsequent RPC. The policy is cloned, so the attempt
+    /// counters are this set's own.
+    pub fn with_chaos(mut self, chaos: Option<&ChaosPolicy>) -> RemoteShardSet {
+        self.chaos = chaos.cloned();
+        self
+    }
+
+    /// Number of workers (= total shards).
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Total shards across the ensemble.
+    pub fn total_shards(&self) -> usize {
+        self.total_shards
+    }
+
+    /// True while every worker is reachable — the precondition for
+    /// remote mining (a lost worker's classes would go unmined).
+    pub fn all_live(&self) -> bool {
+        self.workers.iter().all(|w| !w.lost)
+    }
+
+    /// Cumulative RPC/retry/loss accounting.
+    pub fn net_stats(&self) -> RemoteNetStats {
+        self.stats
+    }
+
+    /// Broadcast one batch to every live worker and verify each reply
+    /// against `after` (the driver mirror's post-apply bounds).
+    /// Unreachable or misaligned workers are marked lost — the mirror
+    /// stays exact regardless, so this never fails the ingest path.
+    pub fn apply_batch(
+        &mut self,
+        rows: &[Vec<Item>],
+        evictions: &[(usize, Vec<Item>)],
+        after: Bounds,
+    ) {
+        let req = ApplyBatchReq {
+            rows: rows.to_vec(),
+            evictions: evictions
+                .iter()
+                .map(|(txns, touched)| (*txns as u64, touched.clone()))
+                .collect(),
+        };
+        let frame = Frame::from_msg(FrameKind::ApplyBatch, &req);
+        let before = self.bounds;
+        for w in 0..self.workers.len() {
+            if self.workers[w].lost {
+                continue;
+            }
+            if let Err(e) = self.apply_one(w, &frame, before, after) {
+                self.mark_lost(w, &e);
+            }
+        }
+        self.bounds = after;
+    }
+
+    /// Scatter-gather a mine over the shipped atoms: every live worker
+    /// mines its class groups and replies one `Mined` frame. Requires
+    /// all workers live (class coverage is partitioned across them);
+    /// any failure marks the worker lost and errors, letting the
+    /// caller's bounded-retry path degrade to a driver-local re-mine.
+    pub fn mine_classes(
+        &mut self,
+        atoms: &[(Item, TidBitmap, u32)],
+        min_sup: u32,
+    ) -> Result<Vec<MinedShard>> {
+        if !self.all_live() {
+            return Err(Error::net("remote mine with lost workers"));
+        }
+        let req = MineReq { min_sup, atoms: atoms.to_vec() };
+        let frame = Frame::from_msg(FrameKind::MineClasses, &req);
+        let mut mined = Vec::new();
+        for w in 0..self.workers.len() {
+            let reply = match self.rpc_idempotent(w, &frame) {
+                Ok(r) => r,
+                Err(e) => {
+                    self.mark_lost(w, &e);
+                    return Err(e);
+                }
+            };
+            let shards: Vec<MinedShard> = reply.expect(FrameKind::Mined).map_err(|e| {
+                self.mark_lost(w, &e);
+                e
+            })?;
+            mined.extend(shards);
+        }
+        Ok(mined)
+    }
+
+    /// Gather per-shard accounting from every live worker.
+    pub fn worker_stats(&mut self) -> Result<Vec<WorkerShardStats>> {
+        let frame = Frame::new(FrameKind::Stats, Vec::new());
+        let mut out = Vec::new();
+        for w in 0..self.workers.len() {
+            if self.workers[w].lost {
+                continue;
+            }
+            let reply = self.rpc_idempotent(w, &frame)?;
+            out.extend(reply.expect::<Vec<WorkerShardStats>>(FrameKind::StatsReply)?);
+        }
+        Ok(out)
+    }
+
+    /// Best-effort `Shutdown` to every reachable worker (the worker
+    /// process exits after acknowledging).
+    pub fn shutdown(&mut self) {
+        for w in 0..self.workers.len() {
+            self.shutdown_worker(w);
+        }
+    }
+
+    /// Best-effort `Shutdown` to one worker — drains a single endpoint
+    /// (maintenance, or the worker-loss tests). The slot is *not*
+    /// marked lost here: the next RPC touching it discovers the dead
+    /// endpoint and takes the organic retry → probe → mark-lost path.
+    pub fn shutdown_worker(&mut self, w: usize) {
+        if self.workers[w].lost {
+            return;
+        }
+        let frame = Frame::new(FrameKind::Shutdown, Vec::new());
+        let _ = self.rpc_idempotent(w, &frame);
+        self.workers[w].conn = None;
+    }
+
+    /// Apply with idempotency recovery: on a failed attempt, probe the
+    /// replica's bounds — `after` means the apply landed and only the
+    /// reply was lost; `before` means it never arrived and a resend is
+    /// safe; anything else is drift and the worker is lost.
+    fn apply_one(&mut self, w: usize, frame: &Frame, before: Bounds, after: Bounds) -> Result<()> {
+        let seq = self.next_seq(w);
+        let verify = |got: Bounds| {
+            if got == after {
+                Ok(())
+            } else {
+                Err(Error::net(format!(
+                    "replica bounds {got:?} diverged from driver mirror {after:?}"
+                )))
+            }
+        };
+        match self.rpc_once(w, seq, frame) {
+            Ok(reply) => verify(reply.expect::<Bounds>(FrameKind::ApplyAck)?),
+            Err(_) => {
+                self.note_retry();
+                let got = self.probe_bounds(w)?;
+                if got == after {
+                    return Ok(());
+                }
+                if got != before {
+                    return Err(Error::net(format!(
+                        "replica bounds {got:?} match neither pre-apply {before:?} nor \
+                         post-apply {after:?}"
+                    )));
+                }
+                // Never applied: resend under the same sequence number
+                // (chaos already spent this RPC's injection budget).
+                let reply = self.rpc_once(w, seq, frame)?;
+                verify(reply.expect::<Bounds>(FrameKind::ApplyAck)?)
+            }
+        }
+    }
+
+    /// Read the replica's current bounds via a `Stats` RPC.
+    fn probe_bounds(&mut self, w: usize) -> Result<Bounds> {
+        let reply = self.rpc_idempotent(w, &Frame::new(FrameKind::Stats, Vec::new()))?;
+        let stats: Vec<WorkerShardStats> = reply.expect(FrameKind::StatsReply)?;
+        let first = stats
+            .first()
+            .ok_or_else(|| Error::net("stats probe returned no shards"))?;
+        if stats.iter().any(|s| s.bounds != first.bounds) {
+            return Err(Error::net("worker replicas disagree on bounds"));
+        }
+        Ok(first.bounds)
+    }
+
+    /// One logical idempotent RPC: a failed first attempt reconnects and
+    /// resends once under the same sequence number.
+    fn rpc_idempotent(&mut self, w: usize, frame: &Frame) -> Result<Frame> {
+        let seq = self.next_seq(w);
+        match self.rpc_once(w, seq, frame) {
+            Ok(reply) => Ok(reply),
+            Err(_) => {
+                self.note_retry();
+                self.rpc_once(w, seq, frame)
+            }
+        }
+    }
+
+    /// One RPC attempt: (re)connect if needed, send, receive, decode —
+    /// with the seeded net faults applied at their injection points.
+    fn rpc_once(&mut self, w: usize, seq: u64, frame: &Frame) -> Result<Frame> {
+        let fault = self.chaos.as_ref().and_then(|c| c.net_fault(w as u64, seq));
+        if fault == Some(NetFault::DropConnection) {
+            self.workers[w].conn = None;
+            return Err(Error::net(format!(
+                "chaos: connection to {} dropped",
+                self.workers[w].addr
+            )));
+        }
+        self.ensure_conn(w)?;
+        let sw = Stopwatch::start();
+        let mut sp = crate::obs::span("net.rpc");
+        sp.arg("worker", w as u64).arg("kind", frame.kind as u64);
+        let result = self.exchange(w, fault, frame);
+        if crate::obs::enabled() {
+            net_obs().rpc_wall_us.record(sw.elapsed().as_micros() as u64);
+        }
+        if result.is_err() {
+            // A failed attempt leaves the stream in an unknown framing
+            // position; drop it so the retry starts on a clean socket.
+            self.workers[w].conn = None;
+        }
+        result
+    }
+
+    /// Send + receive one frame on the established connection, applying
+    /// the seeded reply-corruption fault (a flipped byte) *before*
+    /// decode so corruption is rejected by the real CRC path.
+    fn exchange(&mut self, w: usize, fault: Option<NetFault>, frame: &Frame) -> Result<Frame> {
+        let conn = self.workers[w]
+            .conn
+            .as_mut()
+            .ok_or_else(|| Error::net("connection missing after ensure_conn"))?;
+        conn.send(frame)?;
+        let mut bytes = conn.recv_bytes()?;
+        if fault == Some(NetFault::CorruptReply) {
+            let mid = bytes.len() / 2;
+            bytes[mid] ^= 0x01;
+        }
+        Frame::decode(&bytes)
+    }
+
+    /// Connect + handshake if this worker has no live connection. The
+    /// `HelloAck` bounds must match the driver mirror — a restarted
+    /// (state-lost) worker is caught here, not at the next mine.
+    fn ensure_conn(&mut self, w: usize) -> Result<()> {
+        if self.workers[w].conn.is_some() {
+            return Ok(());
+        }
+        let mut conn = FramedConn::connect(&self.workers[w].addr)?;
+        let hello = Hello { total_shards: self.total_shards as u64, owned: vec![w as u32] };
+        conn.send(&Frame::from_msg(FrameKind::Hello, &hello))?;
+        let ack: Bounds = conn.recv()?.expect(FrameKind::HelloAck)?;
+        if ack != self.bounds {
+            return Err(Error::net(format!(
+                "worker {} joined at bounds {ack:?}, driver mirror at {:?} — replica \
+                 state was lost",
+                self.workers[w].addr, self.bounds
+            )));
+        }
+        self.workers[w].conn = Some(conn);
+        Ok(())
+    }
+
+    fn next_seq(&mut self, w: usize) -> u64 {
+        let seq = self.workers[w].rpc_seq;
+        self.workers[w].rpc_seq += 1;
+        self.stats.rpcs += 1;
+        seq
+    }
+
+    fn note_retry(&mut self) {
+        self.stats.retries += 1;
+        if crate::obs::enabled() {
+            net_obs().rpc_retries.incr(1);
+        }
+    }
+
+    fn mark_lost(&mut self, w: usize, why: &Error) {
+        if !self.workers[w].lost {
+            self.workers[w].lost = true;
+            self.workers[w].conn = None;
+            self.stats.workers_lost += 1;
+            if crate::obs::enabled() {
+                net_obs().workers_lost.incr(1);
+            }
+            eprintln!("net: worker {} lost: {why}", self.workers[w].addr);
+        }
+    }
+}

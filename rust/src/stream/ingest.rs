@@ -44,6 +44,7 @@ use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
 use crate::fim::Item;
+use crate::util::json::json_f64;
 
 /// Ingest instrumentation cells, resolved once (see [`crate::obs`]).
 struct IngestObs {
@@ -161,6 +162,27 @@ pub struct IngestStats {
     /// shows up as a growing `age`, instead of silently serving
     /// arbitrarily old numbers as if they were current.
     pub age: Duration,
+}
+
+impl IngestStats {
+    /// Flat JSON object for `repro stream --serve --stats-json PATH`:
+    /// lifetime counters verbatim, durations in seconds, shards in
+    /// store order. Schema pinned by `ingest_stats_json_schema` below.
+    pub fn to_json(&self) -> String {
+        let shards: Vec<String> = self.shards.iter().map(|s| s.to_json()).collect();
+        format!(
+            "{{\"batches\": {}, \"emissions\": {}, \"skipped\": {}, \"mine_failures\": {}, \
+             \"mine_retries\": {}, \"degraded\": {}, \"age_s\": {}, \"shards\": [{}]}}",
+            self.batches,
+            self.emissions,
+            self.skipped,
+            self.mine_failures,
+            self.mine_retries,
+            self.degraded,
+            json_f64(self.age.as_secs_f64()),
+            shards.join(", ")
+        )
+    }
 }
 
 /// Queue state shared between producers, the mining loop, and `drain`.
@@ -612,6 +634,35 @@ mod tests {
         (0..n as u32)
             .map(|i| vec![vec![i % 5, 5 + (i % 3)], vec![i % 5, 10 + (i % 2)]])
             .collect()
+    }
+
+    #[test]
+    fn ingest_stats_json_schema() {
+        let stats = IngestStats {
+            batches: 4,
+            emissions: 2,
+            skipped: 1,
+            mine_failures: 1,
+            mine_retries: 1,
+            degraded: false,
+            shards: vec![ShardStats {
+                rows: 3,
+                postings: 9,
+                mined_itemsets: 7,
+                mine_wall: Duration::from_millis(1500),
+                age: Duration::from_secs(2),
+            }],
+            age: Duration::from_secs(2),
+        };
+        // Pinned schema: `repro stream --serve --stats-json` consumers
+        // parse exactly this shape.
+        assert_eq!(
+            stats.to_json(),
+            "{\"batches\": 4, \"emissions\": 2, \"skipped\": 1, \"mine_failures\": 1, \
+             \"mine_retries\": 1, \"degraded\": false, \"age_s\": 2.000000, \"shards\": \
+             [{\"rows\": 3, \"postings\": 9, \"mined_itemsets\": 7, \"mine_wall_s\": 1.500000, \
+             \"age_s\": 2.000000}]}"
+        );
     }
 
     #[test]

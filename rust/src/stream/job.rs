@@ -31,7 +31,8 @@ use crate::fim::{
     bottom_up_with, generate_rules, rules_to_json, sort_frequents, Frequent, Item, MineScratch,
     MinSup, PooledSink, Rule, TidBitmap,
 };
-use crate::util::json::json_str;
+use crate::net::{Bounds, RemoteShardSet};
+use crate::util::json::{json_f64, json_str};
 use crate::util::Stopwatch;
 
 use super::sharded::ShardedVerticalDb;
@@ -267,6 +268,23 @@ pub struct ShardStats {
     pub age: Duration,
 }
 
+impl ShardStats {
+    /// Flat JSON object (hand-emitted like the bench reports): counters
+    /// verbatim, durations in seconds. Schema pinned by a unit test in
+    /// [`crate::stream::ingest`].
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"rows\": {}, \"postings\": {}, \"mined_itemsets\": {}, \"mine_wall_s\": {}, \
+             \"age_s\": {}}}",
+            self.rows,
+            self.postings,
+            self.mined_itemsets,
+            json_f64(self.mine_wall.as_secs_f64()),
+            json_f64(self.age.as_secs_f64())
+        )
+    }
+}
+
 /// What one shard's mining task did during one emission.
 struct ShardRun {
     shard: usize,
@@ -289,6 +307,9 @@ pub struct StreamingMiner {
     /// Sequence number of the newest ingested batch (0 before the first
     /// push) — what a skip-to-latest emission is attributed to.
     last_batch_id: u64,
+    /// Remote worker ensemble mirroring the store's shard layout;
+    /// `None` = everything mines in-process.
+    remote: Option<RemoteShardSet>,
 }
 
 impl StreamingMiner {
@@ -326,7 +347,39 @@ impl StreamingMiner {
             mine_stats: vec![(Duration::ZERO, 0); cfg.shards],
             cache: None,
             last_batch_id: 0,
+            remote: None,
         }
+    }
+
+    /// Attach a connected remote worker ensemble: every ingested batch
+    /// fans out to the workers and emissions mine remotely while all
+    /// workers are live. A lost worker degrades mining back in-process
+    /// — the local store stays always-exact either way, so snapshots
+    /// remain window-exact through worker loss.
+    ///
+    /// # Panics
+    ///
+    /// Panics when the ensemble's shard count differs from
+    /// `cfg.shards`: driver store and workers must share the routing
+    /// modulus or the scattered classes would not line up.
+    pub fn attach_remote(&mut self, remote: RemoteShardSet) {
+        assert_eq!(
+            remote.total_shards(),
+            self.cfg.shards,
+            "remote ensemble shard count must match cfg.shards"
+        );
+        self.remote = Some(remote);
+    }
+
+    /// The attached remote ensemble, if any.
+    pub fn remote(&self) -> Option<&RemoteShardSet> {
+        self.remote.as_ref()
+    }
+
+    /// Mutable access to the attached remote ensemble (worker stats,
+    /// shutdown).
+    pub fn remote_mut(&mut self) -> Option<&mut RemoteShardSet> {
+        self.remote.as_mut()
     }
 
     /// The job's configuration.
@@ -420,6 +473,16 @@ impl StreamingMiner {
             // evicted tid range from exactly the touched bitmaps.
             let evictions = self.window.pending_evictions();
             self.store.apply_batch_on(&self.ctx.inner.pool, &rows, &evictions, &mut self.dirty)?;
+            if let Some(remote) = self.remote.as_mut() {
+                // Broadcast the batch to the worker replicas and hand
+                // them the mirror's post-apply bounds to verify against
+                // — the cross-process half of tid-space alignment.
+                // Worker loss is absorbed here (the mirror is exact);
+                // mining degrades in-process at the next emission.
+                let (live_lo, next) = self.store.shard(0).tid_bounds();
+                let after = Bounds { txns: self.store.txns() as u64, live_lo, next };
+                remote.apply_batch(&rows, &evictions, after);
+            }
             let res = self.window.push(rows);
             debug_assert_eq!(res.evicted.len(), evictions.len(), "eviction preview diverged");
             self.last_batch_id = res.batch_id;
@@ -536,12 +599,20 @@ impl StreamingMiner {
                 stream_obs().churn_fallback.incr(1);
             }
             let atoms = self.store.atoms(min_sup_count, |_| true);
-            let (frequents, runs) = mine_atoms(&self.ctx, atoms, min_sup_count, self.cfg.shards)?;
+            let target = match self.remote.as_mut() {
+                Some(r) if r.all_live() => MineTarget::Remote(r),
+                _ => MineTarget::Local { shards: self.cfg.shards },
+            };
+            let (frequents, runs) = mine_atoms(&self.ctx, atoms, min_sup_count, target)?;
             self.record_mine(runs);
             return Ok((frequents, MinePlan::FullRemine, dirty_frequent, frequent_items));
         }
         let dirty_atoms = self.store.atoms(min_sup_count, |i| self.is_dirty(i));
-        let (fresh, runs) = mine_atoms(&self.ctx, dirty_atoms, min_sup_count, self.cfg.shards)?;
+        let target = match self.remote.as_mut() {
+            Some(r) if r.all_live() => MineTarget::Remote(r),
+            _ => MineTarget::Local { shards: self.cfg.shards },
+        };
+        let (fresh, runs) = mine_atoms(&self.ctx, dirty_atoms, min_sup_count, target)?;
         self.record_mine(runs);
         let cache = self.cache.as_ref().expect("checked above");
         // Reuse every cached itemset with at least one clean item: its
@@ -579,24 +650,43 @@ impl std::fmt::Debug for StreamingMiner {
 /// emits into a flat [`PooledSink`] (one arena per task instead of one
 /// `Vec` per itemset), decoded on the driver.
 ///
-/// With `shards <= 1` this is one task per class — the classic path.
-/// With more, classes are dealt to `shards` groups by the EclatV5
-/// reverse-hash partitioner over the dense class key (low key = heavy
-/// class, so the dealing balances the triangular weight) and each
-/// non-empty group runs as **one** task mining all of its classes
-/// through a single scratch arena and sink. Returns the frequents plus
+/// With `MineTarget::Local { shards: 1 }` this is one task per class —
+/// the classic path. With more shards, classes are dealt to `shards`
+/// groups by the EclatV5 reverse-hash partitioner over the dense class
+/// key (low key = heavy class, so the dealing balances the triangular
+/// weight) and each non-empty group runs as **one** task mining all of
+/// its classes through a single scratch arena and sink. With
+/// `MineTarget::Remote` the same dealing happens on the workers: the
+/// atom columns ship over the wire, each worker mines its owned groups
+/// and replies one pooled arena per group. Returns the frequents plus
 /// one [`ShardRun`] per executed task group for the shard stats.
 fn mine_atoms(
     ctx: &ClusterContext,
     atoms: Vec<(Item, TidBitmap, u32)>,
     min_sup: u32,
-    shards: usize,
+    target: MineTarget<'_>,
 ) -> Result<(Vec<Frequent>, Vec<ShardRun>)> {
     let mut out: Vec<Frequent> =
         atoms.iter().map(|(i, _, s)| Frequent::new(vec![*i], *s)).collect();
     if atoms.len() < 2 {
         return Ok((out, Vec::new()));
     }
+    let shards = match target {
+        MineTarget::Remote(remote) => {
+            let mined = remote.mine_classes(&atoms, min_sup)?;
+            let mut runs = Vec::with_capacity(mined.len());
+            for m in mined {
+                runs.push(ShardRun {
+                    shard: m.shard as usize,
+                    wall: m.wall,
+                    itemsets: m.itemsets,
+                });
+                m.sink.replay(&mut out);
+            }
+            return Ok((out, runs));
+        }
+        MineTarget::Local { shards } => shards,
+    };
     let shared = Arc::new(atoms);
     if shards <= 1 {
         let sw = Stopwatch::start();
@@ -658,11 +748,27 @@ fn mine_atoms(
     Ok((out, runs))
 }
 
+/// Where one emission's class mining runs: on the in-process executor
+/// pool, or scattered across a connected remote worker ensemble. Both
+/// arms deal classes with the same reverse-hash partitioner, so they
+/// produce the same itemset multiset over the same atoms.
+pub(crate) enum MineTarget<'a> {
+    /// Mine on the context pool, dealing classes to this many groups.
+    Local {
+        /// Class-group count (`1` = one task per class).
+        shards: usize,
+    },
+    /// Scatter-gather onto the remote shard workers.
+    Remote(&'a mut RemoteShardSet),
+}
+
 /// Mine the equivalence class of prefix atom `i` into `found` (returned
 /// so callers can thread one sink across several classes): bounded
 /// intersections build the members, then the arena-backed bottom-up
-/// search emits every frequent extension.
-fn mine_class(
+/// search emits every frequent extension. `pub(crate)` because the
+/// shard-worker transport mines its class groups through the very same
+/// routine — remote and local emissions stay byte-identical.
+pub(crate) fn mine_class(
     atoms: &[(Item, TidBitmap, u32)],
     i: usize,
     min_sup: u32,

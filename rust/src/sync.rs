@@ -4,8 +4,9 @@
 //! Every hand-rolled concurrent structure — the double-buffered snapshot
 //! cell in [`crate::stream::serve`], the metric cells in [`crate::obs`]
 //! (registry counters/gauges/histograms and the span `EventRing`), the
-//! executor queue in [`crate::engine::pool`], and the map-output store in
-//! [`crate::engine::shuffle`] — imports its primitives from here instead
+//! executor queue in [`crate::engine::pool`], the map-output store in
+//! [`crate::engine::shuffle`], and the wire/transport layer in
+//! [`crate::net`] — imports its primitives from here instead
 //! of from `std`. Under an ordinary build the re-exports *are* the `std`
 //! types (zero cost). Under `RUSTFLAGS="--cfg loom"` they become the
 //! [loom](https://docs.rs/loom) model checker's instrumented twins, and

@@ -54,6 +54,10 @@ fn fixtures_fail_with_file_line_and_rule_diagnostics() {
         "engine/chaos.rs:11: [chaos-determinism]",
         "stream/serve.rs:5: [shim-imports]",
         "stream/serve.rs:8: [shim-imports]",
+        "net/transport.rs:6: [shim-imports]",
+        "net/transport.rs:11: [socket-unwrap]",
+        "net/transport.rs:13: [socket-unwrap]",
+        "net/transport.rs:18: [socket-unwrap]",
     ];
     for needle in expected {
         assert!(stdout.contains(needle), "missing diagnostic `{needle}` in:\n{stdout}");
@@ -88,6 +92,9 @@ fn fixtures_respect_exemptions() {
     assert!(!stdout.contains("missing_safety.rs:21"), "justified unsafe block flagged:\n{stdout}");
     // The shim-imports allowlist (std::thread::current).
     assert!(!stdout.contains("stream/serve.rs:15"), "allowlisted line flagged:\n{stdout}");
+    // Propagated socket errors are fine; test regions may unwrap them.
+    assert!(!stdout.contains("net/transport.rs:22"), "propagated error flagged:\n{stdout}");
+    assert!(!stdout.contains("net/transport.rs:29"), "test socket unwrap flagged:\n{stdout}");
 }
 
 #[test]
@@ -101,6 +108,7 @@ fn list_prints_every_rule() {
         "safety-comment",
         "chaos-determinism",
         "shim-imports",
+        "socket-unwrap",
     ];
     for rule in rules {
         assert!(stdout.contains(rule), "rule `{rule}` missing from --list:\n{stdout}");

@@ -1,0 +1,395 @@
+//! End-to-end tests for the `net` layer (PR 10): wire-format golden
+//! vectors and seeded round-trips for every payload, decode hardening
+//! (truncation, corruption, version skew — typed errors, no panics),
+//! and loopback shard-worker runs: parity with the in-process sharded
+//! twin and the from-scratch oracle, survival of worker loss, seeded
+//! net chaos, and the `--workers` CLI usage contract.
+
+#![cfg(not(loom))]
+
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use rdd_eclat::algorithms::SeqEclat;
+use rdd_eclat::data::clickstream::{generate_range, ClickParams};
+use rdd_eclat::engine::{ChaosPolicy, ClusterContext};
+use rdd_eclat::fim::sink::FrequentSink;
+use rdd_eclat::fim::{sort_frequents, Database, Frequent, MinSup, PooledSink, TidBitmap};
+use rdd_eclat::net::transport::{ApplyBatchReq, Hello, MineReq, MinedShard, WorkerShardStats};
+use rdd_eclat::net::wire::crc32;
+use rdd_eclat::net::{Bounds, Frame, FrameKind, RemoteShardSet, ShardWorker, Wire, VERSION};
+use rdd_eclat::stream::window::Batch;
+use rdd_eclat::stream::{IngestStats, ShardStats, StreamConfig, StreamingMiner, WindowSpec};
+use rdd_eclat::util::prng::Rng;
+use rdd_eclat::util::prop::{check, Config};
+
+fn oracle(db: &Database, min_sup: MinSup) -> Vec<Frequent> {
+    let mut v = SeqEclat::mine(db, min_sup);
+    sort_frequents(&mut v);
+    v
+}
+
+/// Bind `n` shard workers on loopback port 0 and serve each on its own
+/// thread; returns the resolved addresses and the join handles.
+fn spawn_workers(n: usize) -> (Vec<String>, Vec<JoinHandle<()>>) {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..n {
+        let worker = ShardWorker::bind("127.0.0.1:0").expect("bind loopback");
+        addrs.push(worker.local_addr().expect("local addr").to_string());
+        handles.push(std::thread::spawn(move || worker.run().expect("worker run")));
+    }
+    (addrs, handles)
+}
+
+// ---------------------------------------------------------------------------
+// Wire format
+// ---------------------------------------------------------------------------
+
+fn rt<T: Wire + PartialEq + std::fmt::Debug>(v: &T) -> Result<(), String> {
+    let back = T::from_bytes(&v.to_bytes()).map_err(|e| format!("decode {v:?}: {e}"))?;
+    if &back != v {
+        return Err(format!("round-trip mismatch:\n got {back:?}\nwant {v:?}"));
+    }
+    Ok(())
+}
+
+fn random_bitmap(rng: &mut Rng) -> TidBitmap {
+    let universe = rng.below(200) as usize;
+    let mut bm = TidBitmap::new(universe);
+    for _ in 0..rng.below(64) {
+        if universe > 0 {
+            bm.insert(rng.below(universe as u64) as u32);
+        }
+    }
+    bm
+}
+
+fn random_sink(rng: &mut Rng) -> PooledSink {
+    let mut sink = PooledSink::with_capacity(8, 4);
+    for _ in 0..rng.below(12) {
+        let items: Vec<u32> = (0..rng.range(0, 5)).map(|_| rng.below(100) as u32).collect();
+        sink.emit(&items, rng.below(1000) as u32 + 1);
+    }
+    sink
+}
+
+fn random_rows(rng: &mut Rng) -> Vec<Vec<u32>> {
+    (0..rng.range(0, 6))
+        .map(|_| (0..rng.range(0, 5)).map(|_| rng.below(50) as u32).collect())
+        .collect()
+}
+
+fn random_shard_stats(rng: &mut Rng) -> ShardStats {
+    ShardStats {
+        rows: rng.below(1 << 40),
+        postings: rng.below(1 << 40),
+        mined_itemsets: rng.below(1 << 20),
+        mine_wall: Duration::from_nanos(rng.below(1 << 40)),
+        age: Duration::from_micros(rng.below(1 << 30)),
+    }
+}
+
+#[test]
+fn every_wire_payload_round_trips_across_seeds() {
+    check(Config::default().cases(60).seed(0x11E7), |rng| {
+        rt(&(rng.below(u64::MAX / 2)))?;
+        rt(&(rng.below(u64::MAX / 2) as u32))?;
+        rt(&rng.chance(0.5))?;
+        rt(&Duration::from_nanos(rng.below(1 << 50)))?;
+        rt(&random_bitmap(rng))?;
+        rt(&random_sink(rng))?;
+        rt(&random_rows(rng))?;
+        rt(&random_shard_stats(rng))?;
+        rt(&IngestStats {
+            batches: rng.below(1 << 30),
+            emissions: rng.below(1 << 30),
+            skipped: rng.below(100),
+            mine_failures: rng.below(100),
+            mine_retries: rng.below(100),
+            degraded: rng.chance(0.2),
+            shards: (0..rng.range(0, 4)).map(|_| random_shard_stats(rng)).collect(),
+            age: Duration::from_millis(rng.below(1 << 30)),
+        })?;
+        rt(&Batch {
+            id: rng.below(1 << 40),
+            tid_lo: rng.below(1 << 30) as u32,
+            txns: rng.range(0, 1000),
+            items: (0..rng.range(0, 8)).map(|_| rng.below(50) as u32).collect(),
+            rows: random_rows(rng),
+        })?;
+        rt(&Bounds {
+            txns: rng.below(1 << 40),
+            live_lo: rng.below(1 << 30) as u32,
+            next: rng.below(1 << 30) as u32,
+        })?;
+        rt(&Hello {
+            total_shards: rng.range(1, 8) as u64,
+            owned: (0..rng.range(1, 4)).map(|_| rng.below(8) as u32).collect(),
+        })?;
+        rt(&ApplyBatchReq {
+            rows: random_rows(rng),
+            evictions: (0..rng.range(0, 3))
+                .map(|_| {
+                    let touched = (0..rng.range(0, 4)).map(|_| rng.below(50) as u32).collect();
+                    (rng.below(100), touched)
+                })
+                .collect(),
+        })?;
+        rt(&MineReq {
+            min_sup: rng.below(100) as u32 + 1,
+            atoms: (0..rng.range(0, 5))
+                .map(|_| {
+                    (rng.below(50) as u32, random_bitmap(rng), rng.below(1000) as u32)
+                })
+                .collect(),
+        })?;
+        rt(&MinedShard {
+            shard: rng.below(8),
+            wall: Duration::from_micros(rng.below(1 << 30)),
+            itemsets: rng.below(1 << 20),
+            sink: random_sink(rng),
+        })?;
+        rt(&WorkerShardStats {
+            shard: rng.below(8),
+            rows: rng.below(1 << 30),
+            postings: rng.below(1 << 30),
+            bounds: Bounds { txns: rng.below(100), live_lo: 0, next: rng.below(100) as u32 },
+        })?;
+        // The frame envelope itself round-trips through encode/decode.
+        let frame = Frame::from_msg(FrameKind::ApplyBatch, &random_rows(rng));
+        let back = Frame::decode(&frame.encode()).map_err(|e| e.to_string())?;
+        if back != frame {
+            return Err("frame envelope round-trip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn golden_wire_vectors_are_pinned() {
+    // The CRC-32 (IEEE, reflected) check value, and the empty string.
+    assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    assert_eq!(crc32(b""), 0);
+    assert_eq!(VERSION, 1);
+
+    // Payload encodings are pinned little-endian layouts: changing any
+    // of these is a wire-protocol break and must bump `VERSION`.
+    assert_eq!(7u32.to_bytes(), vec![7, 0, 0, 0]);
+    assert_eq!(
+        vec![1u32, 258].to_bytes(),
+        vec![2, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 2, 1, 0, 0]
+    );
+    let bounds = Bounds { txns: 3, live_lo: 1, next: 5 };
+    assert_eq!(bounds.to_bytes(), vec![3, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 5, 0, 0, 0]);
+    let hello = Hello { total_shards: 2, owned: vec![1] };
+    assert_eq!(
+        hello.to_bytes(),
+        vec![2, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0, 0, 0, 0, 0, 1, 0, 0, 0]
+    );
+    let mut bm = TidBitmap::new(65);
+    bm.insert(0);
+    bm.insert(64);
+    let mut want = Vec::new();
+    want.extend_from_slice(&65u64.to_le_bytes()); // universe
+    want.extend_from_slice(&2u64.to_le_bytes()); // word count
+    want.extend_from_slice(&1u64.to_le_bytes()); // bit 0
+    want.extend_from_slice(&1u64.to_le_bytes()); // bit 64
+    assert_eq!(bm.to_bytes(), want);
+
+    // The frame envelope: magic "rdec", version, kind, len, crc, body.
+    let frame = Frame::from_msg(FrameKind::Hello, &hello);
+    let bytes = frame.encode();
+    assert_eq!(&bytes[0..4], &b"rdec"[..]);
+    assert_eq!(&bytes[4..6], &VERSION.to_le_bytes()[..]);
+    assert_eq!(&bytes[6..8], &1u16.to_le_bytes()[..]); // FrameKind::Hello
+    assert_eq!(&bytes[8..12], &(hello.to_bytes().len() as u32).to_le_bytes()[..]);
+    assert_eq!(&bytes[16..], &hello.to_bytes()[..]);
+    assert_eq!(Frame::decode(&bytes).expect("golden frame decodes"), frame);
+}
+
+#[test]
+fn decode_rejects_truncation_corruption_and_version_skew() {
+    let req = ApplyBatchReq {
+        rows: vec![vec![1, 2, 3], vec![], vec![7]],
+        evictions: vec![(2, vec![1, 9])],
+    };
+    let bytes = Frame::from_msg(FrameKind::ApplyBatch, &req).encode();
+
+    // Every proper prefix is a typed error, never a panic.
+    for cut in 0..bytes.len() {
+        assert!(Frame::decode(&bytes[..cut]).is_err(), "truncated at {cut} must fail");
+    }
+    // Every single-byte corruption is caught (magic/version/kind/len by
+    // their own checks, everything else by the CRC).
+    for i in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x20;
+        assert!(Frame::decode(&bad).is_err(), "corrupt byte {i} must fail");
+    }
+    // A peer speaking a different wire version is named as such.
+    let mut skew = bytes.clone();
+    skew[4] = 2;
+    let err = Frame::decode(&skew).expect_err("version skew").to_string();
+    assert!(err.contains("version"), "got: {err}");
+
+    // Body-level hardening: a length claim larger than the bytes
+    // present is rejected up front, not by attempting the allocation.
+    let mut huge = Vec::new();
+    huge.extend_from_slice(&u64::MAX.to_le_bytes());
+    let err = Vec::<u32>::from_bytes(&huge).expect_err("huge length claim").to_string();
+    assert!(err.contains("sequence"), "got: {err}");
+    let sane = vec![5u32, 6, 7].to_bytes();
+    for cut in 0..sane.len() {
+        assert!(Vec::<u32>::from_bytes(&sane[..cut]).is_err(), "body cut {cut} must fail");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loopback transport
+// ---------------------------------------------------------------------------
+
+#[test]
+fn loopback_two_workers_match_local_twin_and_oracle() {
+    let params = ClickParams {
+        sessions: 800,
+        items: 40,
+        avg_len: 2.5,
+        skew: 0.9,
+        locality: 0.5,
+        radius: 6,
+        drift: 40.0 / 800.0,
+    };
+    let min_sup = MinSup::count(3);
+    let spec = WindowSpec::sliding(4, 1);
+    let ctx = ClusterContext::builder().cores(2).build();
+    let cfg = StreamConfig { churn_threshold: 1.0, ..StreamConfig::new(spec, min_sup).shards(2) };
+    let mut local = StreamingMiner::new(ctx.clone(), cfg.clone());
+    let mut remote = StreamingMiner::new(ctx, cfg);
+    let (addrs, handles) = spawn_workers(2);
+    remote.attach_remote(RemoteShardSet::connect(&addrs).expect("connect workers"));
+
+    let (batch_size, n_batches) = (30, 14);
+    for b in 0..n_batches {
+        let rows = generate_range(&params, 99, b * batch_size, batch_size);
+        let want = local.push_batch(rows.clone()).expect("local push").expect("slide 1 emits");
+        let got = remote.push_batch(rows).expect("remote push").expect("slide 1 emits");
+        assert_eq!(got.frequents, want.frequents, "batch {b}: remote vs in-process twin");
+        assert_eq!(got.rules, want.rules, "batch {b}: rules diverged");
+        let exact = oracle(&remote.materialize_window(), min_sup);
+        assert_eq!(got.frequents, exact, "batch {b}: remote vs oracle, plan {:?}", got.plan);
+    }
+
+    let set = remote.remote_mut().expect("attached");
+    assert!(set.all_live(), "clean run must not lose a worker");
+    let net = set.net_stats();
+    assert_eq!(net.workers_lost, 0);
+    assert!(net.rpcs > 0, "remote mining must actually issue RPCs");
+    let stats = set.worker_stats().expect("worker stats");
+    assert_eq!(stats.len(), 2, "one shard per worker");
+    assert!(stats.iter().map(|s| s.postings).sum::<u64>() > 0, "replicas ingested postings");
+    let bounds = stats[0].bounds;
+    assert!(stats.iter().all(|s| s.bounds == bounds), "replicas share one tid space");
+    set.shutdown();
+    for h in handles {
+        h.join().expect("worker thread exits after Shutdown");
+    }
+}
+
+#[test]
+fn worker_loss_degrades_to_local_mining_and_stays_window_exact() {
+    let min_sup = MinSup::count(2);
+    let ctx = ClusterContext::builder().cores(2).build();
+    let cfg = StreamConfig::new(WindowSpec::sliding(3, 1), min_sup).shards(2);
+    let mut miner = StreamingMiner::new(ctx, cfg);
+    let (addrs, handles) = spawn_workers(2);
+    miner.attach_remote(RemoteShardSet::connect(&addrs).expect("connect workers"));
+    let batch = |step: u32| -> Vec<Vec<u32>> {
+        (0..4u32).map(|r| vec![step % 5, (step + r) % 5, 5 + (r % 2)]).collect()
+    };
+    for step in 0..4u32 {
+        let snap = miner.push_batch(batch(step)).expect("push").expect("slide 1 emits");
+        assert_eq!(snap.frequents, oracle(&miner.materialize_window(), min_sup), "step {step}");
+    }
+    assert!(miner.remote().expect("attached").all_live());
+
+    // Drain worker 1 only: the next broadcast discovers the dead
+    // endpoint (retry → bounds probe → mark lost) and mining degrades
+    // to the always-exact local mirror without skipping an emission.
+    miner.remote_mut().expect("attached").shutdown_worker(1);
+    for step in 4..9u32 {
+        let snap = miner.push_batch(batch(step)).expect("push").expect("slide 1 emits");
+        assert_eq!(snap.frequents, oracle(&miner.materialize_window(), min_sup), "step {step}");
+    }
+    let set = miner.remote_mut().expect("attached");
+    let net = set.net_stats();
+    assert_eq!(net.workers_lost, 1, "exactly the drained worker is lost");
+    assert!(net.retries >= 1, "loss must be discovered via the retry path");
+    assert!(!set.all_live());
+    set.shutdown();
+    for h in handles {
+        h.join().expect("worker thread exits");
+    }
+}
+
+#[test]
+fn seeded_net_chaos_keeps_parity_without_losing_workers() {
+    let min_sup = MinSup::count(2);
+    let ctx = ClusterContext::builder().cores(2).build();
+    let cfg = StreamConfig::new(WindowSpec::sliding(3, 1), min_sup).shards(2);
+    let mut miner = StreamingMiner::new(ctx, cfg);
+    let (addrs, handles) = spawn_workers(2);
+    let chaos = ChaosPolicy::new(0x0CEA).conn_drops(0.5).reply_corruption(0.5);
+    miner.attach_remote(
+        RemoteShardSet::connect(&addrs).expect("connect workers").with_chaos(Some(&chaos)),
+    );
+    for step in 0..10u32 {
+        let rows: Vec<Vec<u32>> =
+            (0..3u32).map(|r| vec![step % 4, (step + r) % 6, 9]).collect();
+        let snap = miner.push_batch(rows).expect("push").expect("slide 1 emits");
+        assert_eq!(snap.frequents, oracle(&miner.materialize_window(), min_sup), "step {step}");
+    }
+    let set = miner.remote_mut().expect("attached");
+    let net = set.net_stats();
+    assert!(net.retries > 0, "p=0.5 faults over dozens of RPCs must fire at least once");
+    assert_eq!(net.workers_lost, 0, "single-retry recovery absorbs every injected fault");
+    assert!(set.all_live());
+    set.shutdown();
+    for h in handles {
+        h.join().expect("worker thread exits");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI contract
+// ---------------------------------------------------------------------------
+
+fn run_repro(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .output()
+        .expect("run repro binary")
+}
+
+#[test]
+fn stream_workers_flag_usage_errors() {
+    // Malformed worker address: rejected before anything connects.
+    let out = run_repro(&["stream", "--workers", "nohost", "--batches", "1"]);
+    assert_eq!(out.status.code(), Some(2), "malformed address is a usage error");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("host:port"), "stderr: {stderr}");
+
+    // One shard per worker: the worker list fixes the shard count.
+    let out = run_repro(&["stream", "--workers", "127.0.0.1:9", "--shards", "2"]);
+    assert_eq!(out.status.code(), Some(2), "--workers with --shards is a usage error");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("mutually exclusive"), "stderr: {stderr}");
+}
+
+#[test]
+fn shard_worker_requires_listen_address() {
+    let out = run_repro(&["shard-worker"]);
+    assert_eq!(out.status.code(), Some(2), "--listen is required");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--listen"), "stderr: {stderr}");
+}

@@ -1,0 +1,31 @@
+//! Fixture: transport code unwrapping socket I/O and importing std
+//! concurrency directly. Never compiled — scanned by
+//! `tests/integration_lint.rs` only.
+
+// VIOLATION(shim-imports) on the next line (line 6).
+use std::sync::Arc;
+
+pub fn handshake(stream: &mut TcpStream) -> [u8; 16] {
+    let mut header = [0u8; 16];
+    // VIOLATION(socket-unwrap) on the next line (line 11).
+    stream.read_exact(&mut header).unwrap();
+    // VIOLATION(socket-unwrap) on the next line (line 13).
+    stream.write_all(&header).unwrap();
+    header
+}
+
+// VIOLATION(socket-unwrap) on the next line (line 18).
+pub fn dial(socket: UdpSocket, addr: &str) { socket.connect(addr).unwrap() }
+
+// NOT a violation: the error is propagated, not unwrapped.
+pub fn send(stream: &mut TcpStream, body: &[u8]) -> std::io::Result<()> {
+    stream.write_all(body)
+}
+
+#[cfg(test)]
+mod tests {
+    // NOT a violation: test code may unwrap loopback socket calls.
+    pub fn drain(stream: &mut std::net::TcpStream) {
+        stream.flush().unwrap();
+    }
+}
