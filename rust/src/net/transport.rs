@@ -31,7 +31,7 @@
 
 use std::collections::HashSet;
 use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::algorithms::partitioners::ReverseHashClassPartitioner;
@@ -267,18 +267,26 @@ pub struct FramedConn {
 
 impl FramedConn {
     /// Connect to `addr` (`host:port`) with [`CONNECT_TIMEOUT`] and arm
-    /// the read/write timeouts.
+    /// the read/write timeouts. Every resolved address is tried in
+    /// order (a hostname may resolve IPv6-first against an IPv4-only
+    /// listener); the last error is reported if none accepts.
     pub fn connect(addr: &str) -> Result<FramedConn> {
         let resolved: Vec<SocketAddr> = addr
             .to_socket_addrs()
             .map_err(|e| Error::net(format!("cannot resolve {addr}: {e}")))?
             .collect();
-        let first = resolved
-            .first()
-            .ok_or_else(|| Error::net(format!("{addr} resolves to no address")))?;
-        let stream = TcpStream::connect_timeout(first, CONNECT_TIMEOUT)
-            .map_err(|e| Error::net(format!("cannot connect to {addr}: {e}")))?;
-        FramedConn::from_stream(stream, READ_TIMEOUT)
+        if resolved.is_empty() {
+            return Err(Error::net(format!("{addr} resolves to no address")));
+        }
+        let mut last = None;
+        for sa in &resolved {
+            match TcpStream::connect_timeout(sa, CONNECT_TIMEOUT) {
+                Ok(stream) => return FramedConn::from_stream(stream, READ_TIMEOUT),
+                Err(e) => last = Some(e),
+            }
+        }
+        let e = last.expect("resolved is non-empty");
+        Err(Error::net(format!("cannot connect to {addr}: {e}")))
     }
 
     /// Wrap an accepted stream (worker side: no read timeout, the driver
@@ -648,6 +656,11 @@ pub struct RemoteShardSet {
     /// The driver mirror's bounds after the last successful apply — what
     /// reconnect handshakes and recovery probes are verified against.
     bounds: Bounds,
+    /// Post-apply bounds of the apply currently in flight, if any. A
+    /// replica that already landed the apply before its reply was lost
+    /// sits at these bounds, so the recovery reconnect's handshake must
+    /// accept them alongside the pre-apply `bounds`.
+    applying: Option<Bounds>,
     chaos: Option<ChaosPolicy>,
     stats: RemoteNetStats,
 }
@@ -668,6 +681,7 @@ impl RemoteShardSet {
                 .collect(),
             total_shards: addrs.len(),
             bounds: Bounds::default(),
+            applying: None,
             chaos: None,
             stats: RemoteNetStats::default(),
         };
@@ -769,7 +783,10 @@ impl RemoteShardSet {
         Ok(mined)
     }
 
-    /// Gather per-shard accounting from every live worker.
+    /// Gather per-shard accounting from every live worker. A worker
+    /// that fails both attempts is marked lost and skipped — stats from
+    /// the workers that responded are still returned, so end-of-run
+    /// reporting survives a worker dying between emissions.
     pub fn worker_stats(&mut self) -> Result<Vec<WorkerShardStats>> {
         let frame = Frame::new(FrameKind::Stats, Vec::new());
         let mut out = Vec::new();
@@ -777,8 +794,13 @@ impl RemoteShardSet {
             if self.workers[w].lost {
                 continue;
             }
-            let reply = self.rpc_idempotent(w, &frame)?;
-            out.extend(reply.expect::<Vec<WorkerShardStats>>(FrameKind::StatsReply)?);
+            let stats = self
+                .rpc_idempotent(w, &frame)
+                .and_then(|reply| reply.expect::<Vec<WorkerShardStats>>(FrameKind::StatsReply));
+            match stats {
+                Ok(s) => out.extend(s),
+                Err(e) => self.mark_lost(w, &e),
+            }
         }
         Ok(out)
     }
@@ -807,8 +829,23 @@ impl RemoteShardSet {
     /// Apply with idempotency recovery: on a failed attempt, probe the
     /// replica's bounds — `after` means the apply landed and only the
     /// reply was lost; `before` means it never arrived and a resend is
-    /// safe; anything else is drift and the worker is lost.
+    /// safe; anything else is drift and the worker is lost. While the
+    /// apply is in flight, reconnect handshakes accept either bound
+    /// (see [`RemoteShardSet::ensure_conn`]).
     fn apply_one(&mut self, w: usize, frame: &Frame, before: Bounds, after: Bounds) -> Result<()> {
+        self.applying = Some(after);
+        let result = self.apply_one_inner(w, frame, before, after);
+        self.applying = None;
+        result
+    }
+
+    fn apply_one_inner(
+        &mut self,
+        w: usize,
+        frame: &Frame,
+        before: Bounds,
+        after: Bounds,
+    ) -> Result<()> {
         let seq = self.next_seq(w);
         let verify = |got: Bounds| {
             if got == after {
@@ -914,6 +951,10 @@ impl RemoteShardSet {
     /// Connect + handshake if this worker has no live connection. The
     /// `HelloAck` bounds must match the driver mirror — a restarted
     /// (state-lost) worker is caught here, not at the next mine.
+    /// During apply recovery the replica may legitimately sit at the
+    /// in-flight post-apply bounds (it applied, the reply was lost), so
+    /// `applying` is accepted too; `apply_one`'s probe then settles
+    /// which side of the apply the replica is on.
     fn ensure_conn(&mut self, w: usize) -> Result<()> {
         if self.workers[w].conn.is_some() {
             return Ok(());
@@ -922,7 +963,7 @@ impl RemoteShardSet {
         let hello = Hello { total_shards: self.total_shards as u64, owned: vec![w as u32] };
         conn.send(&Frame::from_msg(FrameKind::Hello, &hello))?;
         let ack: Bounds = conn.recv()?.expect(FrameKind::HelloAck)?;
-        if ack != self.bounds {
+        if ack != self.bounds && Some(ack) != self.applying {
             return Err(Error::net(format!(
                 "worker {} joined at bounds {ack:?}, driver mirror at {:?} — replica \
                  state was lost",
